@@ -1,0 +1,51 @@
+//! End-to-end driver: the full ch. 4 experimental campaign on the
+//! simulated 'paravance' cluster — 8 matrices × 4 combinations ×
+//! f ∈ {2,4,8,16,32,64} nodes × 8 cores — regenerating Tables 4.2–4.7
+//! and writing the full sweep to `results/sweep.csv`.
+//!
+//! This is the headline validation run recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example grid5000_sweep
+//! ```
+
+use pmvc::coordinator::experiment::{run_sweep, ExperimentConfig};
+use pmvc::coordinator::report;
+use pmvc::partition::combined::Combination;
+use std::time::Instant;
+
+fn main() -> pmvc::Result<()> {
+    let cfg = ExperimentConfig::default();
+    println!("=== Table 4.2 — la suite de matrices (analogues synthétiques) ===");
+    print!("{}", report::matrix_table(cfg.seed)?);
+
+    let t0 = Instant::now();
+    let rows = run_sweep(&cfg)?;
+    println!(
+        "\nsweep: {} cells ({} matrices x {} combos x {} node counts) in {:.1}s\n",
+        rows.len(),
+        cfg.matrices.len(),
+        cfg.combos.len(),
+        cfg.node_counts.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    for (table, combo) in [
+        ("4.3", Combination::NcHc),
+        ("4.4", Combination::NcHl),
+        ("4.5", Combination::NlHc),
+        ("4.6", Combination::NlHl),
+    ] {
+        println!("=== Table {table} — combinaison {} ===", combo.name());
+        print!("{}", report::combo_table(&rows, combo));
+        println!();
+    }
+
+    println!("=== Table 4.7 — récapitulation (part des cas gagnés par combinaison) ===");
+    print!("{}", report::recap_table(&rows, &cfg.combos));
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/sweep.csv", report::to_csv(&rows))?;
+    println!("\nfull sweep written to results/sweep.csv ({} rows)", rows.len());
+    Ok(())
+}

@@ -1,0 +1,47 @@
+"""Pure-jnp / numpy oracles for the L1 kernel and the packing helpers the
+tests share. This file is the correctness ground truth: everything here is
+straight-line textbook code with no Pallas, no tiling, no masking tricks.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(data, xg, cols):
+    """Reference PFVC on an ELL slab: masked row-sum, plain jnp."""
+    mask = cols >= 0
+    return jnp.sum(jnp.where(mask, data * xg, 0.0), axis=1)
+
+
+def spmv_dense_ref(dense, x):
+    """y = A·x through a dense matmul (numpy, float64 accumulate)."""
+    return np.asarray(dense, dtype=np.float64) @ np.asarray(x, dtype=np.float64)
+
+
+def ell_pack(dense, r_pad=None, k_pad=None):
+    """Pack a dense numpy matrix into ELL arrays (data, cols) with -1
+    padding — mirrors rust `Ell::from_csr`.
+
+    Returns (data f32[R,K], cols i32[R,K]) with R >= rows, K >= max nnz/row.
+    """
+    dense = np.asarray(dense)
+    rows, _ = dense.shape
+    nnz_per_row = [np.flatnonzero(dense[i]) for i in range(rows)]
+    width = max((len(nz) for nz in nnz_per_row), default=0)
+    k = k_pad if k_pad is not None else max(width, 1)
+    r = r_pad if r_pad is not None else rows
+    assert r >= rows and k >= width
+    data = np.zeros((r, k), dtype=np.float32)
+    cols = -np.ones((r, k), dtype=np.int32)
+    for i, nz in enumerate(nnz_per_row):
+        data[i, : len(nz)] = dense[i, nz]
+        cols[i, : len(nz)] = nz
+    return data, cols
+
+
+def gather_x(cols, x):
+    """Pre-gather the X operand: xg[i,k] = x[cols[i,k]] (0 at padding)."""
+    x = np.asarray(x, dtype=np.float32)
+    safe = np.where(cols >= 0, cols, 0)
+    xg = x[safe]
+    return np.where(cols >= 0, xg, 0.0).astype(np.float32)

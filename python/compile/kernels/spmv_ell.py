@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: the per-core PFVC (Produit Fragment-Vecteur Creux).
+
+TPU adaptation of the paper's spBLAS ``csr_double_mv`` (DESIGN.md
+§Hardware-Adaptation): the CSR scalar loop has data-dependent trip counts
+and no lane structure, so the fragment is re-expressed as an ELL slab —
+dense ``[R, K]`` tiles ``data`` (f32 values) and ``cols`` (i32 column ids,
+-1 padding), with the X operand pre-gathered to the same layout
+(``xg[i, k] = x[cols[i, k]]``, 0 at padding). The kernel is then a masked
+multiply + row reduction: pure VPU work over VMEM-resident tiles, with
+BlockSpec expressing the HBM↔VMEM row-tile schedule that the paper's
+per-core L1/L2 caches provided implicitly.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both the pytest
+oracle and the Rust runtime execute bit-identically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height: divides every bucket R in the ladder (all multiples of
+# 64). 64×128 f32 tiles are 32 KiB — three operands plus the output stay
+# far below the ~16 MiB VMEM budget, leaving room for double-buffering.
+BLOCK_ROWS = 64
+
+
+def _pfvc_kernel(data_ref, xg_ref, cols_ref, o_ref):
+    """One row tile: o[i] = Σ_k data[i,k]·xg[i,k] over real (unpadded) slots."""
+    data = data_ref[...]
+    xg = xg_ref[...]
+    cols = cols_ref[...]
+    mask = cols >= 0
+    prod = jnp.where(mask, data * xg, jnp.zeros_like(data))
+    o_ref[...] = jnp.sum(prod, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def spmv_ell(data, xg, cols, *, block_rows=BLOCK_ROWS):
+    """PFVC over an ELL slab.
+
+    Args:
+      data: f32[R, K] nonzero values (0 at padding).
+      xg:   f32[R, K] pre-gathered x values (0 at padding).
+      cols: i32[R, K] column ids, -1 marks padding.
+      block_rows: row-tile height for the BlockSpec schedule.
+
+    Returns:
+      f32[R] row sums — the fragment's partial Y.
+    """
+    r, k = data.shape
+    assert xg.shape == (r, k) and cols.shape == (r, k)
+    br = min(block_rows, r)
+    assert r % br == 0, f"rows {r} not a multiple of block {br}"
+    grid = (r // br,)
+    in_spec = pl.BlockSpec((br, k), lambda i: (i, 0))
+    return pl.pallas_call(
+        _pfvc_kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec, in_spec],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.float32),
+        interpret=True,
+    )(data, xg, cols)
+
+
+def vmem_bytes(r: int, k: int, block_rows: int = BLOCK_ROWS) -> int:
+    """VMEM footprint estimate of one tile invocation (three f32/i32
+    operand tiles + the f32 output tile), used by DESIGN.md §Perf."""
+    br = min(block_rows, r)
+    return br * k * 4 * 3 + br * 4

@@ -1,0 +1,56 @@
+"""L2: the JAX compute graph around the L1 kernel.
+
+The distributed PMVC's per-core computation is the PFVC
+``y_ki = A_ki · x_ki``; at this layer it is a jitted function over one
+ELL-bucketed fragment, calling the Pallas kernel. The module also carries
+the iterative-method steps (Jacobi, power iteration) used by the python
+tests to validate that a full solver can be driven through the kernel —
+the same compositions the Rust L3 drives through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.spmv_ell import spmv_ell
+
+
+def pfvc(data, xg, cols):
+    """The AOT-exported entry point (tuple return, see aot.py):
+    one core's fragment-vector product."""
+    return (spmv_ell(data, xg, cols),)
+
+
+def pfvc_accumulate(data, xg, cols, y_partial):
+    """PFVC fused with partial-result accumulation — the node-local
+    construction step for column-fragmented nodes (overlapping Y rows):
+    ``y += A_ki · x_ki``."""
+    return (y_partial + spmv_ell(data, xg, cols),)
+
+
+def jacobi_step(data, cols, x, b, inv_diag, rows_map):
+    """One Jacobi sweep expressed over an ELL fragment that covers whole
+    rows (NL decompositions): x' = x + D⁻¹ (b − A x) on the fragment's
+    rows. `rows_map` scatters fragment rows into the global vector."""
+    # xg must be re-gathered from the current x every iteration
+    safe = jnp.where(cols >= 0, cols, 0)
+    xg = jnp.where(cols >= 0, x[safe], 0.0)
+    y = spmv_ell(data, xg, cols)
+    r = b[rows_map] - y
+    return x.at[rows_map].add(inv_diag[rows_map] * r)
+
+
+def power_step(data, cols, v, damping):
+    """One damped power-iteration step over a fragment covering all rows
+    (single-node layout), L1-normalized — the PageRank kernel of ch.1 §3.1."""
+    safe = jnp.where(cols >= 0, cols, 0)
+    xg = jnp.where(cols >= 0, v[safe], 0.0)
+    w = damping * spmv_ell(data, xg, cols) + (1.0 - damping) / v.shape[0]
+    return w / jnp.sum(jnp.abs(w))
+
+
+def lower_pfvc(rows: int, width: int):
+    """Lower the pfvc entry point for one (R, K) bucket; returns the
+    jax lowering (HLO extraction happens in aot.py)."""
+    spec = jax.ShapeDtypeStruct((rows, width), jnp.float32)
+    ispec = jax.ShapeDtypeStruct((rows, width), jnp.int32)
+    return jax.jit(pfvc).lower(spec, spec, ispec)

@@ -1,0 +1,140 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp/numpy oracle.
+
+Hypothesis sweeps shapes, densities and padding patterns; explicit tests
+pin the edge cases (all-padding rows, single row, full width).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ell_pack, gather_x, spmv_dense_ref, spmv_ell_ref
+from compile.kernels.spmv_ell import spmv_ell, vmem_bytes, BLOCK_ROWS
+
+
+def random_dense(rng, rows, cols, density):
+    dense = np.zeros((rows, cols), dtype=np.float32)
+    nnz = max(1, int(rows * cols * density))
+    idx = rng.choice(rows * cols, size=nnz, replace=False)
+    dense.flat[idx] = rng.uniform(-2.0, 2.0, size=nnz).astype(np.float32)
+    return dense
+
+
+def run_kernel(dense, x, r_pad=None, k_pad=None, block_rows=BLOCK_ROWS):
+    data, cols = ell_pack(dense, r_pad=r_pad, k_pad=k_pad)
+    xg = gather_x(cols, x)
+    y = np.asarray(spmv_ell(data, xg, cols, block_rows=block_rows))
+    return y[: dense.shape[0]]
+
+
+class TestKernelBasics:
+    def test_identity_fragment(self):
+        dense = np.eye(8, dtype=np.float32) * 3.0
+        x = np.arange(8, dtype=np.float32)
+        y = run_kernel(dense, x)
+        np.testing.assert_allclose(y, 3.0 * x, rtol=1e-6)
+
+    def test_matches_paper_example(self):
+        # the 4x4 example of fig. 1.7/1.8
+        dense = np.array(
+            [
+                [1, 0, 0, 2],
+                [0, 0, 3, 0],
+                [4, 5, 6, 0],
+                [0, 7, 0, 8],
+            ],
+            dtype=np.float32,
+        )
+        x = np.array([1, 2, 3, 4], dtype=np.float32)
+        y = run_kernel(dense, x)
+        np.testing.assert_allclose(y, [9, 9, 32, 46], rtol=1e-6)
+
+    def test_all_padding_rows_give_zero(self):
+        dense = np.zeros((4, 4), dtype=np.float32)
+        dense[0, 0] = 1.0
+        x = np.ones(4, dtype=np.float32)
+        y = run_kernel(dense, x, r_pad=8, k_pad=4)
+        assert y[0] == pytest.approx(1.0)
+        np.testing.assert_array_equal(y[1:], 0.0)
+
+    def test_padded_bucket_shapes(self):
+        rng = np.random.default_rng(0)
+        dense = random_dense(rng, 50, 70, 0.1)
+        x = rng.standard_normal(70).astype(np.float32)
+        y = run_kernel(dense, x, r_pad=64, k_pad=16)
+        np.testing.assert_allclose(y, spmv_dense_ref(dense, x), rtol=1e-4, atol=1e-5)
+
+    def test_block_rows_variants_agree(self):
+        rng = np.random.default_rng(1)
+        dense = random_dense(rng, 128, 64, 0.15)
+        x = rng.standard_normal(64).astype(np.float32)
+        y64 = run_kernel(dense, x, block_rows=64)
+        y32 = run_kernel(dense, x, block_rows=32)
+        y128 = run_kernel(dense, x, block_rows=128)
+        np.testing.assert_allclose(y64, y32, rtol=1e-6)
+        np.testing.assert_allclose(y64, y128, rtol=1e-6)
+
+    def test_vmem_estimate_positive(self):
+        assert vmem_bytes(8192, 128) > 0
+        assert vmem_bytes(64, 8) < vmem_bytes(64, 128)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=96),
+    cols=st.integers(min_value=1, max_value=80),
+    density=st.floats(min_value=0.02, max_value=0.6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_dense_reference(rows, cols, density, seed):
+    rng = np.random.default_rng(seed)
+    dense = random_dense(rng, rows, cols, density)
+    x = rng.uniform(-3.0, 3.0, size=cols).astype(np.float32)
+    # pad rows so the row-tile height divides R (the AOT buckets guarantee
+    # this by construction; arbitrary test shapes must round up)
+    r_pad = rows if rows <= BLOCK_ROWS else ((rows + BLOCK_ROWS - 1) // BLOCK_ROWS) * BLOCK_ROWS
+    y = run_kernel(dense, x, r_pad=r_pad, block_rows=min(BLOCK_ROWS, r_pad))
+    ref = spmv_dense_ref(dense, x)
+    np.testing.assert_allclose(y, ref, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r_exp=st.integers(min_value=0, max_value=3),  # 64..512
+    k_exp=st.integers(min_value=0, max_value=3),  # 8..64
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_on_bucket_ladder(r_exp, k_exp, seed):
+    """Exactly the shapes the AOT artifacts are compiled for."""
+    r, k = 64 << r_exp, 8 << k_exp
+    rng = np.random.default_rng(seed)
+    n_cols = 3 * k
+    # per-row nonzero count capped at the bucket width K
+    dense = np.zeros((r, n_cols), dtype=np.float32)
+    for i in range(r):
+        cnt = int(rng.integers(0, k + 1))
+        if cnt:
+            idx = rng.choice(n_cols, size=cnt, replace=False)
+            dense[i, idx] = rng.uniform(-1.0, 1.0, size=cnt).astype(np.float32)
+    x = rng.uniform(-1.0, 1.0, size=n_cols).astype(np.float32)
+    data, cols = ell_pack(dense, r_pad=r, k_pad=k)
+    xg = gather_x(cols, x)
+    y = np.asarray(spmv_ell(data, xg, cols))
+    ref = spmv_dense_ref(dense, x)
+    np.testing.assert_allclose(y[: dense.shape[0]], ref, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_pallas_equals_jnp_oracle_bitwise_shapes(seed):
+    """spmv_ell vs spmv_ell_ref on identical inputs (same masking, same
+    dtype): results must agree to float32 round-off."""
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal((64, 16)).astype(np.float32)
+    cols = rng.integers(-1, 40, size=(64, 16)).astype(np.int32)
+    x = rng.standard_normal(40).astype(np.float32)
+    xg = gather_x(cols, x)
+    data = np.where(cols >= 0, data, 0.0).astype(np.float32)
+    y_pallas = np.asarray(spmv_ell(data, xg, cols))
+    y_ref = np.asarray(spmv_ell_ref(data, xg, cols))
+    np.testing.assert_allclose(y_pallas, y_ref, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,191 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. NEZGT phase-2 refinement on/off (what the paper's "amélioration
+//!    itérative" buys in FD / LB);
+//! 2. intra-node method: hypergraph vs NEZGT (the MeH12 NEZ-NEZ combo) —
+//!    balance vs communication volume trade;
+//! 3. FM pass count in the multilevel partitioner;
+//! 4. network presets (GbE / 10GbE / InfiniBand / Myrinet) on total time;
+//! 5. simulator sensitivity: per-message overhead × node count.
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+
+use pmvc::cluster::{ClusterTopology, NetworkPreset};
+use pmvc::partition::combined::{decompose, Combination, DecomposeConfig, IntraMethod};
+use pmvc::partition::hypergraph::Hypergraph;
+use pmvc::partition::metrics::CommVolumes;
+use pmvc::partition::multilevel::Multilevel;
+use pmvc::partition::{Axis, Nezgt};
+use pmvc::pmvc::simulate;
+use pmvc::sparse::gen::{generate, MatrixSpec};
+
+fn main() {
+    let matrices = ["t2dal", "epb1", "zhao1"];
+
+    println!("--- ablation 1: NEZGT refinement (phase 2) ---");
+    println!("{:<12} {:>4} {:>14} {:>14}", "matrix", "f", "FD raw", "FD refined");
+    for name in matrices {
+        let a = generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr();
+        let w = a.row_counts();
+        for f in [8usize, 64] {
+            let raw = Nezgt { refine: false, ..Nezgt::ligne() }.partition_weights(&w, f);
+            let refined = Nezgt::ligne().partition_weights(&w, f);
+            println!("{:<12} {:>4} {:>14} {:>14}", name, f, raw.fd(&w), refined.fd(&w));
+        }
+    }
+
+    println!("\n--- ablation 2: intra-node method (HYP vs NEZ) ---");
+    println!(
+        "{:<12} {:>8} {:>10} {:>14} {:>14}",
+        "matrix", "intra", "LB_cores", "scatter vol", "gather vol"
+    );
+    for name in matrices {
+        let a = generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr();
+        for (label, method) in [("HYP", IntraMethod::Hypergraph), ("NEZ", IntraMethod::Nezgt)] {
+            let cfg = DecomposeConfig { intra_method: method, ..Default::default() };
+            let d = decompose(&a, Combination::NlHl, 8, 8, &cfg);
+            let cv = CommVolumes::of(&d);
+            println!(
+                "{:<12} {:>8} {:>10.3} {:>14} {:>14}",
+                name,
+                label,
+                d.lb_cores(),
+                cv.total_scatter(),
+                cv.total_gather()
+            );
+        }
+    }
+
+    println!("\n--- ablation 3: FM passes in the multilevel partitioner ---");
+    println!("{:<12} {:>8} {:>12} {:>8}", "matrix", "passes", "λ-1 cut", "LB");
+    for name in matrices {
+        let a = generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr();
+        let hg = Hypergraph::from_matrix(&a, Axis::Row);
+        for passes in [0usize, 1, 4, 8] {
+            let ml = Multilevel { fm_passes: passes, ..Default::default() };
+            let p = ml.partition(&hg, 8);
+            println!(
+                "{:<12} {:>8} {:>12} {:>8.3}",
+                name,
+                passes,
+                hg.lambda_minus_one_cut(&p),
+                p.imbalance(&hg.vwt)
+            );
+        }
+    }
+
+    println!("\n--- ablation 4: interconnect presets (epb1, NL-HL, f=16) ---");
+    println!("{:<12} {:>12} {:>12} {:>12}", "network", "scatter", "gather", "total");
+    let a = generate(&MatrixSpec::paper("epb1").unwrap(), 1).to_csr();
+    let d = decompose(&a, Combination::NlHl, 16, 8, &DecomposeConfig::default());
+    let topo = ClusterTopology::paravance(16);
+    for (label, preset) in [
+        ("GbE", NetworkPreset::GigabitEthernet),
+        ("10GbE", NetworkPreset::TenGigabitEthernet),
+        ("Myrinet", NetworkPreset::Myrinet),
+        ("InfiniBand", NetworkPreset::Infiniband),
+    ] {
+        let t = simulate(&d, &topo, &preset.model());
+        println!(
+            "{:<12} {:>10.2}ms {:>10.3}ms {:>10.3}ms",
+            label,
+            t.t_scatter * 1e3,
+            t.t_gather * 1e3,
+            t.t_total() * 1e3
+        );
+    }
+
+    println!("\n--- ablation 5: master serialization vs node count (bcsstm09) ---");
+    println!("{:<6} {:>12} {:>12}", "f", "scatter", "gather");
+    let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+    let net = NetworkPreset::TenGigabitEthernet.model();
+    for f in [2usize, 4, 8, 16, 32, 64] {
+        let d = decompose(&a, Combination::NlHl, f, 8, &DecomposeConfig::default());
+        let t = simulate(&d, &ClusterTopology::paravance(f), &net);
+        println!("{:<6} {:>10.3}ms {:>10.4}ms", f, t.t_scatter * 1e3, t.t_gather * 1e3);
+    }
+
+    println!("\n--- ablation 6: compression formats (ch.1 §2.3 / related work) ---");
+    println!(
+        "{:<12} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "matrix", "nnz", "CSR", "DIA", "JAD", "BSR(4)", "CSR-DU"
+    );
+    for name in ["bcsstm09", "t2dal", "epb1", "spmsrtls"] {
+        let a = generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr();
+        let mut rng = pmvc::rng::SplitMix64::new(1);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        let iters = (20_000_000 / a.nnz().max(1)).clamp(5, 500);
+        let time = |mut f: Box<dyn FnMut() -> Vec<f64>>| {
+            for _ in 0..3 {
+                std::hint::black_box(f());
+            }
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            t0.elapsed().as_secs_f64() / iters as f64 * 1e6 // µs
+        };
+        use pmvc::sparse::formats_ext::{Bsr, CsrDu, Dia, Jad};
+        let a2 = a.clone();
+        let x2 = x.clone();
+        let t_csr = time(Box::new(move || a2.matvec(&x2)));
+        let t_dia = Dia::from_csr(&a, 4096).map(|d| {
+            let x2 = x.clone();
+            time(Box::new(move || d.matvec(&x2)))
+        });
+        let jad = Jad::from_csr(&a);
+        let x2 = x.clone();
+        let t_jad = time(Box::new(move || jad.matvec(&x2)));
+        let bsr = Bsr::from_csr(&a, 4);
+        let fill = bsr.fill_ratio(a.nnz());
+        let x2 = x.clone();
+        let t_bsr = time(Box::new(move || bsr.matvec(&x2)));
+        let du = CsrDu::from_csr(&a);
+        let idx_ratio = du.index_bytes() as f64 / (4.0 * a.nnz() as f64);
+        let x2 = x.clone();
+        let t_du = time(Box::new(move || du.matvec(&x2)));
+        println!(
+            "{:<12} {:>10} {:>10.1}µs {:>12} {:>10.1}µs {:>12} {:>12}",
+            name,
+            a.nnz(),
+            t_csr,
+            t_dia.map_or("n/a".to_string(), |t| format!("{t:.1}µs")),
+            t_jad,
+            format!("{t_bsr:.1}µs f{fill:.1}"),
+            format!("{t_du:.1}µs i{idx_ratio:.2}")
+        );
+    }
+
+    println!("\n--- ablation 7: static NEZGT vs dynamic scheduling [LeE08] ---");
+    println!("{:<12} {:>10} {:>14} {:>14}", "matrix", "workers", "static", "dynamic(c=64)");
+    for name in ["epb1", "af23560"] {
+        let a = generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr();
+        let mut rng = pmvc::rng::SplitMix64::new(2);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        for workers in [1usize, 4] {
+            // static: contiguous balanced row blocks, one thread each
+            let t0 = std::time::Instant::now();
+            let iters = 20;
+            for _ in 0..iters {
+                let part = pmvc::partition::baseline::contiguous_balanced(&a.row_counts(), workers);
+                std::hint::black_box(part);
+                std::hint::black_box(a.matvec(&x));
+            }
+            let t_static = t0.elapsed().as_secs_f64() / iters as f64;
+            let t1 = std::time::Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(pmvc::pmvc::dynamic::dynamic_spmv(&a, &x, workers, 64));
+            }
+            let t_dyn = t1.elapsed().as_secs_f64() / iters as f64;
+            println!(
+                "{:<12} {:>10} {:>12.2}ms {:>12.2}ms",
+                name,
+                workers,
+                t_static * 1e3,
+                t_dyn * 1e3
+            );
+        }
+    }
+}

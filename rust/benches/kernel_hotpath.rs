@@ -1,0 +1,104 @@
+//! Hot-path microbenchmarks: the per-core PFVC kernel (native CSR, native
+//! ELL, XLA artifact) measured against the memory-bandwidth roofline.
+//! This is the §Perf instrument for L1/L3.
+//!
+//! ```bash
+//! cargo bench --bench kernel_hotpath
+//! ```
+
+use pmvc::pmvc::spmv::csr_mv;
+use pmvc::rng::SplitMix64;
+use pmvc::sparse::ell::Ell;
+use pmvc::sparse::gen::{generate, MatrixSpec};
+use std::time::Instant;
+
+fn time_it<F: FnMut()>(mut f: F, iters: usize) -> f64 {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    println!("{:<12} {:>10} {:>12} {:>10} {:>10} {:>10}", "matrix", "nnz", "kernel", "time/op", "GB/s", "GFLOP/s");
+    println!("{}", "-".repeat(70));
+
+    let mut rng = SplitMix64::new(7);
+    for name in ["bcsstm09", "thermal", "t2dal", "ex19", "epb1", "af23560", "spmsrtls", "zhao1"] {
+        let a = generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr();
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        let mut y = vec![0.0; a.n_rows];
+        let iters = (20_000_000 / a.nnz().max(1)).clamp(5, 500);
+
+        // native CSR (the production per-core kernel)
+        let dt = time_it(
+            || {
+                csr_mv(&a.ptr, &a.col, &a.val, &x, &mut y);
+                std::hint::black_box(&y);
+            },
+            iters,
+        );
+        let bytes = (a.nnz() * 12 + a.n_rows * 16 + a.n_cols * 8) as f64;
+        let flops = 2.0 * a.nnz() as f64;
+        println!(
+            "{:<12} {:>10} {:>12} {:>9.1}µs {:>10.2} {:>10.2}",
+            name,
+            a.nnz(),
+            "csr_mv",
+            dt * 1e6,
+            bytes / dt / 1e9,
+            flops / dt / 1e9
+        );
+
+        // native ELL on a 64-row slab (the TPU-shaped layout)
+        let rows: Vec<usize> = (0..a.n_rows.min(64)).collect();
+        let frag = a.select_rows(&rows);
+        if let Ok((ell, bucket)) = Ell::from_csr_auto(&frag) {
+            let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let dt = time_it(
+                || {
+                    std::hint::black_box(ell.matvec(&xf));
+                },
+                iters.max(100),
+            );
+            let slab_bytes = (bucket.rows * bucket.width * 8) as f64;
+            println!(
+                "{:<12} {:>10} {:>12} {:>9.1}µs {:>10.2} {:>10}",
+                name,
+                frag.nnz(),
+                format!("ell {}x{}", bucket.rows, bucket.width),
+                dt * 1e6,
+                slab_bytes / dt / 1e9,
+                format!("fill {:.1}x", ell.fill_ratio(frag.nnz()))
+            );
+        }
+    }
+
+    // XLA artifact path (if built)
+    match pmvc::runtime::Runtime::new() {
+        Ok(mut rt) => {
+            println!("\nXLA artifact path (PJRT {}):", rt.platform());
+            let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 1).to_csr();
+            let rows: Vec<usize> = (0..512).collect();
+            let frag = a.select_rows(&rows);
+            let x = vec![1f32; a.n_cols];
+            // first call compiles
+            let t0 = Instant::now();
+            rt.pfvc_csr(&frag, &x).unwrap();
+            println!("  cold (compile+run): {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+            let dt = time_it(
+                || {
+                    std::hint::black_box(rt.pfvc_csr(&frag, &x).unwrap());
+                },
+                50,
+            );
+            println!("  warm per-execution: {:.1} µs ({} rows)", dt * 1e6, frag.n_rows);
+        }
+        Err(e) => println!("\nXLA path skipped: {e}"),
+    }
+}

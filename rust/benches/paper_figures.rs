@@ -1,0 +1,46 @@
+//! Bench harness regenerating the paper's figure series:
+//!
+//! * fig. 4.8–4.15  — load balance (LB cores) per matrix      (`lb`)
+//! * fig. 4.16–4.23 — scatter duration vs f                   (`scatter`)
+//! * fig. 4.24–4.31 — compute time (makespan of Y) vs f       (`compute`)
+//! * fig. 4.32–4.39 — node-local Y construction vs f          (`construct`)
+//! * fig. 4.40–4.47 — gather + construction vs f              (`gather`)
+//! * fig. 4.48–4.55 — total PMVC time vs f                    (`total`)
+//!
+//! ```bash
+//! cargo bench --bench paper_figures                      # all series
+//! cargo bench --bench paper_figures -- --series compute  # one series
+//! ```
+
+use pmvc::coordinator::cli::Args;
+use pmvc::coordinator::experiment::{run_sweep, ExperimentConfig};
+use pmvc::coordinator::report;
+use pmvc::pmvc::PhaseTimes;
+
+const SERIES: &[(&str, &str, &str, fn(&PhaseTimes) -> f64)] = &[
+    ("lb", "fig. 4.8-4.15", "Équilibrage des charges (LB coeurs)", |t| t.lb_cores),
+    ("scatter", "fig. 4.16-4.23", "Durée Scatter (s)", |t| t.t_scatter),
+    ("compute", "fig. 4.24-4.31", "Temps de Calcul de Y (s)", |t| t.t_compute),
+    ("construct", "fig. 4.32-4.39", "Temps construction de Y (s)", |t| t.t_construct),
+    ("gather", "fig. 4.40-4.47", "Gather + Construction (s)", |t| {
+        t.t_gather_construct()
+    }),
+    ("total", "fig. 4.48-4.55", "Temps total du PMVC (s)", |t| t.t_total()),
+];
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let filter = args.opt("series").map(str::to_string);
+    let cfg = ExperimentConfig::default();
+    let rows = run_sweep(&cfg).expect("sweep");
+
+    for (key, figs, label, metric) in SERIES {
+        if filter.as_deref().map_or(false, |f| f != *key) {
+            continue;
+        }
+        println!("=============== {figs}: {label} ===============\n");
+        for m in &cfg.matrices {
+            println!("{}", report::figure(&rows, m, label, *metric, &cfg.combos));
+        }
+    }
+}

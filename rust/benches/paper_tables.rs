@@ -1,0 +1,51 @@
+//! Bench harness regenerating the paper's result tables (4.2–4.7).
+//!
+//! ```bash
+//! cargo bench --bench paper_tables                 # all tables
+//! cargo bench --bench paper_tables -- --table 4.6  # one table
+//! ```
+
+use pmvc::coordinator::cli::Args;
+use pmvc::coordinator::experiment::{run_sweep, ExperimentConfig};
+use pmvc::coordinator::report;
+use pmvc::partition::combined::Combination;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let table = args.opt("table").map(str::to_string);
+    let cfg = ExperimentConfig::default();
+
+    let want = |t: &str| table.as_deref().map_or(true, |w| w == t);
+
+    if want("4.2") {
+        println!("=== Table 4.2 — matrices de test ===");
+        print!("{}", report::matrix_table(cfg.seed).unwrap());
+        println!();
+    }
+
+    let needs_sweep = ["4.3", "4.4", "4.5", "4.6", "4.7"].iter().any(|t| want(t));
+    if !needs_sweep {
+        return;
+    }
+    let t0 = Instant::now();
+    let rows = run_sweep(&cfg).expect("sweep");
+    eprintln!("[sweep computed in {:.1}s — {} cells]", t0.elapsed().as_secs_f64(), rows.len());
+
+    for (t, combo) in [
+        ("4.3", Combination::NcHc),
+        ("4.4", Combination::NcHl),
+        ("4.5", Combination::NlHc),
+        ("4.6", Combination::NlHl),
+    ] {
+        if want(t) {
+            println!("=== Table {t} — combinaison {} ===", combo.name());
+            print!("{}", report::combo_table(&rows, combo));
+            println!();
+        }
+    }
+    if want("4.7") {
+        println!("=== Table 4.7 — récapitulation des résultats ===");
+        print!("{}", report::recap_table(&rows, &cfg.combos));
+    }
+}

@@ -1,0 +1,71 @@
+//! Partitioner scaling benchmarks: NEZGT and the multilevel hypergraph
+//! partitioner vs matrix size and fragment count — the §Perf instrument
+//! for the decomposition path (which runs once per matrix, but must stay
+//! far below the PMVC savings it buys).
+//!
+//! ```bash
+//! cargo bench --bench partitioner_scaling
+//! ```
+
+use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
+use pmvc::partition::hypergraph::Hypergraph;
+use pmvc::partition::multilevel::Multilevel;
+use pmvc::partition::{Axis, Nezgt};
+use pmvc::sparse::gen::{generate, MatrixSpec};
+use std::time::Instant;
+
+fn main() {
+    println!("--- NEZGT (3 phases) vs f ---");
+    println!("{:<12} {:>6} {:>12} {:>10}", "matrix", "f", "time", "FD");
+    for name in ["t2dal", "epb1", "af23560", "zhao1"] {
+        let a = generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr();
+        let w = a.row_counts();
+        for f in [2usize, 8, 32, 64] {
+            let t0 = Instant::now();
+            let p = Nezgt::ligne().partition_weights(&w, f);
+            let dt = t0.elapsed().as_secs_f64();
+            println!("{:<12} {:>6} {:>10.2}ms {:>10}", name, f, dt * 1e3, p.fd(&w));
+        }
+    }
+
+    println!("\n--- multilevel hypergraph vs k ---");
+    println!("{:<12} {:>6} {:>12} {:>12} {:>8}", "matrix", "k", "time", "λ-1 cut", "LB");
+    for name in ["t2dal", "epb1", "zhao1"] {
+        let a = generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr();
+        let hg = Hypergraph::from_matrix(&a, Axis::Row);
+        for k in [2usize, 8, 16] {
+            let t0 = Instant::now();
+            let p = Multilevel::default().partition(&hg, k);
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "{:<12} {:>6} {:>10.2}ms {:>12} {:>8.3}",
+                name,
+                k,
+                dt * 1e3,
+                hg.lambda_minus_one_cut(&p),
+                p.imbalance(&hg.vwt)
+            );
+        }
+    }
+
+    println!("\n--- full two-level decomposition (f x 8 cores) ---");
+    println!("{:<12} {:>8} {:>6} {:>12}", "matrix", "combo", "f", "time");
+    for name in ["epb1", "af23560"] {
+        let a = generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr();
+        for combo in [Combination::NlHl, Combination::NcHc] {
+            for f in [8usize, 64] {
+                let t0 = Instant::now();
+                let d = decompose(&a, combo, f, 8, &DecomposeConfig::default());
+                let dt = t0.elapsed().as_secs_f64();
+                println!(
+                    "{:<12} {:>8} {:>6} {:>10.2}ms  (LB_c={:.2})",
+                    name,
+                    combo.name(),
+                    f,
+                    dt * 1e3,
+                    d.lb_cores()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Machine model of the test platform (ch. 2 and ch. 4 §3): a cluster of
+//! multicore NUMA nodes connected by a commodity network — Grid'5000's
+//! 'paravance' cluster in the paper, a calibrated analytic model here.
+
+pub mod network;
+pub mod topology;
+
+pub use network::{NetworkModel, NetworkPreset};
+pub use topology::{ClusterTopology, NumaNode};

@@ -1,0 +1,139 @@
+//! α–β (Hockney) network model with collective cost formulas — the
+//! substitute for the paper's measured Grid'5000 interconnect.
+//!
+//! A point-to-point message of `b` bytes costs `α + b·β` (latency +
+//! inverse bandwidth). The PMVC uses two collectives (ch. 3 §4.2.3):
+//! a personalized scatter (fan-out of A_k and X_k from the master) and a
+//! gather-with-accumulation (fan-in of the partial Y_k). The master
+//! serializes its sends/receives, which is exactly why the paper's
+//! measured scatter/gather durations *grow* with the node count f even
+//! though each message shrinks — the model reproduces that shape.
+
+/// Point-to-point network parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetworkModel {
+    /// Per-message latency, seconds (α).
+    pub latency: f64,
+    /// Per-byte transfer time, seconds (β = 1/bandwidth).
+    pub inv_bandwidth: f64,
+    /// Fixed software overhead per posted message at the master
+    /// (MPI envelope handling; makes many-small-messages expensive).
+    pub per_message_overhead: f64,
+}
+
+/// Common interconnect presets (ch. 2 §4.2 discusses all three).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetworkPreset {
+    /// Gigabit Ethernet: ~50 µs latency, 1 Gb/s.
+    GigabitEthernet,
+    /// 10 GbE — the paper's 'paravance' interconnect.
+    TenGigabitEthernet,
+    /// InfiniBand QDR: ~1.5 µs latency, 32 Gb/s.
+    Infiniband,
+    /// Myrinet: ~3 µs, 10 Gb/s.
+    Myrinet,
+}
+
+impl NetworkPreset {
+    pub fn model(&self) -> NetworkModel {
+        match self {
+            NetworkPreset::GigabitEthernet => NetworkModel {
+                latency: 50e-6,
+                inv_bandwidth: 8.0 / 1.0e9,
+                per_message_overhead: 5e-6,
+            },
+            NetworkPreset::TenGigabitEthernet => NetworkModel {
+                latency: 25e-6,
+                inv_bandwidth: 8.0 / 10.0e9,
+                per_message_overhead: 3e-6,
+            },
+            NetworkPreset::Infiniband => NetworkModel {
+                latency: 1.5e-6,
+                inv_bandwidth: 8.0 / 32.0e9,
+                per_message_overhead: 0.5e-6,
+            },
+            NetworkPreset::Myrinet => NetworkModel {
+                latency: 3e-6,
+                inv_bandwidth: 8.0 / 10.0e9,
+                per_message_overhead: 1e-6,
+            },
+        }
+    }
+}
+
+impl NetworkModel {
+    /// Cost of one point-to-point message of `bytes`.
+    pub fn p2p(&self, bytes: usize) -> f64 {
+        self.latency + bytes as f64 * self.inv_bandwidth
+    }
+
+    /// Personalized scatter from the master: the master sends a distinct
+    /// message to each of `msg_bytes.len()` workers, serialized at its
+    /// NIC (linear model — matches MPI_Scatterv on commodity Ethernet).
+    pub fn scatter(&self, msg_bytes: &[usize]) -> f64 {
+        let send_time: f64 = msg_bytes
+            .iter()
+            .map(|&b| self.per_message_overhead + b as f64 * self.inv_bandwidth)
+            .sum();
+        // one latency term overlaps across messages except the first
+        self.latency + send_time
+    }
+
+    /// Gather at the master: workers send their partial results; the
+    /// master's NIC serializes receptions the same way.
+    pub fn gather(&self, msg_bytes: &[usize]) -> f64 {
+        self.scatter(msg_bytes)
+    }
+
+    /// Effective bandwidth (bytes/s) for sanity checks.
+    pub fn bandwidth(&self) -> f64 {
+        1.0 / self.inv_bandwidth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_ordered_by_latency() {
+        let gbe = NetworkPreset::GigabitEthernet.model();
+        let tge = NetworkPreset::TenGigabitEthernet.model();
+        let ib = NetworkPreset::Infiniband.model();
+        assert!(gbe.latency > tge.latency && tge.latency > ib.latency);
+        assert!(ib.bandwidth() > tge.bandwidth());
+    }
+
+    #[test]
+    fn p2p_affine_in_size() {
+        let m = NetworkPreset::TenGigabitEthernet.model();
+        let t0 = m.p2p(0);
+        let t1 = m.p2p(1_000_000);
+        assert!((t0 - m.latency).abs() < 1e-12);
+        assert!((t1 - t0 - 1_000_000.0 * m.inv_bandwidth).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scatter_grows_with_node_count_at_fixed_total() {
+        // the paper's fig. 4.16-4.23 shape: same total volume split over
+        // more nodes costs MORE because of per-message overheads
+        let m = NetworkPreset::TenGigabitEthernet.model();
+        let total = 1_000_000usize;
+        let t2 = m.scatter(&vec![total / 2; 2]);
+        let t64 = m.scatter(&vec![total / 64; 64]);
+        assert!(t64 > t2);
+    }
+
+    #[test]
+    fn scatter_monotone_in_volume() {
+        let m = NetworkPreset::GigabitEthernet.model();
+        assert!(m.scatter(&[100, 100]) < m.scatter(&[1000, 1000]));
+    }
+
+    #[test]
+    fn gather_equals_scatter_symmetry() {
+        let m = NetworkPreset::Myrinet.model();
+        let sizes = vec![123, 456, 789];
+        assert_eq!(m.gather(&sizes), m.scatter(&sizes));
+    }
+}

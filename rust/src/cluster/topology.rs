@@ -1,0 +1,129 @@
+//! Cluster and node topology (ch. 2 §4, ch. 4 §3).
+//!
+//! A cluster is `f` identical nodes; each node holds one or more NUMA
+//! banks with `cores_per_bank` cores each (fig. 4.6 shows 4 banks × 4
+//! cores). The paper's test platform is 'paravance' (Rennes): 2 CPUs ×
+//! 8 cores per node, 10 GbE interconnect; experiments use 8 cores/node.
+
+/// One NUMA bank: a memory controller plus the cores attached to it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NumaNode {
+    pub cores: usize,
+    /// Local memory bandwidth, bytes/s.
+    pub local_bw: f64,
+    /// NUMA factor: remote-access time / local-access time (the paper
+    /// cites 1.1–3.0 for current machines).
+    pub numa_factor: f64,
+}
+
+/// The full machine description the simulator runs against.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterTopology {
+    /// Number of compute nodes (f in the paper).
+    pub nodes: usize,
+    /// NUMA banks per node.
+    pub banks_per_node: usize,
+    /// Cores per bank.
+    pub cores_per_bank: usize,
+    /// Per-core effective stream bandwidth for SpMV (bytes/s). SpMV is
+    /// memory-bound; compute time ≈ bytes_touched / bandwidth.
+    pub core_bw: f64,
+    /// Per-core flop rate ceiling (flops/s) — the roofline's other wing.
+    pub core_flops: f64,
+    /// NUMA factor between banks inside a node.
+    pub numa_factor: f64,
+}
+
+impl ClusterTopology {
+    /// The paper's 'paravance' setting: 8 cores per node used
+    /// (2 banks × 4), Xeon E5-2630v3-class cores.
+    pub fn paravance(nodes: usize) -> ClusterTopology {
+        ClusterTopology {
+            nodes,
+            banks_per_node: 2,
+            cores_per_bank: 4,
+            // ~6 GB/s effective per-core stream share on a loaded 2014
+            // Xeon socket; ~2.4 GHz × 4-wide FMA ceiling.
+            core_bw: 6.0e9,
+            core_flops: 19.2e9,
+            numa_factor: 1.4,
+        }
+    }
+
+    /// Cores per node (the paper's fc = 8).
+    pub fn cores_per_node(&self) -> usize {
+        self.banks_per_node * self.cores_per_bank
+    }
+
+    /// Total cores in the cluster.
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.cores_per_node()
+    }
+
+    /// Which bank a core index (within a node) belongs to.
+    pub fn bank_of_core(&self, core: usize) -> usize {
+        core / self.cores_per_bank
+    }
+
+    /// Estimated time for one core to stream an SpMV fragment:
+    /// CSR bytes = nnz·(8 val + 4 col) + rows·8 ptr-ish + x/y traffic,
+    /// clamped below by the flop roofline (2 flops per nonzero).
+    pub fn core_spmv_time(&self, nnz: usize, rows: usize, x_elems: usize) -> f64 {
+        let bytes = nnz as f64 * 12.0 + rows as f64 * 12.0 + x_elems as f64 * 8.0;
+        let t_mem = bytes / self.core_bw;
+        let t_flop = (2.0 * nnz as f64) / self.core_flops;
+        t_mem.max(t_flop)
+    }
+
+    /// Intra-node reduction time for accumulating `vec_len`-element
+    /// partial vectors from `parts` cores through the NUMA hierarchy.
+    pub fn node_reduce_time(&self, vec_len: usize, parts: usize) -> f64 {
+        if parts <= 1 || vec_len == 0 {
+            return 0.0;
+        }
+        // tree reduction: log2(parts) rounds of vec_len adds, remote
+        // rounds pay the NUMA factor
+        let rounds = (parts as f64).log2().ceil();
+        let bytes_per_round = vec_len as f64 * 8.0 * 2.0; // read+write
+        rounds * bytes_per_round * self.numa_factor / self.core_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paravance_matches_paper() {
+        let t = ClusterTopology::paravance(64);
+        assert_eq!(t.cores_per_node(), 8);
+        assert_eq!(t.total_cores(), 512);
+        assert_eq!(t.bank_of_core(0), 0);
+        assert_eq!(t.bank_of_core(5), 1);
+    }
+
+    #[test]
+    fn spmv_time_monotone_in_nnz() {
+        let t = ClusterTopology::paravance(2);
+        let t1 = t.core_spmv_time(1_000, 100, 500);
+        let t2 = t.core_spmv_time(10_000, 100, 500);
+        assert!(t2 > t1);
+        assert!(t1 > 0.0);
+    }
+
+    #[test]
+    fn reduce_time_zero_for_single_part() {
+        let t = ClusterTopology::paravance(2);
+        assert_eq!(t.node_reduce_time(1000, 1), 0.0);
+        assert!(t.node_reduce_time(1000, 8) > t.node_reduce_time(1000, 2));
+    }
+
+    #[test]
+    fn memory_bound_regime() {
+        // SpMV at 0.17 flop/byte must be memory-bound on paravance
+        let t = ClusterTopology::paravance(1);
+        let nnz = 100_000;
+        let bytes = nnz as f64 * 12.0;
+        assert!(t.core_spmv_time(nnz, 1000, 1000) >= bytes / t.core_bw * 0.99);
+    }
+}

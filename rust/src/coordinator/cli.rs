@@ -1,0 +1,135 @@
+//! Minimal CLI argument handling (the offline registry has no `clap`).
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand, positional args and `--key value`
+/// options (`--flag` with no value stores an empty string).
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Args {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut positional = Vec::new();
+        let mut options = HashMap::new();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => String::new(),
+                };
+                options.insert(key.to_string(), value);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { command, positional, options }
+    }
+
+    /// From the process arguments.
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.options.contains_key(key)
+    }
+
+    /// Parse a comma-separated list option.
+    pub fn opt_list(&self, key: &str) -> Option<Vec<String>> {
+        self.opt(key).map(|s| {
+            s.split(',').map(|t| t.trim().to_string()).filter(|t| !t.is_empty()).collect()
+        })
+    }
+
+    /// Parse a comma-separated list of usize.
+    pub fn opt_usizes(&self, key: &str) -> crate::Result<Option<Vec<usize>>> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => {
+                let v: Result<Vec<usize>, _> =
+                    s.split(',').map(|t| t.trim().parse::<usize>()).collect();
+                Ok(Some(v.map_err(|e| anyhow::anyhow!("--{key}: {e}"))?))
+            }
+        }
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> crate::Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> crate::Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+}
+
+/// Parse a network preset name.
+pub fn parse_network(s: &str) -> crate::Result<crate::cluster::NetworkPreset> {
+    use crate::cluster::NetworkPreset::*;
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "gbe" | "1gbe" | "ethernet" => GigabitEthernet,
+        "10gbe" | "tengbe" => TenGigabitEthernet,
+        "ib" | "infiniband" => Infiniband,
+        "myrinet" => Myrinet,
+        other => anyhow::bail!("unknown network preset '{other}' (gbe|10gbe|ib|myrinet)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_command_and_options() {
+        let a = parse(&["sweep", "pos1", "--nodes", "2,4,8", "--check"]);
+        assert_eq!(a.command, "sweep");
+        assert_eq!(a.opt("nodes"), Some("2,4,8"));
+        assert!(a.has("check"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn usize_lists() {
+        let a = parse(&["x", "--nodes", "2, 4,8"]);
+        assert_eq!(a.opt_usizes("nodes").unwrap(), Some(vec![2, 4, 8]));
+        assert!(parse(&["x", "--nodes", "two"]).opt_usizes("nodes").is_err());
+    }
+
+    #[test]
+    fn network_presets() {
+        assert!(parse_network("10gbe").is_ok());
+        assert!(parse_network("infiniband").is_ok());
+        assert!(parse_network("carrier-pigeon").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["cmd"]);
+        assert_eq!(a.opt_or("missing", "dflt"), "dflt");
+        assert_eq!(a.opt_usize("n", 7).unwrap(), 7);
+    }
+}

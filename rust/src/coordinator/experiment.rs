@@ -1,0 +1,189 @@
+//! The ch. 4 experiment driver: sweep matrices × node counts ×
+//! combinations and collect one [`SweepRow`] per cell — the exact grid
+//! behind Tables 4.3–4.6 and Figures 4.8–4.55.
+
+use crate::cluster::{ClusterTopology, NetworkPreset};
+use crate::partition::combined::{decompose, Combination, DecomposeConfig};
+use crate::pmvc::{simulate, PhaseTimes};
+use crate::sparse::gen::{generate, MatrixSpec};
+use crate::sparse::Csr;
+
+/// Sweep configuration (defaults reproduce the paper's setting).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Matrix names from Table 4.2 (or paths to `.mtx` files).
+    pub matrices: Vec<String>,
+    /// Node counts f (paper: {2, 4, 8, 16, 32, 64}).
+    pub node_counts: Vec<usize>,
+    /// Combinations to test (paper: all four).
+    pub combos: Vec<Combination>,
+    /// Cores per node (paper: 8).
+    pub cores_per_node: usize,
+    /// Interconnect model ('paravance' = 10 GbE).
+    pub network: NetworkPreset,
+    /// Matrix generation seed.
+    pub seed: u64,
+    /// Decomposition tunables.
+    pub decompose: DecomposeConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            matrices: MatrixSpec::paper_suite().iter().map(|s| s.name.to_string()).collect(),
+            node_counts: vec![2, 4, 8, 16, 32, 64],
+            combos: Combination::all().to_vec(),
+            cores_per_node: 8,
+            network: NetworkPreset::TenGigabitEthernet,
+            seed: 1,
+            decompose: DecomposeConfig::default(),
+        }
+    }
+}
+
+/// One cell of the sweep — a row of Tables 4.3–4.6.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub matrix: String,
+    pub combo: Combination,
+    pub f: usize,
+    pub times: PhaseTimes,
+}
+
+/// Load or generate a matrix by name: a Table 4.2 name generates its
+/// synthetic analog; anything ending in `.mtx` reads a MatrixMarket file.
+pub fn load_matrix(name: &str, seed: u64) -> crate::Result<Csr> {
+    if name.ends_with(".mtx") {
+        return Ok(crate::sparse::mm::read_matrix_market(name)?.sum_duplicates().to_csr());
+    }
+    let spec = MatrixSpec::paper(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown matrix '{name}' (not in Table 4.2, not a .mtx path)"))?;
+    Ok(generate(&spec, seed).to_csr())
+}
+
+/// Run the full sweep on the simulated cluster. Decompositions are
+/// computed once per (matrix, combo, f); the simulator prices the phases.
+pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
+    let net = cfg.network.model();
+    let mut rows = Vec::new();
+    for name in &cfg.matrices {
+        let a = load_matrix(name, cfg.seed)?;
+        for &combo in &cfg.combos {
+            for &f in &cfg.node_counts {
+                // paravance-class node, resized to the configured core count
+                let banks = if cfg.cores_per_node % 2 == 0 && cfg.cores_per_node >= 4 { 2 } else { 1 };
+                let topo = ClusterTopology {
+                    nodes: f,
+                    banks_per_node: banks,
+                    cores_per_bank: cfg.cores_per_node / banks,
+                    ..ClusterTopology::paravance(f)
+                };
+                let d = decompose(&a, combo, f, cfg.cores_per_node, &cfg.decompose);
+                let times = simulate(&d, &topo, &net);
+                rows.push(SweepRow { matrix: name.clone(), combo, f, times });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// The six metrics of the recap Table 4.7, extracted from a row.
+/// Lower is better for all of them.
+pub const METRICS: &[(&str, fn(&PhaseTimes) -> f64)] = &[
+    ("Scatter", |t| t.t_scatter),
+    ("Temps calcul de Y", |t| t.t_compute),
+    ("Temps Construction de Y", |t| t.t_construct),
+    ("Gather + Construction", |t| t.t_gather_construct()),
+    ("LB coeurs", |t| t.lb_cores),
+    ("Temps Total Traitement", |t| t.t_total()),
+];
+
+/// Win percentages per combination per metric over all (matrix, f) cases
+/// — the recap Table 4.7. Returns `wins[metric][combo] = percent`.
+pub fn win_table(rows: &[SweepRow], combos: &[Combination]) -> Vec<Vec<f64>> {
+    // group rows by (matrix, f)
+    use std::collections::HashMap;
+    let mut groups: HashMap<(String, usize), Vec<&SweepRow>> = HashMap::new();
+    for r in rows {
+        groups.entry((r.matrix.clone(), r.f)).or_default().push(r);
+    }
+    let mut wins = vec![vec![0f64; combos.len()]; METRICS.len()];
+    let mut cases = 0usize;
+    for group in groups.values() {
+        if group.len() != combos.len() {
+            continue; // incomplete case
+        }
+        cases += 1;
+        for (mi, (_, metric)) in METRICS.iter().enumerate() {
+            let values: Vec<f64> = combos
+                .iter()
+                .map(|combo| {
+                    let row = group.iter().find(|r| r.combo == *combo).unwrap();
+                    metric(&row.times)
+                })
+                .collect();
+            let best = values.iter().copied().fold(f64::INFINITY, f64::min);
+            // ties (within 0.1% relative) share the win — synthetic
+            // symmetric matrices make some combinations exactly
+            // equivalent, where the paper's measurements had run noise
+            let tied: Vec<usize> = (0..combos.len())
+                .filter(|&ci| values[ci] <= best * 1.001 + 1e-12)
+                .collect();
+            for &ci in &tied {
+                wins[mi][ci] += 1.0 / tied.len() as f64;
+            }
+        }
+    }
+    wins.into_iter()
+        .map(|per_metric| {
+            per_metric.into_iter().map(|w| 100.0 * w / cases.max(1) as f64).collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            matrices: vec!["bcsstm09".into(), "t2dal".into()],
+            node_counts: vec![2, 4],
+            cores_per_node: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_produces_full_grid() {
+        let cfg = tiny_cfg();
+        let rows = run_sweep(&cfg).unwrap();
+        assert_eq!(rows.len(), 2 * 4 * 2); // matrices × combos × f
+        for r in &rows {
+            assert!(r.times.t_total() > 0.0, "{} {} f={}", r.matrix, r.combo, r.f);
+        }
+    }
+
+    #[test]
+    fn win_table_percentages_sum_to_100() {
+        let cfg = tiny_cfg();
+        let rows = run_sweep(&cfg).unwrap();
+        let wins = win_table(&rows, &cfg.combos);
+        assert_eq!(wins.len(), METRICS.len());
+        for per_metric in &wins {
+            let sum: f64 = per_metric.iter().sum();
+            assert!((sum - 100.0).abs() < 1e-9, "sum = {sum}");
+        }
+    }
+
+    #[test]
+    fn unknown_matrix_rejected() {
+        assert!(load_matrix("doesnotexist", 1).is_err());
+    }
+
+    #[test]
+    fn load_matrix_generates_paper_specs() {
+        let a = load_matrix("bcsstm09", 1).unwrap();
+        assert_eq!(a.n_rows, 1083);
+    }
+}

@@ -1,0 +1,8 @@
+//! Experiment coordinator: configuration, the table/figure harness that
+//! regenerates the paper's evaluation, reporting, and the CLI.
+
+pub mod cli;
+pub mod experiment;
+pub mod report;
+
+pub use experiment::{run_sweep, ExperimentConfig, SweepRow};

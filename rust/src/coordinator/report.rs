@@ -1,0 +1,217 @@
+//! Reporting: ASCII tables matching the paper's layout, CSV export, and
+//! terminal line charts for the figure series.
+
+use super::experiment::{win_table, SweepRow, METRICS};
+use crate::partition::combined::Combination;
+use std::fmt::Write as _;
+
+/// Render one combination's results as the paper's Tables 4.3–4.6 layout.
+pub fn combo_table(rows: &[SweepRow], combo: Combination) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<10} {:>4} {:>8} {:>8} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "Matrice", "f", "LB_nd", "LB_cr", "T_calcul", "Scatter", "Gather", "Constr", "Gath+Con", "Total"
+    );
+    let _ = writeln!(out, "{}", "-".repeat(112));
+    for r in rows.iter().filter(|r| r.combo == combo) {
+        let t = &r.times;
+        let _ = writeln!(
+            out,
+            "{:<10} {:>4} {:>8.2} {:>8.2} {:>12.6} {:>12.6} {:>12.6} {:>12.6} {:>12.6} {:>12.6}",
+            r.matrix,
+            r.f,
+            t.lb_nodes,
+            t.lb_cores,
+            t.t_compute,
+            t.t_scatter,
+            t.t_gather,
+            t.t_construct,
+            t.t_gather_construct(),
+            t.t_total()
+        );
+    }
+    out
+}
+
+/// Render the recap Table 4.7: per-metric win percentage per combination.
+pub fn recap_table(rows: &[SweepRow], combos: &[Combination]) -> String {
+    let wins = win_table(rows, combos);
+    let mut out = String::new();
+    let _ = write!(out, "{:<26}", "");
+    for c in combos {
+        let _ = write!(out, "{:>9}", c.name());
+    }
+    let _ = writeln!(out);
+    let _ = writeln!(out, "{}", "-".repeat(26 + 9 * combos.len()));
+    for (mi, (name, _)) in METRICS.iter().enumerate() {
+        let _ = write!(out, "{:<26}", name);
+        for ci in 0..combos.len() {
+            let w = wins[mi][ci];
+            if w == 0.0 {
+                let _ = write!(out, "{:>9}", "-");
+            } else {
+                let _ = write!(out, "{:>8.0}%", w);
+            }
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+/// CSV export of the full sweep (one row per cell).
+pub fn to_csv(rows: &[SweepRow]) -> String {
+    let mut out = String::from(
+        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total\n",
+    );
+    for r in rows {
+        let t = &r.times;
+        let _ = writeln!(
+            out,
+            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9}",
+            r.matrix,
+            r.combo.name(),
+            r.f,
+            t.lb_nodes,
+            t.lb_cores,
+            t.t_compute,
+            t.t_scatter,
+            t.t_gather,
+            t.t_construct,
+            t.t_gather_construct(),
+            t.t_total()
+        );
+    }
+    out
+}
+
+/// ASCII line chart of a metric vs f for each combination — one paper
+/// figure (e.g. fig. 4.24 is `series(rows, "af23560", compute)`).
+pub fn figure(
+    rows: &[SweepRow],
+    matrix: &str,
+    metric_name: &str,
+    metric: fn(&crate::pmvc::PhaseTimes) -> f64,
+    combos: &[Combination],
+) -> String {
+    let mut fs: Vec<usize> = rows.iter().filter(|r| r.matrix == matrix).map(|r| r.f).collect();
+    fs.sort_unstable();
+    fs.dedup();
+    let mut out = String::new();
+    let _ = writeln!(out, "{metric_name} — matrice «{matrix}»");
+    let _ = write!(out, "{:<8}", "f");
+    for c in combos {
+        let _ = write!(out, "{:>13}", c.name());
+    }
+    let _ = writeln!(out);
+
+    // collect values for scaling
+    let mut max_v: f64 = 0.0;
+    let mut table: Vec<Vec<f64>> = Vec::new();
+    for &f in &fs {
+        let mut line = Vec::new();
+        for c in combos {
+            let v = rows
+                .iter()
+                .find(|r| r.matrix == matrix && r.f == f && r.combo == *c)
+                .map(|r| metric(&r.times))
+                .unwrap_or(f64::NAN);
+            max_v = max_v.max(v);
+            line.push(v);
+        }
+        table.push(line);
+    }
+    for (fi, &f) in fs.iter().enumerate() {
+        let _ = write!(out, "{:<8}", f);
+        for v in &table[fi] {
+            let _ = write!(out, "{:>13.6}", v);
+        }
+        let _ = writeln!(out, );
+    }
+    // bar strip per combo at the largest f (quick visual)
+    let _ = writeln!(out);
+    if let Some(last) = table.last() {
+        for (ci, c) in combos.iter().enumerate() {
+            let frac = if max_v > 0.0 { last[ci] / max_v } else { 0.0 };
+            let bars = (frac * 40.0).round() as usize;
+            let _ = writeln!(out, "  {:<6} |{}", c.name(), "#".repeat(bars));
+        }
+    }
+    out
+}
+
+/// Render Table 4.2 (the matrix suite).
+pub fn matrix_table(seed: u64) -> crate::Result<String> {
+    use crate::sparse::gen::{generate, MatrixSpec};
+    use crate::sparse::stats::MatrixStats;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<10} {:>7} {:>8} {:>9}  {}",
+        "Matrice", "N", "NNZ", "Densité", "Domaine"
+    );
+    let _ = writeln!(out, "{}", "-".repeat(80));
+    for spec in MatrixSpec::paper_suite() {
+        let a = generate(&spec, seed).to_csr();
+        let s = MatrixStats::from_csr(&a);
+        let _ = writeln!(
+            out,
+            "{:<10} {:>7} {:>8} {:>8.3}%  {}",
+            spec.name, s.n_rows, s.nnz, s.density_pct, spec.domain
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::{run_sweep, ExperimentConfig};
+
+    fn rows() -> Vec<SweepRow> {
+        let cfg = ExperimentConfig {
+            matrices: vec!["bcsstm09".into()],
+            node_counts: vec![2, 4],
+            cores_per_node: 4,
+            ..Default::default()
+        };
+        run_sweep(&cfg).unwrap()
+    }
+
+    #[test]
+    fn combo_table_contains_rows() {
+        let t = combo_table(&rows(), Combination::NlHl);
+        assert!(t.contains("bcsstm09"));
+        assert!(t.lines().count() >= 4); // header + sep + 2 rows
+    }
+
+    #[test]
+    fn recap_contains_all_metrics() {
+        let t = recap_table(&rows(), &Combination::all());
+        for (name, _) in METRICS {
+            assert!(t.contains(name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = to_csv(&rows());
+        assert!(csv.starts_with("matrix,combo"));
+        assert_eq!(csv.lines().count(), 1 + 2 * 4 * 1);
+    }
+
+    #[test]
+    fn figure_renders() {
+        let fig = figure(&rows(), "bcsstm09", "Temps de calcul", |t| t.t_compute, &Combination::all());
+        assert!(fig.contains("bcsstm09"));
+        assert!(fig.contains("NL-HL"));
+    }
+
+    #[test]
+    fn matrix_table_lists_suite() {
+        let t = matrix_table(1).unwrap();
+        for name in ["bcsstm09", "thermal", "zhao1"] {
+            assert!(t.contains(name));
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! # pmvc — Distribution of Sparse Computations on a Multicore Cluster
+//!
+//! Reproduction of *"Étude de la Distribution de Calculs Creux sur une
+//! Grappe Multi-cœurs"* (Mouadh Ayachi, 2015): distributing the sparse
+//! matrix–vector product (PMVC, *Produit Matrice-Vecteur Creux*) over a
+//! cluster of multicore NUMA nodes with a **two-level decomposition**:
+//!
+//! * **inter-node**: the NEZGT heuristic (row or column variant), which
+//!   balances the nonzero count across node fragments, and
+//! * **intra-node**: 1-D hypergraph partitioning (row or column nets),
+//!   which minimizes the communication volume between cores,
+//!
+//! giving the four combinations `NC-HC`, `NC-HL`, `NL-HC`, `NL-HL`
+//! studied in the paper's chapter 4.
+//!
+//! The crate is the L3 coordinator of a three-layer stack: the per-core
+//! compute hot-spot (the *Produit Fragment-Vecteur Creux*, PFVC) is
+//! authored as a JAX/Pallas kernel, AOT-lowered to HLO text at build time
+//! (`make artifacts`) and executed from Rust through the PJRT C API
+//! ([`runtime`]). A pure-Rust kernel ([`pmvc::spmv`]) provides the
+//! reference path and the simulator cost model.
+//!
+//! ## Layout
+//!
+//! * [`sparse`] — COO/CSR/CSC/ELL formats, MatrixMarket I/O, generators
+//!   for the paper's 8-matrix SuiteSparse test suite.
+//! * [`partition`] — NEZGT (row/column), multilevel hypergraph
+//!   partitioner, the combined two-level decomposition, baselines and
+//!   balance/communication metrics.
+//! * [`cluster`] — machine model: topology, NUMA banks, α–β network.
+//! * [`pmvc`] — the distributed PMVC pipeline: plan construction,
+//!   threaded leader/worker execution, discrete-event simulation.
+//! * [`runtime`] — PJRT client, artifact loading, executable cache.
+//! * [`solver`] — CG, Jacobi, power iteration on top of distributed PMVC.
+//! * [`coordinator`] — experiment driver, reporting, CLI.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod partition;
+pub mod pmvc;
+pub mod rng;
+pub mod runtime;
+pub mod solver;
+pub mod sparse;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

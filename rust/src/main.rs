@@ -1,0 +1,253 @@
+//! `pmvc` — CLI for the PMVC distribution study (Ayachi 2015 reproduction).
+//!
+//! ```text
+//! pmvc table 4.2|4.3|4.4|4.5|4.6|4.7      regenerate a paper table
+//! pmvc figures --series <s>               regenerate a figure series
+//! pmvc sweep [--out results/sweep.csv]    full sweep -> CSV
+//! pmvc run --matrix t2dal --combo NL-HL   one threaded PMVC run
+//! pmvc gen --matrix epb1 --out epb1.mtx   write a synthetic matrix
+//! pmvc info                               artifacts + runtime status
+//! ```
+
+use pmvc::coordinator::cli::{parse_network, Args};
+use pmvc::coordinator::experiment::{run_sweep, ExperimentConfig};
+use pmvc::coordinator::report;
+use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
+use pmvc::pmvc::execute_threads;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn config_from(args: &Args) -> pmvc::Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(ms) = args.opt_list("matrices") {
+        cfg.matrices = ms;
+    }
+    if let Some(ns) = args.opt_usizes("nodes")? {
+        cfg.node_counts = ns;
+    }
+    if let Some(cs) = args.opt_list("combos") {
+        cfg.combos = cs
+            .iter()
+            .map(|s| {
+                Combination::parse(s).ok_or_else(|| anyhow::anyhow!("unknown combination '{s}'"))
+            })
+            .collect::<pmvc::Result<Vec<_>>>()?;
+    }
+    cfg.cores_per_node = args.opt_usize("cores", cfg.cores_per_node)?;
+    cfg.seed = args.opt_u64("seed", cfg.seed)?;
+    if let Some(net) = args.opt("network") {
+        cfg.network = parse_network(net)?;
+    }
+    Ok(cfg)
+}
+
+fn dispatch(args: &Args) -> pmvc::Result<()> {
+    match args.command.as_str() {
+        "table" => cmd_table(args),
+        "figures" => cmd_figures(args),
+        "sweep" => cmd_sweep(args),
+        "run" => cmd_run(args),
+        "gen" => cmd_gen(args),
+        "info" => cmd_info(args),
+        "" | "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'; try `pmvc help`"),
+    }
+}
+
+const HELP: &str = "pmvc — distribution of sparse matrix-vector products on a multicore cluster
+
+USAGE: pmvc <command> [options]
+
+COMMANDS:
+  table <4.2|4.3|4.4|4.5|4.6|4.7>   regenerate a paper table
+  figures --series <lb|scatter|compute|construct|gather|total>
+  sweep [--out FILE.csv]            full simulated sweep
+  run --matrix NAME --combo NL-HL --nodes F --cores C [--xla]
+  gen --matrix NAME --out FILE.mtx  write a synthetic Table-4.2 matrix
+  info                              artifacts + PJRT runtime status
+
+COMMON OPTIONS:
+  --matrices a,b,c   subset of Table 4.2 names (or .mtx paths)
+  --nodes 2,4,8      node counts to sweep
+  --combos NL-HL,..  combinations
+  --cores N          cores per node (default 8)
+  --network 10gbe    gbe|10gbe|ib|myrinet
+  --seed N           generator seed";
+
+fn cmd_table(args: &Args) -> pmvc::Result<()> {
+    let which = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("which table? (4.2 … 4.7)"))?;
+    let cfg = config_from(args)?;
+    match which.as_str() {
+        "4.2" => print!("{}", report::matrix_table(cfg.seed)?),
+        "4.3" | "4.4" | "4.5" | "4.6" => {
+            let combo = match which.as_str() {
+                "4.3" => Combination::NcHc,
+                "4.4" => Combination::NcHl,
+                "4.5" => Combination::NlHc,
+                _ => Combination::NlHl,
+            };
+            let rows = run_sweep(&cfg)?;
+            println!("Table {which} — combinaison {}", combo.name());
+            print!("{}", report::combo_table(&rows, combo));
+        }
+        "4.7" => {
+            let rows = run_sweep(&cfg)?;
+            println!("Table 4.7 — récapitulation des résultats (meilleure combinaison par cas)");
+            print!("{}", report::recap_table(&rows, &cfg.combos));
+        }
+        other => anyhow::bail!("unknown table '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> pmvc::Result<()> {
+    let cfg = config_from(args)?;
+    let series = args.opt_or("series", "total");
+    let (name, metric): (&str, fn(&pmvc::pmvc::PhaseTimes) -> f64) = match series {
+        "lb" => ("Équilibrage des charges (LB coeurs)", |t| t.lb_cores),
+        "scatter" => ("Durée Scatter (s)", |t| t.t_scatter),
+        "compute" => ("Temps de calcul de Y (s)", |t| t.t_compute),
+        "construct" => ("Temps construction de Y (s)", |t| t.t_construct),
+        "gather" => ("Gather + Construction (s)", |t| t.t_gather_construct()),
+        "total" => ("Temps total du PMVC (s)", |t| t.t_total()),
+        other => anyhow::bail!("unknown series '{other}'"),
+    };
+    let rows = run_sweep(&cfg)?;
+    for m in &cfg.matrices {
+        println!("{}", report::figure(&rows, m, name, metric, &cfg.combos));
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> pmvc::Result<()> {
+    let cfg = config_from(args)?;
+    let rows = run_sweep(&cfg)?;
+    let csv = report::to_csv(&rows);
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, &csv)?;
+            eprintln!("wrote {} rows to {path}", rows.len());
+        }
+        None => print!("{csv}"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> pmvc::Result<()> {
+    let matrix = args.opt_or("matrix", "t2dal");
+    let combo = Combination::parse(args.opt_or("combo", "NL-HL"))
+        .ok_or_else(|| anyhow::anyhow!("bad --combo"))?;
+    let f = args.opt_usize("nodes", 2)?;
+    let c = args.opt_usize("cores", 4)?;
+    let seed = args.opt_u64("seed", 1)?;
+    let a = pmvc::coordinator::experiment::load_matrix(matrix, seed)?;
+    let mut rng = pmvc::rng::SplitMix64::new(seed);
+    let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+
+    let d = decompose(&a, combo, f, c, &DecomposeConfig::default());
+    let r = execute_threads(&d, &x)?;
+    let y_ref = a.matvec(&x);
+    let max_err = r
+        .y
+        .iter()
+        .zip(&y_ref)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+
+    println!("matrix={matrix} N={} NNZ={} combo={} f={f} cores={c}", a.n_rows, a.nnz(), combo);
+    println!("LB_noeuds={:.3} LB_coeurs={:.3}", r.times.lb_nodes, r.times.lb_cores);
+    println!(
+        "scatter={:.6}s compute={:.6}s construct={:.6}s gather={:.6}s total={:.6}s",
+        r.times.t_scatter,
+        r.times.t_compute,
+        r.times.t_construct,
+        r.times.t_gather,
+        r.times.t_total()
+    );
+    println!("max |y - y_ref| = {max_err:.3e}");
+    anyhow::ensure!(max_err < 1e-8, "distributed result diverges from serial");
+
+    if args.has("xla") {
+        let mut rt = pmvc::runtime::Runtime::new()?;
+        println!("PJRT platform: {}", rt.platform());
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut y = vec![0f64; a.n_rows];
+        let t0 = std::time::Instant::now();
+        for frag in &d.fragments {
+            if frag.csr.nnz() == 0 {
+                continue;
+            }
+            let mut xl = vec![0f32; frag.csr.n_cols];
+            for (lc, &g) in frag.global_cols.iter().enumerate() {
+                xl[lc] = xf[g as usize];
+            }
+            let yl = rt.pfvc_csr(&frag.csr, &xl)?;
+            for (lr, &g) in frag.global_rows.iter().enumerate() {
+                y[g as usize] += yl[lr] as f64;
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let max_err32 = y
+            .iter()
+            .zip(&y_ref)
+            .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+            .fold(0.0f64, f64::max);
+        println!(
+            "XLA path: {} executions, {} compiles, {dt:.4}s, max rel err = {max_err32:.3e}",
+            rt.executions, rt.compiles
+        );
+        anyhow::ensure!(max_err32 < 1e-3, "XLA (f32) path diverges");
+    }
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> pmvc::Result<()> {
+    let matrix = args
+        .opt("matrix")
+        .ok_or_else(|| anyhow::anyhow!("--matrix required"))?;
+    let out = args.opt("out").ok_or_else(|| anyhow::anyhow!("--out required"))?;
+    let seed = args.opt_u64("seed", 1)?;
+    let spec = pmvc::sparse::gen::MatrixSpec::paper(matrix)
+        .ok_or_else(|| anyhow::anyhow!("unknown matrix '{matrix}'"))?;
+    let m = pmvc::sparse::gen::generate(&spec, seed);
+    pmvc::sparse::mm::write_matrix_market(out, &m)?;
+    println!("wrote {} ({}x{}, {} nnz) to {out}", spec.name, m.n_rows, m.n_cols, m.nnz());
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> pmvc::Result<()> {
+    let dir = pmvc::runtime::artifacts_dir();
+    println!("artifacts dir: {dir:?}");
+    match pmvc::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("{} artifact buckets:", m.entries.len());
+            for e in &m.entries {
+                println!(
+                    "  {} ({}x{}, VMEM est. {} KiB)",
+                    e.stem,
+                    e.bucket.rows,
+                    e.bucket.width,
+                    e.bucket.vmem_bytes() / 1024
+                );
+            }
+        }
+        Err(e) => println!("no manifest: {e}"),
+    }
+    match pmvc::runtime::Runtime::new() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("runtime unavailable: {e}"),
+    }
+    Ok(())
+}

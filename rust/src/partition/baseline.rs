@@ -1,0 +1,103 @@
+//! Baseline 1-D partitioners the paper compares against implicitly
+//! (PETSc's default distribution is contiguous row blocks; ch. 3 §4.2.3
+//! notes the combined method beats PETSc's load balance by a wide margin).
+
+use super::Partition;
+
+/// Contiguous equal-count blocks: item `i` goes to part `i·k/n`
+/// (PETSc-style ownership ranges, ignoring weights).
+pub fn contiguous_blocks(n_items: usize, k: usize) -> Partition {
+    assert!(k > 0);
+    let assign = (0..n_items).map(|i| ((i * k) / n_items.max(1)) as u32).collect();
+    Partition { k, assign }
+}
+
+/// Contiguous blocks balanced by weight: greedy prefix cuts targeting
+/// `total/k` per part (what a careful MPI code does with nnz counts).
+pub fn contiguous_balanced(weights: &[usize], k: usize) -> Partition {
+    assert!(k > 0);
+    let total: u64 = weights.iter().map(|&w| w as u64).sum();
+    let target = total as f64 / k as f64;
+    let mut assign = vec![0u32; weights.len()];
+    let mut part = 0usize;
+    let mut acc = 0u64;
+    for (i, &w) in weights.iter().enumerate() {
+        // close the current part when it reached its target and there are
+        // parts left for the remaining items
+        if part + 1 < k && acc as f64 >= target * (part + 1) as f64 {
+            part += 1;
+        }
+        assign[i] = part as u32;
+        acc += w as u64;
+    }
+    Partition { k, assign }
+}
+
+/// Cyclic (round-robin) distribution: item `i` to part `i mod k`.
+pub fn cyclic(n_items: usize, k: usize) -> Partition {
+    assert!(k > 0);
+    Partition { k, assign: (0..n_items).map(|i| (i % k) as u32).collect() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Nezgt;
+    use crate::rng::SplitMix64;
+
+    #[test]
+    fn contiguous_blocks_are_contiguous_and_complete() {
+        let p = contiguous_blocks(10, 3);
+        p.validate().unwrap();
+        for w in p.assign.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert_eq!(p.assign[0], 0);
+        assert_eq!(*p.assign.last().unwrap() as usize, 2);
+    }
+
+    #[test]
+    fn cyclic_wraps() {
+        let p = cyclic(7, 3);
+        assert_eq!(p.assign, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn balanced_beats_plain_contiguous_on_skewed_weights() {
+        let mut rng = SplitMix64::new(3);
+        let weights: Vec<usize> = (0..1000)
+            .map(|i| if i < 100 { 100 + rng.next_below(50) } else { 1 + rng.next_below(3) })
+            .collect();
+        let plain = contiguous_blocks(weights.len(), 8);
+        let bal = contiguous_balanced(&weights, 8);
+        assert!(bal.imbalance(&weights) < plain.imbalance(&weights));
+    }
+
+    #[test]
+    fn nezgt_beats_all_baselines_on_load_balance() {
+        // the paper's core load-balance claim, as a property
+        let mut rng = SplitMix64::new(8);
+        let weights: Vec<usize> = (0..500).map(|_| 1 + rng.next_below(60)).collect();
+        let nez = Nezgt::ligne().partition_weights(&weights, 6);
+        for base in [
+            contiguous_blocks(weights.len(), 6),
+            contiguous_balanced(&weights, 6),
+            cyclic(weights.len(), 6),
+        ] {
+            assert!(
+                nez.imbalance(&weights) <= base.imbalance(&weights) + 1e-9,
+                "NEZGT {} vs baseline {}",
+                nez.imbalance(&weights),
+                base.imbalance(&weights)
+            );
+        }
+    }
+
+    #[test]
+    fn balanced_handles_uniform_weights() {
+        let weights = vec![2usize; 12];
+        let p = contiguous_balanced(&weights, 4);
+        p.validate().unwrap();
+        assert_eq!(p.loads(&weights), vec![6, 6, 6, 6]);
+    }
+}

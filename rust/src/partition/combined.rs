@@ -1,0 +1,520 @@
+//! The combined two-level decomposition (ch. 3 §4.2.3 and ch. 4 §2) —
+//! **the paper's contribution**.
+//!
+//! The matrix is first fragmented *inter-node* into `f` node fragments
+//! with NEZGT (row or column variant: load balance across nodes), then
+//! each node fragment is fragmented *intra-node* into `c` core fragments
+//! with hypergraph partitioning (row or column nets: communication volume
+//! within the NUMA node). The four combinations tested in ch. 4:
+//!
+//! | name   | inter-node      | intra-node      |
+//! |--------|-----------------|-----------------|
+//! | NC-HC  | NEZGT_colonne   | HYPER_colonne   |
+//! | NC-HL  | NEZGT_colonne   | HYPER_ligne     |
+//! | NL-HC  | NEZGT_ligne     | HYPER_colonne   |
+//! | NL-HL  | NEZGT_ligne     | HYPER_ligne     |
+
+use super::hypergraph::Hypergraph;
+use super::multilevel::Multilevel;
+use super::nezgt::Nezgt;
+use super::{Axis, Partition};
+use crate::sparse::{Coo, Csr};
+
+/// The four inter/intra combinations of ch. 4 (Table 4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Combination {
+    NcHc,
+    NcHl,
+    NlHc,
+    NlHl,
+}
+
+impl Combination {
+    /// All four, in the paper's table order.
+    pub fn all() -> [Combination; 4] {
+        [Combination::NcHc, Combination::NcHl, Combination::NlHc, Combination::NlHl]
+    }
+
+    /// Axis of the inter-node NEZGT fragmentation.
+    pub fn inter_axis(&self) -> Axis {
+        match self {
+            Combination::NcHc | Combination::NcHl => Axis::Col,
+            Combination::NlHc | Combination::NlHl => Axis::Row,
+        }
+    }
+
+    /// Axis of the intra-node hypergraph fragmentation.
+    pub fn intra_axis(&self) -> Axis {
+        match self {
+            Combination::NcHc | Combination::NlHc => Axis::Col,
+            Combination::NcHl | Combination::NlHl => Axis::Row,
+        }
+    }
+
+    /// Paper notation, e.g. `NL-HL`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Combination::NcHc => "NC-HC",
+            Combination::NcHl => "NC-HL",
+            Combination::NlHc => "NL-HC",
+            Combination::NlHl => "NL-HL",
+        }
+    }
+
+    /// Parse `NC-HC` / `nl-hl` style names.
+    pub fn parse(s: &str) -> Option<Combination> {
+        match s.to_ascii_uppercase().as_str() {
+            "NC-HC" | "NCHC" => Some(Combination::NcHc),
+            "NC-HL" | "NCHL" => Some(Combination::NcHl),
+            "NL-HC" | "NLHC" => Some(Combination::NlHc),
+            "NL-HL" | "NLHL" => Some(Combination::NlHl),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Combination {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Which algorithm fragments the intra-node level (ablation switch; the
+/// paper's ch. 4 always uses the hypergraph, MeH12 also studied NEZ-NEZ).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntraMethod {
+    Hypergraph,
+    Nezgt,
+}
+
+/// Decomposition tunables.
+#[derive(Clone, Debug)]
+pub struct DecomposeConfig {
+    pub intra_method: IntraMethod,
+    pub multilevel: Multilevel,
+    pub nezgt_refine: bool,
+}
+
+impl Default for DecomposeConfig {
+    fn default() -> Self {
+        Self {
+            intra_method: IntraMethod::Hypergraph,
+            multilevel: Multilevel::default(),
+            nezgt_refine: true,
+        }
+    }
+}
+
+/// One core's share of the matrix: a compacted local CSR plus the maps
+/// back to global row/column ids. `global_cols` is exactly the X_ki
+/// footprint the scatter phase ships; `global_rows` the Y_ki footprint
+/// the gather phase returns.
+#[derive(Clone, Debug)]
+pub struct CoreFragment {
+    pub node: usize,
+    pub core: usize,
+    /// Local matrix: `csr.n_rows == global_rows.len()`,
+    /// `csr.n_cols == global_cols.len()`.
+    pub csr: Csr,
+    /// Local row -> global row id.
+    pub global_rows: Vec<u32>,
+    /// Local col -> global col id.
+    pub global_cols: Vec<u32>,
+}
+
+impl CoreFragment {
+    pub fn nnz(&self) -> usize {
+        self.csr.nnz()
+    }
+}
+
+/// The full two-level decomposition of one matrix for `f` nodes × `c`
+/// cores, produced by [`decompose`].
+#[derive(Clone, Debug)]
+pub struct TwoLevelDecomposition {
+    pub combo: Combination,
+    pub f: usize,
+    pub c: usize,
+    /// Matrix order N.
+    pub n: usize,
+    /// Total nonzeros.
+    pub nnz: usize,
+    /// Inter-node partition (over rows for NL-*, columns for NC-*).
+    pub inter: Partition,
+    /// Core fragments, indexed `node * c + core`. Fragments may be empty
+    /// (0 rows) when a node/core receives no work.
+    pub fragments: Vec<CoreFragment>,
+}
+
+impl TwoLevelDecomposition {
+    /// Fragment of (node, core).
+    pub fn fragment(&self, node: usize, core: usize) -> &CoreFragment {
+        &self.fragments[node * self.c + core]
+    }
+
+    /// Nonzeros per node.
+    pub fn node_loads(&self) -> Vec<u64> {
+        let mut loads = vec![0u64; self.f];
+        for frag in &self.fragments {
+            loads[frag.node] += frag.nnz() as u64;
+        }
+        loads
+    }
+
+    /// Nonzeros per core (all f·c cores).
+    pub fn core_loads(&self) -> Vec<u64> {
+        self.fragments.iter().map(|fr| fr.nnz() as u64).collect()
+    }
+
+    /// LB_noeuds — max/avg nonzero load over nodes (Table 4.3 col 3).
+    pub fn lb_nodes(&self) -> f64 {
+        super::metrics::imbalance(&self.node_loads())
+    }
+
+    /// LB_coeurs — max/avg nonzero load over all cores (Table 4.3 col 4).
+    pub fn lb_cores(&self) -> f64 {
+        super::metrics::imbalance(&self.core_loads())
+    }
+
+    /// X footprint of a node: distinct global columns over its cores
+    /// (`C_Xk` in ch. 3 §4.2.3 — the fan-out message size).
+    pub fn node_x_footprint(&self, node: usize) -> usize {
+        let mut seen = vec![false; self.n];
+        let mut count = 0usize;
+        for core in 0..self.c {
+            for &g in &self.fragment(node, core).global_cols {
+                if !seen[g as usize] {
+                    seen[g as usize] = true;
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+
+    /// Y footprint of a node: distinct global rows over its cores
+    /// (`C_Yk` — the fan-in message size).
+    pub fn node_y_footprint(&self, node: usize) -> usize {
+        let mut seen = vec![false; self.n];
+        let mut count = 0usize;
+        for core in 0..self.c {
+            for &g in &self.fragment(node, core).global_rows {
+                if !seen[g as usize] {
+                    seen[g as usize] = true;
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+
+    /// Check the decomposition covers every nonzero exactly once and all
+    /// local indices are consistent.
+    pub fn validate(&self, a: &Csr) -> crate::Result<()> {
+        anyhow::ensure!(self.fragments.len() == self.f * self.c, "fragment count");
+        let mut seen: std::collections::HashMap<(u32, u32), f64> =
+            std::collections::HashMap::with_capacity(a.nnz());
+        for frag in &self.fragments {
+            frag.csr.validate()?;
+            anyhow::ensure!(frag.csr.n_rows == frag.global_rows.len(), "row map length");
+            anyhow::ensure!(frag.csr.n_cols == frag.global_cols.len(), "col map length");
+            for lr in 0..frag.csr.n_rows {
+                let gr = frag.global_rows[lr];
+                for (lc, v) in frag.csr.row(lr) {
+                    let gc = frag.global_cols[lc as usize];
+                    anyhow::ensure!(
+                        seen.insert((gr, gc), v).is_none(),
+                        "nonzero ({gr},{gc}) covered twice"
+                    );
+                }
+            }
+        }
+        anyhow::ensure!(seen.len() == a.nnz(), "covered {} of {} nonzeros", seen.len(), a.nnz());
+        for i in 0..a.n_rows {
+            for (c, v) in a.row(i) {
+                let got = seen.get(&(i as u32, c)).copied();
+                anyhow::ensure!(got == Some(v), "nonzero ({i},{c}) missing or wrong value");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Decompose matrix `a` for `f` nodes × `c` cores with the given
+/// combination — the paper's two-level pipeline.
+pub fn decompose(
+    a: &Csr,
+    combo: Combination,
+    f: usize,
+    c: usize,
+    cfg: &DecomposeConfig,
+) -> TwoLevelDecomposition {
+    assert!(f > 0 && c > 0);
+    // ---- level 1: inter-node NEZGT along the combination's inter axis.
+    let nez = Nezgt {
+        axis: combo.inter_axis(),
+        refine: cfg.nezgt_refine,
+        ..Nezgt::default()
+    };
+    let inter = nez.partition(a, f);
+
+    // ---- gather per-node entry lists (global coords + CSR position).
+    let mut node_entries: Vec<Vec<(u32, u32, f64)>> = vec![Vec::new(); f];
+    for i in 0..a.n_rows {
+        for (j, v) in a.row(i) {
+            let node = match combo.inter_axis() {
+                Axis::Row => inter.assign[i] as usize,
+                Axis::Col => inter.assign[j as usize] as usize,
+            };
+            node_entries[node].push((i as u32, j, v));
+        }
+    }
+
+    // ---- level 2: intra-node partition of each node fragment.
+    // §Perf iteration 6: one pair of N-sized inverse-map scratch buffers
+    // reused across all f + f·c compactions (reset is O(touched), not
+    // O(N) — avoids ~100 MB of memset on the 64-node af23560 sweep cell).
+    let mut scratch = CompactScratch::new(a.n_rows, a.n_cols);
+    let mut fragments: Vec<CoreFragment> = Vec::with_capacity(f * c);
+    for (node, entries) in node_entries.iter().enumerate() {
+        // compact the node fragment to local row/col spaces
+        let (local, rows_map, cols_map) = compact(entries, &mut scratch);
+        // intra partition over local items of the intra axis
+        let n_items = match combo.intra_axis() {
+            Axis::Row => local.n_rows,
+            Axis::Col => local.n_cols,
+        };
+        let intra: Partition = if n_items == 0 {
+            Partition::trivial(0, c)
+        } else {
+            match cfg.intra_method {
+                IntraMethod::Hypergraph => {
+                    let hg = Hypergraph::from_matrix(&local, combo.intra_axis());
+                    let mut ml = cfg.multilevel.clone();
+                    // decorrelate seeds across nodes, keep determinism
+                    ml.seed = cfg.multilevel.seed ^ (node as u64).wrapping_mul(0x9E3779B97F4A7C15);
+                    ml.partition(&hg, c)
+                }
+                IntraMethod::Nezgt => {
+                    let nez = Nezgt {
+                        axis: combo.intra_axis(),
+                        refine: cfg.nezgt_refine,
+                        ..Nezgt::default()
+                    };
+                    nez.partition(&local, c)
+                }
+            }
+        };
+
+        // split the node's entries into core fragments
+        let mut core_entries: Vec<Vec<(u32, u32, f64)>> = vec![Vec::new(); c];
+        for lr in 0..local.n_rows {
+            for (lc, v) in local.row(lr) {
+                let core = match combo.intra_axis() {
+                    Axis::Row => intra.assign[lr] as usize,
+                    Axis::Col => intra.assign[lc as usize] as usize,
+                };
+                // store GLOBAL coords; re-compacted per core below
+                core_entries[core].push((rows_map[lr], cols_map[lc as usize], v));
+            }
+        }
+        for (core, entries) in core_entries.iter().enumerate() {
+            let (csr, global_rows, global_cols) = compact(entries, &mut scratch);
+            fragments.push(CoreFragment { node, core, csr, global_rows, global_cols });
+        }
+    }
+
+    TwoLevelDecomposition {
+        combo,
+        f,
+        c,
+        n: a.n_rows,
+        nnz: a.nnz(),
+        inter,
+        fragments,
+    }
+}
+
+/// Reusable dense inverse-map scratch for [`compact`].
+struct CompactScratch {
+    row_inv: Vec<u32>,
+    col_inv: Vec<u32>,
+}
+
+impl CompactScratch {
+    fn new(n_rows: usize, n_cols: usize) -> Self {
+        Self { row_inv: vec![u32::MAX; n_rows], col_inv: vec![u32::MAX; n_cols] }
+    }
+}
+
+/// Compact a global-coordinate entry list to a local CSR plus the
+/// local→global row/col maps. The scratch maps are restored to their
+/// all-`u32::MAX` state before returning (O(touched) reset).
+fn compact(entries: &[(u32, u32, f64)], scratch: &mut CompactScratch) -> (Csr, Vec<u32>, Vec<u32>) {
+    let mut rows: Vec<u32> = entries.iter().map(|e| e.0).collect();
+    rows.sort_unstable();
+    rows.dedup();
+    let mut cols: Vec<u32> = entries.iter().map(|e| e.1).collect();
+    cols.sort_unstable();
+    cols.dedup();
+    for (l, &g) in rows.iter().enumerate() {
+        scratch.row_inv[g as usize] = l as u32;
+    }
+    for (l, &g) in cols.iter().enumerate() {
+        scratch.col_inv[g as usize] = l as u32;
+    }
+    let mut coo = Coo::new(rows.len(), cols.len());
+    for &(r, c, v) in entries {
+        coo.push(scratch.row_inv[r as usize], scratch.col_inv[c as usize], v);
+    }
+    // restore scratch
+    for &g in &rows {
+        scratch.row_inv[g as usize] = u32::MAX;
+    }
+    for &g in &cols {
+        scratch.col_inv[g as usize] = u32::MAX;
+    }
+    (coo.to_csr(), rows, cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{generate, MatrixSpec};
+
+    fn small_matrix() -> Csr {
+        generate(&MatrixSpec::paper("t2dal").unwrap(), 42).to_csr()
+    }
+
+    #[test]
+    fn combination_axes_match_paper_table41() {
+        assert_eq!(Combination::NcHc.inter_axis(), Axis::Col);
+        assert_eq!(Combination::NcHc.intra_axis(), Axis::Col);
+        assert_eq!(Combination::NcHl.intra_axis(), Axis::Row);
+        assert_eq!(Combination::NlHc.inter_axis(), Axis::Row);
+        assert_eq!(Combination::NlHl.intra_axis(), Axis::Row);
+        assert_eq!(Combination::parse("nl-hl"), Some(Combination::NlHl));
+        assert_eq!(Combination::parse("bogus"), None);
+    }
+
+    #[test]
+    fn all_combinations_cover_all_nonzeros() {
+        let a = small_matrix();
+        for combo in Combination::all() {
+            let d = decompose(&a, combo, 4, 4, &DecomposeConfig::default());
+            d.validate(&a).unwrap_or_else(|e| panic!("{combo}: {e}"));
+        }
+    }
+
+    #[test]
+    fn node_loads_balanced_by_nezgt() {
+        let a = small_matrix();
+        for combo in Combination::all() {
+            let d = decompose(&a, combo, 8, 4, &DecomposeConfig::default());
+            let lb = d.lb_nodes();
+            assert!(lb < 1.05, "{combo}: LB_nodes = {lb}");
+        }
+    }
+
+    #[test]
+    fn row_combination_keeps_rows_whole_per_node() {
+        let a = small_matrix();
+        let d = decompose(&a, Combination::NlHl, 4, 2, &DecomposeConfig::default());
+        // each global row appears in exactly one node
+        let mut node_of_row = vec![usize::MAX; a.n_rows];
+        for frag in &d.fragments {
+            for &g in &frag.global_rows {
+                let prev = node_of_row[g as usize];
+                assert!(prev == usize::MAX || prev == frag.node, "row {g} split across nodes");
+                node_of_row[g as usize] = frag.node;
+            }
+        }
+    }
+
+    #[test]
+    fn col_combination_keeps_cols_whole_per_node() {
+        let a = small_matrix();
+        let d = decompose(&a, Combination::NcHc, 4, 2, &DecomposeConfig::default());
+        let mut node_of_col = vec![usize::MAX; a.n_cols];
+        for frag in &d.fragments {
+            for &g in &frag.global_cols {
+                let prev = node_of_col[g as usize];
+                assert!(prev == usize::MAX || prev == frag.node, "col {g} split across nodes");
+                node_of_col[g as usize] = frag.node;
+            }
+        }
+    }
+
+    #[test]
+    fn nl_hl_cores_own_disjoint_rows() {
+        let a = small_matrix();
+        let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default());
+        let mut owner = vec![None::<(usize, usize)>; a.n_rows];
+        for frag in &d.fragments {
+            for &g in &frag.global_rows {
+                assert!(owner[g as usize].is_none(), "row {g} in two cores");
+                owner[g as usize] = Some((frag.node, frag.core));
+            }
+        }
+    }
+
+    #[test]
+    fn x_footprint_bounds_hold() {
+        // paper ch.3 §4.2.3: 1 <= C_Xk <= N
+        let a = small_matrix();
+        for combo in Combination::all() {
+            let d = decompose(&a, combo, 4, 4, &DecomposeConfig::default());
+            for node in 0..4 {
+                let cx = d.node_x_footprint(node);
+                let cy = d.node_y_footprint(node);
+                assert!(cx >= 1 && cx <= a.n_cols, "{combo} node {node}: C_Xk = {cx}");
+                assert!(cy >= 1 && cy <= a.n_rows, "{combo} node {node}: C_Yk = {cy}");
+            }
+        }
+    }
+
+    #[test]
+    fn column_inter_has_larger_y_footprint_than_row_inter() {
+        // NL fragments own whole rows => node Y footprints partition N.
+        // NC fragments touch most rows => sum of Y footprints >> N.
+        let a = small_matrix();
+        let dl = decompose(&a, Combination::NlHl, 4, 2, &DecomposeConfig::default());
+        let dc = decompose(&a, Combination::NcHc, 4, 2, &DecomposeConfig::default());
+        let yl: usize = (0..4).map(|k| dl.node_y_footprint(k)).sum();
+        let yc: usize = (0..4).map(|k| dc.node_y_footprint(k)).sum();
+        assert_eq!(yl, a.n_rows);
+        assert!(yc > yl, "NC should produce overlapping Y partials ({yc} vs {yl})");
+    }
+
+    #[test]
+    fn nezgt_intra_ablation_runs() {
+        let a = small_matrix();
+        let cfg = DecomposeConfig { intra_method: IntraMethod::Nezgt, ..Default::default() };
+        let d = decompose(&a, Combination::NlHl, 2, 4, &cfg);
+        d.validate(&a).unwrap();
+        assert!(d.lb_cores() < 1.3);
+    }
+
+    #[test]
+    fn handles_more_nodes_than_rows() {
+        use crate::sparse::Coo;
+        let a = Coo::from_triplets(3, 3, [(0, 0, 1.0), (1, 1, 2.0), (2, 2, 3.0)])
+            .unwrap()
+            .to_csr();
+        let d = decompose(&a, Combination::NlHl, 8, 2, &DecomposeConfig::default());
+        d.validate(&a).unwrap();
+        // empty fragments must be well-formed
+        for frag in &d.fragments {
+            frag.csr.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = small_matrix();
+        let d1 = decompose(&a, Combination::NlHc, 4, 4, &DecomposeConfig::default());
+        let d2 = decompose(&a, Combination::NlHc, 4, 4, &DecomposeConfig::default());
+        assert_eq!(d1.core_loads(), d2.core_loads());
+        assert_eq!(d1.inter, d2.inter);
+    }
+}

@@ -1,0 +1,207 @@
+//! 1-D hypergraph model of the sparse matrix (ch. 3 §4.2.2).
+//!
+//! For a row-block decomposition (HYPER_ligne) each **row is a vertex**
+//! (weighted by its nonzero count) and each **column is a net** whose pins
+//! are the rows holding a nonzero in that column. For a column-block
+//! decomposition (HYPER_colonne) the roles flip. Çatalyürek & Aykanat
+//! (1999) showed that the (λ−1) cut of this model counts the PMVC
+//! communication volume exactly — which is why the paper uses it for the
+//! communication-sensitive level of the decomposition.
+
+use super::{Axis, Partition};
+use crate::sparse::Csr;
+
+/// A hypergraph H = (V, E): vertices with integer weights and nets
+/// (hyperedges) given as pin lists.
+#[derive(Clone, Debug)]
+pub struct Hypergraph {
+    /// Vertex weights (nonzero counts in the 1-D matrix model).
+    pub vwt: Vec<usize>,
+    /// Nets: each is a sorted list of vertex ids.
+    pub nets: Vec<Vec<u32>>,
+    /// Incidence: nets containing each vertex.
+    pub vert_nets: Vec<Vec<u32>>,
+}
+
+impl Hypergraph {
+    /// Number of vertices.
+    pub fn n_verts(&self) -> usize {
+        self.vwt.len()
+    }
+
+    /// Number of nets.
+    pub fn n_nets(&self) -> usize {
+        self.nets.len()
+    }
+
+    /// Total pin count (Σ |net|).
+    pub fn n_pins(&self) -> usize {
+        self.nets.iter().map(|n| n.len()).sum()
+    }
+
+    /// Build from pin lists, deriving the incidence structure.
+    pub fn from_nets(vwt: Vec<usize>, mut nets: Vec<Vec<u32>>) -> Hypergraph {
+        let n = vwt.len();
+        for net in nets.iter_mut() {
+            net.sort_unstable();
+            net.dedup();
+        }
+        // drop empty and singleton nets: they can never be cut
+        nets.retain(|net| net.len() >= 2);
+        let mut vert_nets = vec![Vec::new(); n];
+        for (e, net) in nets.iter().enumerate() {
+            for &v in net {
+                vert_nets[v as usize].push(e as u32);
+            }
+        }
+        Hypergraph { vwt, nets, vert_nets }
+    }
+
+    /// The 1-D model of matrix `a` along `axis`:
+    /// * `Axis::Row`  — vertices = rows, nets = columns (HYPER_ligne);
+    /// * `Axis::Col`  — vertices = columns, nets = rows (HYPER_colonne).
+    pub fn from_matrix(a: &Csr, axis: Axis) -> Hypergraph {
+        match axis {
+            Axis::Row => {
+                let vwt = a.row_counts();
+                let mut nets: Vec<Vec<u32>> = vec![Vec::new(); a.n_cols];
+                for i in 0..a.n_rows {
+                    for (c, _) in a.row(i) {
+                        nets[c as usize].push(i as u32);
+                    }
+                }
+                Hypergraph::from_nets(vwt, nets)
+            }
+            Axis::Col => {
+                let vwt = a.col_counts();
+                let mut nets: Vec<Vec<u32>> = vec![Vec::new(); a.n_rows];
+                for i in 0..a.n_rows {
+                    for (c, _) in a.row(i) {
+                        nets[i].push(c);
+                    }
+                }
+                Hypergraph::from_nets(vwt, nets)
+            }
+        }
+    }
+
+    /// Connectivity λ_e of each net under a partition: the number of
+    /// distinct parts its pins span.
+    pub fn net_lambdas(&self, part: &Partition) -> Vec<u32> {
+        let mut lambdas = Vec::with_capacity(self.nets.len());
+        let mut mark = vec![u32::MAX; part.k];
+        for (e, net) in self.nets.iter().enumerate() {
+            let mut lambda = 0u32;
+            for &v in net {
+                let p = part.assign[v as usize] as usize;
+                if mark[p] != e as u32 {
+                    mark[p] = e as u32;
+                    lambda += 1;
+                }
+            }
+            lambdas.push(lambda);
+        }
+        lambdas
+    }
+
+    /// The (λ−1) cut metric = Σ_e (λ_e − 1); for the 1-D PMVC model this
+    /// equals the number of vector elements that must cross a boundary.
+    pub fn lambda_minus_one_cut(&self, part: &Partition) -> u64 {
+        self.net_lambdas(part).iter().map(|&l| (l.saturating_sub(1)) as u64).sum()
+    }
+
+    /// Plain cut-net metric: number of nets spanning ≥ 2 parts.
+    pub fn cut_nets(&self, part: &Partition) -> u64 {
+        self.net_lambdas(part).iter().filter(|&&l| l >= 2).count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn example() -> Csr {
+        // 4x4: rows {0,2} share column 0; rows {2,3} share column 1;
+        // rows {1,2} share column 2; rows {0,3} share column 3.
+        Coo::from_triplets(
+            4,
+            4,
+            [
+                (0, 0, 1.0),
+                (0, 3, 2.0),
+                (1, 2, 3.0),
+                (2, 0, 4.0),
+                (2, 1, 5.0),
+                (2, 2, 6.0),
+                (3, 1, 7.0),
+                (3, 3, 8.0),
+            ],
+        )
+        .unwrap()
+        .to_csr()
+    }
+
+    #[test]
+    fn row_model_shape() {
+        let h = Hypergraph::from_matrix(&example(), Axis::Row);
+        assert_eq!(h.n_verts(), 4);
+        assert_eq!(h.n_nets(), 4); // all 4 columns have >= 2 pins
+        assert_eq!(h.vwt, vec![2, 1, 3, 2]);
+        assert_eq!(h.n_pins(), 8);
+    }
+
+    #[test]
+    fn col_model_shape() {
+        let h = Hypergraph::from_matrix(&example(), Axis::Col);
+        assert_eq!(h.n_verts(), 4);
+        // rows with >= 2 nonzeros: rows 0 (2), 2 (3), 3 (2) -> 3 nets
+        assert_eq!(h.n_nets(), 3);
+        assert_eq!(h.vwt, vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn lambda_cut_counts_boundary_elements() {
+        let h = Hypergraph::from_matrix(&example(), Axis::Row);
+        // rows {0,1} vs {2,3}: col0 spans {0},{2} -> cut; col1 {2,3} same
+        // part; col2 {1,2} cut; col3 {0,3} cut => λ−1 cut = 3
+        let p = Partition { k: 2, assign: vec![0, 0, 1, 1] };
+        assert_eq!(h.lambda_minus_one_cut(&p), 3);
+        assert_eq!(h.cut_nets(&p), 3);
+        // all in one part: zero cut
+        let p1 = Partition { k: 1, assign: vec![0; 4] };
+        assert_eq!(h.lambda_minus_one_cut(&p1), 0);
+    }
+
+    #[test]
+    fn lambda_bounded_by_parts_and_pins() {
+        let h = Hypergraph::from_matrix(&example(), Axis::Row);
+        let p = Partition { k: 4, assign: vec![0, 1, 2, 3] };
+        for (e, l) in h.net_lambdas(&p).iter().enumerate() {
+            assert!(*l as usize <= h.nets[e].len());
+            assert!(*l as usize <= p.k);
+        }
+    }
+
+    #[test]
+    fn singleton_nets_dropped() {
+        // a column with a single nonzero must not appear as a net
+        let a = Coo::from_triplets(2, 2, [(0, 0, 1.0), (1, 0, 1.0), (1, 1, 1.0)])
+            .unwrap()
+            .to_csr();
+        let h = Hypergraph::from_matrix(&a, Axis::Row);
+        assert_eq!(h.n_nets(), 1); // only column 0
+    }
+
+    #[test]
+    fn incidence_is_consistent() {
+        let h = Hypergraph::from_matrix(&example(), Axis::Row);
+        for (v, nets) in h.vert_nets.iter().enumerate() {
+            for &e in nets {
+                assert!(h.nets[e as usize].contains(&(v as u32)));
+            }
+        }
+        let total: usize = h.vert_nets.iter().map(|n| n.len()).sum();
+        assert_eq!(total, h.n_pins());
+    }
+}

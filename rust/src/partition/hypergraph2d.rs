@@ -1,0 +1,246 @@
+//! 2-D decompositions (ch. 3 §2.4 and §4.2.2 "Modèle 2D"):
+//!
+//! * the **fine-grain hypergraph** of Çatalyürek & Aykanat 2001
+//!   ([ÇaA01] in the paper): every nonzero is a vertex (weight 2), every
+//!   row and every column is a net — partitioning assigns *individual
+//!   nonzeros* to units, modelling the total communication volume of the
+//!   2-D PMVC exactly;
+//! * the **checkerboard** p×q block partition the paper contrasts it
+//!   with ("généralement adapté à des matrices denses ou creuses avec
+//!   structures régulières");
+//! * the **PMVC version bloc 2D** algorithm (ch. 3 §2.4): partial X
+//!   fan-out, per-unit partial products, personalized accumulation.
+
+use super::hypergraph::Hypergraph;
+use super::multilevel::Multilevel;
+use crate::sparse::Csr;
+
+/// A 2-D (nonzero-level) assignment: `owner[k]` is the unit owning the
+/// k-th nonzero of the CSR (row-major order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Owner2d {
+    pub k: usize,
+    pub owner: Vec<u32>,
+}
+
+/// Build the fine-grain hypergraph of a matrix: one vertex per nonzero
+/// (weight 2, as the paper states — it pins one row net and one column
+/// net), nets = rows then columns.
+pub fn fine_grain_model(a: &Csr) -> Hypergraph {
+    let nnz = a.nnz();
+    let vwt = vec![2usize; nnz];
+    let mut nets: Vec<Vec<u32>> = vec![Vec::new(); a.n_rows + a.n_cols];
+    let mut k = 0u32;
+    for i in 0..a.n_rows {
+        for (c, _) in a.row(i) {
+            nets[i].push(k);
+            nets[a.n_rows + c as usize].push(k);
+            k += 1;
+        }
+    }
+    Hypergraph::from_nets(vwt, nets)
+}
+
+/// Partition the nonzeros with the multilevel partitioner over the
+/// fine-grain model.
+pub fn fine_grain_partition(a: &Csr, units: usize, ml: &Multilevel) -> Owner2d {
+    let hg = fine_grain_model(a);
+    let part = ml.partition(&hg, units);
+    Owner2d { k: units, owner: part.assign }
+}
+
+/// Checkerboard p×q partition: contiguous nnz-balanced row blocks ×
+/// contiguous nnz-balanced column blocks; unit of nonzero (i,j) is
+/// `row_block(i) * q + col_block(j)`.
+pub fn checkerboard(a: &Csr, p: usize, q: usize) -> Owner2d {
+    let rp = super::baseline::contiguous_balanced(&a.row_counts(), p);
+    let cp = super::baseline::contiguous_balanced(&a.col_counts(), q);
+    let mut owner = Vec::with_capacity(a.nnz());
+    for i in 0..a.n_rows {
+        for (c, _) in a.row(i) {
+            owner.push(rp.assign[i] * q as u32 + cp.assign[c as usize]);
+        }
+    }
+    Owner2d { k: p * q, owner }
+}
+
+impl Owner2d {
+    /// Nonzero load per unit.
+    pub fn loads(&self, nnz: usize) -> Vec<u64> {
+        assert_eq!(self.owner.len(), nnz);
+        let mut loads = vec![0u64; self.k];
+        for &o in &self.owner {
+            loads[o as usize] += 1;
+        }
+        loads
+    }
+
+    /// Load balance max/avg.
+    pub fn imbalance(&self, nnz: usize) -> f64 {
+        super::metrics::imbalance(&self.loads(nnz))
+    }
+
+    /// Total communication volume of the 2-D PMVC under this assignment:
+    /// Σ_rows (λ_row − 1) partial-Y accumulations + Σ_cols (λ_col − 1)
+    /// X replicas — the quantity the fine-grain model counts exactly.
+    pub fn comm_volume(&self, a: &Csr) -> u64 {
+        let mut vol = 0u64;
+        let mut mark = vec![u64::MAX; self.k];
+        // rows
+        let mut knz = 0usize;
+        for i in 0..a.n_rows {
+            let stamp = i as u64;
+            let mut lambda = 0u64;
+            for _ in 0..a.row_nnz(i) {
+                let o = self.owner[knz] as usize;
+                if mark[o] != stamp {
+                    mark[o] = stamp;
+                    lambda += 1;
+                }
+                knz += 1;
+            }
+            vol += lambda.saturating_sub(1);
+        }
+        // columns: need column-grouped traversal
+        let mut col_owners: Vec<Vec<u32>> = vec![Vec::new(); a.n_cols];
+        knz = 0;
+        for i in 0..a.n_rows {
+            for (c, _) in a.row(i) {
+                col_owners[c as usize].push(self.owner[knz]);
+                knz += 1;
+            }
+        }
+        for owners in &col_owners {
+            let mut distinct: Vec<u32> = owners.clone();
+            distinct.sort_unstable();
+            distinct.dedup();
+            vol += (distinct.len() as u64).saturating_sub(1);
+        }
+        vol
+    }
+
+    /// Distributed PMVC "version bloc 2D" (ch. 3 §2.4): each unit forms
+    /// its partial products, then the partials are accumulated
+    /// ("ATA-personnalisé avec accumulation"). Returns the assembled y —
+    /// must equal the serial product for any assignment.
+    pub fn matvec_2d(&self, a: &Csr, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), a.n_cols);
+        // per-unit partial Y vectors (dense here; real units hold their
+        // row footprint only)
+        let mut partials = vec![vec![0.0; a.n_rows]; self.k];
+        let mut knz = 0usize;
+        for i in 0..a.n_rows {
+            for (c, v) in a.row(i) {
+                let o = self.owner[knz] as usize;
+                partials[o][i] += v * x[c as usize];
+                knz += 1;
+            }
+        }
+        // accumulation (fan-in)
+        let mut y = vec![0.0; a.n_rows];
+        for part in &partials {
+            for i in 0..a.n_rows {
+                y[i] += part[i];
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::sparse::gen::{generate, MatrixSpec};
+
+    fn matrix() -> Csr {
+        generate(&MatrixSpec::paper("t2dal").unwrap(), 3).to_csr()
+    }
+
+    #[test]
+    fn fine_grain_model_shape() {
+        let a = matrix();
+        let hg = fine_grain_model(&a);
+        assert_eq!(hg.n_verts(), a.nnz());
+        assert!(hg.vwt.iter().all(|&w| w == 2), "paper: every vertex weighs 2");
+        // each vertex pins at most 2 nets (its row and its column; nets
+        // with a single pin are dropped)
+        for v in 0..hg.n_verts() {
+            assert!(hg.vert_nets[v].len() <= 2);
+        }
+    }
+
+    #[test]
+    fn checkerboard_covers_and_balances_roughly() {
+        let a = matrix();
+        let cb = checkerboard(&a, 2, 2);
+        assert_eq!(cb.owner.len(), a.nnz());
+        assert_eq!(cb.loads(a.nnz()).iter().sum::<u64>(), a.nnz() as u64);
+        assert!(cb.imbalance(a.nnz()) < 2.5);
+    }
+
+    #[test]
+    fn matvec_2d_equals_serial_for_any_assignment() {
+        let a = matrix();
+        let mut rng = SplitMix64::new(1);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        let y_ref = a.matvec(&x);
+        for owner2d in [
+            checkerboard(&a, 2, 2),
+            checkerboard(&a, 1, 4),
+            fine_grain_partition(&a, 4, &Multilevel::default()),
+        ] {
+            let y = owner2d.matvec_2d(&a, &x);
+            for i in 0..a.n_rows {
+                assert!((y[i] - y_ref[i]).abs() < 1e-9 * (1.0 + y_ref[i].abs()), "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fine_grain_beats_checkerboard_on_scattered_matrices() {
+        // the [ÇaA01]/[UçÇ10] claim the paper cites: the fine-grain model
+        // optimizes the volume a fixed block grid cannot — visible on
+        // irregular structures (on pure band matrices the contiguous
+        // checkerboard is already near-optimal)
+        use crate::sparse::gen::{generate, Family, MatrixSpec};
+        let spec = MatrixSpec {
+            name: "scattered-2d",
+            n: 300,
+            nnz: 3000,
+            family: Family::Scattered { skew: 1.4 },
+            domain: "test",
+        };
+        let a = generate(&spec, 5).to_csr();
+        let fg = fine_grain_partition(&a, 4, &Multilevel::default());
+        let cb = checkerboard(&a, 2, 2);
+        let v_fg = fg.comm_volume(&a);
+        let v_cb = cb.comm_volume(&a);
+        // random 4-way assignment: the floor any real partitioner must beat
+        let mut rng = crate::rng::SplitMix64::new(9);
+        let rnd = Owner2d { k: 4, owner: (0..a.nnz()).map(|_| rng.next_below(4) as u32).collect() };
+        let v_rnd = rnd.comm_volume(&a);
+        assert!(v_fg < v_rnd, "fine-grain {v_fg} must beat random {v_rnd}");
+        // and stay in the checkerboard's league (our from-scratch
+        // multilevel is not Zoltan/PaToH; parity is the bar, see DESIGN.md)
+        assert!(
+            (v_fg as f64) < 1.3 * v_cb as f64,
+            "fine-grain {v_fg} too far above checkerboard {v_cb}"
+        );
+    }
+
+    #[test]
+    fn comm_volume_zero_for_single_unit() {
+        let a = matrix();
+        let one = Owner2d { k: 1, owner: vec![0; a.nnz()] };
+        assert_eq!(one.comm_volume(&a), 0);
+    }
+
+    #[test]
+    fn fine_grain_balance_within_tolerance() {
+        let a = matrix();
+        let fg = fine_grain_partition(&a, 8, &Multilevel::default());
+        let lb = fg.imbalance(a.nnz());
+        assert!(lb < 1.25, "LB {lb}");
+    }
+}

@@ -1,0 +1,109 @@
+//! Partition quality metrics: the paper's LB (load balance) columns and
+//! the communication-volume quantities of ch. 3 §4.2.3.
+
+use super::TwoLevelDecomposition;
+
+/// Load-balance ratio `max/avg` — the paper's LB_noeuds / LB_coeurs.
+/// Returns 1.0 for empty or all-zero loads (perfectly "balanced").
+pub fn imbalance(loads: &[u64]) -> f64 {
+    if loads.is_empty() {
+        return 1.0;
+    }
+    let max = *loads.iter().max().unwrap() as f64;
+    let avg = loads.iter().sum::<u64>() as f64 / loads.len() as f64;
+    if avg == 0.0 {
+        1.0
+    } else {
+        max / avg
+    }
+}
+
+/// Communication volumes of a decomposition, in vector-element units
+/// (the paper counts "nombre de réels").
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommVolumes {
+    /// Per node: elements of X sent by the master (C_Xk).
+    pub x_per_node: Vec<usize>,
+    /// Per node: nonzeros of A sent by the master (NZ_k; with its indices).
+    pub a_per_node: Vec<usize>,
+    /// Per node: elements of the partial/final Y returned (C_Yk).
+    pub y_per_node: Vec<usize>,
+}
+
+impl CommVolumes {
+    /// Compute from a decomposition.
+    pub fn of(d: &TwoLevelDecomposition) -> CommVolumes {
+        let node_loads = d.node_loads();
+        CommVolumes {
+            x_per_node: (0..d.f).map(|k| d.node_x_footprint(k)).collect(),
+            a_per_node: node_loads.iter().map(|&l| l as usize).collect(),
+            y_per_node: (0..d.f).map(|k| d.node_y_footprint(k)).collect(),
+        }
+    }
+
+    /// Total fan-out (scatter) volume: Σ_k (NZ_k + C_Xk) — the paper's
+    /// `RECEPTION = DR_k = O(N + NZ)` summed over nodes.
+    pub fn total_scatter(&self) -> usize {
+        self.a_per_node.iter().sum::<usize>() + self.x_per_node.iter().sum::<usize>()
+    }
+
+    /// Total fan-in (gather) volume: Σ_k C_Yk — `ENVOI = DE_k = O(N)`.
+    pub fn total_gather(&self) -> usize {
+        self.y_per_node.iter().sum()
+    }
+
+    /// X reduction factor FR_Xk = N / C_Xk per node (paper ch. 3 §4.2.3):
+    /// the gain from shipping only the useful X elements.
+    pub fn x_reduction_factors(&self, n: usize) -> Vec<f64> {
+        self.x_per_node
+            .iter()
+            .map(|&cx| if cx == 0 { f64::INFINITY } else { n as f64 / cx as f64 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::combined::{decompose, Combination, DecomposeConfig};
+    use crate::sparse::gen::{generate, MatrixSpec};
+
+    #[test]
+    fn imbalance_basics() {
+        assert_eq!(imbalance(&[]), 1.0);
+        assert_eq!(imbalance(&[0, 0]), 1.0);
+        assert_eq!(imbalance(&[4, 4, 4]), 1.0);
+        assert_eq!(imbalance(&[6, 2]), 1.5);
+    }
+
+    #[test]
+    fn volumes_respect_paper_bounds() {
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 1).to_csr();
+        let n = a.n_rows;
+        let nz = a.nnz();
+        for combo in Combination::all() {
+            let d = decompose(&a, combo, 4, 4, &DecomposeConfig::default());
+            let cv = CommVolumes::of(&d);
+            // 1 <= C_Xk <= N ; 1 <= C_Yk <= N ; Σ NZ_k == NZ
+            for k in 0..4 {
+                assert!((1..=n).contains(&cv.x_per_node[k]), "{combo}");
+                assert!((1..=n).contains(&cv.y_per_node[k]), "{combo}");
+            }
+            assert_eq!(cv.a_per_node.iter().sum::<usize>(), nz);
+            // 2 <= DR_k <= NZ-1+N per node (paper bound, loose check)
+            assert!(cv.total_scatter() <= 4 * (nz + n));
+            let fr = cv.x_reduction_factors(n);
+            for f in fr {
+                assert!(f >= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn row_decomposition_gathers_exactly_n() {
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 2).to_csr();
+        let d = decompose(&a, Combination::NlHl, 8, 2, &DecomposeConfig::default());
+        let cv = CommVolumes::of(&d);
+        assert_eq!(cv.total_gather(), a.n_rows);
+    }
+}

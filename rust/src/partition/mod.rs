@@ -1,0 +1,127 @@
+//! Data fragmentation (ch. 3 §4): partitioning rows or columns of the
+//! sparse matrix across computing units.
+//!
+//! Two families, combined two-level in [`combined`]:
+//! * [`nezgt`] — the NEZGT heuristic (*Nombre Équilibré de nonZéros,
+//!   Généralisé, Trié*), optimizing load balance;
+//! * [`hypergraph`] + [`multilevel`] — 1-D hypergraph partitioning,
+//!   optimizing communication volume (Zoltan-PHG substitute).
+
+pub mod baseline;
+pub mod combined;
+pub mod hypergraph;
+pub mod hypergraph2d;
+pub mod metrics;
+pub mod multilevel;
+pub mod nezgt;
+
+pub use combined::{Combination, TwoLevelDecomposition};
+pub use nezgt::Nezgt;
+
+/// Which axis of the matrix a 1-D partition cuts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Axis {
+    /// Blocks of rows — *ligne* (L) in the paper.
+    Row,
+    /// Blocks of columns — *colonne* (C).
+    Col,
+}
+
+impl Axis {
+    pub fn short(&self) -> &'static str {
+        match self {
+            Axis::Row => "L",
+            Axis::Col => "C",
+        }
+    }
+}
+
+/// A 1-D partition: item `i` (a row or a column) belongs to part
+/// `assign[i]`, `0 <= assign[i] < k`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Partition {
+    pub k: usize,
+    pub assign: Vec<u32>,
+}
+
+impl Partition {
+    /// New partition with every item in part 0.
+    pub fn trivial(n_items: usize, k: usize) -> Self {
+        Self { k, assign: vec![0; n_items] }
+    }
+
+    /// Number of partitioned items.
+    pub fn n_items(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// Load of each part under item weights `w`.
+    pub fn loads(&self, w: &[usize]) -> Vec<u64> {
+        debug_assert_eq!(w.len(), self.assign.len());
+        let mut loads = vec![0u64; self.k];
+        for (i, &p) in self.assign.iter().enumerate() {
+            loads[p as usize] += w[i] as u64;
+        }
+        loads
+    }
+
+    /// Item indices of each part, in ascending order.
+    pub fn parts(&self) -> Vec<Vec<usize>> {
+        let mut parts = vec![Vec::new(); self.k];
+        for (i, &p) in self.assign.iter().enumerate() {
+            parts[p as usize].push(i);
+        }
+        parts
+    }
+
+    /// Load-balance ratio `max/avg` (the paper's LB; 1.0 = perfect).
+    pub fn imbalance(&self, w: &[usize]) -> f64 {
+        metrics::imbalance(&self.loads(w))
+    }
+
+    /// FD criterion of NEZGT phase 2: difference between extreme loads.
+    pub fn fd(&self, w: &[usize]) -> u64 {
+        let loads = self.loads(w);
+        let max = *loads.iter().max().unwrap_or(&0);
+        let min = *loads.iter().min().unwrap_or(&0);
+        max - min
+    }
+
+    /// Check structural sanity: every assignment within `[0, k)`.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.k > 0, "k must be positive");
+        for (i, &p) in self.assign.iter().enumerate() {
+            anyhow::ensure!((p as usize) < self.k, "item {i} assigned to part {p} >= k={}", self.k);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_and_imbalance() {
+        let p = Partition { k: 2, assign: vec![0, 0, 1] };
+        let w = vec![3, 1, 4];
+        assert_eq!(p.loads(&w), vec![4, 4]);
+        assert!((p.imbalance(&w) - 1.0).abs() < 1e-12);
+        assert_eq!(p.fd(&w), 0);
+    }
+
+    #[test]
+    fn parts_are_sorted() {
+        let p = Partition { k: 3, assign: vec![2, 0, 2, 1, 0] };
+        let parts = p.parts();
+        assert_eq!(parts[0], vec![1, 4]);
+        assert_eq!(parts[1], vec![3]);
+        assert_eq!(parts[2], vec![0, 2]);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        let p = Partition { k: 2, assign: vec![0, 2] };
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,324 @@
+//! Message-passing execution backend — the MPI-style leader/worker
+//! runtime (ch. 4 §3.2: "un niveau OpenMP au sein d'un nœud … et un
+//! niveau MPI entre les différents nœuds").
+//!
+//! Each node is a long-lived OS thread (a *rank*) owning its fragments;
+//! the leader communicates with it exclusively through typed channel
+//! messages carrying real copied payloads, mirroring MPI semantics:
+//!
+//! * `launch` performs the one-time **scatter**: A_k payloads and the
+//!   X-footprint index map move to the node ranks;
+//! * every [`MpiCluster::matvec`] sends each rank its packed X_k values
+//!   (fan-out), the rank computes its cores' PFVCs on scoped threads
+//!   (the "OpenMP" level), locally constructs Y_k, and replies with
+//!   `(rows, values)` (fan-in) for the leader to assemble.
+//!
+//! This is the backend the iterative-method examples use to mimic the
+//! paper's per-iteration cost structure: A distributed once, only
+//! X/Y traffic afterwards.
+
+use crate::partition::combined::{CoreFragment, TwoLevelDecomposition};
+use crate::pmvc::spmv;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+/// Leader -> node messages.
+enum ToNode {
+    /// Packed X_k values, in the node's footprint order. Tagged with an
+    /// iteration id for sanity.
+    X { iter: usize, values: Vec<f64> },
+    Shutdown,
+}
+
+/// Node -> leader reply.
+struct FromNode {
+    node: usize,
+    iter: usize,
+    /// Global row ids of the node's Y footprint.
+    rows: Vec<u32>,
+    /// Partial Y values aligned with `rows`.
+    values: Vec<f64>,
+    /// Node-measured compute duration (PFVC makespan over its cores).
+    compute_s: f64,
+    /// Node-measured local construction duration.
+    construct_s: f64,
+}
+
+/// Per-iteration timing summary from the message-passing backend.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MpiIterTimes {
+    /// Leader wall time for the whole iteration (send → assembled).
+    pub t_wall: f64,
+    /// Max node-reported compute time.
+    pub t_compute_max: f64,
+    /// Max node-reported local construction time.
+    pub t_construct_max: f64,
+}
+
+/// A running message-passing cluster.
+pub struct MpiCluster {
+    senders: Vec<Sender<ToNode>>,
+    replies: Receiver<FromNode>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Per node: global column ids of the X footprint (leader-side pack
+    /// list — what MPI would carry in the scatter's index datatype).
+    node_x_cols: Vec<Vec<u32>>,
+    pub n: usize,
+    pub f: usize,
+    /// One-time scatter duration measured at launch.
+    pub t_scatter: f64,
+    iter: usize,
+}
+
+impl MpiCluster {
+    /// Launch node ranks and perform the one-time A scatter.
+    pub fn launch(d: &TwoLevelDecomposition) -> MpiCluster {
+        let f = d.f;
+        let c = d.c;
+        let (reply_tx, replies) = channel::<FromNode>();
+        let mut senders = Vec::with_capacity(f);
+        let mut handles = Vec::with_capacity(f);
+        let mut node_x_cols: Vec<Vec<u32>> = Vec::with_capacity(f);
+
+        let t0 = Instant::now();
+        for node in 0..f {
+            // ---- leader-side pack: fragments + footprint maps (this IS
+            // the scatter payload; `.clone()` moves real bytes)
+            let fragments: Vec<CoreFragment> =
+                (0..c).map(|core| d.fragment(node, core).clone()).collect();
+            // node X footprint and the position of each global col in it
+            let mut pos_of = vec![u32::MAX; d.n];
+            let mut cols: Vec<u32> = Vec::new();
+            for frag in &fragments {
+                for &g in &frag.global_cols {
+                    if pos_of[g as usize] == u32::MAX {
+                        pos_of[g as usize] = cols.len() as u32;
+                        cols.push(g);
+                    }
+                }
+            }
+            // per-core gather map: local col -> position in node X
+            let core_maps: Vec<Vec<u32>> = fragments
+                .iter()
+                .map(|fr| fr.global_cols.iter().map(|&g| pos_of[g as usize]).collect())
+                .collect();
+            // node Y footprint + per-core scatter map
+            let mut ypos_of = vec![u32::MAX; d.n];
+            let mut yrows: Vec<u32> = Vec::new();
+            for frag in &fragments {
+                for &g in &frag.global_rows {
+                    if ypos_of[g as usize] == u32::MAX {
+                        ypos_of[g as usize] = yrows.len() as u32;
+                        yrows.push(g);
+                    }
+                }
+            }
+            let core_ymaps: Vec<Vec<u32>> = fragments
+                .iter()
+                .map(|fr| fr.global_rows.iter().map(|&g| ypos_of[g as usize]).collect())
+                .collect();
+
+            let (tx, rx) = channel::<ToNode>();
+            senders.push(tx);
+            node_x_cols.push(cols);
+            let reply = reply_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                node_rank(node, fragments, core_maps, yrows, core_ymaps, rx, reply);
+            }));
+        }
+        let t_scatter = t0.elapsed().as_secs_f64();
+        MpiCluster { senders, replies, handles, node_x_cols, n: d.n, f, t_scatter, iter: 0 }
+    }
+
+    /// One distributed `y = A·x` through the message-passing pipeline.
+    pub fn matvec(&mut self, x: &[f64]) -> (Vec<f64>, MpiIterTimes) {
+        assert_eq!(x.len(), self.n);
+        self.iter += 1;
+        let iter = self.iter;
+        let t0 = Instant::now();
+        // fan-out: pack X_k per node
+        for (node, tx) in self.senders.iter().enumerate() {
+            let values: Vec<f64> =
+                self.node_x_cols[node].iter().map(|&g| x[g as usize]).collect();
+            tx.send(ToNode::X { iter, values }).expect("node rank died");
+        }
+        // fan-in + assembly
+        let mut y = vec![0.0; self.n];
+        let mut times = MpiIterTimes::default();
+        for _ in 0..self.f {
+            let r = self.replies.recv().expect("reply channel closed");
+            assert_eq!(r.iter, iter, "iteration mismatch from node {}", r.node);
+            for (i, &g) in r.rows.iter().enumerate() {
+                y[g as usize] += r.values[i];
+            }
+            times.t_compute_max = times.t_compute_max.max(r.compute_s);
+            times.t_construct_max = times.t_construct_max.max(r.construct_s);
+        }
+        times.t_wall = t0.elapsed().as_secs_f64();
+        (y, times)
+    }
+
+    /// Shut the ranks down and join them.
+    pub fn shutdown(self) {
+        for tx in &self.senders {
+            let _ = tx.send(ToNode::Shutdown);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Node rank main loop: wait for X, compute the cores' PFVCs in
+/// parallel, construct the local Y_k, reply.
+fn node_rank(
+    node: usize,
+    fragments: Vec<CoreFragment>,
+    core_maps: Vec<Vec<u32>>,
+    yrows: Vec<u32>,
+    core_ymaps: Vec<Vec<u32>>,
+    rx: Receiver<ToNode>,
+    reply: Sender<FromNode>,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToNode::Shutdown => return,
+            ToNode::X { iter, values } => {
+                // ---- compute (the intra-node "OpenMP" level)
+                let tc = Instant::now();
+                let mut y_locals: Vec<Vec<f64>> = vec![Vec::new(); fragments.len()];
+                crossbeam_utils::thread::scope(|scope| {
+                    for ((frag, map), slot) in
+                        fragments.iter().zip(&core_maps).zip(y_locals.iter_mut())
+                    {
+                        let x_node = &values;
+                        scope.spawn(move |_| {
+                            let x_local: Vec<f64> =
+                                map.iter().map(|&p| x_node[p as usize]).collect();
+                            let mut y_local = Vec::new();
+                            spmv::pfvc(frag, &x_local, &mut y_local);
+                            *slot = y_local;
+                        });
+                    }
+                })
+                .expect("core scope");
+                let compute_s = tc.elapsed().as_secs_f64();
+
+                // ---- local construction of Y_k
+                let tk = Instant::now();
+                let mut yk = vec![0.0; yrows.len()];
+                for (ymap, y_local) in core_ymaps.iter().zip(&y_locals) {
+                    for (i, &p) in ymap.iter().enumerate() {
+                        yk[p as usize] += y_local[i];
+                    }
+                }
+                let construct_s = tk.elapsed().as_secs_f64();
+
+                reply
+                    .send(FromNode {
+                        node,
+                        iter,
+                        rows: yrows.clone(),
+                        values: yk,
+                        compute_s,
+                        construct_s,
+                    })
+                    .expect("leader gone");
+            }
+        }
+    }
+}
+
+/// [`crate::solver::MatVecOp`] adapter so the iterative solvers can run
+/// over the message-passing cluster.
+pub struct MpiOp {
+    pub cluster: MpiCluster,
+    pub iterations: usize,
+    pub accumulated_wall: f64,
+    pub accumulated_compute: f64,
+}
+
+impl MpiOp {
+    pub fn new(d: &TwoLevelDecomposition) -> MpiOp {
+        MpiOp {
+            cluster: MpiCluster::launch(d),
+            iterations: 0,
+            accumulated_wall: 0.0,
+            accumulated_compute: 0.0,
+        }
+    }
+}
+
+impl crate::solver::MatVecOp for MpiOp {
+    fn order(&self) -> usize {
+        self.cluster.n
+    }
+    fn apply(&mut self, x: &[f64]) -> Vec<f64> {
+        let (y, t) = self.cluster.matvec(x);
+        self.iterations += 1;
+        self.accumulated_wall += t.t_wall;
+        self.accumulated_compute += t.t_compute_max;
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::combined::{decompose, Combination, DecomposeConfig};
+    use crate::rng::SplitMix64;
+    use crate::sparse::gen::{generate, MatrixSpec};
+
+    #[test]
+    fn mpi_matvec_equals_serial_for_all_combinations() {
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 6).to_csr();
+        let mut rng = SplitMix64::new(9);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        let y_ref = a.matvec(&x);
+        for combo in Combination::all() {
+            let d = decompose(&a, combo, 3, 2, &DecomposeConfig::default());
+            let mut cluster = MpiCluster::launch(&d);
+            let (y, times) = cluster.matvec(&x);
+            for i in 0..a.n_rows {
+                assert!(
+                    (y[i] - y_ref[i]).abs() < 1e-9 * (1.0 + y_ref[i].abs()),
+                    "{combo} row {i}"
+                );
+            }
+            assert!(times.t_wall > 0.0 && times.t_compute_max > 0.0);
+            cluster.shutdown();
+        }
+    }
+
+    #[test]
+    fn repeated_iterations_reuse_distributed_matrix() {
+        let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let mut cluster = MpiCluster::launch(&d);
+        let x1 = vec![1.0; a.n_cols];
+        let x2: Vec<f64> = (0..a.n_cols).map(|i| i as f64).collect();
+        let (y1, _) = cluster.matvec(&x1);
+        let (y2, _) = cluster.matvec(&x2);
+        assert_eq!(y1.len(), a.n_rows);
+        assert!((0..a.n_rows).all(|i| (y2[i] - a.matvec(&x2)[i]).abs() < 1e-9));
+        assert!(y1 != y2);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn cg_over_mpi_backend() {
+        use crate::solver::cg::conjugate_gradient;
+        let a = crate::sparse::gen::generate_spd(150, 3, 900, 23).to_csr();
+        let x_true: Vec<f64> = (0..150).map(|i| ((i % 11) as f64) * 0.2).collect();
+        let b = a.matvec(&x_true);
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let mut op = MpiOp::new(&d);
+        let r = conjugate_gradient(&mut op, &b, 1e-10, 600);
+        assert!(r.converged);
+        for i in 0..150 {
+            assert!((r.x[i] - x_true[i]).abs() < 1e-6);
+        }
+        assert_eq!(op.iterations, r.iterations);
+        op.cluster.shutdown();
+    }
+}

@@ -1,0 +1,24 @@
+//! The distributed PMVC pipeline (ch. 4 §4.1): each core i of node k
+//! computes a PFVC (*Produit Fragment-Vecteur Creux*)
+//! `Y_ki = A_ki · X_ki`; partial results are combined node-locally, then
+//! gathered and assembled at the master.
+//!
+//! Two backends produce the paper's phase measurements:
+//! * [`exec`] — real execution with std threads (one per core), real
+//!   wall-clock per phase; validates the pipeline end-to-end on
+//!   configurations that fit the local machine;
+//! * [`sim`] — analytic discrete-event timing on the modeled cluster
+//!   ([`crate::cluster`]), which substitutes for Grid'5000 and scales to
+//!   the paper's 64 × 8-core sweeps.
+
+pub mod dynamic;
+pub mod exec;
+pub mod exec_mpi;
+pub mod phases;
+pub mod sim;
+pub mod spmv;
+
+pub use exec::{execute_threads, ExecResult};
+pub use exec_mpi::{MpiCluster, MpiOp};
+pub use phases::PhaseTimes;
+pub use sim::simulate;

@@ -1,0 +1,128 @@
+//! Per-core PFVC kernels — the native hot path (the XLA-backed path lives
+//! in [`crate::runtime`]).
+//!
+//! The paper's per-core kernel is spBLAS level-2 `csr_double_mv`; this is
+//! its Rust equivalent plus the x-gather that maps a core fragment's
+//! compacted column space back to the global X.
+
+use crate::partition::combined::CoreFragment;
+
+/// Gather the local X of a fragment from the global vector:
+/// `x_local[lc] = x[global_cols[lc]]`.
+#[inline]
+pub fn gather_x(frag: &CoreFragment, x: &[f64], x_local: &mut Vec<f64>) {
+    x_local.clear();
+    x_local.extend(frag.global_cols.iter().map(|&g| x[g as usize]));
+}
+
+/// Compute one core's PFVC: `y_local = A_local · x_local`.
+/// `y_local` is resized to the fragment's row count.
+#[inline]
+pub fn pfvc(frag: &CoreFragment, x_local: &[f64], y_local: &mut Vec<f64>) {
+    y_local.resize(frag.csr.n_rows, 0.0);
+    csr_mv(
+        &frag.csr.ptr,
+        &frag.csr.col,
+        &frag.csr.val,
+        x_local,
+        y_local,
+    );
+}
+
+/// Raw CSR matvec on slices — the innermost loop, kept free of struct
+/// plumbing so the optimizer (and the profiler) see a clean kernel.
+///
+/// §Perf iteration log (EXPERIMENTS.md §Perf): iteration 1 removed bounds
+/// checks (validator guarantees the invariants). Iteration 2 tried a
+/// 4-accumulator unroll for gather ILP — consistently SLOWER on this
+/// single-core testbed (zhao1 527→915 µs, thermal 39→51 µs: the extra
+/// in-flight gathers thrash the small cache), so it was reverted; the
+/// plain unchecked single-accumulator loop is the measured optimum here.
+#[inline]
+pub fn csr_mv(ptr: &[usize], col: &[u32], val: &[f64], x: &[f64], y: &mut [f64]) {
+    let n_rows = y.len();
+    debug_assert_eq!(ptr.len(), n_rows + 1);
+    for i in 0..n_rows {
+        let s = ptr[i];
+        let e = ptr[i + 1];
+        let mut acc = 0.0;
+        // SAFETY: CSR invariants guarantee s..e within col/val and
+        // col[k] < x.len(); validated at construction. Unchecked gets
+        // keep the loop free of bounds tests.
+        unsafe {
+            for k in s..e {
+                let c = *col.get_unchecked(k) as usize;
+                acc += *val.get_unchecked(k) * *x.get_unchecked(c);
+            }
+            *y.get_unchecked_mut(i) = acc;
+        }
+    }
+}
+
+/// Scatter-accumulate a core's partial Y into a node/global vector:
+/// `y[global_rows[lr]] += y_local[lr]`.
+#[inline]
+pub fn scatter_y_accumulate(frag: &CoreFragment, y_local: &[f64], y: &mut [f64]) {
+    for (lr, &g) in frag.global_rows.iter().enumerate() {
+        y[g as usize] += y_local[lr];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::combined::{decompose, Combination, DecomposeConfig};
+    use crate::sparse::gen::{generate, MatrixSpec};
+
+    #[test]
+    fn fragment_pipeline_reconstructs_serial_product() {
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 9).to_csr();
+        let mut rng = crate::rng::SplitMix64::new(4);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        let y_ref = a.matvec(&x);
+
+        for combo in Combination::all() {
+            let d = decompose(&a, combo, 3, 4, &DecomposeConfig::default());
+            let mut y = vec![0.0; a.n_rows];
+            let mut x_local = Vec::new();
+            let mut y_local = Vec::new();
+            for frag in &d.fragments {
+                gather_x(frag, &x, &mut x_local);
+                pfvc(frag, &x_local, &mut y_local);
+                scatter_y_accumulate(frag, &y_local, &mut y);
+            }
+            for i in 0..a.n_rows {
+                assert!(
+                    (y[i] - y_ref[i]).abs() < 1e-9 * (1.0 + y_ref[i].abs()),
+                    "{combo} row {i}: {} vs {}",
+                    y[i],
+                    y_ref[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn csr_mv_empty_rows() {
+        let ptr = vec![0usize, 0, 2, 2];
+        let col = vec![0u32, 2];
+        let val = vec![2.0, 3.0];
+        let x = vec![1.0, 10.0, 100.0];
+        let mut y = vec![-1.0; 3];
+        csr_mv(&ptr, &col, &val, &x, &mut y);
+        assert_eq!(y, vec![0.0, 302.0, 0.0]);
+    }
+
+    #[test]
+    fn gather_x_respects_map() {
+        let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let x: Vec<f64> = (0..a.n_cols).map(|i| i as f64).collect();
+        let mut xl = Vec::new();
+        let frag = d.fragment(0, 0);
+        gather_x(frag, &x, &mut xl);
+        for (lc, &g) in frag.global_cols.iter().enumerate() {
+            assert_eq!(xl[lc], g as f64);
+        }
+    }
+}

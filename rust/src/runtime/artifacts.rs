@@ -1,0 +1,105 @@
+//! Artifact discovery: `artifacts/manifest.txt` maps shape buckets to
+//! HLO text files. Format (one per line, `#` comments):
+//!
+//! ```text
+//! pfvc_r256_k32 256 32 pfvc_r256_k32.hlo.txt
+//! ```
+
+use crate::sparse::ell::Bucket;
+use std::path::{Path, PathBuf};
+
+/// Resolve the artifacts directory: `$PMVC_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("PMVC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub stem: String,
+    pub bucket: Bucket,
+    pub path: PathBuf,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `manifest.txt` from `dir`; paths are resolved relative to it.
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {path:?}: {e} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str, dir: &Path) -> crate::Result<Manifest> {
+        let mut entries = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = t.split_whitespace().collect();
+            anyhow::ensure!(toks.len() == 4, "manifest line {}: expected 4 fields", ln + 1);
+            let rows: usize = toks[1].parse()?;
+            let width: usize = toks[2].parse()?;
+            entries.push(ManifestEntry {
+                stem: toks[0].to_string(),
+                bucket: Bucket { rows, width },
+                path: dir.join(toks[3]),
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "empty manifest");
+        Ok(Manifest { entries })
+    }
+
+    /// Find the entry for a bucket.
+    pub fn entry(&self, bucket: Bucket) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.bucket == bucket)
+    }
+
+    /// Smallest manifest bucket covering `(rows, width)`.
+    pub fn covering(&self, rows: usize, width: usize) -> Option<Bucket> {
+        self.entries
+            .iter()
+            .map(|e| e.bucket)
+            .filter(|b| b.rows >= rows && b.width >= width)
+            .min_by_key(|b| (b.rows * b.width, b.rows))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest() {
+        let text = "# comment\npfvc_r64_k8 64 8 pfvc_r64_k8.hlo.txt\npfvc_r128_k16 128 16 x.hlo.txt\n";
+        let m = Manifest::parse(text, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.entries[0].bucket, Bucket { rows: 64, width: 8 });
+        assert_eq!(m.entries[1].path, PathBuf::from("/tmp/a/x.hlo.txt"));
+    }
+
+    #[test]
+    fn covering_picks_smallest_area() {
+        let text = "a 64 8 a\nb 128 16 b\nc 8192 128 c\n";
+        let m = Manifest::parse(text, Path::new(".")).unwrap();
+        assert_eq!(m.covering(60, 10), Some(Bucket { rows: 128, width: 16 }));
+        assert_eq!(m.covering(64, 8), Some(Bucket { rows: 64, width: 8 }));
+        assert_eq!(m.covering(9000, 8), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("one two\n", Path::new(".")).is_err());
+        assert!(Manifest::parse("", Path::new(".")).is_err());
+    }
+}

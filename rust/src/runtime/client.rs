@@ -1,0 +1,131 @@
+//! PJRT client wrapper with a per-bucket executable cache.
+//!
+//! The L2/L1 artifact for bucket (R, K) is a jitted function
+//! `pfvc(data[R,K] f32, xg[R,K] f32, cols[R,K] i32) -> (y[R] f32,)`
+//! where `xg` is the pre-gathered X operand (`xg[i,k] = x[cols[i,k]]`,
+//! zeros at padding). The gather happens at pack time in Rust — on real
+//! TPU hardware it would be the dynamic-gather unit inside the kernel,
+//! but keeping the artifact shape closed over (R, K) lets one executable
+//! ladder serve every fragment of every matrix (DESIGN.md §3).
+
+use super::artifacts::{artifacts_dir, Manifest};
+use crate::sparse::ell::{Bucket, Ell};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Runtime: a PJRT CPU client plus compiled executables per bucket.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<Bucket, xla::PjRtLoadedExecutable>,
+    /// Number of compiles performed (cache-miss counter, for tests/bench).
+    pub compiles: usize,
+    /// Number of executions.
+    pub executions: usize,
+}
+
+impl Runtime {
+    /// Create from the default artifacts directory (`$PMVC_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn new() -> crate::Result<Runtime> {
+        Self::with_dir(artifacts_dir())
+    }
+
+    /// Create from an explicit artifacts directory.
+    pub fn with_dir(dir: PathBuf) -> crate::Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, manifest, dir, cache: HashMap::new(), compiles: 0, executions: 0 })
+    }
+
+    /// Buckets available in the manifest.
+    pub fn buckets(&self) -> Vec<Bucket> {
+        self.manifest.entries.iter().map(|e| e.bucket).collect()
+    }
+
+    /// Smallest available bucket covering a fragment shape.
+    pub fn covering(&self, rows: usize, width: usize) -> Option<Bucket> {
+        self.manifest.covering(rows, width)
+    }
+
+    /// Platform name (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn executable(&mut self, bucket: Bucket) -> crate::Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&bucket) {
+            let entry = self
+                .manifest
+                .entry(bucket)
+                .ok_or_else(|| anyhow::anyhow!("no artifact for bucket {bucket:?} in {:?}", self.dir))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parse {:?}: {e:?}", entry.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {:?}: {e:?}", entry.path))?;
+            self.cache.insert(bucket, exe);
+            self.compiles += 1;
+        }
+        Ok(self.cache.get(&bucket).unwrap())
+    }
+
+    /// Execute the PFVC of an ELL fragment against the global `x`
+    /// (f32). Returns `y` of length `ell.rows`.
+    pub fn pfvc_ell(&mut self, ell: &Ell, x: &[f32]) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == ell.n_cols, "x length");
+        let bucket = Bucket { rows: ell.rows_padded, width: ell.width };
+        // pack the gathered-x operand (padding gathers x[0], masked by the
+        // kernel through cols >= 0)
+        let mut xg = vec![0f32; ell.data.len()];
+        for (slot, &c) in ell.cols.iter().enumerate() {
+            if c >= 0 {
+                xg[slot] = x[c as usize];
+            }
+        }
+        let r = bucket.rows as i64;
+        let k = bucket.width as i64;
+        let data_lit = xla::Literal::vec1(&ell.data)
+            .reshape(&[r, k])
+            .map_err(|e| anyhow::anyhow!("reshape data: {e:?}"))?;
+        let xg_lit = xla::Literal::vec1(&xg)
+            .reshape(&[r, k])
+            .map_err(|e| anyhow::anyhow!("reshape xg: {e:?}"))?;
+        let cols_lit = xla::Literal::vec1(&ell.cols)
+            .reshape(&[r, k])
+            .map_err(|e| anyhow::anyhow!("reshape cols: {e:?}"))?;
+
+        let exe = self.executable(bucket)?;
+        let result = exe
+            .execute::<xla::Literal>(&[data_lit, xg_lit, cols_lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        self.executions += 1;
+        // artifacts are lowered with return_tuple=True
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple1: {e:?}"))?;
+        let mut y = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        y.truncate(ell.rows);
+        Ok(y)
+    }
+
+    /// Execute the PFVC of a CSR fragment: converts to the smallest
+    /// covering ELL bucket, then runs the artifact.
+    pub fn pfvc_csr(&mut self, csr: &crate::sparse::Csr, x: &[f32]) -> crate::Result<Vec<f32>> {
+        let max_w = (0..csr.n_rows).map(|i| csr.row_nnz(i)).max().unwrap_or(0);
+        let bucket = self
+            .covering(csr.n_rows, max_w)
+            .ok_or_else(|| anyhow::anyhow!("no bucket covers {}x{max_w}", csr.n_rows))?;
+        let ell = Ell::from_csr(csr, bucket)?;
+        self.pfvc_ell(&ell, x)
+    }
+}
+
+// Tests for the runtime need compiled artifacts; they live in
+// rust/tests/integration_runtime.rs, gated on artifacts/manifest.txt.

@@ -1,0 +1,14 @@
+//! XLA/PJRT runtime: loads the AOT-compiled PFVC artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`) and executes them from the
+//! Rust hot path. Python never runs at request time.
+//!
+//! Interchange format is **HLO text** — xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos (64-bit instruction ids), while the text
+//! parser reassigns ids and round-trips cleanly (see
+//! /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{artifacts_dir, Manifest};
+pub use client::Runtime;

@@ -1,0 +1,184 @@
+//! Lanczos iteration for extreme eigenvalues of symmetric matrices —
+//! the ch. 1 §3.3 workload ("la matrice creuse obtenue est ensuite
+//! diagonalisée directement par une méthode itérative ad hoc (algorithme
+//! de Lanczos)"). Driven entirely through [`MatVecOp`], so it runs over
+//! the distributed PMVC like every other iterative method here.
+
+use super::{axpy, dot, norm2, MatVecOp};
+
+/// Lanczos result: the tridiagonal coefficients and the extreme
+/// eigenvalue estimates extracted from them.
+#[derive(Clone, Debug)]
+pub struct LanczosResult {
+    /// Diagonal of T (α).
+    pub alpha: Vec<f64>,
+    /// Off-diagonal of T (β, length `alpha.len() - 1`).
+    pub beta: Vec<f64>,
+    /// Largest eigenvalue of T (Ritz estimate of λ_max(A)).
+    pub lambda_max: f64,
+    /// Smallest eigenvalue of T (Ritz estimate of λ_min(A)).
+    pub lambda_min: f64,
+    /// Steps actually performed (may stop early on invariant subspace).
+    pub steps: usize,
+}
+
+/// Run `m` Lanczos steps with full reorthogonalization (matrix order is
+/// small enough in our workloads that stability beats the extra dots).
+pub fn lanczos(a: &mut dyn MatVecOp, m: usize, seed: u64) -> LanczosResult {
+    let n = a.order();
+    let m = m.min(n);
+    let mut rng = crate::rng::SplitMix64::new(seed);
+    let mut q: Vec<f64> = (0..n).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+    let nq = norm2(&q);
+    q.iter_mut().for_each(|v| *v /= nq);
+
+    let mut basis: Vec<Vec<f64>> = vec![q.clone()];
+    let mut alpha = Vec::with_capacity(m);
+    let mut beta: Vec<f64> = Vec::with_capacity(m.saturating_sub(1));
+
+    for j in 0..m {
+        let mut w = a.apply(&basis[j]);
+        let aj = dot(&w, &basis[j]);
+        alpha.push(aj);
+        axpy(-aj, &basis[j], &mut w);
+        if j > 0 {
+            let b = beta[j - 1];
+            axpy(-b, &basis[j - 1], &mut w);
+        }
+        // full reorthogonalization
+        for qk in &basis {
+            let c = dot(&w, qk);
+            axpy(-c, qk, &mut w);
+        }
+        let bj = norm2(&w);
+        if j + 1 == m || bj < 1e-12 {
+            break;
+        }
+        beta.push(bj);
+        w.iter_mut().for_each(|v| *v /= bj);
+        basis.push(w);
+    }
+
+    let steps = alpha.len();
+    let lambda_max = tridiag_extreme_eig(&alpha, &beta, true);
+    let lambda_min = tridiag_extreme_eig(&alpha, &beta, false);
+    LanczosResult { alpha, beta, lambda_max, lambda_min, steps }
+}
+
+/// Extreme eigenvalue of the symmetric tridiagonal T(α, β) by bisection
+/// with the Sturm sequence sign count.
+fn tridiag_extreme_eig(alpha: &[f64], beta: &[f64], largest: bool) -> f64 {
+    let n = alpha.len();
+    if n == 0 {
+        return 0.0;
+    }
+    // Gershgorin bounds
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for i in 0..n {
+        let r = (if i > 0 { beta[i - 1].abs() } else { 0.0 })
+            + (if i < n - 1 { beta[i].abs() } else { 0.0 });
+        lo = lo.min(alpha[i] - r);
+        hi = hi.max(alpha[i] + r);
+    }
+    // count of eigenvalues < x (Sturm sequence)
+    let count_below = |x: f64| -> usize {
+        let mut count = 0;
+        let mut d = 1.0f64;
+        for i in 0..n {
+            let b2 = if i > 0 { beta[i - 1] * beta[i - 1] } else { 0.0 };
+            d = alpha[i] - x - b2 / if d.abs() < 1e-300 { 1e-300_f64.copysign(d) } else { d };
+            if d < 0.0 {
+                count += 1;
+            }
+        }
+        count
+    };
+    // bisect for the k-th eigenvalue (k = n-1 for largest, 0 for smallest)
+    let target = if largest { n - 1 } else { 0 };
+    let (mut lo, mut hi) = (lo - 1e-8, hi + 1e-8);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if count_below(mid) <= target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo < 1e-12 * (1.0 + hi.abs()) {
+            break;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::combined::{decompose, Combination, DecomposeConfig};
+    use crate::solver::DistributedOp;
+    use crate::sparse::gen;
+    use crate::sparse::Coo;
+
+    #[test]
+    fn lanczos_finds_known_diagonal_spectrum() {
+        // diag(1..=50): λ_max = 50, λ_min = 1
+        let mut m = Coo::new(50, 50);
+        for i in 0..50u32 {
+            m.push(i, i, (i + 1) as f64);
+        }
+        let mut a = m.to_csr();
+        let r = lanczos(&mut a, 50, 3);
+        assert!((r.lambda_max - 50.0).abs() < 1e-6, "λmax = {}", r.lambda_max);
+        assert!((r.lambda_min - 1.0).abs() < 1e-6, "λmin = {}", r.lambda_min);
+    }
+
+    #[test]
+    fn lanczos_on_spd_agrees_with_power_iteration() {
+        let a = gen::generate_spd(200, 4, 1200, 7).to_csr();
+        let mut op = a.clone();
+        let r = lanczos(&mut op, 60, 1);
+        // power iteration on the same matrix (L2-normalized variant via
+        // Rayleigh from our power module isn't L2; do a quick one here)
+        let mut v = vec![1.0; 200];
+        let mut lambda_pi = 0.0;
+        for _ in 0..500 {
+            let w = a.matvec(&v);
+            lambda_pi = norm2(&w);
+            v = w.iter().map(|x| x / lambda_pi).collect();
+        }
+        assert!(
+            (r.lambda_max - lambda_pi).abs() < 1e-3 * lambda_pi,
+            "Lanczos {} vs power {}",
+            r.lambda_max,
+            lambda_pi
+        );
+        // SPD: smallest eigenvalue must be positive
+        assert!(r.lambda_min > 0.0);
+    }
+
+    #[test]
+    fn lanczos_through_distributed_pmvc() {
+        let a = gen::generate_spd(150, 3, 900, 5).to_csr();
+        let mut serial = a.clone();
+        let rs = lanczos(&mut serial, 40, 2);
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let mut dist = DistributedOp::new(d);
+        let rd = lanczos(&mut dist, 40, 2);
+        assert!(
+            (rs.lambda_max - rd.lambda_max).abs() < 1e-8 * (1.0 + rs.lambda_max.abs()),
+            "serial {} vs distributed {}",
+            rs.lambda_max,
+            rd.lambda_max
+        );
+        assert_eq!(dist.applications, rd.steps);
+    }
+
+    #[test]
+    fn tridiag_eig_2x2_closed_form() {
+        // T = [[2, 1], [1, 2]] -> eigenvalues 1 and 3
+        let hi = tridiag_extreme_eig(&[2.0, 2.0], &[1.0], true);
+        let lo = tridiag_extreme_eig(&[2.0, 2.0], &[1.0], false);
+        assert!((hi - 3.0).abs() < 1e-9);
+        assert!((lo - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,95 @@
+//! Power iteration — the PageRank computation of ch. 1 §3.1 ("la recherche
+//! d'un vecteur propre d'une énorme matrice, associé à la valeur propre
+//! 1"), driven entirely by repeated PMVCs.
+
+use super::{norm2, MatVecOp};
+
+/// Power iteration report.
+#[derive(Clone, Debug)]
+pub struct PowerResult {
+    /// Dominant eigenvector (L1-normalized for stochastic matrices).
+    pub v: Vec<f64>,
+    /// Rayleigh estimate of the dominant eigenvalue.
+    pub lambda: f64,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Plain power iteration with L1 normalization (PageRank convention).
+/// `damping < 1.0` applies the Google teleportation:
+/// `v' = damping·A·v + (1-damping)/n`.
+pub fn power_iteration(
+    a: &mut dyn MatVecOp,
+    damping: f64,
+    tol: f64,
+    max_iters: usize,
+) -> PowerResult {
+    let n = a.order();
+    let mut v = vec![1.0 / n as f64; n];
+    let teleport = (1.0 - damping) / n as f64;
+    for it in 0..max_iters {
+        let mut w = a.apply(&v);
+        for wi in w.iter_mut() {
+            *wi = damping * *wi + teleport;
+        }
+        // L1 normalize (keeps stochastic vectors stochastic; guards
+        // against dangling-node mass loss)
+        let s: f64 = w.iter().map(|x| x.abs()).sum();
+        if s > 0.0 {
+            for wi in w.iter_mut() {
+                *wi /= s;
+            }
+        }
+        let delta: f64 = w.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
+        v = w;
+        if delta < tol {
+            let av = a.apply(&v);
+            let lambda = super::dot(&v, &av) / super::dot(&v, &v).max(f64::MIN_POSITIVE);
+            return PowerResult { v, lambda, iterations: it + 1, converged: true };
+        }
+    }
+    let av = a.apply(&v);
+    let lambda = super::dot(&v, &av) / super::dot(&v, &v).max(f64::MIN_POSITIVE);
+    PowerResult { v, lambda, iterations: max_iters, converged: false }
+}
+
+/// Norm-2 residual ‖A·v − λ·v‖ (verification helper).
+pub fn eigen_residual(a: &mut dyn MatVecOp, v: &[f64], lambda: f64) -> f64 {
+    let av = a.apply(v);
+    norm2(&av.iter().zip(v).map(|(a, b)| a - lambda * b).collect::<Vec<_>>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn pagerank_on_link_matrix_converges() {
+        let q = gen::generate_link_matrix(500, 8, 4).to_csr();
+        let mut op = q.clone();
+        let r = power_iteration(&mut op, 0.85, 1e-12, 500);
+        assert!(r.converged);
+        // scores form a probability distribution
+        let s: f64 = r.v.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!(r.v.iter().all(|&x| x >= 0.0));
+        // fixed-point residual of the DAMPED operator: v = d·A·v + (1-d)/n
+        let av = op.apply(&r.v);
+        let n = r.v.len() as f64;
+        let res: f64 = av
+            .iter()
+            .zip(&r.v)
+            .map(|(a, v)| (0.85 * a + 0.15 / n - v).abs())
+            .sum();
+        assert!(res < 1e-9, "damped fixed-point residual {res}");
+    }
+
+    #[test]
+    fn undamped_stochastic_matrix_has_lambda_one() {
+        let q = gen::generate_link_matrix(200, 5, 1).to_csr();
+        let mut op = q;
+        let r = power_iteration(&mut op, 1.0, 1e-13, 2000);
+        assert!((r.lambda - 1.0).abs() < 1e-6, "lambda = {}", r.lambda);
+    }
+}

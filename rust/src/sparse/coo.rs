@@ -1,0 +1,213 @@
+//! COO (Coordinate) format — the paper's fig. 1.7.
+//!
+//! Three parallel arrays of length NNZ: row indices, column indices and
+//! values. COO is the interchange format: MatrixMarket files parse into
+//! it, generators emit it, and CSR/CSC are built from it.
+
+use super::{Csc, Csr};
+
+/// Sparse matrix in coordinate (triplet) form.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Coo {
+    /// Number of rows (N in the paper — matrices are square there, but we
+    /// keep rows/cols separate so fragments can be rectangular).
+    pub n_rows: usize,
+    /// Number of columns.
+    pub n_cols: usize,
+    /// Row index of each nonzero (`Lig` in the paper).
+    pub row: Vec<u32>,
+    /// Column index of each nonzero (`Col`).
+    pub col: Vec<u32>,
+    /// Value of each nonzero (`Val`).
+    pub val: Vec<f64>,
+}
+
+impl Coo {
+    /// Empty matrix of the given shape.
+    pub fn new(n_rows: usize, n_cols: usize) -> Self {
+        Self { n_rows, n_cols, row: Vec::new(), col: Vec::new(), val: Vec::new() }
+    }
+
+    /// Build from triplets; validates indices.
+    pub fn from_triplets(
+        n_rows: usize,
+        n_cols: usize,
+        triplets: impl IntoIterator<Item = (u32, u32, f64)>,
+    ) -> crate::Result<Self> {
+        let mut m = Self::new(n_rows, n_cols);
+        for (r, c, v) in triplets {
+            anyhow::ensure!(
+                (r as usize) < n_rows && (c as usize) < n_cols,
+                "triplet ({r},{c}) out of bounds for {n_rows}x{n_cols}"
+            );
+            m.row.push(r);
+            m.col.push(c);
+            m.val.push(v);
+        }
+        Ok(m)
+    }
+
+    /// Push one entry (unchecked shape growth is a bug; debug-asserted).
+    #[inline]
+    pub fn push(&mut self, r: u32, c: u32, v: f64) {
+        debug_assert!((r as usize) < self.n_rows && (c as usize) < self.n_cols);
+        self.row.push(r);
+        self.col.push(c);
+        self.val.push(v);
+    }
+
+    /// Number of stored entries (NNZ).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Density as the paper defines it: `NNZ / N² × 100` (percent).
+    pub fn density_pct(&self) -> f64 {
+        100.0 * self.nnz() as f64 / (self.n_rows as f64 * self.n_cols as f64)
+    }
+
+    /// Sum duplicate (row, col) entries, producing a canonical matrix.
+    pub fn sum_duplicates(&self) -> Coo {
+        let mut map: std::collections::HashMap<(u32, u32), f64> =
+            std::collections::HashMap::with_capacity(self.nnz());
+        for i in 0..self.nnz() {
+            *map.entry((self.row[i], self.col[i])).or_insert(0.0) += self.val[i];
+        }
+        let mut keys: Vec<(u32, u32)> = map.keys().copied().collect();
+        keys.sort_unstable();
+        let mut out = Coo::new(self.n_rows, self.n_cols);
+        for k in keys {
+            out.push(k.0, k.1, map[&k]);
+        }
+        out
+    }
+
+    /// Convert to CSR (sorts by row then column; sums duplicates are NOT
+    /// merged — call [`Coo::sum_duplicates`] first if needed).
+    pub fn to_csr(&self) -> Csr {
+        let nnz = self.nnz();
+        let mut ptr = vec![0usize; self.n_rows + 1];
+        for &r in &self.row {
+            ptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.n_rows {
+            ptr[i + 1] += ptr[i];
+        }
+        let mut col = vec![0u32; nnz];
+        let mut val = vec![0f64; nnz];
+        let mut next = ptr.clone();
+        for i in 0..nnz {
+            let r = self.row[i] as usize;
+            let k = next[r];
+            col[k] = self.col[i];
+            val[k] = self.val[i];
+            next[r] += 1;
+        }
+        // sort within each row by column for canonical form
+        for r in 0..self.n_rows {
+            let (s, e) = (ptr[r], ptr[r + 1]);
+            let mut idx: Vec<usize> = (s..e).collect();
+            idx.sort_unstable_by_key(|&k| col[k]);
+            let (c0, v0): (Vec<u32>, Vec<f64>) = idx.iter().map(|&k| (col[k], val[k])).unzip();
+            col[s..e].copy_from_slice(&c0);
+            val[s..e].copy_from_slice(&v0);
+        }
+        Csr { n_rows: self.n_rows, n_cols: self.n_cols, ptr, col, val }
+    }
+
+    /// Convert to CSC.
+    pub fn to_csc(&self) -> Csc {
+        // transpose trick: CSC of A == CSR of Aᵀ with row/col swapped.
+        let t = Coo {
+            n_rows: self.n_cols,
+            n_cols: self.n_rows,
+            row: self.col.clone(),
+            col: self.row.clone(),
+            val: self.val.clone(),
+        };
+        let csr = t.to_csr();
+        Csc { n_rows: self.n_rows, n_cols: self.n_cols, ptr: csr.ptr, row: csr.col, val: csr.val }
+    }
+
+    /// Dense y = A·x reference (O(N²) memory-free; for tests only).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols);
+        let mut y = vec![0.0; self.n_rows];
+        for i in 0..self.nnz() {
+            y[self.row[i] as usize] += self.val[i] * x[self.col[i] as usize];
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The 4×4 example matrix from the paper's fig. 1.7/1.8.
+    pub fn paper_example() -> Coo {
+        // a00 . . a03 / . . a12 . / a20 a21 a22 . / . a31 . a33
+        Coo::from_triplets(
+            4,
+            4,
+            [
+                (0, 0, 1.0),
+                (0, 3, 2.0),
+                (1, 2, 3.0),
+                (2, 0, 4.0),
+                (2, 1, 5.0),
+                (2, 2, 6.0),
+                (3, 1, 7.0),
+                (3, 3, 8.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn csr_matches_paper_fig18() {
+        let a = paper_example();
+        let csr = a.to_csr();
+        assert_eq!(csr.ptr, vec![0, 2, 3, 6, 8]);
+        assert_eq!(csr.col, vec![0, 3, 2, 0, 1, 2, 1, 3]);
+        assert_eq!(csr.val, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn csc_matches_paper_fig18() {
+        let a = paper_example();
+        let csc = a.to_csc();
+        assert_eq!(csc.ptr, vec![0, 2, 4, 6, 8]);
+        assert_eq!(csc.row, vec![0, 2, 2, 3, 1, 2, 0, 3]);
+        assert_eq!(csc.val, vec![1.0, 4.0, 5.0, 7.0, 3.0, 6.0, 2.0, 8.0]);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        assert!(Coo::from_triplets(2, 2, [(2, 0, 1.0)]).is_err());
+        assert!(Coo::from_triplets(2, 2, [(0, 2, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = paper_example();
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = a.matvec(&x);
+        assert_eq!(y, vec![1.0 + 8.0, 9.0, 4.0 + 10.0 + 18.0, 14.0 + 32.0]);
+    }
+
+    #[test]
+    fn sum_duplicates_merges() {
+        let a = Coo::from_triplets(2, 2, [(0, 0, 1.0), (0, 0, 2.0), (1, 1, 3.0)]).unwrap();
+        let b = a.sum_duplicates();
+        assert_eq!(b.nnz(), 2);
+        assert_eq!(b.val, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn density_pct() {
+        let a = paper_example();
+        assert!((a.density_pct() - 50.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,200 @@
+//! CSC (Compressed Sparse Column) — the storage behind the PMVC *version
+//! colonne* (ch. 3 §2.3): column fragments meet the j-th component of X and
+//! each unit produces a partial result vector of full length, accumulated
+//! at gather time ("échange total personnalisé avec accumulation").
+
+use super::{Coo, Csr};
+
+/// Sparse matrix in CSC form: `val`/`row` store nonzeros column by column,
+/// `ptr[j]..ptr[j+1]` delimits column j.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Csc {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Column pointer, length `n_cols + 1`.
+    pub ptr: Vec<usize>,
+    /// Row index per nonzero (`Lig` in the paper).
+    pub row: Vec<u32>,
+    /// Value per nonzero.
+    pub val: Vec<f64>,
+}
+
+impl Csc {
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Nonzero count of column `j` — the load unit of NEZGT_colonne.
+    #[inline]
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.ptr[j + 1] - self.ptr[j]
+    }
+
+    /// Iterator over `(row, val)` of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        let (s, e) = (self.ptr[j], self.ptr[j + 1]);
+        self.row[s..e].iter().copied().zip(self.val[s..e].iter().copied())
+    }
+
+    /// Structural validation.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.ptr.len() == self.n_cols + 1, "ptr length");
+        anyhow::ensure!(self.ptr[0] == 0, "ptr[0] != 0");
+        anyhow::ensure!(*self.ptr.last().unwrap() == self.nnz(), "ptr end != nnz");
+        for j in 0..self.n_cols {
+            anyhow::ensure!(self.ptr[j] <= self.ptr[j + 1], "ptr not monotone at {j}");
+            let coljs = &self.row[self.ptr[j]..self.ptr[j + 1]];
+            for w in coljs.windows(2) {
+                anyhow::ensure!(w[0] < w[1], "col {j} rows not strictly increasing");
+            }
+            if let Some(&r) = coljs.last() {
+                anyhow::ensure!((r as usize) < self.n_rows, "row out of range in col {j}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Back to COO (column-major order).
+    pub fn to_coo(&self) -> Coo {
+        let mut out = Coo::new(self.n_rows, self.n_cols);
+        for j in 0..self.n_cols {
+            for (r, v) in self.col(j) {
+                out.push(r, j as u32, v);
+            }
+        }
+        out
+    }
+
+    /// Convert to CSR.
+    pub fn to_csr(&self) -> Csr {
+        self.to_coo().to_csr()
+    }
+
+    /// Serial PMVC, column variant: accumulate `x[j] * A[:,j]` — this is
+    /// the per-unit computation of the *version colonne*, producing a
+    /// partial-sum vector of length `n_rows`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols);
+        let mut y = vec![0.0; self.n_rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// Column-variant PMVC accumulated into `y` (does NOT clear `y` —
+    /// callers accumulate partial results, as the gather phase does).
+    #[inline]
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(y.len(), self.n_rows);
+        for j in 0..self.n_cols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            let (s, e) = (self.ptr[j], self.ptr[j + 1]);
+            for k in s..e {
+                y[self.row[k] as usize] += self.val[k] * xj;
+            }
+        }
+    }
+
+    /// Extract the submatrix formed by `cols` (global row space kept).
+    pub fn select_cols(&self, cols: &[usize]) -> Csc {
+        let mut ptr = Vec::with_capacity(cols.len() + 1);
+        ptr.push(0usize);
+        let mut row = Vec::new();
+        let mut val = Vec::new();
+        for &c in cols {
+            for (r, v) in self.col(c) {
+                row.push(r);
+                val.push(v);
+            }
+            ptr.push(row.len());
+        }
+        Csc { n_rows: self.n_rows, n_cols: cols.len(), ptr, row, val }
+    }
+
+    /// Distinct rows touched by the given columns — the Y_k footprint of a
+    /// column fragment (`C_Yk` in the paper's ch. 3 §4.2.3).
+    pub fn rows_touched(&self, cols: &[usize]) -> Vec<u32> {
+        let mut seen = vec![false; self.n_rows];
+        for &c in cols {
+            for (r, _) in self.col(c) {
+                seen[r as usize] = true;
+            }
+        }
+        (0..self.n_rows as u32).filter(|&r| seen[r as usize]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> Csc {
+        Coo::from_triplets(
+            4,
+            4,
+            [
+                (0, 0, 1.0),
+                (0, 3, 2.0),
+                (1, 2, 3.0),
+                (2, 0, 4.0),
+                (2, 1, 5.0),
+                (2, 2, 6.0),
+                (3, 1, 7.0),
+                (3, 3, 8.0),
+            ],
+        )
+        .unwrap()
+        .to_csc()
+    }
+
+    #[test]
+    fn validate_ok() {
+        example().validate().unwrap();
+    }
+
+    #[test]
+    fn matvec_matches_csr() {
+        let a = example();
+        let x = vec![0.5, 1.5, -2.0, 3.0];
+        let y_csc = a.matvec(&x);
+        let y_csr = a.to_csr().matvec(&x);
+        for (a, b) in y_csc.iter().zip(&y_csr) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn column_partial_sums_accumulate() {
+        // split columns in two fragments; the accumulated partials must
+        // equal the full product (the paper's fan-in correctness).
+        let a = example();
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let f0 = a.select_cols(&[0, 2]);
+        let f1 = a.select_cols(&[1, 3]);
+        let mut y = vec![0.0; 4];
+        f0.matvec_into(&[x[0], x[2]], &mut y);
+        f1.matvec_into(&[x[1], x[3]], &mut y);
+        assert_eq!(y, a.matvec(&x));
+    }
+
+    #[test]
+    fn rows_touched_footprint() {
+        let a = example();
+        assert_eq!(a.rows_touched(&[0]), vec![0, 2]);
+        assert_eq!(a.rows_touched(&[1, 3]), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn select_cols_shapes() {
+        let a = example();
+        let f = a.select_cols(&[3, 1]);
+        assert_eq!(f.n_cols, 2);
+        assert_eq!(f.col(0).collect::<Vec<_>>(), vec![(0, 2.0), (3, 8.0)]);
+        assert_eq!(f.col(1).collect::<Vec<_>>(), vec![(2, 5.0), (3, 7.0)]);
+    }
+}

@@ -1,0 +1,216 @@
+//! CSR (Compressed Sparse Row) — the paper's fig. 1.8 and the storage
+//! behind the PMVC *version ligne* (ch. 3 §2.2): row fragments keep the
+//! i-th component of Y on the same unit that owns row i.
+
+use super::{Coo, Csc};
+
+/// Sparse matrix in CSR form: `val`/`col` store nonzeros row by row,
+/// `ptr[i]..ptr[i+1]` delimits row i.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Row pointer, length `n_rows + 1` (`Ptr` in the paper).
+    pub ptr: Vec<usize>,
+    /// Column index per nonzero (`Col`).
+    pub col: Vec<u32>,
+    /// Value per nonzero (`Val`).
+    pub val: Vec<f64>,
+}
+
+impl Csr {
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Nonzero count of row `i` — the load unit of NEZGT_ligne.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.ptr[i + 1] - self.ptr[i]
+    }
+
+    /// Iterator over `(col, val)` of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        let (s, e) = (self.ptr[i], self.ptr[i + 1]);
+        self.col[s..e].iter().copied().zip(self.val[s..e].iter().copied())
+    }
+
+    /// Structural validation: monotone ptr, in-range columns, sorted rows.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.ptr.len() == self.n_rows + 1, "ptr length");
+        anyhow::ensure!(self.ptr[0] == 0, "ptr[0] != 0");
+        anyhow::ensure!(*self.ptr.last().unwrap() == self.nnz(), "ptr end != nnz");
+        anyhow::ensure!(self.col.len() == self.val.len(), "col/val length mismatch");
+        for i in 0..self.n_rows {
+            anyhow::ensure!(self.ptr[i] <= self.ptr[i + 1], "ptr not monotone at {i}");
+            let row = &self.col[self.ptr[i]..self.ptr[i + 1]];
+            for w in row.windows(2) {
+                anyhow::ensure!(w[0] < w[1], "row {i} columns not strictly increasing");
+            }
+            if let Some(&c) = row.last() {
+                anyhow::ensure!((c as usize) < self.n_cols, "column out of range in row {i}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Back to COO (row-major order).
+    pub fn to_coo(&self) -> Coo {
+        let mut out = Coo::new(self.n_rows, self.n_cols);
+        for i in 0..self.n_rows {
+            for (c, v) in self.row(i) {
+                out.push(i as u32, c, v);
+            }
+        }
+        out
+    }
+
+    /// Convert to CSC.
+    pub fn to_csc(&self) -> Csc {
+        self.to_coo().to_csc()
+    }
+
+    /// Serial PMVC, CSR variant — the paper's ch. 1 §5 algorithm.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols, "x length");
+        let mut y = vec![0.0; self.n_rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// PMVC into a caller-provided buffer (hot path — no allocation).
+    #[inline]
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(y.len(), self.n_rows);
+        for i in 0..self.n_rows {
+            let (s, e) = (self.ptr[i], self.ptr[i + 1]);
+            let mut acc = 0.0;
+            for k in s..e {
+                // SAFETY-free indexed loop: bounds are guaranteed by the
+                // CSR invariants; LLVM elides the checks after validate().
+                acc += self.val[k] * x[self.col[k] as usize];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Extract the submatrix formed by `rows` (global column space kept).
+    /// Returns the fragment and the global row ids (for Y scatter-back).
+    pub fn select_rows(&self, rows: &[usize]) -> Csr {
+        let mut ptr = Vec::with_capacity(rows.len() + 1);
+        ptr.push(0usize);
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        for &r in rows {
+            for (c, v) in self.row(r) {
+                col.push(c);
+                val.push(v);
+            }
+            ptr.push(col.len());
+        }
+        Csr { n_rows: rows.len(), n_cols: self.n_cols, ptr, col, val }
+    }
+
+    /// Set of distinct columns touched by the given rows — the X_k
+    /// footprint of a fragment (drives `C_Xk` in the paper's ch. 3 §4.2.3).
+    pub fn columns_touched(&self, rows: &[usize]) -> Vec<u32> {
+        let mut seen = vec![false; self.n_cols];
+        for &r in rows {
+            for (c, _) in self.row(r) {
+                seen[c as usize] = true;
+            }
+        }
+        (0..self.n_cols as u32).filter(|&c| seen[c as usize]).collect()
+    }
+
+    /// nnz per row, the NEZGT_ligne weight vector.
+    pub fn row_counts(&self) -> Vec<usize> {
+        (0..self.n_rows).map(|i| self.row_nnz(i)).collect()
+    }
+
+    /// nnz per column, the NEZGT_colonne weight vector.
+    pub fn col_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.n_cols];
+        for &j in &self.col {
+            c[j as usize] += 1;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    fn example() -> Csr {
+        Coo::from_triplets(
+            4,
+            4,
+            [
+                (0, 0, 1.0),
+                (0, 3, 2.0),
+                (1, 2, 3.0),
+                (2, 0, 4.0),
+                (2, 1, 5.0),
+                (2, 2, 6.0),
+                (3, 1, 7.0),
+                (3, 3, 8.0),
+            ],
+        )
+        .unwrap()
+        .to_csr()
+    }
+
+    #[test]
+    fn validate_ok() {
+        example().validate().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_coo() {
+        let a = example();
+        assert_eq!(a.to_coo().to_csr(), a);
+    }
+
+    #[test]
+    fn csc_roundtrip() {
+        let a = example();
+        let csc = a.to_csc();
+        assert_eq!(csc.to_csr(), a);
+    }
+
+    #[test]
+    fn matvec_matches_coo() {
+        let a = example();
+        let x = vec![1.0, -1.0, 2.0, 0.5];
+        assert_eq!(a.matvec(&x), a.to_coo().matvec(&x));
+    }
+
+    #[test]
+    fn select_rows_keeps_values() {
+        let a = example();
+        let f = a.select_rows(&[2, 0]);
+        assert_eq!(f.n_rows, 2);
+        assert_eq!(f.row(0).collect::<Vec<_>>(), vec![(0, 4.0), (1, 5.0), (2, 6.0)]);
+        assert_eq!(f.row(1).collect::<Vec<_>>(), vec![(0, 1.0), (3, 2.0)]);
+    }
+
+    #[test]
+    fn columns_touched_footprint() {
+        let a = example();
+        assert_eq!(a.columns_touched(&[0, 1]), vec![0, 2, 3]);
+        assert_eq!(a.columns_touched(&[2]), vec![0, 1, 2]);
+        assert_eq!(a.columns_touched(&[]), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn counts_sum_to_nnz() {
+        let a = gen::generate(&gen::MatrixSpec::paper("epb1").unwrap(), 3).to_csr();
+        assert_eq!(a.row_counts().iter().sum::<usize>(), a.nnz());
+        assert_eq!(a.col_counts().iter().sum::<usize>(), a.nnz());
+    }
+}

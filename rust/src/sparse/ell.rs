@@ -1,0 +1,222 @@
+//! ELL ("Ellpack-Itpack") slabs — the TPU-shaped fragment format.
+//!
+//! DESIGN.md §Hardware-Adaptation: the paper's per-core kernel is a scalar
+//! CSR loop; on a TPU the same insight ("each core owns a load-balanced
+//! slab of rows") becomes a dense `[R, K]` tile pair `(data, cols)` with
+//! `-1`-padded columns, which Pallas streams through VMEM and row-reduces
+//! on the VPU. The AOT artifacts are compiled per *shape bucket* so a
+//! handful of executables serves every fragment.
+
+use super::Csr;
+
+/// A row-slab fragment in ELL layout. `data`/`cols` are row-major
+/// `rows × width` matrices; entries with `cols == -1` are padding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ell {
+    /// Logical (unpadded) number of rows in the fragment.
+    pub rows: usize,
+    /// Padded row count (bucket R).
+    pub rows_padded: usize,
+    /// Slab width (bucket K) — max nnz/row, padded.
+    pub width: usize,
+    /// Global column count (length of x).
+    pub n_cols: usize,
+    /// Nonzero values, `rows_padded * width`, f32 (the TPU kernel dtype).
+    pub data: Vec<f32>,
+    /// Column indices, `rows_padded * width`; `-1` marks padding.
+    pub cols: Vec<i32>,
+}
+
+/// A shape bucket `(R, K)` an AOT artifact was compiled for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Bucket {
+    pub rows: usize,
+    pub width: usize,
+}
+
+impl Bucket {
+    /// The fixed bucket ladder used by `python/compile/aot.py`. Rows climb
+    /// by powers of two from 64 to 8192; widths are the VPU-lane-aligned
+    /// ladder {8, 16, 32, 64, 128}.
+    pub const ROWS: &'static [usize] = &[64, 128, 256, 512, 1024, 2048, 4096, 8192];
+    pub const WIDTHS: &'static [usize] = &[8, 16, 32, 64, 128];
+
+    /// Smallest bucket covering `(rows, width)`, if one exists.
+    pub fn covering(rows: usize, width: usize) -> Option<Bucket> {
+        let r = *Self::ROWS.iter().find(|&&r| r >= rows)?;
+        let k = *Self::WIDTHS.iter().find(|&&k| k >= width)?;
+        Some(Bucket { rows: r, width: k })
+    }
+
+    /// Artifact stem for this bucket (matches aot.py naming).
+    pub fn artifact_stem(&self) -> String {
+        format!("pfvc_r{}_k{}", self.rows, self.width)
+    }
+
+    /// VMEM footprint estimate in bytes for one slab tile of this bucket:
+    /// data (f32) + cols (i32) + gathered x tile (f32) + y tile (f32).
+    pub fn vmem_bytes(&self) -> usize {
+        self.rows * self.width * (4 + 4) + self.rows * self.width * 4 + self.rows * 4
+    }
+
+    /// All buckets in the ladder (what aot.py compiles).
+    pub fn ladder() -> Vec<Bucket> {
+        let mut v = Vec::new();
+        for &r in Self::ROWS {
+            for &k in Self::WIDTHS {
+                v.push(Bucket { rows: r, width: k });
+            }
+        }
+        v
+    }
+}
+
+impl Ell {
+    /// Convert a CSR fragment to an ELL slab padded to `bucket`.
+    /// Fails if the fragment exceeds the bucket.
+    pub fn from_csr(csr: &Csr, bucket: Bucket) -> crate::Result<Ell> {
+        let max_w = (0..csr.n_rows).map(|i| csr.row_nnz(i)).max().unwrap_or(0);
+        anyhow::ensure!(
+            csr.n_rows <= bucket.rows && max_w <= bucket.width,
+            "fragment {}x{} (w={max_w}) exceeds bucket {}x{}",
+            csr.n_rows,
+            csr.n_cols,
+            bucket.rows,
+            bucket.width
+        );
+        let mut data = vec![0f32; bucket.rows * bucket.width];
+        let mut cols = vec![-1i32; bucket.rows * bucket.width];
+        for i in 0..csr.n_rows {
+            for (k, (c, v)) in csr.row(i).enumerate() {
+                data[i * bucket.width + k] = v as f32;
+                cols[i * bucket.width + k] = c as i32;
+            }
+        }
+        Ok(Ell {
+            rows: csr.n_rows,
+            rows_padded: bucket.rows,
+            width: bucket.width,
+            n_cols: csr.n_cols,
+            data,
+            cols,
+        })
+    }
+
+    /// Convert using the smallest covering bucket from the ladder.
+    pub fn from_csr_auto(csr: &Csr) -> crate::Result<(Ell, Bucket)> {
+        let max_w = (0..csr.n_rows).map(|i| csr.row_nnz(i)).max().unwrap_or(0);
+        let bucket = Bucket::covering(csr.n_rows, max_w).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no bucket covers fragment rows={} width={max_w} (ladder max {}x{})",
+                csr.n_rows,
+                Bucket::ROWS.last().unwrap(),
+                Bucket::WIDTHS.last().unwrap()
+            )
+        })?;
+        Ok((Self::from_csr(csr, bucket)?, bucket))
+    }
+
+    /// Native ELL matvec (f32 accumulate, mirrors the Pallas kernel
+    /// semantics exactly — including the clamp-and-mask of padding).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_cols);
+        let mut y = vec![0f32; self.rows];
+        for i in 0..self.rows {
+            let mut acc = 0f32;
+            for k in 0..self.width {
+                let c = self.cols[i * self.width + k];
+                if c >= 0 {
+                    acc += self.data[i * self.width + k] * x[c as usize];
+                }
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Padding overhead ratio: stored slots / real nonzeros.
+    pub fn fill_ratio(&self, nnz: usize) -> f64 {
+        if nnz == 0 {
+            return f64::INFINITY;
+        }
+        (self.rows_padded * self.width) as f64 / nnz as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn example() -> Csr {
+        Coo::from_triplets(
+            4,
+            6,
+            [
+                (0, 0, 1.0),
+                (0, 3, 2.0),
+                (1, 2, 3.0),
+                (2, 0, 4.0),
+                (2, 1, 5.0),
+                (2, 2, 6.0),
+                (3, 5, 8.0),
+            ],
+        )
+        .unwrap()
+        .to_csr()
+    }
+
+    #[test]
+    fn bucket_covering_picks_smallest() {
+        let b = Bucket::covering(100, 9).unwrap();
+        assert_eq!(b, Bucket { rows: 128, width: 16 });
+        assert!(Bucket::covering(10_000, 8).is_none());
+        assert!(Bucket::covering(8, 300).is_none());
+    }
+
+    #[test]
+    fn ell_matvec_matches_csr() {
+        let a = example();
+        let (e, _) = Ell::from_csr_auto(&a).unwrap();
+        let x: Vec<f64> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let y = e.matvec(&xf);
+        let yref = a.matvec(&x);
+        assert_eq!(y.len(), 4);
+        for i in 0..4 {
+            assert!((y[i] as f64 - yref[i]).abs() < 1e-4, "row {i}");
+        }
+    }
+
+    #[test]
+    fn padding_is_masked() {
+        let a = example();
+        let e = Ell::from_csr(&a, Bucket { rows: 64, width: 8 }).unwrap();
+        // padded slots carry col = -1
+        let pad = e.cols.iter().filter(|&&c| c == -1).count();
+        assert_eq!(pad, 64 * 8 - a.nnz());
+    }
+
+    #[test]
+    fn fragment_too_wide_rejected() {
+        let a = example();
+        assert!(Ell::from_csr(&a, Bucket { rows: 64, width: 2 }).is_err());
+    }
+
+    #[test]
+    fn artifact_stem_format() {
+        assert_eq!(Bucket { rows: 256, width: 32 }.artifact_stem(), "pfvc_r256_k32");
+    }
+
+    #[test]
+    fn vmem_estimate_positive_and_monotone() {
+        let small = Bucket { rows: 64, width: 8 }.vmem_bytes();
+        let big = Bucket { rows: 8192, width: 128 }.vmem_bytes();
+        assert!(small > 0 && big > small);
+    }
+
+    #[test]
+    fn ladder_is_complete() {
+        assert_eq!(Bucket::ladder().len(), Bucket::ROWS.len() * Bucket::WIDTHS.len());
+    }
+}

@@ -1,0 +1,201 @@
+//! MatrixMarket I/O.
+//!
+//! The paper's test matrices come from the SuiteSparse (Tim Davis)
+//! collection, distributed as `.mtx` files. This environment has no
+//! network access, so experiments default to the synthetic analogs in
+//! [`super::gen`]; but if real `.mtx` files are dropped into `matrices/`,
+//! the harness picks them up through this reader (coordinate format,
+//! real/integer/pattern, general/symmetric/skew-symmetric).
+
+use super::Coo;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Field {
+    Real,
+    Integer,
+    Pattern,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Symmetry {
+    General,
+    Symmetric,
+    SkewSymmetric,
+}
+
+/// Read a MatrixMarket coordinate file into COO.
+pub fn read_matrix_market(path: impl AsRef<Path>) -> crate::Result<Coo> {
+    let f = std::fs::File::open(path.as_ref())
+        .map_err(|e| anyhow::anyhow!("open {:?}: {e}", path.as_ref()))?;
+    read_from(std::io::BufReader::new(f))
+}
+
+/// Read from any buffered reader (used by tests with in-memory strings).
+pub fn read_from(reader: impl BufRead) -> crate::Result<Coo> {
+    let mut lines = reader.lines();
+
+    // Header: %%MatrixMarket matrix coordinate <field> <symmetry>
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty file"))??;
+    let toks: Vec<String> = header.split_whitespace().map(|t| t.to_lowercase()).collect();
+    anyhow::ensure!(
+        toks.len() >= 5 && toks[0] == "%%matrixmarket" && toks[1] == "matrix",
+        "not a MatrixMarket matrix header: {header}"
+    );
+    anyhow::ensure!(toks[2] == "coordinate", "only coordinate format supported, got {}", toks[2]);
+    let field = match toks[3].as_str() {
+        "real" => Field::Real,
+        "integer" => Field::Integer,
+        "pattern" => Field::Pattern,
+        other => anyhow::bail!("unsupported field type {other}"),
+    };
+    let symmetry = match toks[4].as_str() {
+        "general" => Symmetry::General,
+        "symmetric" => Symmetry::Symmetric,
+        "skew-symmetric" => Symmetry::SkewSymmetric,
+        other => anyhow::bail!("unsupported symmetry {other}"),
+    };
+
+    // Skip comments, read size line.
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(line);
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| anyhow::anyhow!("missing size line"))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("bad size line '{size_line}': {e}"))?;
+    anyhow::ensure!(dims.len() == 3, "size line must have 3 fields");
+    let (n_rows, n_cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut m = Coo::new(n_rows, n_cols);
+    let mut read = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().ok_or_else(|| anyhow::anyhow!("short entry"))?.parse()?;
+        let j: usize = it.next().ok_or_else(|| anyhow::anyhow!("short entry"))?.parse()?;
+        let v: f64 = match field {
+            Field::Pattern => 1.0,
+            _ => it.next().ok_or_else(|| anyhow::anyhow!("missing value"))?.parse()?,
+        };
+        anyhow::ensure!(
+            (1..=n_rows).contains(&i) && (1..=n_cols).contains(&j),
+            "entry ({i},{j}) out of bounds"
+        );
+        let (r, c) = ((i - 1) as u32, (j - 1) as u32);
+        m.push(r, c, v);
+        match symmetry {
+            Symmetry::General => {}
+            Symmetry::Symmetric if r != c => m.push(c, r, v),
+            Symmetry::SkewSymmetric if r != c => m.push(c, r, -v),
+            _ => {}
+        }
+        read += 1;
+    }
+    anyhow::ensure!(read == nnz, "expected {nnz} entries, read {read}");
+    Ok(m)
+}
+
+/// Write a COO matrix as MatrixMarket coordinate/real/general.
+pub fn write_matrix_market(path: impl AsRef<Path>, m: &Coo) -> crate::Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by pmvc (Ayachi 2015 reproduction)")?;
+    writeln!(w, "{} {} {}", m.n_rows, m.n_cols, m.nnz())?;
+    for k in 0..m.nnz() {
+        writeln!(w, "{} {} {:.17e}", m.row[k] + 1, m.col[k] + 1, m.val[k])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_general_real() {
+        let src = "%%MatrixMarket matrix coordinate real general\n\
+                   % comment\n\
+                   3 3 2\n\
+                   1 1 1.5\n\
+                   3 2 -2.0\n";
+        let m = read_from(src.as_bytes()).unwrap();
+        assert_eq!(m.n_rows, 3);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.row, vec![0, 2]);
+        assert_eq!(m.col, vec![0, 1]);
+        assert_eq!(m.val, vec![1.5, -2.0]);
+    }
+
+    #[test]
+    fn parse_symmetric_expands() {
+        let src = "%%MatrixMarket matrix coordinate real symmetric\n\
+                   2 2 2\n\
+                   1 1 4.0\n\
+                   2 1 1.0\n";
+        let m = read_from(src.as_bytes()).unwrap();
+        assert_eq!(m.nnz(), 3); // diagonal not mirrored
+        let csr = m.to_csr();
+        assert_eq!(csr.row(0).collect::<Vec<_>>(), vec![(0, 4.0), (1, 1.0)]);
+        assert_eq!(csr.row(1).collect::<Vec<_>>(), vec![(0, 1.0)]);
+    }
+
+    #[test]
+    fn parse_pattern_gives_ones() {
+        let src = "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n1 2\n";
+        let m = read_from(src.as_bytes()).unwrap();
+        assert_eq!(m.val, vec![1.0]);
+    }
+
+    #[test]
+    fn parse_skew_symmetric() {
+        let src = "%%MatrixMarket matrix coordinate real skew-symmetric\n2 2 1\n2 1 3.0\n";
+        let m = read_from(src.as_bytes()).unwrap();
+        let csr = m.to_csr();
+        assert_eq!(csr.row(0).collect::<Vec<_>>(), vec![(1, -3.0)]);
+        assert_eq!(csr.row(1).collect::<Vec<_>>(), vec![(0, 3.0)]);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(read_from("hello\n".as_bytes()).is_err());
+        assert!(read_from("%%MatrixMarket matrix array real general\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_body() {
+        let src = "%%MatrixMarket matrix coordinate real general\n3 3 2\n1 1 1.0\n";
+        assert!(read_from(src.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let mut m = Coo::new(5, 4);
+        m.push(0, 0, 1.25);
+        m.push(4, 3, -2.5);
+        m.push(2, 1, 1e-7);
+        let dir = std::env::temp_dir().join("pmvc_mm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.mtx");
+        write_matrix_market(&path, &m).unwrap();
+        let back = read_matrix_market(&path).unwrap();
+        assert_eq!(back.to_csr(), m.to_csr());
+    }
+}

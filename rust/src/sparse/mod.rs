@@ -1,0 +1,23 @@
+//! Sparse matrix substrate: storage formats, I/O, generators, statistics.
+//!
+//! The paper (ch. 1 §2.3) works with the three classic compressed formats
+//! COO, CSR and CSC; the per-core kernel consumes CSR (row fragments) or
+//! CSC (column fragments), and the Pallas/TPU path consumes ELL slabs
+//! ([`ell`], see DESIGN.md §Hardware-Adaptation).
+
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod ell;
+pub mod formats_ext;
+pub mod gen;
+pub mod mm;
+pub mod stats;
+
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+pub use ell::Ell;
+
+/// A dense vector of f64 — X and Y in the PMVC `y = A·x`.
+pub type DenseVec = Vec<f64>;

@@ -1,0 +1,112 @@
+//! Matrix structure statistics: nnz distributions, bandwidth, density —
+//! the quantities Table 4.2 reports and the partitioners consume.
+
+use super::Csr;
+
+/// Summary statistics of a sparse matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixStats {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub nnz: usize,
+    pub density_pct: f64,
+    pub row_nnz_min: usize,
+    pub row_nnz_max: usize,
+    pub row_nnz_mean: f64,
+    pub row_nnz_stddev: f64,
+    pub col_nnz_min: usize,
+    pub col_nnz_max: usize,
+    /// Maximum |i - j| over nonzeros (paper's band half-width m).
+    pub bandwidth: usize,
+    /// Fraction of nonzeros on the diagonal.
+    pub diag_fraction: f64,
+}
+
+impl MatrixStats {
+    /// Compute stats from a CSR matrix.
+    pub fn from_csr(a: &Csr) -> MatrixStats {
+        let rc = a.row_counts();
+        let cc = a.col_counts();
+        let nnz = a.nnz();
+        let mean = nnz as f64 / a.n_rows.max(1) as f64;
+        let var = rc.iter().map(|&c| (c as f64 - mean).powi(2)).sum::<f64>() / a.n_rows.max(1) as f64;
+        let mut bandwidth = 0usize;
+        let mut diag = 0usize;
+        for i in 0..a.n_rows {
+            for (c, _) in a.row(i) {
+                let d = (i as i64 - c as i64).unsigned_abs() as usize;
+                bandwidth = bandwidth.max(d);
+                diag += usize::from(d == 0);
+            }
+        }
+        MatrixStats {
+            n_rows: a.n_rows,
+            n_cols: a.n_cols,
+            nnz,
+            density_pct: 100.0 * nnz as f64 / (a.n_rows as f64 * a.n_cols as f64),
+            row_nnz_min: rc.iter().copied().min().unwrap_or(0),
+            row_nnz_max: rc.iter().copied().max().unwrap_or(0),
+            row_nnz_mean: mean,
+            row_nnz_stddev: var.sqrt(),
+            col_nnz_min: cc.iter().copied().min().unwrap_or(0),
+            col_nnz_max: cc.iter().copied().max().unwrap_or(0),
+            bandwidth,
+            diag_fraction: diag as f64 / nnz.max(1) as f64,
+        }
+    }
+}
+
+/// Histogram of nnz-per-row with power-of-two buckets (for reports).
+pub fn row_nnz_histogram(a: &Csr) -> Vec<(usize, usize)> {
+    let mut hist: std::collections::BTreeMap<usize, usize> = std::collections::BTreeMap::new();
+    for i in 0..a.n_rows {
+        let c = a.row_nnz(i);
+        let bucket = if c == 0 { 0 } else { c.next_power_of_two() };
+        *hist.entry(bucket).or_insert(0) += 1;
+    }
+    hist.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{generate, MatrixSpec};
+    use crate::sparse::Coo;
+
+    #[test]
+    fn stats_of_diagonal() {
+        let m = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+        let s = MatrixStats::from_csr(&m);
+        assert_eq!(s.nnz, 1083);
+        assert_eq!(s.bandwidth, 0);
+        assert!((s.diag_fraction - 1.0).abs() < 1e-12);
+        assert_eq!(s.row_nnz_min, 1);
+        assert_eq!(s.row_nnz_max, 1);
+    }
+
+    #[test]
+    fn stats_density_matches_paper_order() {
+        // thermal is the densest of the suite (0.55%), spmsrtls/zhao1 the sparsest.
+        let thermal = MatrixStats::from_csr(&generate(&MatrixSpec::paper("thermal").unwrap(), 1).to_csr());
+        let zhao = MatrixStats::from_csr(&generate(&MatrixSpec::paper("zhao1").unwrap(), 1).to_csr());
+        assert!(thermal.density_pct > 0.4 && thermal.density_pct < 0.7);
+        assert!(zhao.density_pct < 0.03);
+    }
+
+    #[test]
+    fn histogram_covers_all_rows() {
+        let m = generate(&MatrixSpec::paper("epb1").unwrap(), 1).to_csr();
+        let h = row_nnz_histogram(&m);
+        assert_eq!(h.iter().map(|&(_, c)| c).sum::<usize>(), m.n_rows);
+    }
+
+    #[test]
+    fn stddev_zero_for_uniform() {
+        let mut m = Coo::new(3, 3);
+        for i in 0..3u32 {
+            m.push(i, i, 1.0);
+        }
+        let s = MatrixStats::from_csr(&m.to_csr());
+        assert_eq!(s.row_nnz_stddev, 0.0);
+    }
+}

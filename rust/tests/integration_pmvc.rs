@@ -1,0 +1,175 @@
+//! Integration: the full distributed PMVC — threaded execution equals the
+//! serial product across matrices × combinations × cluster shapes, and the
+//! simulator's orderings match the paper's qualitative findings.
+
+use pmvc::cluster::{ClusterTopology, NetworkPreset};
+use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
+use pmvc::pmvc::{execute_threads, simulate};
+use pmvc::rng::SplitMix64;
+use pmvc::sparse::gen::{generate, MatrixSpec};
+
+fn x_for(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| rng.next_f64_range(-1.0, 1.0)).collect()
+}
+
+#[test]
+fn threaded_execution_equals_serial_across_suite() {
+    for name in ["bcsstm09", "thermal", "t2dal"] {
+        let a = generate(&MatrixSpec::paper(name).unwrap(), 3).to_csr();
+        let x = x_for(a.n_cols, 7);
+        let y_ref = a.matvec(&x);
+        for combo in Combination::all() {
+            for (f, c) in [(2usize, 2usize), (3, 4), (5, 2)] {
+                let d = decompose(&a, combo, f, c, &DecomposeConfig::default());
+                let r = execute_threads(&d, &x).unwrap();
+                for i in 0..a.n_rows {
+                    assert!(
+                        (r.y[i] - y_ref[i]).abs() < 1e-9 * (1.0 + y_ref[i].abs()),
+                        "{name} {combo} f={f} c={c} row {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simulator_reproduces_paper_orderings_epb1() {
+    // Table 4.7 shape: NL-HL should win construction every time and be
+    // the best total in the plurality of f values.
+    let a = generate(&MatrixSpec::paper("epb1").unwrap(), 1).to_csr();
+    let net = NetworkPreset::TenGigabitEthernet.model();
+    let mut nl_hl_constr_wins = 0;
+    let mut nl_hl_total_wins = 0;
+    let fs = [2usize, 4, 8, 16, 32, 64];
+    for &f in &fs {
+        let topo = ClusterTopology::paravance(f);
+        let mut best_constr = (f64::INFINITY, Combination::NlHl);
+        let mut best_total = (f64::INFINITY, Combination::NlHl);
+        for combo in Combination::all() {
+            let d = decompose(&a, combo, f, 8, &DecomposeConfig::default());
+            let t = simulate(&d, &topo, &net);
+            if t.t_construct < best_constr.0 {
+                best_constr = (t.t_construct, combo);
+            }
+            if t.t_total() < best_total.0 {
+                best_total = (t.t_total(), combo);
+            }
+        }
+        nl_hl_constr_wins += usize::from(best_constr.1 == Combination::NlHl);
+        nl_hl_total_wins += usize::from(best_total.1 == Combination::NlHl);
+    }
+    assert_eq!(nl_hl_constr_wins, fs.len(), "NL-HL must win construction 100%");
+    assert!(nl_hl_total_wins * 2 >= fs.len(), "NL-HL should win total in most cases");
+}
+
+#[test]
+fn makespan_scales_down_with_cluster_size() {
+    let a = generate(&MatrixSpec::paper("af23560").unwrap(), 1).to_csr();
+    let net = NetworkPreset::TenGigabitEthernet.model();
+    let mut prev = f64::INFINITY;
+    for f in [2usize, 8, 32] {
+        let topo = ClusterTopology::paravance(f);
+        let d = decompose(&a, Combination::NlHl, f, 8, &DecomposeConfig::default());
+        let t = simulate(&d, &topo, &net);
+        assert!(t.t_compute < prev, "f={f}");
+        prev = t.t_compute;
+    }
+}
+
+#[test]
+fn scatter_grows_with_cluster_size_on_small_matrix() {
+    // bcsstm09 rows of the paper: scatter rises from 0.1ms to 8ms as f
+    // grows — message count dominates at small payloads
+    let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+    let net = NetworkPreset::TenGigabitEthernet.model();
+    let t2 = {
+        let d = decompose(&a, Combination::NlHl, 2, 8, &DecomposeConfig::default());
+        simulate(&d, &ClusterTopology::paravance(2), &net).t_scatter
+    };
+    let t64 = {
+        let d = decompose(&a, Combination::NlHl, 64, 8, &DecomposeConfig::default());
+        simulate(&d, &ClusterTopology::paravance(64), &net).t_scatter
+    };
+    assert!(t64 > t2, "{t64} !> {t2}");
+}
+
+#[test]
+fn mpi_backend_agrees_with_threaded_backend() {
+    use pmvc::pmvc::MpiCluster;
+    let a = generate(&MatrixSpec::paper("thermal").unwrap(), 8).to_csr();
+    let x = x_for(a.n_cols, 4);
+    for combo in [Combination::NlHl, Combination::NcHc] {
+        let d = decompose(&a, combo, 4, 2, &DecomposeConfig::default());
+        let rt = execute_threads(&d, &x).unwrap();
+        let mut cluster = MpiCluster::launch(&d);
+        let (ym, times) = cluster.matvec(&x);
+        for i in 0..a.n_rows {
+            assert!((rt.y[i] - ym[i]).abs() < 1e-12, "{combo} row {i}");
+        }
+        assert!(cluster.t_scatter > 0.0 && times.t_wall > 0.0);
+        cluster.shutdown();
+    }
+}
+
+#[test]
+fn dynamic_scheduling_equals_static_result() {
+    use pmvc::pmvc::dynamic::dynamic_spmv;
+    let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 2).to_csr();
+    let x = x_for(a.n_cols, 3);
+    let y_static = a.matvec(&x);
+    let r = dynamic_spmv(&a, &x, 4, 32);
+    for i in 0..a.n_rows {
+        assert!((r.y[i] - y_static[i]).abs() < 1e-12, "row {i}");
+    }
+    assert!(r.t_compute > 0.0);
+}
+
+#[test]
+fn two_dimensional_pmvc_on_suite_matrix() {
+    use pmvc::partition::hypergraph2d::{checkerboard, fine_grain_partition};
+    use pmvc::partition::multilevel::Multilevel;
+    let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 4).to_csr();
+    let x = x_for(a.n_cols, 5);
+    let y_ref = a.matvec(&x);
+    for owner in [
+        checkerboard(&a, 4, 2),
+        fine_grain_partition(&a, 8, &Multilevel::default()),
+    ] {
+        let y = owner.matvec_2d(&a, &x);
+        for i in 0..a.n_rows {
+            assert!((y[i] - y_ref[i]).abs() < 1e-9 * (1.0 + y_ref[i].abs()), "row {i}");
+        }
+        // 2D comm volume is finite and bounded by (k-1)(rows+cols)
+        let v = owner.comm_volume(&a);
+        assert!(v as usize <= (owner.k - 1) * (a.n_rows + a.n_cols));
+    }
+}
+
+#[test]
+fn alternate_formats_agree_with_distributed_pipeline() {
+    use pmvc::sparse::formats_ext::{CsrDu, Jad};
+    let a = generate(&MatrixSpec::paper("spmsrtls").unwrap(), 2).to_csr();
+    let x = x_for(a.n_cols, 6);
+    let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default());
+    let r = execute_threads(&d, &x).unwrap();
+    let jad = Jad::from_csr(&a).matvec(&x);
+    let du = CsrDu::from_csr(&a).matvec(&x);
+    for i in 0..a.n_rows {
+        assert!((r.y[i] - jad[i]).abs() < 1e-9, "JAD row {i}");
+        assert!((r.y[i] - du[i]).abs() < 1e-9, "CSR-DU row {i}");
+    }
+}
+
+#[test]
+fn phase_times_are_consistent() {
+    let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 2).to_csr();
+    let x = x_for(a.n_cols, 1);
+    let d = decompose(&a, Combination::NlHc, 2, 4, &DecomposeConfig::default());
+    let r = execute_threads(&d, &x).unwrap();
+    let t = r.times;
+    assert!((t.t_total() - (t.t_compute + t.t_gather + t.t_construct)).abs() < 1e-15);
+    assert!((t.t_gather_construct() - (t.t_gather + t.t_construct)).abs() < 1e-15);
+    assert!(t.lb_nodes >= 1.0 && t.lb_cores >= t.lb_nodes * 0.5);
+}

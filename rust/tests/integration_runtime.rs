@@ -1,0 +1,160 @@
+//! Integration: the XLA/PJRT runtime path — AOT artifacts loaded from
+//! `artifacts/`, executed through PJRT, compared against the native
+//! Rust kernel and the f64 serial product.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
+use pmvc::rng::SplitMix64;
+use pmvc::runtime::Runtime;
+use pmvc::sparse::ell::{Bucket, Ell};
+use pmvc::sparse::gen::{generate, MatrixSpec};
+use pmvc::sparse::Coo;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::new() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pfvc_artifact_matches_native_ell() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = Coo::from_triplets(
+        4,
+        6,
+        [
+            (0, 0, 1.0),
+            (0, 3, 2.0),
+            (1, 2, 3.0),
+            (2, 0, 4.0),
+            (2, 1, 5.0),
+            (2, 2, 6.0),
+            (3, 5, 8.0),
+        ],
+    )
+    .unwrap()
+    .to_csr();
+    let (ell, _) = Ell::from_csr_auto(&a).unwrap();
+    let x: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+    let y_native = ell.matvec(&x);
+    let y_xla = rt.pfvc_ell(&ell, &x).unwrap();
+    assert_eq!(y_xla.len(), 4);
+    for i in 0..4 {
+        assert!((y_xla[i] - y_native[i]).abs() < 1e-4, "row {i}: {} vs {}", y_xla[i], y_native[i]);
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once_per_bucket() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+    let frag = a.select_rows(&(0..60).collect::<Vec<_>>());
+    let x = vec![1f32; a.n_cols];
+    rt.pfvc_csr(&frag, &x).unwrap();
+    let compiles_after_first = rt.compiles;
+    rt.pfvc_csr(&frag, &x).unwrap();
+    rt.pfvc_csr(&frag, &x).unwrap();
+    assert_eq!(rt.compiles, compiles_after_first, "cache miss on repeat shape");
+    assert_eq!(rt.executions, 3);
+}
+
+#[test]
+fn whole_decomposition_through_xla_matches_serial() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 17).to_csr();
+    let mut rng = SplitMix64::new(2);
+    let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+    let y_ref = a.matvec(&x);
+    let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+
+    for combo in [Combination::NlHl, Combination::NcHc] {
+        let d = decompose(&a, combo, 2, 4, &DecomposeConfig::default());
+        let mut y = vec![0f64; a.n_rows];
+        for frag in &d.fragments {
+            if frag.csr.nnz() == 0 {
+                continue;
+            }
+            let mut xl = vec![0f32; frag.csr.n_cols];
+            for (lc, &g) in frag.global_cols.iter().enumerate() {
+                xl[lc] = xf[g as usize];
+            }
+            let yl = rt.pfvc_csr(&frag.csr, &xl).unwrap();
+            for (lr, &g) in frag.global_rows.iter().enumerate() {
+                y[g as usize] += yl[lr] as f64;
+            }
+        }
+        for i in 0..a.n_rows {
+            let rel = (y[i] - y_ref[i]).abs() / (1.0 + y_ref[i].abs());
+            assert!(rel < 1e-3, "{combo} row {i}: {} vs {}", y[i], y_ref[i]);
+        }
+    }
+}
+
+#[test]
+fn covering_bucket_resolution() {
+    let Some(rt) = runtime_or_skip() else { return };
+    assert_eq!(rt.covering(60, 7), Some(Bucket { rows: 64, width: 8 }));
+    assert_eq!(rt.covering(65, 8), Some(Bucket { rows: 128, width: 8 }));
+    assert_eq!(rt.covering(1_000_000, 8), None);
+    assert!(rt.buckets().len() >= 40);
+}
+
+#[test]
+fn missing_artifacts_dir_fails_cleanly() {
+    let err = Runtime::with_dir(std::path::PathBuf::from("/nonexistent/pmvc-artifacts"))
+        .err()
+        .expect("should fail");
+    let msg = format!("{err}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn iterative_method_through_xla_runtime() {
+    // the full build-time story: jacobi iterations whose PFVC runs the
+    // AOT artifact every sweep (x changes, A stays resident)
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = 200;
+    let a = pmvc::sparse::gen::generate_spd(n, 3, 1200, 31).to_csr();
+    let x_true: Vec<f32> = (0..n).map(|i| ((i % 7) as f32) * 0.3 - 1.0).collect();
+    let xt64: Vec<f64> = x_true.iter().map(|&v| v as f64).collect();
+    let b: Vec<f32> = a.matvec(&xt64).iter().map(|&v| v as f32).collect();
+    let mut diag = vec![0f32; n];
+    for i in 0..n {
+        for (c, v) in a.row(i) {
+            if c as usize == i {
+                diag[i] = v as f32;
+            }
+        }
+    }
+    let mut x = vec![0f32; n];
+    for _ in 0..400 {
+        let ax = rt.pfvc_csr(&a, &x).unwrap();
+        for i in 0..n {
+            x[i] += (b[i] - ax[i]) / diag[i];
+        }
+    }
+    for i in 0..n {
+        assert!((x[i] - x_true[i]).abs() < 1e-2, "x[{i}] = {} vs {}", x[i], x_true[i]);
+    }
+    // A never re-shipped: one executable, hundreds of executions
+    assert!(rt.compiles <= 2);
+    assert_eq!(rt.executions, 400);
+}
+
+#[test]
+fn oversized_fragment_is_rejected() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // a row with width 200 > max K=128
+    let mut m = Coo::new(1, 300);
+    for j in 0..200u32 {
+        m.push(0, j, 1.0);
+    }
+    let frag = m.to_csr();
+    let x = vec![1f32; 300];
+    assert!(rt.pfvc_csr(&frag, &x).is_err());
+}

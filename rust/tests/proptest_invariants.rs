@@ -1,0 +1,159 @@
+//! Property-style invariant tests, driven by the deterministic SplitMix64
+//! generator (the offline registry carries no proptest; each test sweeps
+//! many random cases and shrinks manually by printing the failing seed).
+
+use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
+use pmvc::partition::hypergraph::Hypergraph;
+use pmvc::partition::multilevel::Multilevel;
+use pmvc::partition::{Axis, Nezgt};
+use pmvc::pmvc::execute_threads;
+use pmvc::rng::SplitMix64;
+use pmvc::sparse::gen::{generate, Family, MatrixSpec};
+use pmvc::sparse::Coo;
+
+/// Random sparse matrix for property tests.
+fn random_matrix(rng: &mut SplitMix64) -> Coo {
+    let n = 20 + rng.next_below(180);
+    let density = 0.02 + rng.next_f64() * 0.15;
+    let nnz = ((n * n) as f64 * density) as usize + n;
+    let spec = MatrixSpec {
+        name: "prop",
+        n,
+        nnz: nnz.min(n * n),
+        family: match rng.next_below(3) {
+            0 => Family::Band { half_width: 1 + rng.next_below(n / 2) },
+            1 => Family::FemStencil { half_width: 1 + rng.next_below(n / 3), long_range: 0.1, symmetric: rng.next_below(2) == 0 },
+            _ => Family::Scattered { skew: 1.0 + rng.next_f64() },
+        },
+        domain: "property test",
+    };
+    generate(&spec, rng.next_u64())
+}
+
+#[test]
+fn prop_every_nonzero_owned_exactly_once() {
+    let mut rng = SplitMix64::new(0xBEEF);
+    for trial in 0..25 {
+        let a = random_matrix(&mut rng).to_csr();
+        let combo = Combination::all()[rng.next_below(4)];
+        let f = 1 + rng.next_below(6);
+        let c = 1 + rng.next_below(6);
+        let d = decompose(&a, combo, f, c, &DecomposeConfig::default());
+        d.validate(&a)
+            .unwrap_or_else(|e| panic!("trial {trial} ({combo} f={f} c={c}): {e}"));
+    }
+}
+
+#[test]
+fn prop_distributed_product_equals_serial() {
+    let mut rng = SplitMix64::new(0xCAFE);
+    for trial in 0..15 {
+        let a = random_matrix(&mut rng).to_csr();
+        let combo = Combination::all()[rng.next_below(4)];
+        let f = 1 + rng.next_below(4);
+        let c = 1 + rng.next_below(4);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-5.0, 5.0)).collect();
+        let d = decompose(&a, combo, f, c, &DecomposeConfig::default());
+        let r = execute_threads(&d, &x).unwrap();
+        let y_ref = a.matvec(&x);
+        for i in 0..a.n_rows {
+            assert!(
+                (r.y[i] - y_ref[i]).abs() < 1e-8 * (1.0 + y_ref[i].abs()),
+                "trial {trial} ({combo} f={f} c={c}) row {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_nezgt_no_worse_than_unrefined_and_assigns_all() {
+    let mut rng = SplitMix64::new(0xF00D);
+    for trial in 0..60 {
+        let n = 5 + rng.next_below(400);
+        let f = 1 + rng.next_below(12);
+        let weights: Vec<usize> = (0..n).map(|_| rng.next_below(100)).collect();
+        let refined = Nezgt::ligne().partition_weights(&weights, f);
+        let raw = Nezgt { refine: false, ..Nezgt::ligne() }.partition_weights(&weights, f);
+        refined.validate().unwrap();
+        assert_eq!(refined.assign.len(), n);
+        assert!(
+            refined.fd(&weights) <= raw.fd(&weights),
+            "trial {trial}: refinement must not worsen FD"
+        );
+        // total load preserved
+        assert_eq!(
+            refined.loads(&weights).iter().sum::<u64>(),
+            weights.iter().map(|&w| w as u64).sum::<u64>()
+        );
+    }
+}
+
+#[test]
+fn prop_lambda_cut_bounds() {
+    let mut rng = SplitMix64::new(0xD1CE);
+    for _ in 0..20 {
+        let a = random_matrix(&mut rng).to_csr();
+        let axis = if rng.next_below(2) == 0 { Axis::Row } else { Axis::Col };
+        let hg = Hypergraph::from_matrix(&a, axis);
+        let k = 2 + rng.next_below(6);
+        let part = Multilevel::default().partition(&hg, k);
+        part.validate().unwrap();
+        let cut = hg.lambda_minus_one_cut(&part);
+        // λ−1 cut is bounded by Σ(min(|net|, k) − 1)
+        let bound: u64 = hg
+            .nets
+            .iter()
+            .map(|net| (net.len().min(k) as u64).saturating_sub(1))
+            .sum();
+        assert!(cut <= bound, "cut {cut} > bound {bound}");
+    }
+}
+
+#[test]
+fn prop_footprints_cover_matrix_dimensions() {
+    let mut rng = SplitMix64::new(0xAB);
+    for _ in 0..15 {
+        let a = random_matrix(&mut rng).to_csr();
+        let combo = Combination::all()[rng.next_below(4)];
+        let f = 1 + rng.next_below(5);
+        let d = decompose(&a, combo, f, 2, &DecomposeConfig::default());
+        // union of node X footprints must cover every column with a nonzero
+        let mut covered = vec![false; a.n_cols];
+        for node in 0..f {
+            for core in 0..2 {
+                for &g in &d.fragment(node, core).global_cols {
+                    covered[g as usize] = true;
+                }
+            }
+        }
+        let col_counts = a.col_counts();
+        for j in 0..a.n_cols {
+            assert_eq!(covered[j], col_counts[j] > 0, "col {j}");
+        }
+    }
+}
+
+#[test]
+fn prop_ell_roundtrip_matches_csr() {
+    use pmvc::sparse::ell::Ell;
+    let mut rng = SplitMix64::new(0x777);
+    for trial in 0..20 {
+        let a = random_matrix(&mut rng).to_csr();
+        // take a slice that fits the ladder
+        let rows: Vec<usize> = (0..a.n_rows.min(64)).collect();
+        let frag = a.select_rows(&rows);
+        let max_w = (0..frag.n_rows).map(|i| frag.row_nnz(i)).max().unwrap_or(0);
+        if max_w > 128 {
+            continue;
+        }
+        let (ell, bucket) = Ell::from_csr_auto(&frag).unwrap();
+        assert!(bucket.rows >= frag.n_rows && bucket.width >= max_w);
+        let x: Vec<f32> = (0..frag.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0) as f32).collect();
+        let y_ell = ell.matvec(&x);
+        let y_csr = frag.matvec(&x.iter().map(|&v| v as f64).collect::<Vec<_>>());
+        for i in 0..frag.n_rows {
+            let err = (y_ell[i] as f64 - y_csr[i]).abs();
+            assert!(err < 1e-3 * (1.0 + y_csr[i].abs()), "trial {trial} row {i}");
+        }
+    }
+}
