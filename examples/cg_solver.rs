@@ -23,8 +23,13 @@ fn main() -> pmvc::Result<()> {
 
     for combo in Combination::all() {
         let d = decompose(&a, combo, 4, 4, &DecomposeConfig::default());
-        let mut op = DistributedOp::new(d);
+        // plans + launches the persistent engine once; every CG iteration
+        // below reuses it (only X/Y traffic per apply)
+        let mut op = DistributedOp::try_new(d)?;
         let r = conjugate_gradient(&mut op, &b, 1e-10, 2000);
+        if let Some(e) = op.take_error() {
+            anyhow::bail!("{combo}: distributed apply failed: {e:#}");
+        }
         let err = r
             .x
             .iter()
@@ -43,6 +48,7 @@ fn main() -> pmvc::Result<()> {
             op.accumulated.t_gather_construct() / op.applications as f64 * 1e3,
         );
         assert!(r.converged && err < 1e-5);
+        assert_eq!(op.plan_builds(), 1, "one plan per decomposition, however many iterations");
     }
     println!("cg_solver OK");
     Ok(())

@@ -22,12 +22,13 @@ fn main() -> pmvc::Result<()> {
     let t0 = Instant::now();
     let rows = run_sweep(&cfg)?;
     println!(
-        "\nsweep: {} cells ({} matrices x {} combos x {} node counts) in {:.1}s\n",
+        "\nsweep: {} cells ({} matrices x {} combos x {} node counts) in {:.1}s — {}\n",
         rows.len(),
         cfg.matrices.len(),
         cfg.combos.len(),
         cfg.node_counts.len(),
-        t0.elapsed().as_secs_f64()
+        t0.elapsed().as_secs_f64(),
+        report::backend_note(&rows)
     );
 
     for (table, combo) in [

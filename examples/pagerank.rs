@@ -27,15 +27,20 @@ fn main() -> pmvc::Result<()> {
         d.lb_cores()
     );
 
-    let mut op = DistributedOp::new(d);
+    // one plan + persistent worker pool for the whole power iteration
+    let mut op = DistributedOp::try_new(d)?;
     let r = power_iteration(&mut op, 0.85, 1e-10, 200);
+    if let Some(e) = op.take_error() {
+        anyhow::bail!("distributed apply failed: {e:#}");
+    }
     println!(
         "power iteration: {} iterations (converged={}), lambda={:.6}",
         r.iterations, r.converged, r.lambda
     );
     println!(
-        "mean iteration: {:.4} ms over the distributed pipeline",
-        op.mean_iteration_time() * 1e3
+        "mean iteration: {:.4} ms over the distributed pipeline ({} plan build)",
+        op.mean_iteration_time() * 1e3,
+        op.plan_builds()
     );
 
     // top pages

@@ -6,10 +6,13 @@
 //! cargo bench --bench kernel_hotpath
 //! ```
 
+use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
 use pmvc::pmvc::spmv::csr_mv;
+use pmvc::pmvc::{execute_threads, PmvcEngine};
 use pmvc::rng::SplitMix64;
 use pmvc::sparse::ell::Ell;
 use pmvc::sparse::gen::{generate, MatrixSpec};
+use std::sync::Arc;
 use std::time::Instant;
 
 fn time_it<F: FnMut()>(mut f: F, iters: usize) -> f64 {
@@ -77,6 +80,37 @@ fn main() {
                 format!("fill {:.1}x", ell.fill_ratio(frag.nnz()))
             );
         }
+    }
+
+    // plan-once engine reuse vs per-call one-shot execution: the
+    // iterative-method hot loop (N applies against one decomposition).
+    // The one-shot path re-plans, re-spawns f·c threads and re-allocates
+    // every buffer per call; the engine pays that once.
+    {
+        let applies = 20usize;
+        let a = generate(&MatrixSpec::paper("epb1").unwrap(), 1).to_csr();
+        let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default());
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+
+        let t0 = Instant::now();
+        for _ in 0..applies {
+            std::hint::black_box(execute_threads(&d, &x).unwrap());
+        }
+        let per_oneshot = t0.elapsed().as_secs_f64() / applies as f64;
+
+        let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+        // warm the pool (first apply touches cold scratch)
+        std::hint::black_box(engine.apply(&x).unwrap());
+        let t1 = Instant::now();
+        for _ in 0..applies {
+            std::hint::black_box(engine.apply(&x).unwrap());
+        }
+        let per_engine = t1.elapsed().as_secs_f64() / applies as f64;
+
+        println!("\nrepeated PMVC (epb1, NL-HL, 2x4, {applies} applies):");
+        println!("  one-shot execute_threads: {:>9.1}µs/apply", per_oneshot * 1e6);
+        println!("  persistent engine:        {:>9.1}µs/apply", per_engine * 1e6);
+        println!("  engine speedup:           {:>9.2}x", per_oneshot / per_engine);
     }
 
     // XLA artifact path (if built)

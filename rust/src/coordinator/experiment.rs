@@ -1,10 +1,16 @@
 //! The ch. 4 experiment driver: sweep matrices × node counts ×
 //! combinations and collect one [`SweepRow`] per cell — the exact grid
 //! behind Tables 4.3–4.6 and Figures 4.8–4.55.
+//!
+//! Every cell runs through the unified [`ExecBackend`] interface, so the
+//! same sweep prices cells on the modeled cluster (`sim`, the default
+//! and the paper's Grid'5000 substitute), executes them for real on the
+//! persistent threaded engine (`threads`), or drives the MPI-style ranks
+//! (`mpi`) — selected by [`ExperimentConfig::backend`].
 
 use crate::cluster::{ClusterTopology, NetworkPreset};
 use crate::partition::combined::{decompose, Combination, DecomposeConfig};
-use crate::pmvc::{simulate, PhaseTimes};
+use crate::pmvc::{make_backend, BackendKind, ExecBackend, PhaseTimes};
 use crate::sparse::gen::{generate, MatrixSpec};
 use crate::sparse::Csr;
 
@@ -21,6 +27,10 @@ pub struct ExperimentConfig {
     pub cores_per_node: usize,
     /// Interconnect model ('paravance' = 10 GbE).
     pub network: NetworkPreset,
+    /// Execution backend for every cell (default: the simulator — the
+    /// measured backends spawn f·c real threads per cell, so keep the
+    /// grid small when selecting them).
+    pub backend: BackendKind,
     /// Matrix generation seed.
     pub seed: u64,
     /// Decomposition tunables.
@@ -35,6 +45,7 @@ impl Default for ExperimentConfig {
             combos: Combination::all().to_vec(),
             cores_per_node: 8,
             network: NetworkPreset::TenGigabitEthernet,
+            backend: BackendKind::Sim,
             seed: 1,
             decompose: DecomposeConfig::default(),
         }
@@ -48,6 +59,20 @@ pub struct SweepRow {
     pub combo: Combination,
     pub f: usize,
     pub times: PhaseTimes,
+    /// Which backend produced the times (`threads` | `sim` | `mpi`).
+    pub backend: &'static str,
+}
+
+/// A paravance-class cluster of `f` nodes resized to `cores_per_node`
+/// cores (two NUMA banks when the core count splits evenly).
+pub fn topology_for(f: usize, cores_per_node: usize) -> ClusterTopology {
+    let banks = if cores_per_node % 2 == 0 && cores_per_node >= 4 { 2 } else { 1 };
+    ClusterTopology {
+        nodes: f,
+        banks_per_node: banks,
+        cores_per_bank: cores_per_node / banks,
+        ..ClusterTopology::paravance(f)
+    }
 }
 
 /// Load or generate a matrix by name: a Table 4.2 name generates its
@@ -61,26 +86,37 @@ pub fn load_matrix(name: &str, seed: u64) -> crate::Result<Csr> {
     Ok(generate(&spec, seed).to_csr())
 }
 
-/// Run the full sweep on the simulated cluster. Decompositions are
-/// computed once per (matrix, combo, f); the simulator prices the phases.
+/// Run the full sweep. Each cell decomposes once, constructs the
+/// configured backend once (plan/launch = the one-time A distribution)
+/// and applies one probe PMVC to collect the phase times.
 pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
     let net = cfg.network.model();
     let mut rows = Vec::new();
     for name in &cfg.matrices {
         let a = load_matrix(name, cfg.seed)?;
+        // one deterministic probe vector per matrix (the sim backend's
+        // times are value-independent; the measured backends are not)
+        let mut rng = crate::rng::SplitMix64::new(cfg.seed ^ 0xA5A5_5A5A);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
         for &combo in &cfg.combos {
             for &f in &cfg.node_counts {
-                // paravance-class node, resized to the configured core count
-                let banks = if cfg.cores_per_node % 2 == 0 && cfg.cores_per_node >= 4 { 2 } else { 1 };
-                let topo = ClusterTopology {
-                    nodes: f,
-                    banks_per_node: banks,
-                    cores_per_bank: cfg.cores_per_node / banks,
-                    ..ClusterTopology::paravance(f)
-                };
+                let topo = topology_for(f, cfg.cores_per_node);
                 let d = decompose(&a, combo, f, cfg.cores_per_node, &cfg.decompose);
-                let times = simulate(&d, &topo, &net);
-                rows.push(SweepRow { matrix: name.clone(), combo, f, times });
+                let mut backend = make_backend(cfg.backend, d, &topo, &net)?;
+                // warm-up apply: the first call through a measured
+                // backend faults in every worker's cold scratch, which
+                // is setup noise, not the amortized per-iteration cost
+                // this sweep reports (the sim backend's times are
+                // cached, so the extra apply is inert there)
+                backend.apply(&x)?;
+                let times = backend.apply(&x)?.times;
+                rows.push(SweepRow {
+                    matrix: name.clone(),
+                    combo,
+                    f,
+                    times,
+                    backend: cfg.backend.name(),
+                });
             }
         }
     }
@@ -161,6 +197,25 @@ mod tests {
         assert_eq!(rows.len(), 2 * 4 * 2); // matrices × combos × f
         for r in &rows {
             assert!(r.times.t_total() > 0.0, "{} {} f={}", r.matrix, r.combo, r.f);
+            assert_eq!(r.backend, "sim");
+        }
+    }
+
+    #[test]
+    fn sweep_runs_on_measured_backends() {
+        for kind in [BackendKind::Threads, BackendKind::Mpi] {
+            let cfg = ExperimentConfig {
+                matrices: vec!["bcsstm09".into()],
+                node_counts: vec![2],
+                combos: vec![Combination::NlHl],
+                cores_per_node: 2,
+                backend: kind,
+                ..Default::default()
+            };
+            let rows = run_sweep(&cfg).unwrap();
+            assert_eq!(rows.len(), 1);
+            assert_eq!(rows[0].backend, kind.name());
+            assert!(rows[0].times.t_total() > 0.0, "{kind}");
         }
     }
 
@@ -185,5 +240,13 @@ mod tests {
     fn load_matrix_generates_paper_specs() {
         let a = load_matrix("bcsstm09", 1).unwrap();
         assert_eq!(a.n_rows, 1083);
+    }
+
+    #[test]
+    fn topology_for_respects_core_count() {
+        let t = topology_for(4, 8);
+        assert_eq!(t.nodes, 4);
+        assert_eq!(t.cores_per_node(), 8);
+        assert_eq!(topology_for(2, 3).cores_per_node(), 3);
     }
 }

@@ -62,13 +62,13 @@ pub fn recap_table(rows: &[SweepRow], combos: &[Combination]) -> String {
 /// CSV export of the full sweep (one row per cell).
 pub fn to_csv(rows: &[SweepRow]) -> String {
     let mut out = String::from(
-        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total\n",
+        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend\n",
     );
     for r in rows {
         let t = &r.times;
         let _ = writeln!(
             out,
-            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9}",
+            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{}",
             r.matrix,
             r.combo.name(),
             r.f,
@@ -79,10 +79,24 @@ pub fn to_csv(rows: &[SweepRow]) -> String {
             t.t_gather,
             t.t_construct,
             t.t_gather_construct(),
-            t.t_total()
+            t.t_total(),
+            r.backend
         );
     }
     out
+}
+
+/// One-line provenance note: which execution backend(s) produced a set
+/// of sweep rows.
+pub fn backend_note(rows: &[SweepRow]) -> String {
+    let mut names: Vec<&str> = rows.iter().map(|r| r.backend).collect();
+    names.sort_unstable();
+    names.dedup();
+    if names.is_empty() {
+        "backend: (no rows)".to_string()
+    } else {
+        format!("backend: {}", names.join(", "))
+    }
 }
 
 /// ASCII line chart of a metric vs f for each combination — one paper
@@ -126,7 +140,7 @@ pub fn figure(
         for v in &table[fi] {
             let _ = write!(out, "{:>13.6}", v);
         }
-        let _ = writeln!(out, );
+        let _ = writeln!(out);
     }
     // bar strip per combo at the largest f (quick visual)
     let _ = writeln!(out);
@@ -197,7 +211,14 @@ mod tests {
     fn csv_has_header_and_rows() {
         let csv = to_csv(&rows());
         assert!(csv.starts_with("matrix,combo"));
+        assert!(csv.lines().next().unwrap().ends_with(",backend"));
         assert_eq!(csv.lines().count(), 1 + 2 * 4 * 1);
+    }
+
+    #[test]
+    fn backend_note_names_the_backend() {
+        assert_eq!(backend_note(&rows()), "backend: sim");
+        assert_eq!(backend_note(&[]), "backend: (no rows)");
     }
 
     #[test]

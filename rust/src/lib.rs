@@ -28,11 +28,17 @@
 //!   partitioner, the combined two-level decomposition, baselines and
 //!   balance/communication metrics.
 //! * [`cluster`] — machine model: topology, NUMA banks, α–β network.
-//! * [`pmvc`] — the distributed PMVC pipeline: plan construction,
-//!   threaded leader/worker execution, discrete-event simulation.
+//! * [`pmvc`] — the distributed PMVC pipeline, split plan/engine:
+//!   [`pmvc::plan`] precomputes the immutable communication plan
+//!   (footprints, row maps, byte volumes) once per decomposition;
+//!   [`pmvc::engine`] drives a persistent worker pool against it;
+//!   [`pmvc::backend`] unifies the threaded, simulated and MPI-style
+//!   runtimes behind one `ExecBackend` trait.
 //! * [`runtime`] — PJRT client, artifact loading, executable cache.
-//! * [`solver`] — CG, Jacobi, power iteration on top of distributed PMVC.
-//! * [`coordinator`] — experiment driver, reporting, CLI.
+//! * [`solver`] — CG, Jacobi, Gauss-Seidel, Lanczos, power iteration on
+//!   top of the distributed PMVC (plan once, apply every iteration).
+//! * [`coordinator`] — experiment driver (backend-selectable sweeps),
+//!   reporting, CLI.
 
 pub mod cluster;
 pub mod coordinator;

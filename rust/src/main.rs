@@ -10,10 +10,10 @@
 //! ```
 
 use pmvc::coordinator::cli::{parse_network, Args};
-use pmvc::coordinator::experiment::{run_sweep, ExperimentConfig};
+use pmvc::coordinator::experiment::{run_sweep, topology_for, ExperimentConfig};
 use pmvc::coordinator::report;
 use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
-use pmvc::pmvc::execute_threads;
+use pmvc::pmvc::{make_backend, BackendKind, ExecBackend};
 
 fn main() {
     let args = Args::from_env();
@@ -43,6 +43,10 @@ fn config_from(args: &Args) -> pmvc::Result<ExperimentConfig> {
     cfg.seed = args.opt_u64("seed", cfg.seed)?;
     if let Some(net) = args.opt("network") {
         cfg.network = parse_network(net)?;
+    }
+    if let Some(b) = args.opt("backend") {
+        cfg.backend = BackendKind::parse(b)
+            .ok_or_else(|| anyhow::anyhow!("unknown backend '{b}' (threads|sim|mpi)"))?;
     }
     Ok(cfg)
 }
@@ -81,6 +85,7 @@ COMMON OPTIONS:
   --combos NL-HL,..  combinations
   --cores N          cores per node (default 8)
   --network 10gbe    gbe|10gbe|ib|myrinet
+  --backend KIND     threads|sim|mpi (sweep default: sim; run default: threads)
   --seed N           generator seed";
 
 fn cmd_table(args: &Args) -> pmvc::Result<()> {
@@ -138,7 +143,7 @@ fn cmd_sweep(args: &Args) -> pmvc::Result<()> {
     match args.opt("out") {
         Some(path) => {
             std::fs::write(path, &csv)?;
-            eprintln!("wrote {} rows to {path}", rows.len());
+            eprintln!("wrote {} rows to {path} ({})", rows.len(), report::backend_note(&rows));
         }
         None => print!("{csv}"),
     }
@@ -152,12 +157,17 @@ fn cmd_run(args: &Args) -> pmvc::Result<()> {
     let f = args.opt_usize("nodes", 2)?;
     let c = args.opt_usize("cores", 4)?;
     let seed = args.opt_u64("seed", 1)?;
+    let kind = BackendKind::parse(args.opt_or("backend", "threads"))
+        .ok_or_else(|| anyhow::anyhow!("unknown backend (threads|sim|mpi)"))?;
     let a = pmvc::coordinator::experiment::load_matrix(matrix, seed)?;
     let mut rng = pmvc::rng::SplitMix64::new(seed);
     let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
 
+    let topo = topology_for(f, c);
+    let net = parse_network(args.opt_or("network", "10gbe"))?.model();
     let d = decompose(&a, combo, f, c, &DecomposeConfig::default());
-    let r = execute_threads(&d, &x)?;
+    let mut backend = make_backend(kind, d.clone(), &topo, &net)?;
+    let r = backend.apply(&x)?;
     let y_ref = a.matvec(&x);
     let max_err = r
         .y
@@ -166,10 +176,17 @@ fn cmd_run(args: &Args) -> pmvc::Result<()> {
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f64, f64::max);
 
-    println!("matrix={matrix} N={} NNZ={} combo={} f={f} cores={c}", a.n_rows, a.nnz(), combo);
+    println!(
+        "matrix={matrix} N={} NNZ={} combo={} f={f} cores={c} backend={}",
+        a.n_rows,
+        a.nnz(),
+        combo,
+        backend.name()
+    );
     println!("LB_noeuds={:.3} LB_coeurs={:.3}", r.times.lb_nodes, r.times.lb_cores);
     println!(
-        "scatter={:.6}s compute={:.6}s construct={:.6}s gather={:.6}s total={:.6}s",
+        "distribute(A)={:.6}s scatter={:.6}s compute={:.6}s construct={:.6}s gather={:.6}s total={:.6}s",
+        backend.setup_time(),
         r.times.t_scatter,
         r.times.t_compute,
         r.times.t_construct,

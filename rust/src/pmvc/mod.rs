@@ -3,22 +3,41 @@
 //! `Y_ki = A_ki · X_ki`; partial results are combined node-locally, then
 //! gathered and assembled at the master.
 //!
-//! Two backends produce the paper's phase measurements:
-//! * [`exec`] — real execution with std threads (one per core), real
-//!   wall-clock per phase; validates the pipeline end-to-end on
-//!   configurations that fit the local machine;
-//! * [`sim`] — analytic discrete-event timing on the modeled cluster
-//!   ([`crate::cluster`]), which substitutes for Grid'5000 and scales to
-//!   the paper's 64 × 8-core sweeps.
+//! The pipeline is split into an immutable **communication plan** and a
+//! reusable **execution engine** — the paper's iterative-method model
+//! (A scattered once, only X/Y traffic per iteration) made structural:
+//!
+//! * [`plan`] — [`CommPlan`]: per-node X footprints, node row maps,
+//!   per-core gather/assembly maps and byte volumes, all precomputed and
+//!   validated once per decomposition;
+//! * [`engine`] — [`PmvcEngine`]: a persistent worker pool (threads
+//!   parked between calls, per-core scratch reused) executing `y = A·x`
+//!   repeatedly against one plan;
+//! * [`backend`] — [`ExecBackend`]: one interface over the three
+//!   runtimes so call sites select a backend instead of hard-coding a
+//!   function:
+//!   * [`exec`] (`threads`) — real execution, wall-clock per phase;
+//!     [`execute_threads`] remains as a one-shot wrapper over the engine;
+//!   * [`sim`] (`sim`) — analytic discrete-event timing on the modeled
+//!     cluster ([`crate::cluster`]), which substitutes for Grid'5000 and
+//!     scales to the paper's 64 × 8-core sweeps;
+//!   * [`exec_mpi`] (`mpi`) — MPI-style leader/worker ranks with typed
+//!     channel messages.
 
+pub mod backend;
 pub mod dynamic;
+pub mod engine;
 pub mod exec;
 pub mod exec_mpi;
 pub mod phases;
+pub mod plan;
 pub mod sim;
 pub mod spmv;
 
+pub use backend::{make_backend, BackendKind, ExecBackend, MpiBackend, SimBackend};
+pub use engine::PmvcEngine;
 pub use exec::{execute_threads, ExecResult};
 pub use exec_mpi::{MpiCluster, MpiOp};
 pub use phases::PhaseTimes;
+pub use plan::{CommPlan, NodePlan};
 pub use sim::simulate;

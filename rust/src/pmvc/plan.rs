@@ -1,0 +1,264 @@
+//! The immutable communication plan of a distributed PMVC.
+//!
+//! The paper's argument for distributing iterative RSL methods (ch. 1
+//! §4–5) is that A is scattered **once** and each iteration then pays
+//! only compute + gather. The plan is the part of that one-time cost
+//! that is pure index arithmetic: per-node X footprints, node row maps,
+//! per-core gather/assembly maps, and the byte volumes each phase will
+//! move. [`CommPlan::build`] computes all of it from a
+//! [`TwoLevelDecomposition`] exactly once; the execution engine
+//! ([`super::engine`]) then replays `y = A·x` against the frozen plan as
+//! many times as the solver iterates.
+//!
+//! Construction validates every index range up front and returns
+//! `Result`, so the `u32::MAX` sentinel used internally can never be
+//! confused with a real position (the old per-call footprint scans broke
+//! silently if a footprint ever reached `u32::MAX` rows).
+
+use crate::partition::combined::TwoLevelDecomposition;
+
+/// Bytes shipped per X/Y vector element in flight (8 value + 4 index).
+pub const BYTES_PER_ELEM: usize = 12;
+
+/// One node's share of the plan.
+#[derive(Clone, Debug)]
+pub struct NodePlan {
+    /// Global column ids of the node's X footprint (`C_Xk`), in
+    /// first-seen order over the node's cores — the fan-out pack list.
+    pub x_cols: Vec<u32>,
+    /// Per-core gather map: local column -> position in [`Self::x_cols`].
+    pub core_x_maps: Vec<Vec<u32>>,
+    /// Global row ids of the node's Y footprint (`C_Yk`), in first-seen
+    /// order — the fan-in row map.
+    pub y_rows: Vec<u32>,
+    /// Per-core assembly map: local row -> position in [`Self::y_rows`].
+    pub core_y_maps: Vec<Vec<u32>>,
+    /// One-time A_k scatter payload (values + column indices), in bytes.
+    pub a_bytes: usize,
+}
+
+impl NodePlan {
+    /// Per-iteration fan-out payload for this node, in bytes.
+    pub fn x_bytes(&self) -> usize {
+        self.x_cols.len() * BYTES_PER_ELEM
+    }
+
+    /// Per-iteration fan-in payload for this node, in bytes.
+    pub fn y_bytes(&self) -> usize {
+        self.y_rows.len() * BYTES_PER_ELEM
+    }
+}
+
+/// The full communication plan: everything about `y = A·x` under a fixed
+/// decomposition that does not depend on the values of `x`.
+#[derive(Clone, Debug)]
+pub struct CommPlan {
+    /// Nodes.
+    pub f: usize,
+    /// Cores per node.
+    pub c: usize,
+    /// Matrix order N.
+    pub n: usize,
+    /// Per-node plans, indexed by node id.
+    pub nodes: Vec<NodePlan>,
+    /// Load balance over nodes (max/avg nonzeros), frozen at build time.
+    pub lb_nodes: f64,
+    /// Load balance over all cores, frozen at build time.
+    pub lb_cores: f64,
+}
+
+impl CommPlan {
+    /// Precompute the plan from a decomposition, validating every index
+    /// once so the execution hot path can trust the maps blindly.
+    pub fn build(d: &TwoLevelDecomposition) -> crate::Result<CommPlan> {
+        anyhow::ensure!(d.f > 0 && d.c > 0, "degenerate decomposition {}x{}", d.f, d.c);
+        anyhow::ensure!(
+            d.fragments.len() == d.f * d.c,
+            "decomposition has {} fragments, expected {}x{}",
+            d.fragments.len(),
+            d.f,
+            d.c
+        );
+        // All positions are stored as u32 with u32::MAX as the "unseen"
+        // sentinel; a footprint is at most n entries, so n < u32::MAX
+        // guarantees the sentinel is unambiguous.
+        anyhow::ensure!(
+            (d.n as u64) < u32::MAX as u64,
+            "matrix order {} overflows the u32 index space",
+            d.n
+        );
+        for frag in &d.fragments {
+            anyhow::ensure!(
+                frag.csr.n_rows == frag.global_rows.len(),
+                "fragment ({},{}) row map length {} != {} local rows",
+                frag.node,
+                frag.core,
+                frag.global_rows.len(),
+                frag.csr.n_rows
+            );
+            anyhow::ensure!(
+                frag.csr.n_cols == frag.global_cols.len(),
+                "fragment ({},{}) col map length {} != {} local cols",
+                frag.node,
+                frag.core,
+                frag.global_cols.len(),
+                frag.csr.n_cols
+            );
+        }
+
+        let mut pos = vec![u32::MAX; d.n];
+        let mut nodes = Vec::with_capacity(d.f);
+        for node in 0..d.f {
+            let (x_cols, core_x_maps) =
+                footprint(d, node, &mut pos, |frag| &frag.global_cols, "column")?;
+            let (y_rows, core_y_maps) =
+                footprint(d, node, &mut pos, |frag| &frag.global_rows, "row")?;
+            let a_bytes = (0..d.c)
+                .map(|core| {
+                    let frag = d.fragment(node, core);
+                    frag.csr.val.len() * 8 + frag.csr.col.len() * 4
+                })
+                .sum();
+            nodes.push(NodePlan { x_cols, core_x_maps, y_rows, core_y_maps, a_bytes });
+        }
+
+        Ok(CommPlan {
+            f: d.f,
+            c: d.c,
+            n: d.n,
+            nodes,
+            lb_nodes: d.lb_nodes(),
+            lb_cores: d.lb_cores(),
+        })
+    }
+
+    /// One-time A scatter volume over all nodes, in bytes.
+    pub fn scatter_a_bytes(&self) -> usize {
+        self.nodes.iter().map(|np| np.a_bytes).sum()
+    }
+
+    /// Per-iteration X fan-out volume over all nodes, in bytes.
+    pub fn scatter_x_bytes(&self) -> usize {
+        self.nodes.iter().map(|np| np.x_bytes()).sum()
+    }
+
+    /// Per-iteration Y fan-in volume over all nodes, in bytes.
+    pub fn gather_y_bytes(&self) -> usize {
+        self.nodes.iter().map(|np| np.y_bytes()).sum()
+    }
+
+    /// X footprint size of a node (`C_Xk`).
+    pub fn node_x_footprint(&self, node: usize) -> usize {
+        self.nodes[node].x_cols.len()
+    }
+
+    /// Y footprint size of a node (`C_Yk`).
+    pub fn node_y_footprint(&self, node: usize) -> usize {
+        self.nodes[node].y_rows.len()
+    }
+}
+
+/// Build one node's footprint list and per-core position maps along one
+/// axis. `pos` is an N-sized scratch of `u32::MAX`, restored before
+/// returning (O(touched) reset).
+fn footprint(
+    d: &TwoLevelDecomposition,
+    node: usize,
+    pos: &mut [u32],
+    axis_ids: impl Fn(&crate::partition::combined::CoreFragment) -> &Vec<u32>,
+    axis_name: &str,
+) -> crate::Result<(Vec<u32>, Vec<Vec<u32>>)> {
+    let mut ids: Vec<u32> = Vec::new();
+    let mut maps: Vec<Vec<u32>> = Vec::with_capacity(d.c);
+    for core in 0..d.c {
+        let frag = d.fragment(node, core);
+        let globals = axis_ids(frag);
+        let mut map = Vec::with_capacity(globals.len());
+        for &g in globals {
+            anyhow::ensure!(
+                (g as usize) < d.n,
+                "fragment ({node},{core}) {axis_name} id {g} out of range 0..{}",
+                d.n
+            );
+            if pos[g as usize] == u32::MAX {
+                pos[g as usize] = ids.len() as u32;
+                ids.push(g);
+            }
+            map.push(pos[g as usize]);
+        }
+        maps.push(map);
+    }
+    for &g in &ids {
+        pos[g as usize] = u32::MAX;
+    }
+    Ok((ids, maps))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::combined::{decompose, Combination, DecomposeConfig};
+    use crate::sparse::gen::{generate, MatrixSpec};
+
+    fn plan_for(combo: Combination, f: usize, c: usize) -> (CommPlan, TwoLevelDecomposition) {
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 5).to_csr();
+        let d = decompose(&a, combo, f, c, &DecomposeConfig::default());
+        (CommPlan::build(&d).unwrap(), d)
+    }
+
+    #[test]
+    fn footprints_match_decomposition_counts() {
+        for combo in Combination::all() {
+            let (plan, d) = plan_for(combo, 3, 4);
+            for node in 0..3 {
+                assert_eq!(plan.node_x_footprint(node), d.node_x_footprint(node), "{combo}");
+                assert_eq!(plan.node_y_footprint(node), d.node_y_footprint(node), "{combo}");
+            }
+        }
+    }
+
+    #[test]
+    fn maps_point_back_at_fragment_ids() {
+        let (plan, d) = plan_for(Combination::NcHl, 2, 4);
+        for node in 0..2 {
+            let np = &plan.nodes[node];
+            for core in 0..4 {
+                let frag = d.fragment(node, core);
+                for (lc, &p) in np.core_x_maps[core].iter().enumerate() {
+                    assert_eq!(np.x_cols[p as usize], frag.global_cols[lc]);
+                }
+                for (lr, &p) in np.core_y_maps[core].iter().enumerate() {
+                    assert_eq!(np.y_rows[p as usize], frag.global_rows[lr]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn byte_volumes_account_every_fragment() {
+        let (plan, d) = plan_for(Combination::NlHl, 2, 2);
+        let expect_a: usize =
+            d.fragments.iter().map(|fr| fr.csr.val.len() * 8 + fr.csr.col.len() * 4).sum();
+        assert_eq!(plan.scatter_a_bytes(), expect_a);
+        assert!(plan.scatter_x_bytes() > 0 && plan.gather_y_bytes() > 0);
+    }
+
+    #[test]
+    fn corrupt_row_map_rejected() {
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 5).to_csr();
+        let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let frag = d.fragments.iter_mut().find(|fr| !fr.global_rows.is_empty()).unwrap();
+        frag.global_rows.pop();
+        assert!(CommPlan::build(&d).is_err());
+    }
+
+    #[test]
+    fn out_of_range_id_rejected() {
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 5).to_csr();
+        let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let n = d.n as u32;
+        let frag = d.fragments.iter_mut().find(|fr| !fr.global_cols.is_empty()).unwrap();
+        frag.global_cols[0] = n + 7;
+        assert!(CommPlan::build(&d).is_err());
+    }
+}

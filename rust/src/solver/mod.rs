@@ -3,7 +3,9 @@
 //!
 //! The matrix stays untouched across iterations — only X changes — which
 //! is the paper's motivation for distributing A once (scatter) and then
-//! paying only compute + gather per iteration.
+//! paying only compute + gather per iteration. [`DistributedOp`] makes
+//! that structural: it builds one [`PmvcEngine`] (plan + persistent
+//! worker pool) per decomposition and every `apply` reuses it.
 
 pub mod cg;
 pub mod gauss_seidel;
@@ -12,8 +14,9 @@ pub mod lanczos;
 pub mod power;
 
 use crate::partition::combined::TwoLevelDecomposition;
-use crate::pmvc::{execute_threads, PhaseTimes};
+use crate::pmvc::{CommPlan, ExecBackend, PhaseTimes, PmvcEngine};
 use crate::sparse::Csr;
+use std::sync::Arc;
 
 /// Anything that can apply `y = A·x` — serial CSR or the distributed
 /// pipeline.
@@ -33,20 +36,107 @@ impl MatVecOp for Csr {
     }
 }
 
-/// Distributed PMVC operator: every `apply` runs the full threaded
-/// pipeline and accumulates per-phase statistics — what an iterative
-/// solver on the cluster would observe.
+/// Distributed PMVC operator: plans once, then drives every `apply`
+/// through a persistent [`ExecBackend`] and accumulates per-phase
+/// statistics — what an iterative solver on the cluster would observe.
+///
+/// Execution errors no longer panic: [`DistributedOp::try_apply`]
+/// propagates them, and the infallible [`MatVecOp::apply`] records the
+/// error (see [`DistributedOp::last_error`]) and returns a zero vector,
+/// which makes any well-formed solver stop cleanly (CG bails on
+/// `p·Ap <= 0`, stationary methods stall without converging).
 pub struct DistributedOp {
-    pub decomposition: TwoLevelDecomposition,
+    backend: Option<Box<dyn ExecBackend>>,
+    /// The engine's frozen plan (engine-backed ops only) — exposed so
+    /// callers and tests can assert plan identity across iterations.
+    plan: Option<Arc<CommPlan>>,
     /// Accumulated phase times over all `apply` calls.
     pub accumulated: PhaseTimes,
     /// Number of `apply` calls (iterations driven through the cluster).
     pub applications: usize,
+    last_error: Option<anyhow::Error>,
+    plan_builds: usize,
+    n: usize,
 }
 
 impl DistributedOp {
+    /// Build an engine-backed operator. Plan construction happens here,
+    /// exactly once; a construction failure is stored and surfaces on
+    /// the first apply (use [`DistributedOp::try_new`] to fail eagerly).
     pub fn new(decomposition: TwoLevelDecomposition) -> Self {
-        Self { decomposition, accumulated: PhaseTimes::default(), applications: 0 }
+        let n = decomposition.n;
+        match PmvcEngine::new(Arc::new(decomposition)) {
+            Ok(engine) => {
+                let plan = Arc::clone(engine.plan());
+                Self {
+                    backend: Some(Box::new(engine)),
+                    plan: Some(plan),
+                    accumulated: PhaseTimes::default(),
+                    applications: 0,
+                    last_error: None,
+                    plan_builds: 1,
+                    n,
+                }
+            }
+            Err(e) => Self {
+                backend: None,
+                plan: None,
+                accumulated: PhaseTimes::default(),
+                applications: 0,
+                last_error: Some(e),
+                plan_builds: 0,
+                n,
+            },
+        }
+    }
+
+    /// Build an engine-backed operator, propagating plan-construction
+    /// errors instead of deferring them.
+    pub fn try_new(decomposition: TwoLevelDecomposition) -> crate::Result<Self> {
+        let mut op = Self::new(decomposition);
+        if let Some(e) = op.last_error.take() {
+            return Err(e);
+        }
+        Ok(op)
+    }
+
+    /// Drive the solver over any [`ExecBackend`] (simulated cluster,
+    /// MPI ranks, a pre-built engine).
+    pub fn with_backend(backend: Box<dyn ExecBackend>) -> Self {
+        let n = backend.order();
+        Self {
+            backend: Some(backend),
+            plan: None,
+            accumulated: PhaseTimes::default(),
+            applications: 0,
+            last_error: None,
+            plan_builds: 0,
+            n,
+        }
+    }
+
+    /// `y = A·x` with error propagation.
+    pub fn try_apply(&mut self, x: &[f64]) -> crate::Result<Vec<f64>> {
+        let backend = match self.backend.as_mut() {
+            Some(b) => b,
+            None => {
+                let why = self
+                    .last_error
+                    .as_ref()
+                    .map(|e| format!("{e:#}"))
+                    .unwrap_or_else(|| "no backend".to_string());
+                anyhow::bail!("distributed backend unavailable: {why}");
+            }
+        };
+        let r = backend.apply(x)?;
+        self.accumulated.lb_nodes = r.times.lb_nodes;
+        self.accumulated.lb_cores = r.times.lb_cores;
+        self.accumulated.t_compute += r.times.t_compute;
+        self.accumulated.t_scatter += r.times.t_scatter;
+        self.accumulated.t_gather += r.times.t_gather;
+        self.accumulated.t_construct += r.times.t_construct;
+        self.applications += 1;
+        Ok(r.y)
     }
 
     /// Mean per-iteration total time (compute + gather + construct).
@@ -57,22 +147,47 @@ impl DistributedOp {
             self.accumulated.t_total() / self.applications as f64
         }
     }
+
+    /// The engine's frozen communication plan (None for non-engine
+    /// backends or failed construction).
+    pub fn plan(&self) -> Option<&Arc<CommPlan>> {
+        self.plan.as_ref()
+    }
+
+    /// How many communication plans this operator ever constructed —
+    /// 1 for an engine-backed op, never incremented by `apply`.
+    pub fn plan_builds(&self) -> usize {
+        self.plan_builds
+    }
+
+    /// The most recent execution or construction error, if any.
+    pub fn last_error(&self) -> Option<&anyhow::Error> {
+        self.last_error.as_ref()
+    }
+
+    /// Take (and clear) the most recent error.
+    pub fn take_error(&mut self) -> Option<anyhow::Error> {
+        self.last_error.take()
+    }
+
+    /// The active backend, if construction succeeded.
+    pub fn backend(&self) -> Option<&dyn ExecBackend> {
+        self.backend.as_deref()
+    }
 }
 
 impl MatVecOp for DistributedOp {
     fn order(&self) -> usize {
-        self.decomposition.n
+        self.n
     }
     fn apply(&mut self, x: &[f64]) -> Vec<f64> {
-        let r = execute_threads(&self.decomposition, x).expect("distributed PMVC failed");
-        self.accumulated.lb_nodes = r.times.lb_nodes;
-        self.accumulated.lb_cores = r.times.lb_cores;
-        self.accumulated.t_compute += r.times.t_compute;
-        self.accumulated.t_scatter += r.times.t_scatter;
-        self.accumulated.t_gather += r.times.t_gather;
-        self.accumulated.t_construct += r.times.t_construct;
-        self.applications += 1;
-        r.y
+        match self.try_apply(x) {
+            Ok(y) => y,
+            Err(e) => {
+                self.last_error = Some(e);
+                vec![0.0; self.n]
+            }
+        }
     }
 }
 
@@ -111,6 +226,36 @@ mod tests {
         }
         assert_eq!(dist.applications, 1);
         assert!(dist.mean_iteration_time() > 0.0);
+        assert!(dist.last_error().is_none());
+    }
+
+    #[test]
+    fn distributed_op_plans_exactly_once() {
+        let a = gen::generate_spd(120, 3, 700, 5).to_csr();
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let mut dist = DistributedOp::new(d);
+        let p0 = Arc::as_ptr(dist.plan().expect("engine-backed op has a plan"));
+        let x = vec![1.0; 120];
+        for _ in 0..10 {
+            dist.apply(&x);
+        }
+        assert_eq!(dist.plan_builds(), 1);
+        assert_eq!(p0, Arc::as_ptr(dist.plan().unwrap()));
+    }
+
+    #[test]
+    fn corrupt_decomposition_fails_cleanly() {
+        let a = gen::generate_spd(80, 3, 400, 7).to_csr();
+        let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let frag = d.fragments.iter_mut().find(|fr| !fr.global_rows.is_empty()).unwrap();
+        frag.global_rows.pop();
+        assert!(DistributedOp::try_new(d.clone()).is_err());
+        let mut op = DistributedOp::new(d);
+        assert!(op.last_error().is_some());
+        let y = op.apply(&vec![1.0; 80]);
+        assert!(y.iter().all(|&v| v == 0.0), "failed apply must return zeros");
+        assert_eq!(op.applications, 0);
+        assert!(op.try_apply(&vec![1.0; 80]).is_err());
     }
 
     #[test]

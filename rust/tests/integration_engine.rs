@@ -1,0 +1,125 @@
+//! Integration: the plan/engine split — one persistent engine reused
+//! across many applies matches the serial product, the plan is built
+//! exactly once per decomposition, and all three backends are reachable
+//! through the unified [`pmvc::pmvc::ExecBackend`] trait.
+
+use pmvc::cluster::NetworkPreset;
+use pmvc::coordinator::experiment::topology_for;
+use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
+use pmvc::pmvc::{execute_threads, make_backend, BackendKind, ExecBackend, PmvcEngine};
+use pmvc::rng::SplitMix64;
+use pmvc::solver::{DistributedOp, MatVecOp};
+use pmvc::sparse::gen::{generate, MatrixSpec};
+use std::sync::Arc;
+
+#[test]
+fn engine_reuse_matches_serial_for_50_vectors_all_combinations() {
+    let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 11).to_csr();
+    let mut rng = SplitMix64::new(0xE6);
+    for combo in Combination::all() {
+        let d = decompose(&a, combo, 2, 4, &DecomposeConfig::default());
+        let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+        for trial in 0..50 {
+            let x: Vec<f64> =
+                (0..a.n_cols).map(|_| rng.next_f64_range(-3.0, 3.0)).collect();
+            let r = engine.apply(&x).unwrap();
+            let y_ref = a.matvec(&x);
+            for i in 0..a.n_rows {
+                assert!(
+                    (r.y[i] - y_ref[i]).abs() < 1e-9 * (1.0 + y_ref[i].abs()),
+                    "{combo} trial {trial} row {i}: {} vs {}",
+                    r.y[i],
+                    y_ref[i]
+                );
+            }
+        }
+        assert_eq!(engine.applies(), 50);
+        assert_eq!(engine.plan_builds(), 1);
+    }
+}
+
+#[test]
+fn distributed_op_plans_once_for_many_iterations() {
+    let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 2).to_csr();
+    let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+    let mut op = DistributedOp::new(d);
+    let p0 = Arc::as_ptr(op.plan().expect("engine-backed op exposes its plan"));
+    let mut rng = SplitMix64::new(3);
+    for _ in 0..50 {
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        let y = op.apply(&x);
+        assert_eq!(y.len(), a.n_rows);
+    }
+    assert_eq!(op.applications, 50);
+    assert_eq!(op.plan_builds(), 1, "apply must never re-plan");
+    assert_eq!(p0, Arc::as_ptr(op.plan().unwrap()), "plan identity stable across applies");
+    assert!(op.last_error().is_none());
+}
+
+#[test]
+fn all_backends_reachable_through_trait_and_agree_with_oneshot() {
+    let a = generate(&MatrixSpec::paper("thermal").unwrap(), 5).to_csr();
+    let mut rng = SplitMix64::new(14);
+    let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+    let (f, c) = (3usize, 2usize);
+    let topo = topology_for(f, c);
+    let net = NetworkPreset::TenGigabitEthernet.model();
+    let d = decompose(&a, Combination::NcHl, f, c, &DecomposeConfig::default());
+    let y_oneshot = execute_threads(&d, &x).unwrap().y;
+    for kind in BackendKind::all() {
+        let mut backend = make_backend(kind, d.clone(), &topo, &net).unwrap();
+        assert_eq!(backend.name(), kind.name());
+        let r = backend.apply(&x).unwrap();
+        for i in 0..a.n_rows {
+            assert!(
+                (r.y[i] - y_oneshot[i]).abs() < 1e-9 * (1.0 + y_oneshot[i].abs()),
+                "{kind} row {i}"
+            );
+        }
+        // a second apply through the same backend reuses its state
+        let r2 = backend.apply(&x).unwrap();
+        assert_eq!(r.y.len(), r2.y.len());
+        assert!(r2.times.t_total() > 0.0, "{kind}");
+    }
+}
+
+#[test]
+fn solvers_run_over_any_backend() {
+    use pmvc::solver::cg::conjugate_gradient;
+    let a = pmvc::sparse::gen::generate_spd(150, 3, 900, 41).to_csr();
+    let x_true: Vec<f64> = (0..150).map(|i| ((i % 9) as f64) * 0.5 - 2.0).collect();
+    let b = a.matvec(&x_true);
+    let (f, c) = (2usize, 2usize);
+    let topo = topology_for(f, c);
+    let net = NetworkPreset::TenGigabitEthernet.model();
+    for kind in BackendKind::all() {
+        let d = decompose(&a, Combination::NlHl, f, c, &DecomposeConfig::default());
+        let backend = make_backend(kind, d, &topo, &net).unwrap();
+        let mut op = DistributedOp::with_backend(backend);
+        let r = conjugate_gradient(&mut op, &b, 1e-10, 600);
+        assert!(r.converged, "{kind}: residual {}", r.residual_norm);
+        for i in 0..150 {
+            assert!((r.x[i] - x_true[i]).abs() < 1e-6, "{kind} x[{i}]");
+        }
+        assert_eq!(op.applications, r.iterations);
+        assert!(op.last_error().is_none(), "{kind}");
+    }
+}
+
+#[test]
+fn corrupt_decomposition_surfaces_error_instead_of_panicking() {
+    let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+    let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+    let frag = d.fragments.iter_mut().find(|fr| !fr.global_rows.is_empty()).unwrap();
+    frag.global_rows.pop();
+
+    assert!(PmvcEngine::new(Arc::new(d.clone())).is_err());
+    assert!(execute_threads(&d, &vec![1.0; a.n_cols]).is_err());
+    assert!(DistributedOp::try_new(d.clone()).is_err());
+
+    // the infallible MatVecOp path degrades to a zero vector + stored error
+    let mut op = DistributedOp::new(d);
+    let y = op.apply(&vec![1.0; a.n_cols]);
+    assert!(y.iter().all(|&v| v == 0.0));
+    assert!(op.take_error().is_some());
+}

@@ -6,7 +6,7 @@ use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
 use pmvc::partition::hypergraph::Hypergraph;
 use pmvc::partition::multilevel::Multilevel;
 use pmvc::partition::{Axis, Nezgt};
-use pmvc::pmvc::execute_threads;
+use pmvc::pmvc::{execute_threads, CommPlan};
 use pmvc::rng::SplitMix64;
 use pmvc::sparse::gen::{generate, Family, MatrixSpec};
 use pmvc::sparse::Coo;
@@ -106,6 +106,57 @@ fn prop_lambda_cut_bounds() {
             .map(|net| (net.len().min(k) as u64).saturating_sub(1))
             .sum();
         assert!(cut <= bound, "cut {cut} > bound {bound}");
+    }
+}
+
+#[test]
+fn prop_comm_plan_maps_are_permutations_consistent_with_decomposition() {
+    let mut rng = SplitMix64::new(0x51AB);
+    for trial in 0..20 {
+        let a = random_matrix(&mut rng).to_csr();
+        let combo = Combination::all()[rng.next_below(4)];
+        let f = 1 + rng.next_below(5);
+        let c = 1 + rng.next_below(5);
+        let d = decompose(&a, combo, f, c, &DecomposeConfig::default());
+        let plan = CommPlan::build(&d)
+            .unwrap_or_else(|e| panic!("trial {trial} ({combo} f={f} c={c}): {e}"));
+        assert_eq!((plan.f, plan.c, plan.n), (f, c, a.n_rows));
+        for node in 0..f {
+            let np = &plan.nodes[node];
+            // footprint lists are duplicate-free, in range, and exactly
+            // the union of the node's fragment footprints (a permutation
+            // of the distinct ids — same cardinality, no repeats)
+            let mut seen_col = vec![false; a.n_cols];
+            for &g in &np.x_cols {
+                assert!((g as usize) < a.n_cols, "trial {trial} col {g}");
+                assert!(!seen_col[g as usize], "trial {trial}: duplicate col {g}");
+                seen_col[g as usize] = true;
+            }
+            assert_eq!(np.x_cols.len(), d.node_x_footprint(node), "trial {trial} node {node}");
+            let mut seen_row = vec![false; a.n_rows];
+            for &g in &np.y_rows {
+                assert!((g as usize) < a.n_rows, "trial {trial} row {g}");
+                assert!(!seen_row[g as usize], "trial {trial}: duplicate row {g}");
+                seen_row[g as usize] = true;
+            }
+            assert_eq!(np.y_rows.len(), d.node_y_footprint(node), "trial {trial} node {node}");
+            // per-core maps land exactly on the fragment's global ids
+            for core in 0..c {
+                let frag = d.fragment(node, core);
+                assert_eq!(np.core_x_maps[core].len(), frag.global_cols.len());
+                for (lc, &p) in np.core_x_maps[core].iter().enumerate() {
+                    assert_eq!(np.x_cols[p as usize], frag.global_cols[lc], "trial {trial}");
+                }
+                assert_eq!(np.core_y_maps[core].len(), frag.global_rows.len());
+                for (lr, &p) in np.core_y_maps[core].iter().enumerate() {
+                    assert_eq!(np.y_rows[p as usize], frag.global_rows[lr], "trial {trial}");
+                }
+            }
+        }
+        // byte accounting covers every fragment of the decomposition
+        let expect_a: usize =
+            d.fragments.iter().map(|fr| fr.csr.val.len() * 8 + fr.csr.col.len() * 4).sum();
+        assert_eq!(plan.scatter_a_bytes(), expect_a, "trial {trial}");
     }
 }
 
