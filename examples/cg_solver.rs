@@ -1,14 +1,14 @@
 //! Domain example: solve a sparse SPD linear system with conjugate
 //! gradient where every matrix-vector product runs through the
-//! distributed PMVC pipeline — the RSL workload of the paper's ch. 1.
+//! distributed PMVC pipeline — the RSL workload of the paper's ch. 1,
+//! driven through the unified `IterativeSolver` builder API.
 //!
 //! ```bash
 //! cargo run --release --example cg_solver
 //! ```
 
 use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
-use pmvc::solver::cg::conjugate_gradient;
-use pmvc::solver::DistributedOp;
+use pmvc::solver::{Cg, DistributedOp, IterativeSolver};
 use pmvc::sparse::gen::generate_spd;
 
 fn main() -> pmvc::Result<()> {
@@ -23,32 +23,34 @@ fn main() -> pmvc::Result<()> {
 
     for combo in Combination::all() {
         let d = decompose(&a, combo, 4, 4, &DecomposeConfig::default());
-        // plans + launches the persistent engine once; every CG iteration
-        // below reuses it (only X/Y traffic per apply)
-        let mut op = DistributedOp::try_new(d)?;
-        let r = conjugate_gradient(&mut op, &b, 1e-10, 2000);
-        if let Some(e) = op.take_error() {
-            anyhow::bail!("{combo}: distributed apply failed: {e:#}");
-        }
+        // plans + launches the persistent engine once (errors are eager);
+        // every CG iteration below reuses it through the allocation-free
+        // apply_into path — only X/Y traffic per apply
+        let mut op = DistributedOp::new(d)?;
+        let r = Cg::new().tol(1e-10).max_iters(2000).solve(&mut op, &b)?;
         let err = r
             .x
             .iter()
             .zip(&x_true)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f64, f64::max);
+        // every solve self-reports the operator's phase breakdown
+        let phases = r.phases.expect("distributed solve reports its phases");
+        let per_iter = 1e3 / r.applies.max(1) as f64;
         println!(
-            "{}: {} iterations, ||r|| = {:.2e}, max err = {:.2e}, mean iter = {:.4} ms \
-             (compute {:.4} ms, gather+constr {:.4} ms)",
+            "{}: {} iterations, ||r|| = {:.2e}, max err = {:.2e}, wall = {:.1} ms, \
+             per-iter compute {:.4} ms, gather+constr {:.4} ms",
             combo.name(),
             r.iterations,
             r.residual_norm,
             err,
-            op.mean_iteration_time() * 1e3,
-            op.accumulated.t_compute / op.applications as f64 * 1e3,
-            op.accumulated.t_gather_construct() / op.applications as f64 * 1e3,
+            r.wall_time * 1e3,
+            phases.t_compute * per_iter,
+            phases.t_gather_construct() * per_iter,
         );
         assert!(r.converged && err < 1e-5);
         assert_eq!(op.plan_builds(), 1, "one plan per decomposition, however many iterations");
+        assert_eq!(op.applications, r.applies);
     }
     println!("cg_solver OK");
     Ok(())

@@ -12,6 +12,7 @@
 use pmvc::coordinator::experiment::{run_sweep, ExperimentConfig};
 use pmvc::coordinator::report;
 use pmvc::partition::combined::Combination;
+use pmvc::solver::SolverKind;
 use std::time::Instant;
 
 fn main() -> pmvc::Result<()> {
@@ -48,5 +49,30 @@ fn main() -> pmvc::Result<()> {
     std::fs::create_dir_all("results")?;
     std::fs::write("results/sweep.csv", report::to_csv(&rows))?;
     println!("\nfull sweep written to results/sweep.csv ({} rows)", rows.len());
+
+    // Solver sweep: a full CG solve through every cell's simulated
+    // backend via the unified IterativeSolver trait — convergence and
+    // mean per-iteration phase times land in the same CSV schema.
+    let solver_cfg = ExperimentConfig {
+        matrices: vec!["spd".into()],
+        node_counts: vec![2, 4, 8],
+        combos: vec![Combination::NlHl],
+        solver: Some(SolverKind::Cg),
+        ..Default::default()
+    };
+    let srows = run_sweep(&solver_cfg)?;
+    println!("\n=== Sweep itératif — CG sur la grappe simulée (NL-HL) ===");
+    for r in &srows {
+        println!(
+            "  f={:<3} {} iterations (converged={}), mean iter total {:.6e} s",
+            r.f,
+            r.iterations,
+            r.converged,
+            r.times.t_total()
+        );
+        assert!(r.converged, "CG must converge on the SPD system");
+    }
+    std::fs::write("results/solver_sweep.csv", report::to_csv(&srows))?;
+    println!("solver sweep written to results/solver_sweep.csv ({} rows)", srows.len());
     Ok(())
 }

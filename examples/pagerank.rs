@@ -1,15 +1,15 @@
 //! Domain example: PageRank over a synthetic Web link matrix — the
 //! "matrice de Google" application of the paper's ch. 1 §3.1. The power
-//! iteration drives one distributed PMVC per step; the XLA runtime path
-//! is exercised for the top-ranked verification when artifacts exist.
+//! iteration drives one distributed PMVC per step through the unified
+//! `IterativeSolver` API, with a per-iteration observer watching the
+//! L1 deltas shrink.
 //!
 //! ```bash
 //! cargo run --release --example pagerank
 //! ```
 
 use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
-use pmvc::solver::power::power_iteration;
-use pmvc::solver::DistributedOp;
+use pmvc::solver::{DistributedOp, IterativeSolver, Power};
 use pmvc::sparse::gen::generate_link_matrix;
 
 fn main() -> pmvc::Result<()> {
@@ -28,29 +28,39 @@ fn main() -> pmvc::Result<()> {
     );
 
     // one plan + persistent worker pool for the whole power iteration
-    let mut op = DistributedOp::try_new(d)?;
-    let r = power_iteration(&mut op, 0.85, 1e-10, 200);
-    if let Some(e) = op.take_error() {
-        anyhow::bail!("distributed apply failed: {e:#}");
-    }
+    let mut op = DistributedOp::new(d)?;
+    let mut solver = Power::new()
+        .damping(0.85)
+        .tol(1e-10)
+        .max_iters(200)
+        .observer(|it, delta| {
+            if it % 25 == 0 {
+                println!("  iteration {it}: L1 delta = {delta:.3e}");
+            }
+        });
+    let r = solver.solve(&mut op, &[])?;
     println!(
         "power iteration: {} iterations (converged={}), lambda={:.6}",
-        r.iterations, r.converged, r.lambda
+        r.iterations,
+        r.converged,
+        r.lambda.unwrap_or(f64::NAN)
     );
+    let phases = r.phases.expect("distributed solve reports its phases");
     println!(
-        "mean iteration: {:.4} ms over the distributed pipeline ({} plan build)",
+        "mean iteration: {:.4} ms over the distributed pipeline ({} plan build, compute {:.4} ms)",
         op.mean_iteration_time() * 1e3,
-        op.plan_builds()
+        op.plan_builds(),
+        phases.t_compute / r.applies.max(1) as f64 * 1e3,
     );
 
     // top pages
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| r.v[b].partial_cmp(&r.v[a]).unwrap());
+    idx.sort_by(|&a, &b| r.x[b].partial_cmp(&r.x[a]).unwrap());
     println!("top 5 pages by score:");
     for &i in idx.iter().take(5) {
-        println!("  page {i}: {:.6e}", r.v[i]);
+        println!("  page {i}: {:.6e}", r.x[i]);
     }
-    let sum: f64 = r.v.iter().sum();
+    let sum: f64 = r.x.iter().sum();
     assert!((sum - 1.0).abs() < 1e-6, "scores must form a distribution");
     assert!(r.converged);
     println!("pagerank OK");

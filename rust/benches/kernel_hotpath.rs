@@ -1,9 +1,13 @@
 //! Hot-path microbenchmarks: the per-core PFVC kernel (native CSR, native
-//! ELL, XLA artifact) measured against the memory-bandwidth roofline.
+//! ELL, XLA artifact) measured against the memory-bandwidth roofline,
+//! plus the solver-loop instruments: plan-once engine reuse vs one-shot
+//! execution, and allocating `apply` vs allocation-free `apply_into`.
 //! This is the §Perf instrument for L1/L3.
 //!
 //! ```bash
-//! cargo bench --bench kernel_hotpath
+//! cargo bench --bench kernel_hotpath            # full measurement run
+//! cargo bench --bench kernel_hotpath -- --test  # CI smoke: tiny sizes,
+//!                                               # asserts the hot path
 //! ```
 
 use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
@@ -28,15 +32,27 @@ fn time_it<F: FnMut()>(mut f: F, iters: usize) -> f64 {
 }
 
 fn main() {
+    // --test: the CI smoke mode — tiny matrices and iteration counts so
+    // an API regression in the hot path fails fast, not a measurement
+    let test_mode = std::env::args().any(|a| a == "--test");
+
     println!("{:<12} {:>10} {:>12} {:>10} {:>10} {:>10}", "matrix", "nnz", "kernel", "time/op", "GB/s", "GFLOP/s");
     println!("{}", "-".repeat(70));
 
+    let all_names =
+        ["bcsstm09", "thermal", "t2dal", "ex19", "epb1", "af23560", "spmsrtls", "zhao1"];
+    let names: &[&str] = if test_mode { &all_names[..2] } else { &all_names };
+
     let mut rng = SplitMix64::new(7);
-    for name in ["bcsstm09", "thermal", "t2dal", "ex19", "epb1", "af23560", "spmsrtls", "zhao1"] {
+    for &name in names {
         let a = generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr();
         let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
         let mut y = vec![0.0; a.n_rows];
-        let iters = (20_000_000 / a.nnz().max(1)).clamp(5, 500);
+        let iters = if test_mode {
+            3
+        } else {
+            (20_000_000 / a.nnz().max(1)).clamp(5, 500)
+        };
 
         // native CSR (the production per-core kernel)
         let dt = time_it(
@@ -67,7 +83,7 @@ fn main() {
                 || {
                     std::hint::black_box(ell.matvec(&xf));
                 },
-                iters.max(100),
+                if test_mode { 5 } else { iters.max(100) },
             );
             let slab_bytes = (bucket.rows * bucket.width * 8) as f64;
             println!(
@@ -87,8 +103,9 @@ fn main() {
     // The one-shot path re-plans, re-spawns f·c threads and re-allocates
     // every buffer per call; the engine pays that once.
     {
-        let applies = 20usize;
-        let a = generate(&MatrixSpec::paper("epb1").unwrap(), 1).to_csr();
+        let applies = if test_mode { 3usize } else { 20usize };
+        let mat = if test_mode { "bcsstm09" } else { "epb1" };
+        let a = generate(&MatrixSpec::paper(mat).unwrap(), 1).to_csr();
         let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default());
         let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
 
@@ -107,32 +124,77 @@ fn main() {
         }
         let per_engine = t1.elapsed().as_secs_f64() / applies as f64;
 
-        println!("\nrepeated PMVC (epb1, NL-HL, 2x4, {applies} applies):");
+        println!("\nrepeated PMVC ({mat}, NL-HL, 2x4, {applies} applies):");
         println!("  one-shot execute_threads: {:>9.1}µs/apply", per_oneshot * 1e6);
         println!("  persistent engine:        {:>9.1}µs/apply", per_engine * 1e6);
         println!("  engine speedup:           {:>9.2}x", per_oneshot / per_engine);
     }
 
-    // XLA artifact path (if built)
-    match pmvc::runtime::Runtime::new() {
-        Ok(mut rt) => {
-            println!("\nXLA artifact path (PJRT {}):", rt.platform());
-            let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 1).to_csr();
-            let rows: Vec<usize> = (0..512).collect();
-            let frag = a.select_rows(&rows);
-            let x = vec![1f32; a.n_cols];
-            // first call compiles
-            let t0 = Instant::now();
-            rt.pfvc_csr(&frag, &x).unwrap();
-            println!("  cold (compile+run): {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
-            let dt = time_it(
-                || {
-                    std::hint::black_box(rt.pfvc_csr(&frag, &x).unwrap());
-                },
-                50,
-            );
-            println!("  warm per-execution: {:.1} µs ({} rows)", dt * 1e6, frag.n_rows);
+    // allocating apply vs allocation-free apply_into on one engine: the
+    // per-iteration Vec the solver redesign removed from the hot loop.
+    {
+        let applies = if test_mode { 10usize } else { 500usize };
+        let mat = if test_mode { "bcsstm09" } else { "epb1" };
+        let a = generate(&MatrixSpec::paper(mat).unwrap(), 1).to_csr();
+        let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default());
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+        let mut y = vec![0.0; a.n_rows];
+        engine.apply_into(&x, &mut y).unwrap(); // warm the pool
+
+        let t0 = Instant::now();
+        for _ in 0..applies {
+            std::hint::black_box(engine.apply(&x).unwrap());
         }
-        Err(e) => println!("\nXLA path skipped: {e}"),
+        let per_alloc = t0.elapsed().as_secs_f64() / applies as f64;
+
+        let t1 = Instant::now();
+        for _ in 0..applies {
+            engine.apply_into(&x, &mut y).unwrap();
+            std::hint::black_box(&y);
+        }
+        let per_into = t1.elapsed().as_secs_f64() / applies as f64;
+
+        // correctness guard: the scratch path must match the serial
+        // product (this is what makes --test a CI smoke gate)
+        let y_ref = a.matvec(&x);
+        let max_err = y
+            .iter()
+            .zip(&y_ref)
+            .map(|(u, v)| (u - v).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_err < 1e-9, "apply_into diverges from serial: {max_err:.3e}");
+
+        println!("\nallocating apply vs apply_into ({mat}, NL-HL, 2x4, {applies} applies):");
+        println!("  apply (Vec per call):     {:>9.1}µs/apply", per_alloc * 1e6);
+        println!("  apply_into (scratch):     {:>9.1}µs/apply", per_into * 1e6);
+        println!("  allocation-free gain:     {:>9.2}x", per_alloc / per_into);
     }
+
+    // XLA artifact path (if built)
+    if !test_mode {
+        match pmvc::runtime::Runtime::new() {
+            Ok(mut rt) => {
+                println!("\nXLA artifact path (PJRT {}):", rt.platform());
+                let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 1).to_csr();
+                let rows: Vec<usize> = (0..512).collect();
+                let frag = a.select_rows(&rows);
+                let x = vec![1f32; a.n_cols];
+                // first call compiles
+                let t0 = Instant::now();
+                rt.pfvc_csr(&frag, &x).unwrap();
+                println!("  cold (compile+run): {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+                let dt = time_it(
+                    || {
+                        std::hint::black_box(rt.pfvc_csr(&frag, &x).unwrap());
+                    },
+                    50,
+                );
+                println!("  warm per-execution: {:.1} µs ({} rows)", dt * 1e6, frag.n_rows);
+            }
+            Err(e) => println!("\nXLA path skipped: {e}"),
+        }
+    }
+
+    println!("\nkernel_hotpath OK{}", if test_mode { " (test mode)" } else { "" });
 }

@@ -7,10 +7,18 @@
 //! and the paper's Grid'5000 substitute), executes them for real on the
 //! persistent threaded engine (`threads`), or drives the MPI-style ranks
 //! (`mpi`) — selected by [`ExperimentConfig::backend`].
+//!
+//! With [`ExperimentConfig::solver`] set, each cell additionally drives
+//! a full iterative solve through the unified
+//! [`crate::solver::IterativeSolver`] trait over the selected backend
+//! (wrapped in a [`DistributedOp`]), reporting convergence alongside the
+//! mean per-iteration phase times — every solver × every backend ×
+//! every scenario from one harness.
 
 use crate::cluster::{ClusterTopology, NetworkPreset};
 use crate::partition::combined::{decompose, Combination, DecomposeConfig};
 use crate::pmvc::{make_backend, BackendKind, ExecBackend, PhaseTimes};
+use crate::solver::{make_solver, DistributedOp, IterativeSolver, SolverKind};
 use crate::sparse::gen::{generate, MatrixSpec};
 use crate::sparse::Csr;
 
@@ -31,6 +39,13 @@ pub struct ExperimentConfig {
     /// measured backends spawn f·c real threads per cell, so keep the
     /// grid small when selecting them).
     pub backend: BackendKind,
+    /// Iterative solver to drive through each cell's backend (None:
+    /// one probe PMVC per cell, the paper's measurement mode).
+    pub solver: Option<SolverKind>,
+    /// Solver tolerance (solver cells only).
+    pub solver_tol: f64,
+    /// Solver iteration cap (solver cells only).
+    pub solver_max_iters: usize,
     /// Matrix generation seed.
     pub seed: u64,
     /// Decomposition tunables.
@@ -46,6 +61,9 @@ impl Default for ExperimentConfig {
             cores_per_node: 8,
             network: NetworkPreset::TenGigabitEthernet,
             backend: BackendKind::Sim,
+            solver: None,
+            solver_tol: 1e-10,
+            solver_max_iters: 1000,
             seed: 1,
             decompose: DecomposeConfig::default(),
         }
@@ -58,9 +76,18 @@ pub struct SweepRow {
     pub matrix: String,
     pub combo: Combination,
     pub f: usize,
+    /// Phase times: the probe PMVC's (probe mode) or the mean per
+    /// solver iteration (solver mode).
     pub times: PhaseTimes,
     /// Which backend produced the times (`threads` | `sim` | `mpi`).
     pub backend: &'static str,
+    /// Which solver ran through the cell (`probe` when the cell is a
+    /// single measurement PMVC).
+    pub solver: &'static str,
+    /// Iterations the solver performed (1 for a probe cell).
+    pub iterations: usize,
+    /// Whether the solver met its stopping criterion (true for probes).
+    pub converged: bool,
 }
 
 /// A paravance-class cluster of `f` nodes resized to `cores_per_node`
@@ -76,19 +103,44 @@ pub fn topology_for(f: usize, cores_per_node: usize) -> ClusterTopology {
 }
 
 /// Load or generate a matrix by name: a Table 4.2 name generates its
-/// synthetic analog; anything ending in `.mtx` reads a MatrixMarket file.
+/// synthetic analog; `spd` generates a diagonally dominant SPD system
+/// (the RSL workload the linear solvers need); anything ending in
+/// `.mtx` reads a MatrixMarket file.
 pub fn load_matrix(name: &str, seed: u64) -> crate::Result<Csr> {
     if name.ends_with(".mtx") {
         return Ok(crate::sparse::mm::read_matrix_market(name)?.sum_duplicates().to_csr());
     }
-    let spec = MatrixSpec::paper(name)
-        .ok_or_else(|| anyhow::anyhow!("unknown matrix '{name}' (not in Table 4.2, not a .mtx path)"))?;
+    if name == "spd" {
+        return Ok(crate::sparse::gen::generate_spd(4000, 6, 24_000, seed).to_csr());
+    }
+    let spec = MatrixSpec::paper(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown matrix '{name}' (not in Table 4.2, not 'spd', not a .mtx path)")
+    })?;
     Ok(generate(&spec, seed).to_csr())
 }
 
-/// Run the full sweep. Each cell decomposes once, constructs the
-/// configured backend once (plan/launch = the one-time A distribution)
-/// and applies one probe PMVC to collect the phase times.
+/// Mean per-apply phase times of an accumulated breakdown (load
+/// balances are level quantities and pass through unchanged).
+fn mean_times(acc: &PhaseTimes, applies: usize) -> PhaseTimes {
+    if applies == 0 {
+        return *acc;
+    }
+    let k = applies as f64;
+    PhaseTimes {
+        lb_nodes: acc.lb_nodes,
+        lb_cores: acc.lb_cores,
+        t_compute: acc.t_compute / k,
+        t_scatter: acc.t_scatter / k,
+        t_gather: acc.t_gather / k,
+        t_construct: acc.t_construct / k,
+    }
+}
+
+/// Run the full sweep. Each cell decomposes once and constructs the
+/// configured backend once (plan/launch = the one-time A distribution);
+/// a probe cell then applies one measurement PMVC, a solver cell drives
+/// a full [`crate::solver::IterativeSolver`] run through the backend
+/// and reports mean per-iteration phase times plus convergence.
 pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
     let net = cfg.network.model();
     let mut rows = Vec::new();
@@ -98,25 +150,65 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
         // times are value-independent; the measured backends are not)
         let mut rng = crate::rng::SplitMix64::new(cfg.seed ^ 0xA5A5_5A5A);
         let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        // manufactured right-hand side for solver cells (eigen solvers
+        // use it as their starting vector)
+        let b = if cfg.solver.is_some() {
+            let x_true: Vec<f64> =
+                (0..a.n_rows).map(|i| ((i % 13) as f64) * 0.25 - 1.5).collect();
+            a.matvec(&x_true)
+        } else {
+            Vec::new()
+        };
         for &combo in &cfg.combos {
             for &f in &cfg.node_counts {
                 let topo = topology_for(f, cfg.cores_per_node);
                 let d = decompose(&a, combo, f, cfg.cores_per_node, &cfg.decompose);
                 let mut backend = make_backend(cfg.backend, d, &topo, &net)?;
-                // warm-up apply: the first call through a measured
-                // backend faults in every worker's cold scratch, which
-                // is setup noise, not the amortized per-iteration cost
-                // this sweep reports (the sim backend's times are
-                // cached, so the extra apply is inert there)
-                backend.apply(&x)?;
-                let times = backend.apply(&x)?.times;
-                rows.push(SweepRow {
-                    matrix: name.clone(),
-                    combo,
-                    f,
-                    times,
-                    backend: cfg.backend.name(),
-                });
+                let row = match cfg.solver {
+                    None => {
+                        // warm-up apply: the first call through a
+                        // measured backend faults in every worker's
+                        // cold scratch, which is setup noise, not the
+                        // amortized per-iteration cost this sweep
+                        // reports (the sim backend's times are cached,
+                        // so the extra apply is inert there)
+                        backend.apply(&x)?;
+                        let times = backend.apply(&x)?.times;
+                        SweepRow {
+                            matrix: name.clone(),
+                            combo,
+                            f,
+                            times,
+                            backend: cfg.backend.name(),
+                            solver: "probe",
+                            iterations: 1,
+                            converged: true,
+                        }
+                    }
+                    Some(kind) => {
+                        // same warm-up rationale as probe mode, done on
+                        // the bare backend so the cold first apply never
+                        // pollutes the operator's accumulated stats
+                        backend.apply(&x)?;
+                        let mut op = DistributedOp::with_backend(backend);
+                        let mut solver = make_solver(kind, &a)?;
+                        solver.options_mut().tol = cfg.solver_tol;
+                        solver.options_mut().max_iters = cfg.solver_max_iters;
+                        solver.options_mut().record_history = false;
+                        let report = solver.solve(&mut op, &b)?;
+                        SweepRow {
+                            matrix: name.clone(),
+                            combo,
+                            f,
+                            times: mean_times(&op.accumulated, op.applications),
+                            backend: cfg.backend.name(),
+                            solver: kind.name(),
+                            iterations: report.iterations,
+                            converged: report.converged,
+                        }
+                    }
+                };
+                rows.push(row);
             }
         }
     }
@@ -198,6 +290,51 @@ mod tests {
         for r in &rows {
             assert!(r.times.t_total() > 0.0, "{} {} f={}", r.matrix, r.combo, r.f);
             assert_eq!(r.backend, "sim");
+            assert_eq!(r.solver, "probe");
+            assert_eq!(r.iterations, 1);
+            assert!(r.converged);
+        }
+    }
+
+    #[test]
+    fn solver_sweep_reports_convergence_and_phase_times() {
+        let cfg = ExperimentConfig {
+            matrices: vec!["spd".into()],
+            node_counts: vec![2],
+            combos: vec![Combination::NlHl],
+            cores_per_node: 2,
+            solver: Some(SolverKind::Cg),
+            ..Default::default()
+        };
+        let rows = run_sweep(&cfg).unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.solver, "cg");
+        assert_eq!(r.backend, "sim");
+        assert!(r.converged, "CG over the sim backend must converge on the SPD system");
+        assert!(r.iterations > 1);
+        assert!(r.times.t_total() > 0.0, "mean per-iteration phase times must be populated");
+    }
+
+    #[test]
+    fn solver_sweep_runs_every_solver_over_sim() {
+        for kind in SolverKind::all() {
+            // Lanczos cost is O(steps²·n) with full reorthogonalization;
+            // a handful of steps is plenty for a smoke sweep
+            let iters = if kind == SolverKind::Lanczos { 30 } else { 4000 };
+            let cfg = ExperimentConfig {
+                matrices: vec!["spd".into()],
+                node_counts: vec![2],
+                combos: vec![Combination::NlHl],
+                cores_per_node: 2,
+                solver: Some(kind),
+                solver_max_iters: iters,
+                ..Default::default()
+            };
+            let rows = run_sweep(&cfg).unwrap();
+            assert_eq!(rows.len(), 1, "{kind}");
+            assert_eq!(rows[0].solver, kind.name());
+            assert!(rows[0].iterations > 0, "{kind}");
         }
     }
 

@@ -59,16 +59,18 @@ pub fn recap_table(rows: &[SweepRow], combos: &[Combination]) -> String {
     out
 }
 
-/// CSV export of the full sweep (one row per cell).
+/// CSV export of the full sweep (one row per cell). Solver cells carry
+/// the solver name, its iteration count and convergence flag next to
+/// the phase times; probe cells read `probe,1,true`.
 pub fn to_csv(rows: &[SweepRow]) -> String {
     let mut out = String::from(
-        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend\n",
+        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend,solver,iterations,converged\n",
     );
     for r in rows {
         let t = &r.times;
         let _ = writeln!(
             out,
-            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{}",
+            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{},{},{},{}",
             r.matrix,
             r.combo.name(),
             r.f,
@@ -80,7 +82,10 @@ pub fn to_csv(rows: &[SweepRow]) -> String {
             t.t_construct,
             t.t_gather_construct(),
             t.t_total(),
-            r.backend
+            r.backend,
+            r.solver,
+            r.iterations,
+            r.converged
         );
     }
     out
@@ -211,8 +216,29 @@ mod tests {
     fn csv_has_header_and_rows() {
         let csv = to_csv(&rows());
         assert!(csv.starts_with("matrix,combo"));
-        assert!(csv.lines().next().unwrap().ends_with(",backend"));
+        assert!(csv.lines().next().unwrap().ends_with(",backend,solver,iterations,converged"));
         assert_eq!(csv.lines().count(), 1 + 2 * 4 * 1);
+        for line in csv.lines().skip(1) {
+            assert!(line.ends_with(",sim,probe,1,true"), "probe row: {line}");
+        }
+    }
+
+    #[test]
+    fn csv_carries_solver_cells() {
+        use crate::solver::SolverKind;
+        let cfg = ExperimentConfig {
+            matrices: vec!["spd".into()],
+            node_counts: vec![2],
+            combos: vec![Combination::NlHl],
+            cores_per_node: 2,
+            solver: Some(SolverKind::Cg),
+            ..Default::default()
+        };
+        let rows = run_sweep(&cfg).unwrap();
+        let csv = to_csv(&rows);
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.contains(",sim,cg,"), "solver+backend columns: {row}");
+        assert!(row.ends_with(",true"), "convergence column: {row}");
     }
 
     #[test]

@@ -35,10 +35,13 @@
 //!   [`pmvc::backend`] unifies the threaded, simulated and MPI-style
 //!   runtimes behind one `ExecBackend` trait.
 //! * [`runtime`] — PJRT client, artifact loading, executable cache.
-//! * [`solver`] — CG, Jacobi, Gauss-Seidel, Lanczos, power iteration on
-//!   top of the distributed PMVC (plan once, apply every iteration).
-//! * [`coordinator`] — experiment driver (backend-selectable sweeps),
-//!   reporting, CLI.
+//! * [`solver`] — CG, Jacobi, Gauss-Seidel/SOR, Lanczos and power
+//!   iteration unified behind the [`solver::IterativeSolver`] /
+//!   [`solver::SolveReport`] API over the fallible, allocation-free
+//!   [`solver::MatVecOp::apply_into`] contract (plan once, apply every
+//!   iteration into reusable scratch).
+//! * [`coordinator`] — experiment driver (backend- and
+//!   solver-selectable sweeps), reporting, CLI.
 
 pub mod cluster;
 pub mod coordinator;

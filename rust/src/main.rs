@@ -14,6 +14,7 @@ use pmvc::coordinator::experiment::{run_sweep, topology_for, ExperimentConfig};
 use pmvc::coordinator::report;
 use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
 use pmvc::pmvc::{make_backend, BackendKind, ExecBackend};
+use pmvc::solver::SolverKind;
 
 fn main() {
     let args = Args::from_env();
@@ -48,6 +49,15 @@ fn config_from(args: &Args) -> pmvc::Result<ExperimentConfig> {
         cfg.backend = BackendKind::parse(b)
             .ok_or_else(|| anyhow::anyhow!("unknown backend '{b}' (threads|sim|mpi)"))?;
     }
+    if let Some(s) = args.opt("solver") {
+        cfg.solver = Some(SolverKind::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown solver '{s}' (cg|jacobi|sor|power|lanczos)")
+        })?);
+    }
+    if let Some(t) = args.opt("tol") {
+        cfg.solver_tol = t.parse().map_err(|e| anyhow::anyhow!("--tol: {e}"))?;
+    }
+    cfg.solver_max_iters = args.opt_usize("iters", cfg.solver_max_iters)?;
     Ok(cfg)
 }
 
@@ -80,12 +90,19 @@ COMMANDS:
   info                              artifacts + PJRT runtime status
 
 COMMON OPTIONS:
-  --matrices a,b,c   subset of Table 4.2 names (or .mtx paths)
+  --matrices a,b,c   subset of Table 4.2 names, 'spd', or .mtx paths
   --nodes 2,4,8      node counts to sweep
   --combos NL-HL,..  combinations
   --cores N          cores per node (default 8)
   --network 10gbe    gbe|10gbe|ib|myrinet
   --backend KIND     threads|sim|mpi (sweep default: sim; run default: threads)
+  --solver KIND      cg|jacobi|sor|power|lanczos: drive a full iterative
+                     solve through every sweep cell (CSV gains solver,
+                     iterations and convergence columns; phase times are
+                     per-iteration means). '--matrices spd' generates an
+                     SPD system the linear solvers converge on.
+  --tol X            solver tolerance (default 1e-10)
+  --iters N          solver iteration cap (default 1000)
   --seed N           generator seed";
 
 fn cmd_table(args: &Args) -> pmvc::Result<()> {

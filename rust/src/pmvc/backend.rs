@@ -20,7 +20,12 @@ use crate::partition::combined::TwoLevelDecomposition;
 use std::sync::Arc;
 
 /// A distributed-PMVC executor bound to one decomposition: plan/launch
-/// once at construction, then `apply` per iteration.
+/// once at construction, then one apply per iteration.
+///
+/// The primitive is [`ExecBackend::apply_into`] — the product is
+/// written into a caller-owned buffer, so an iterative solver's hot
+/// loop allocates nothing per iteration. [`ExecBackend::apply`] is the
+/// allocating convenience wrapper for one-shot callers.
 pub trait ExecBackend {
     /// Short backend identifier (`threads` | `sim` | `mpi`).
     fn name(&self) -> &'static str;
@@ -28,8 +33,18 @@ pub trait ExecBackend {
     /// Matrix order N (square systems).
     fn order(&self) -> usize;
 
-    /// Execute `y = A·x`, reporting the five paper phases.
-    fn apply(&mut self, x: &[f64]) -> crate::Result<ExecResult>;
+    /// Execute `y = A·x` into caller-owned scratch (`y.len()` must be
+    /// [`ExecBackend::order`]), reporting the five paper phases.
+    fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<PhaseTimes>;
+
+    /// Execute `y = A·x` into a fresh vector (allocates; iterative
+    /// callers should reuse scratch through
+    /// [`ExecBackend::apply_into`]).
+    fn apply(&mut self, x: &[f64]) -> crate::Result<ExecResult> {
+        let mut y = vec![0.0; self.order()];
+        let times = self.apply_into(x, &mut y)?;
+        Ok(ExecResult { y, times })
+    }
 
     /// One-time distribution cost paid at construction (A scatter /
     /// pool launch), seconds. Zero when the backend has none to report.
@@ -47,8 +62,8 @@ impl ExecBackend for PmvcEngine {
         PmvcEngine::order(self)
     }
 
-    fn apply(&mut self, x: &[f64]) -> crate::Result<ExecResult> {
-        PmvcEngine::apply(self, x)
+    fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<PhaseTimes> {
+        PmvcEngine::apply_into(self, x, y)
     }
 
     fn setup_time(&self) -> f64 {
@@ -89,20 +104,26 @@ impl ExecBackend for SimBackend {
         self.d.n
     }
 
-    fn apply(&mut self, x: &[f64]) -> crate::Result<ExecResult> {
+    fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<PhaseTimes> {
         anyhow::ensure!(
             x.len() == self.d.n,
             "x length {} != matrix order {}",
             x.len(),
             self.d.n
         );
-        let mut y = vec![0.0; self.d.n];
+        anyhow::ensure!(
+            y.len() == self.d.n,
+            "y length {} != matrix order {}",
+            y.len(),
+            self.d.n
+        );
+        y.fill(0.0);
         for frag in &self.d.fragments {
             spmv::gather_x(frag, x, &mut self.x_local);
             spmv::pfvc(frag, &self.x_local, &mut self.y_local);
-            spmv::scatter_y_accumulate(frag, &self.y_local, &mut y);
+            spmv::scatter_y_accumulate(frag, &self.y_local, y);
         }
-        Ok(ExecResult { y, times: self.times })
+        Ok(self.times)
     }
 
     // setup_time stays at the default 0.0: the simulator models the
@@ -136,15 +157,24 @@ impl ExecBackend for MpiBackend {
         self.cluster.n
     }
 
-    fn apply(&mut self, x: &[f64]) -> crate::Result<ExecResult> {
+    fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<PhaseTimes> {
         anyhow::ensure!(
             x.len() == self.cluster.n,
             "x length {} != matrix order {}",
             x.len(),
             self.cluster.n
         );
-        let (y, t) = self.cluster.matvec(x);
-        let times = PhaseTimes {
+        anyhow::ensure!(
+            y.len() == self.cluster.n,
+            "y length {} != matrix order {}",
+            y.len(),
+            self.cluster.n
+        );
+        // the ranks assemble their reply in fresh message buffers (MPI
+        // semantics); the leader copies the payload into caller scratch
+        let (yv, t) = self.cluster.matvec(x);
+        y.copy_from_slice(&yv);
+        Ok(PhaseTimes {
             lb_nodes: self.lb_nodes,
             lb_cores: self.lb_cores,
             t_compute: t.t_compute_max,
@@ -153,8 +183,7 @@ impl ExecBackend for MpiBackend {
             t_scatter: 0.0,
             t_gather: (t.t_wall - t.t_compute_max - t.t_construct_max).max(0.0),
             t_construct: t.t_construct_max,
-        };
-        Ok(ExecResult { y, times })
+        })
     }
 
     fn setup_time(&self) -> f64 {
@@ -256,7 +285,15 @@ mod tests {
                     "{kind} row {i}"
                 );
             }
+            // the allocation-free path reuses caller scratch and agrees
+            let mut y = vec![7.0; a.n_rows];
+            backend.apply_into(&x, &mut y).unwrap();
+            for i in 0..a.n_rows {
+                assert!((y[i] - r.y[i]).abs() < 1e-12, "{kind} apply_into row {i}");
+            }
             assert!(backend.apply(&[0.0; 3]).is_err(), "{kind} must reject bad x");
+            let mut y_short = vec![0.0; 3];
+            assert!(backend.apply_into(&x, &mut y_short).is_err(), "{kind} must reject bad y");
         }
     }
 }

@@ -117,13 +117,30 @@ impl PmvcEngine {
         })
     }
 
-    /// Execute `y = A·x` through the persistent pool. `x.len()` must
-    /// equal the matrix order.
+    /// Execute `y = A·x` through the persistent pool into a fresh
+    /// vector. Iterative callers should reuse scratch through
+    /// [`PmvcEngine::apply_into`].
     pub fn apply(&mut self, x: &[f64]) -> crate::Result<ExecResult> {
+        let mut y = vec![0.0; self.d.n];
+        let times = self.apply_into(x, &mut y)?;
+        Ok(ExecResult { y, times })
+    }
+
+    /// Execute `y = A·x` through the persistent pool into caller-owned
+    /// scratch — the solver hot path: no allocation besides the
+    /// engine's internal reusable buffers. `x.len()` and `y.len()` must
+    /// equal the matrix order.
+    pub fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<PhaseTimes> {
         anyhow::ensure!(
             x.len() == self.d.n,
             "x length {} != matrix order {}",
             x.len(),
+            self.d.n
+        );
+        anyhow::ensure!(
+            y.len() == self.d.n,
+            "y length {} != matrix order {}",
+            y.len(),
             self.d.n
         );
         self.seq += 1;
@@ -192,8 +209,9 @@ impl PmvcEngine {
         }
 
         // ---------- phases 4+5: gather at the master + final assembly
+        // (into the caller's reusable buffer — no allocation)
         let t4 = Instant::now();
-        let mut y = vec![0.0; self.d.n];
+        y.fill(0.0);
         for (node, np) in self.plan.nodes.iter().enumerate() {
             let yk = &self.node_y[node];
             for (i, &g) in np.y_rows.iter().enumerate() {
@@ -203,16 +221,13 @@ impl PmvcEngine {
         let t_gather = t4.elapsed().as_secs_f64();
 
         self.applies += 1;
-        Ok(ExecResult {
-            y,
-            times: PhaseTimes {
-                lb_nodes: self.plan.lb_nodes,
-                lb_cores: self.plan.lb_cores,
-                t_compute,
-                t_scatter,
-                t_gather,
-                t_construct,
-            },
+        Ok(PhaseTimes {
+            lb_nodes: self.plan.lb_nodes,
+            lb_cores: self.plan.lb_cores,
+            t_compute,
+            t_scatter,
+            t_gather,
+            t_construct,
         })
     }
 
@@ -345,6 +360,24 @@ mod tests {
         // the pool survives a rejected call
         let x = vec![1.0; a.n_cols];
         assert!(engine.apply(&x).is_ok());
+    }
+
+    #[test]
+    fn apply_into_reuses_caller_scratch() {
+        let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+        let x = vec![1.0; a.n_cols];
+        // stale contents must be overwritten, not accumulated into
+        let mut y = vec![9.0; a.n_rows];
+        let t = engine.apply_into(&x, &mut y).unwrap();
+        let y_ref = a.matvec(&x);
+        for i in 0..a.n_rows {
+            assert!((y[i] - y_ref[i]).abs() < 1e-9 * (1.0 + y_ref[i].abs()), "row {i}");
+        }
+        assert!(t.t_total() > 0.0);
+        let mut y_short = vec![0.0; 3];
+        assert!(engine.apply_into(&x, &mut y_short).is_err());
     }
 
     #[test]

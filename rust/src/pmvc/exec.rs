@@ -8,7 +8,9 @@
 //! backend: phase 1 covers everything the master pays to distribute A
 //! and X, phases 2–5 are the per-iteration pipeline. Iterative callers
 //! should hold a [`PmvcEngine`] (or a [`super::backend::ExecBackend`])
-//! and amortize the setup instead of calling this in a loop.
+//! and amortize the setup instead of calling this in a loop — and use
+//! the allocation-free `apply_into` path so each iteration writes into
+//! reusable scratch.
 
 use super::engine::PmvcEngine;
 use super::phases::PhaseTimes;

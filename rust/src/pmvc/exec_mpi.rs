@@ -253,12 +253,25 @@ impl crate::solver::MatVecOp for MpiOp {
     fn order(&self) -> usize {
         self.cluster.n
     }
-    fn apply(&mut self, x: &[f64]) -> Vec<f64> {
-        let (y, t) = self.cluster.matvec(x);
+    fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
+        anyhow::ensure!(
+            x.len() == self.cluster.n,
+            "x length {} != matrix order {}",
+            x.len(),
+            self.cluster.n
+        );
+        anyhow::ensure!(
+            y.len() == self.cluster.n,
+            "y length {} != matrix order {}",
+            y.len(),
+            self.cluster.n
+        );
+        let (yv, t) = self.cluster.matvec(x);
+        y.copy_from_slice(&yv);
         self.iterations += 1;
         self.accumulated_wall += t.t_wall;
         self.accumulated_compute += t.t_compute_max;
-        y
+        Ok(())
     }
 }
 
@@ -307,18 +320,19 @@ mod tests {
 
     #[test]
     fn cg_over_mpi_backend() {
-        use crate::solver::cg::conjugate_gradient;
+        use crate::solver::{Cg, IterativeSolver};
         let a = crate::sparse::gen::generate_spd(150, 3, 900, 23).to_csr();
         let x_true: Vec<f64> = (0..150).map(|i| ((i % 11) as f64) * 0.2).collect();
         let b = a.matvec(&x_true);
         let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
         let mut op = MpiOp::new(&d);
-        let r = conjugate_gradient(&mut op, &b, 1e-10, 600);
+        let r = Cg::new().tol(1e-10).max_iters(600).solve(&mut op, &b).unwrap();
         assert!(r.converged);
         for i in 0..150 {
             assert!((r.x[i] - x_true[i]).abs() < 1e-6);
         }
         assert_eq!(op.iterations, r.iterations);
+        assert_eq!(op.iterations, r.applies);
         op.cluster.shutdown();
     }
 }

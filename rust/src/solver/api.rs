@@ -1,0 +1,428 @@
+//! The unified solver API: one fallible, allocation-free contract for
+//! every iterative method.
+//!
+//! The paper's observation (ch. 1 §4–5) is that iterative methods are
+//! *one kernel repeated*: A is distributed once and every iteration is a
+//! PMVC plus cheap vector work. The API mirrors that structure:
+//!
+//! * [`super::MatVecOp::apply_into`] — the repeated kernel, writing into
+//!   caller-owned scratch and propagating backend failures as `Result`
+//!   (no per-iteration allocation, no zero-vector-on-error masking);
+//! * [`IterativeSolver`] — the loop around it, configured through a
+//!   shared [`SolveOptions`] builder (tolerance, iteration cap, stopping
+//!   criterion, residual-history capture, per-iteration observer);
+//! * [`SolveReport`] — one result type for all five methods, carrying
+//!   the operator's accumulated [`PhaseTimes`] so every distributed
+//!   solve self-reports its scatter/compute/gather breakdown.
+//!
+//! Call sites that pick a method at run time (the sweep driver, the
+//! `--solver` CLI flag) go through [`SolverKind`] / [`make_solver`] and
+//! drive a `Box<dyn IterativeSolver>`.
+
+use super::MatVecOp;
+use crate::pmvc::PhaseTimes;
+use crate::sparse::Csr;
+use std::time::Instant;
+
+/// Typed solver-entry errors — the replacements for the old
+/// `assert!`/`assert_eq!` panics in the free-function solvers.
+#[derive(Debug)]
+pub enum SolverError {
+    /// A vector handed to `solve` has the wrong length.
+    DimensionMismatch {
+        /// What was mis-sized (`"rhs b"`, `"diagonal"`, `"operator"`).
+        what: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// Jacobi/SOR require every diagonal entry nonzero.
+    ZeroDiagonal { row: usize },
+    /// SOR relaxation factor outside (0, 2).
+    BadOmega { omega: f64 },
+    /// The operator's backend failed during an `apply_into`.
+    Backend(anyhow::Error),
+}
+
+impl std::fmt::Display for SolverError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolverError::DimensionMismatch { what, expected, got } => {
+                write!(f, "{what}: expected length {expected}, got {got}")
+            }
+            SolverError::ZeroDiagonal { row } => {
+                write!(f, "zero diagonal entry at row {row} (Jacobi/SOR need a nonzero diagonal)")
+            }
+            SolverError::BadOmega { omega } => {
+                write!(f, "SOR requires 0 < omega < 2, got {omega}")
+            }
+            SolverError::Backend(e) => write!(f, "operator apply failed: {e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for SolverError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SolverError::Backend(e) => {
+                let src: &(dyn std::error::Error + 'static) = e.as_ref();
+                Some(src)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// How the residual threshold is formed from the tolerance.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StoppingCriterion {
+    /// Stop when `‖r‖ ≤ tol · ‖b‖` (the classic relative test; the
+    /// default, and what the pre-redesign free functions did).
+    #[default]
+    RelativeRhs,
+    /// Stop when `‖r‖ ≤ tol`.
+    Absolute,
+}
+
+/// Per-iteration observer: called with `(iteration, residual_norm)`
+/// after every completed iteration.
+pub type Observer = Box<dyn FnMut(usize, f64) + Send>;
+
+/// Shared solver configuration, embedded in every [`IterativeSolver`]
+/// implementor and populated through its builder methods
+/// (`.tol(..)`, `.max_iters(..)`, `.criterion(..)`,
+/// `.record_history(..)`, `.observer(..)`).
+pub struct SolveOptions {
+    /// Convergence tolerance (interpreted per [`StoppingCriterion`];
+    /// the eigen solvers treat it as an absolute update-delta bound).
+    pub tol: f64,
+    /// Iteration cap (for Lanczos: the number of steps).
+    pub max_iters: usize,
+    /// Residual threshold formation.
+    pub criterion: StoppingCriterion,
+    /// Capture the residual after every iteration in
+    /// [`SolveReport::history`].
+    pub record_history: bool,
+    /// Optional per-iteration callback.
+    pub observer: Option<Observer>,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            tol: 1e-10,
+            max_iters: 1000,
+            criterion: StoppingCriterion::default(),
+            record_history: true,
+            observer: None,
+        }
+    }
+}
+
+impl std::fmt::Debug for SolveOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SolveOptions")
+            .field("tol", &self.tol)
+            .field("max_iters", &self.max_iters)
+            .field("criterion", &self.criterion)
+            .field("record_history", &self.record_history)
+            .field("observer", &self.observer.is_some())
+            .finish()
+    }
+}
+
+impl SolveOptions {
+    /// The residual threshold for a right-hand side of norm `b_norm`.
+    pub fn threshold(&self, b_norm: f64) -> f64 {
+        match self.criterion {
+            StoppingCriterion::RelativeRhs => self.tol * b_norm.max(f64::MIN_POSITIVE),
+            StoppingCriterion::Absolute => self.tol,
+        }
+    }
+
+    /// Record one completed iteration: history capture + observer call.
+    pub(crate) fn note(&mut self, history: &mut Vec<f64>, iteration: usize, residual: f64) {
+        if self.record_history {
+            history.push(residual);
+        }
+        if let Some(obs) = self.observer.as_mut() {
+            obs(iteration, residual);
+        }
+    }
+}
+
+/// The one result type shared by all five iterative methods.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// Which solver produced this report (`cg` | `jacobi` | ...).
+    pub solver: &'static str,
+    /// The solution / dominant eigenvector. Empty for Lanczos, whose
+    /// answer is the Ritz values in [`SolveReport::lambda`] /
+    /// [`SolveReport::lambda_min`].
+    pub x: Vec<f64>,
+    /// Iterations (Lanczos: steps) actually performed.
+    pub iterations: usize,
+    /// Final residual norm (eigen solvers: final update delta /
+    /// subdiagonal magnitude).
+    pub residual_norm: f64,
+    /// Whether the stopping criterion was met within `max_iters`.
+    pub converged: bool,
+    /// Residual after every iteration (empty unless
+    /// [`SolveOptions::record_history`]).
+    pub history: Vec<f64>,
+    /// Wall time of the whole solve, seconds.
+    pub wall_time: f64,
+    /// Number of operator applications (PMVCs) driven by the solve.
+    pub applies: usize,
+    /// The operator's accumulated phase breakdown over this solve —
+    /// `Some` whenever the operator self-reports (the distributed op
+    /// does, serial CSR does not).
+    pub phases: Option<PhaseTimes>,
+    /// Dominant eigenvalue estimate (power: Rayleigh quotient,
+    /// Lanczos: largest Ritz value).
+    pub lambda: Option<f64>,
+    /// Smallest Ritz value (Lanczos only).
+    pub lambda_min: Option<f64>,
+}
+
+/// One iterative method behind one interface: configure through the
+/// shared builder, run with `solve`, read one [`SolveReport`].
+///
+/// `b` is the right-hand side for the linear solvers; the eigen solvers
+/// (power, Lanczos) accept an empty slice and otherwise use a nonzero
+/// `b` as the starting vector.
+pub trait IterativeSolver {
+    /// Stable solver identifier (`cg` | `jacobi` | `sor` | `power` |
+    /// `lanczos`).
+    fn name(&self) -> &'static str;
+    /// The shared configuration.
+    fn options(&self) -> &SolveOptions;
+    /// Mutable access for call sites holding a trait object.
+    fn options_mut(&mut self) -> &mut SolveOptions;
+    /// Run the method over any [`MatVecOp`].
+    fn solve(&mut self, a: &mut dyn MatVecOp, b: &[f64]) -> Result<SolveReport, SolverError>;
+}
+
+/// Generate the shared builder methods on a solver struct holding its
+/// [`SolveOptions`] in a field named `opts`.
+macro_rules! impl_solver_builder {
+    ($t:ty) => {
+        impl $t {
+            /// Convergence tolerance.
+            pub fn tol(mut self, tol: f64) -> Self {
+                self.opts.tol = tol;
+                self
+            }
+            /// Iteration cap (Lanczos: number of steps).
+            pub fn max_iters(mut self, n: usize) -> Self {
+                self.opts.max_iters = n;
+                self
+            }
+            /// Residual threshold formation (default: relative to ‖b‖).
+            pub fn criterion(mut self, c: $crate::solver::StoppingCriterion) -> Self {
+                self.opts.criterion = c;
+                self
+            }
+            /// Capture the per-iteration residual in the report.
+            pub fn record_history(mut self, on: bool) -> Self {
+                self.opts.record_history = on;
+                self
+            }
+            /// Per-iteration callback `(iteration, residual)`.
+            pub fn observer(mut self, f: impl FnMut(usize, f64) + Send + 'static) -> Self {
+                self.opts.observer = Some(Box::new(f));
+                self
+            }
+        }
+    };
+}
+pub(crate) use impl_solver_builder;
+
+/// Component-wise difference of two accumulated phase snapshots (load
+/// balances are level quantities, not accumulators — keep the latest).
+pub(crate) fn phase_delta(
+    before: Option<PhaseTimes>,
+    after: Option<PhaseTimes>,
+) -> Option<PhaseTimes> {
+    match (before, after) {
+        (Some(b), Some(a)) => Some(PhaseTimes {
+            lb_nodes: a.lb_nodes,
+            lb_cores: a.lb_cores,
+            t_compute: a.t_compute - b.t_compute,
+            t_scatter: a.t_scatter - b.t_scatter,
+            t_gather: a.t_gather - b.t_gather,
+            t_construct: a.t_construct - b.t_construct,
+        }),
+        (None, after) => after,
+        (Some(_), None) => None,
+    }
+}
+
+/// Assemble a [`SolveReport`], stamping wall time and the operator's
+/// phase breakdown accumulated since `phases_before`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn finish_report(
+    solver: &'static str,
+    x: Vec<f64>,
+    iterations: usize,
+    residual_norm: f64,
+    converged: bool,
+    history: Vec<f64>,
+    t0: Instant,
+    applies: usize,
+    phases_before: Option<PhaseTimes>,
+    a: &dyn MatVecOp,
+    lambda: Option<f64>,
+    lambda_min: Option<f64>,
+) -> SolveReport {
+    SolveReport {
+        solver,
+        x,
+        iterations,
+        residual_norm,
+        converged,
+        history,
+        wall_time: t0.elapsed().as_secs_f64(),
+        applies,
+        phases: phase_delta(phases_before, a.phase_times()),
+        lambda,
+        lambda_min,
+    }
+}
+
+/// Method selector for call sites that pick a solver at run time (the
+/// sweep driver's `--solver` flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    Cg,
+    Jacobi,
+    Sor,
+    Power,
+    Lanczos,
+}
+
+impl SolverKind {
+    /// All solvers, linear systems first.
+    pub fn all() -> [SolverKind; 5] {
+        [
+            SolverKind::Cg,
+            SolverKind::Jacobi,
+            SolverKind::Sor,
+            SolverKind::Power,
+            SolverKind::Lanczos,
+        ]
+    }
+
+    /// Stable identifier (matches [`IterativeSolver::name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Cg => "cg",
+            SolverKind::Jacobi => "jacobi",
+            SolverKind::Sor => "sor",
+            SolverKind::Power => "power",
+            SolverKind::Lanczos => "lanczos",
+        }
+    }
+
+    /// Parse `cg` / `jacobi` / `sor` / `power` / `lanczos`
+    /// (case-insensitive, with a few aliases).
+    pub fn parse(s: &str) -> Option<SolverKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "cg" | "conjugate-gradient" => Some(SolverKind::Cg),
+            "jacobi" => Some(SolverKind::Jacobi),
+            "sor" | "gauss-seidel" | "gs" => Some(SolverKind::Sor),
+            "power" | "pagerank" => Some(SolverKind::Power),
+            "lanczos" => Some(SolverKind::Lanczos),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SolverKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Construct a solver of the requested kind with default options.
+/// `a` provides the structural data some methods need up front
+/// (Jacobi's diagonal, SOR's row sweep); Cg/Power/Lanczos ignore it.
+pub fn make_solver(kind: SolverKind, a: &Csr) -> Result<Box<dyn IterativeSolver>, SolverError> {
+    Ok(match kind {
+        SolverKind::Cg => Box::new(crate::solver::cg::Cg::new()),
+        SolverKind::Jacobi => Box::new(crate::solver::jacobi::Jacobi::from_matrix(a)?),
+        SolverKind::Sor => Box::new(crate::solver::gauss_seidel::Sor::new(a)?),
+        SolverKind::Power => Box::new(crate::solver::power::Power::new()),
+        SolverKind::Lanczos => Box::new(crate::solver::lanczos::Lanczos::new()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrips_through_parse() {
+        for kind in SolverKind::all() {
+            assert_eq!(SolverKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(SolverKind::parse("smoke-signals"), None);
+        assert_eq!(SolverKind::parse("gs"), Some(SolverKind::Sor));
+    }
+
+    #[test]
+    fn thresholds_follow_the_criterion() {
+        let mut o = SolveOptions { tol: 1e-6, ..Default::default() };
+        assert_eq!(o.threshold(100.0), 1e-4);
+        o.criterion = StoppingCriterion::Absolute;
+        assert_eq!(o.threshold(100.0), 1e-6);
+    }
+
+    #[test]
+    fn note_feeds_history_and_observer() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h2 = Arc::clone(&hits);
+        let mut o = SolveOptions {
+            observer: Some(Box::new(move |_, _| {
+                h2.fetch_add(1, Ordering::SeqCst);
+            })),
+            ..Default::default()
+        };
+        let mut hist = Vec::new();
+        o.note(&mut hist, 1, 0.5);
+        o.note(&mut hist, 2, 0.25);
+        assert_eq!(hist, vec![0.5, 0.25]);
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        o.record_history = false;
+        o.note(&mut hist, 3, 0.1);
+        assert_eq!(hist.len(), 2);
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn phase_delta_subtracts_accumulators() {
+        let before = PhaseTimes { t_compute: 1.0, t_gather: 0.5, ..Default::default() };
+        let after = PhaseTimes { t_compute: 3.0, t_gather: 2.0, lb_cores: 1.5, ..Default::default() };
+        let d = phase_delta(Some(before), Some(after)).unwrap();
+        assert_eq!(d.t_compute, 2.0);
+        assert_eq!(d.t_gather, 1.5);
+        assert_eq!(d.lb_cores, 1.5);
+        assert!(phase_delta(Some(before), None).is_none());
+        assert_eq!(phase_delta(None, Some(after)).unwrap().t_compute, 3.0);
+    }
+
+    #[test]
+    fn errors_render_their_context() {
+        let e = SolverError::DimensionMismatch { what: "rhs b", expected: 10, got: 3 };
+        assert!(e.to_string().contains("rhs b"));
+        let e = SolverError::ZeroDiagonal { row: 7 };
+        assert!(e.to_string().contains("row 7"));
+        let e = SolverError::BadOmega { omega: 2.5 };
+        assert!(e.to_string().contains("2.5"));
+        let e = SolverError::Backend(anyhow::anyhow!("node 3 died"));
+        assert!(e.to_string().contains("node 3 died"));
+        use std::error::Error as _;
+        assert!(e.source().is_some());
+    }
+}

@@ -2,9 +2,111 @@
 //! is the PMVC (ch. 1 §4.1: iterative methods keep A intact and only use
 //! it "à travers l'opérateur produit matrice-vecteur").
 
+use super::api::{
+    finish_report, impl_solver_builder, IterativeSolver, SolveOptions, SolveReport, SolverError,
+};
 use super::{axpy, dot, norm2, MatVecOp};
+use std::time::Instant;
 
-/// CG convergence report.
+/// Plain conjugate gradient for SPD systems, behind the unified
+/// [`IterativeSolver`] API:
+///
+/// `Cg::new().tol(1e-10).max_iters(500).solve(&mut op, &b)?`
+///
+/// All solver vectors (x, r, p and the matvec scratch) are allocated
+/// once before the loop; every iteration drives exactly one
+/// [`MatVecOp::apply_into`] into the reused scratch.
+#[derive(Debug, Default)]
+pub struct Cg {
+    opts: SolveOptions,
+}
+
+impl Cg {
+    pub fn new() -> Cg {
+        Cg::default()
+    }
+}
+
+impl_solver_builder!(Cg);
+
+impl IterativeSolver for Cg {
+    fn name(&self) -> &'static str {
+        "cg"
+    }
+
+    fn options(&self) -> &SolveOptions {
+        &self.opts
+    }
+
+    fn options_mut(&mut self) -> &mut SolveOptions {
+        &mut self.opts
+    }
+
+    fn solve(&mut self, a: &mut dyn MatVecOp, b: &[f64]) -> Result<SolveReport, SolverError> {
+        let n = a.order();
+        if b.len() != n {
+            return Err(SolverError::DimensionMismatch { what: "rhs b", expected: n, got: b.len() });
+        }
+        let t0 = Instant::now();
+        let phases0 = a.phase_times();
+        let threshold = self.opts.threshold(norm2(b));
+
+        let mut x = vec![0.0; n];
+        let mut r = b.to_vec(); // r = b - A·0
+        let mut p = r.clone();
+        let mut ap = vec![0.0; n]; // matvec scratch, reused every iteration
+        let mut history = Vec::new();
+        let mut rs_old = dot(&r, &r);
+        let mut residual = rs_old.sqrt();
+        let mut converged = residual <= threshold; // zero / converged rhs
+        let mut iterations = 0usize;
+        let mut applies = 0usize;
+
+        if !converged {
+            for it in 0..self.opts.max_iters {
+                a.apply_into(&p, &mut ap).map_err(SolverError::Backend)?;
+                applies += 1;
+                let pap = dot(&p, &ap);
+                if pap <= 0.0 {
+                    // matrix not SPD along p — bail with what we have
+                    break;
+                }
+                let alpha = rs_old / pap;
+                axpy(alpha, &p, &mut x);
+                axpy(-alpha, &ap, &mut r);
+                let rs_new = dot(&r, &r);
+                residual = rs_new.sqrt();
+                iterations = it + 1;
+                self.opts.note(&mut history, iterations, residual);
+                if residual <= threshold {
+                    converged = true;
+                    break;
+                }
+                let beta = rs_new / rs_old;
+                for i in 0..n {
+                    p[i] = r[i] + beta * p[i];
+                }
+                rs_old = rs_new;
+            }
+        }
+        Ok(finish_report(
+            "cg",
+            x,
+            iterations,
+            residual,
+            converged,
+            history,
+            t0,
+            applies,
+            phases0,
+            &*a,
+            None,
+            None,
+        ))
+    }
+}
+
+/// CG convergence report (pre-redesign shape).
 #[derive(Clone, Debug)]
 pub struct CgResult {
     pub x: Vec<f64>,
@@ -16,6 +118,10 @@ pub struct CgResult {
 }
 
 /// Solve `A·x = b` for SPD `A` with plain conjugate gradient.
+///
+/// Backend failures (which the old signature could not express) are
+/// reported as a non-converged [`CgResult`].
+#[deprecated(note = "use Cg::new().tol(..).max_iters(..).solve(op, b)")]
 pub fn conjugate_gradient(
     a: &mut dyn MatVecOp,
     b: &[f64],
@@ -23,57 +129,21 @@ pub fn conjugate_gradient(
     max_iters: usize,
 ) -> CgResult {
     let n = a.order();
-    assert_eq!(b.len(), n);
-    let mut x = vec![0.0; n];
-    let mut r = b.to_vec(); // r = b - A·0
-    let mut p = r.clone();
-    let mut rs_old = dot(&r, &r);
-    let b_norm = norm2(b).max(f64::MIN_POSITIVE);
-    let mut history = Vec::new();
-    if rs_old.sqrt() <= tol * b_norm {
-        // zero (or already-converged) right-hand side
-        return CgResult { x, iterations: 0, residual_norm: rs_old.sqrt(), converged: true, history };
-    }
-
-    for it in 0..max_iters {
-        let ap = a.apply(&p);
-        let pap = dot(&p, &ap);
-        if pap <= 0.0 {
-            // matrix not SPD along p — bail with what we have
-            return CgResult {
-                x,
-                iterations: it,
-                residual_norm: rs_old.sqrt(),
-                converged: false,
-                history,
-            };
-        }
-        let alpha = rs_old / pap;
-        axpy(alpha, &p, &mut x);
-        axpy(-alpha, &ap, &mut r);
-        let rs_new = dot(&r, &r);
-        history.push(rs_new.sqrt());
-        if rs_new.sqrt() <= tol * b_norm {
-            return CgResult {
-                x,
-                iterations: it + 1,
-                residual_norm: rs_new.sqrt(),
-                converged: true,
-                history,
-            };
-        }
-        let beta = rs_new / rs_old;
-        for i in 0..n {
-            p[i] = r[i] + beta * p[i];
-        }
-        rs_old = rs_new;
-    }
-    CgResult {
-        x,
-        iterations: max_iters,
-        residual_norm: rs_old.sqrt(),
-        converged: false,
-        history,
+    match Cg::new().tol(tol).max_iters(max_iters).solve(a, b) {
+        Ok(r) => CgResult {
+            x: r.x,
+            iterations: r.iterations,
+            residual_norm: r.residual_norm,
+            converged: r.converged,
+            history: r.history,
+        },
+        Err(_) => CgResult {
+            x: vec![0.0; n],
+            iterations: 0,
+            residual_norm: f64::INFINITY,
+            converged: false,
+            history: Vec::new(),
+        },
     }
 }
 
@@ -90,13 +160,18 @@ mod tests {
         let x_true: Vec<f64> = (0..400).map(|i| ((i * 7 % 13) as f64) - 6.0).collect();
         let b = a.matvec(&x_true);
         let mut op = a.clone();
-        let r = conjugate_gradient(&mut op, &b, 1e-10, 1000);
+        let r = Cg::new().tol(1e-10).max_iters(1000).solve(&mut op, &b).unwrap();
         assert!(r.converged, "CG did not converge: ||r||={}", r.residual_norm);
+        assert_eq!(r.solver, "cg");
         for i in 0..400 {
             assert!((r.x[i] - x_true[i]).abs() < 1e-6, "x[{i}]");
         }
         // residual history is (weakly) convergent overall
         assert!(r.history.last().unwrap() < &r.history[0]);
+        assert!(r.wall_time > 0.0);
+        assert_eq!(r.applies, r.iterations);
+        // a serial CSR operator has no phase breakdown to report
+        assert!(r.phases.is_none());
     }
 
     #[test]
@@ -106,11 +181,11 @@ mod tests {
         let b = a.matvec(&x_true);
 
         let mut serial = a.clone();
-        let rs = conjugate_gradient(&mut serial, &b, 1e-10, 800);
+        let rs = Cg::new().tol(1e-10).max_iters(800).solve(&mut serial, &b).unwrap();
 
         let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
-        let mut dist = DistributedOp::new(d);
-        let rd = conjugate_gradient(&mut dist, &b, 1e-10, 800);
+        let mut dist = DistributedOp::new(d).unwrap();
+        let rd = Cg::new().tol(1e-10).max_iters(800).solve(&mut dist, &b).unwrap();
 
         assert!(rs.converged && rd.converged);
         assert_eq!(rs.iterations, rd.iterations, "same Krylov trajectory expected");
@@ -118,14 +193,65 @@ mod tests {
             assert!((rs.x[i] - rd.x[i]).abs() < 1e-8);
         }
         assert_eq!(dist.applications, rd.iterations);
+        // the distributed solve self-reports its phase breakdown
+        let phases = rd.phases.expect("DistributedOp reports phases");
+        assert!(phases.t_compute > 0.0);
     }
 
     #[test]
     fn cg_zero_rhs_trivial() {
         let a = gen::generate_spd(50, 3, 300, 1).to_csr();
         let mut op = a;
-        let r = conjugate_gradient(&mut op, &vec![0.0; 50], 1e-12, 10);
+        let b = vec![0.0; 50];
+        let r = Cg::new().tol(1e-12).max_iters(10).solve(&mut op, &b).unwrap();
         assert!(r.converged);
+        assert_eq!(r.iterations, 0);
         assert!(r.x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn cg_rejects_bad_rhs_length() {
+        let a = gen::generate_spd(40, 3, 200, 2).to_csr();
+        let mut op = a;
+        let err = Cg::new().solve(&mut op, &[1.0, 2.0]).unwrap_err();
+        assert!(matches!(err, SolverError::DimensionMismatch { expected: 40, got: 2, .. }));
+    }
+
+    #[test]
+    fn cg_observer_sees_every_iteration() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let a = gen::generate_spd(120, 3, 700, 4).to_csr();
+        let x_true: Vec<f64> = (0..120).map(|i| (i % 5) as f64).collect();
+        let b = a.matvec(&x_true);
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        let mut op = a;
+        let r = Cg::new()
+            .tol(1e-10)
+            .max_iters(500)
+            .observer(move |_, _| {
+                c2.fetch_add(1, Ordering::SeqCst);
+            })
+            .solve(&mut op, &b)
+            .unwrap();
+        assert!(r.converged);
+        assert_eq!(count.load(Ordering::SeqCst), r.iterations);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_matches_new_api() {
+        let a = gen::generate_spd(100, 3, 600, 6).to_csr();
+        let x_true: Vec<f64> = (0..100).map(|i| ((i % 4) as f64) - 1.5).collect();
+        let b = a.matvec(&x_true);
+        let shim = conjugate_gradient(&mut a.clone(), &b, 1e-10, 500);
+        let mut op = a.clone();
+        let new = Cg::new().tol(1e-10).max_iters(500).solve(&mut op, &b).unwrap();
+        assert!(shim.converged && new.converged);
+        assert_eq!(shim.iterations, new.iterations);
+        for i in 0..100 {
+            assert_eq!(shim.x[i], new.x[i]);
+        }
     }
 }

@@ -1,14 +1,142 @@
 //! Gauss-Seidel and SOR (ch. 1 §4.2.b) — the paper derives Gauss-Seidel
 //! explicitly (`x_{k+1} = (D−E)⁻¹ F x_k + (D−E)⁻¹ y`). Unlike Jacobi,
-//! the sweep is inherently sequential over rows, so it runs on the
-//! owning structure (CSR) rather than through the distributed operator;
-//! it is included as the serial RSL baseline the iterative-methods
-//! chapter catalogues.
+//! the sweep is inherently sequential over rows, so the solver owns the
+//! CSR structure and sweeps it locally; the per-sweep residual check
+//! runs through the [`MatVecOp`], which is what exercises the
+//! distributed pipeline when the operator is a
+//! [`super::DistributedOp`].
 
-use super::norm2;
+use super::api::{
+    finish_report, impl_solver_builder, IterativeSolver, SolveOptions, SolveReport, SolverError,
+};
+use super::MatVecOp;
 use crate::sparse::Csr;
+use std::time::Instant;
 
-/// Gauss-Seidel / SOR report.
+/// SOR (successive over-relaxation; ω = 1 is plain Gauss-Seidel) behind
+/// the unified [`IterativeSolver`] API. The forward sweep needs row-wise
+/// access to A, so construction takes the matrix; `solve`'s operator is
+/// used for the residual evaluation each sweep.
+#[derive(Debug)]
+pub struct Sor {
+    opts: SolveOptions,
+    omega: f64,
+    a: Csr,
+    diag: Vec<f64>,
+}
+
+impl Sor {
+    /// Build a Gauss-Seidel/SOR solver over `a` (ω defaults to 1.0).
+    /// Fails with [`SolverError::ZeroDiagonal`] when a diagonal entry
+    /// is missing or zero.
+    ///
+    /// The matrix is cloned into the solver (the sweep needs row-wise
+    /// access for the whole solve and the trait object must own its
+    /// state); for large systems, build the solver once and reuse it
+    /// across right-hand sides rather than per solve.
+    pub fn new(a: &Csr) -> Result<Sor, SolverError> {
+        let diag = a.diagonal();
+        if let Some(row) = diag.iter().position(|&d| d == 0.0) {
+            return Err(SolverError::ZeroDiagonal { row });
+        }
+        Ok(Sor { opts: SolveOptions::default(), omega: 1.0, a: a.clone(), diag })
+    }
+
+    /// Set the relaxation factor (validated at solve time: 0 < ω < 2).
+    pub fn omega(mut self, omega: f64) -> Self {
+        self.omega = omega;
+        self
+    }
+}
+
+impl_solver_builder!(Sor);
+
+impl IterativeSolver for Sor {
+    fn name(&self) -> &'static str {
+        "sor"
+    }
+
+    fn options(&self) -> &SolveOptions {
+        &self.opts
+    }
+
+    fn options_mut(&mut self) -> &mut SolveOptions {
+        &mut self.opts
+    }
+
+    fn solve(&mut self, op: &mut dyn MatVecOp, b: &[f64]) -> Result<SolveReport, SolverError> {
+        if !(self.omega > 0.0 && self.omega < 2.0) {
+            return Err(SolverError::BadOmega { omega: self.omega });
+        }
+        let n = self.a.n_rows;
+        if op.order() != n {
+            return Err(SolverError::DimensionMismatch {
+                what: "operator",
+                expected: n,
+                got: op.order(),
+            });
+        }
+        if b.len() != n {
+            return Err(SolverError::DimensionMismatch { what: "rhs b", expected: n, got: b.len() });
+        }
+        let t0 = Instant::now();
+        let phases0 = op.phase_times();
+        let threshold = self.opts.threshold(super::norm2(b));
+
+        let mut x = vec![0.0; n];
+        let mut ax = vec![0.0; n]; // residual-check scratch, reused every sweep
+        let mut history = Vec::new();
+        let mut residual = f64::INFINITY;
+        let mut converged = false;
+        let mut iterations = 0usize;
+        let mut applies = 0usize;
+
+        for it in 0..self.opts.max_iters {
+            // one forward sweep over the owned structure
+            for i in 0..n {
+                let mut sigma = 0.0;
+                for (c, v) in self.a.row(i) {
+                    if c as usize != i {
+                        sigma += v * x[c as usize];
+                    }
+                }
+                let gs = (b[i] - sigma) / self.diag[i];
+                x[i] = (1.0 - self.omega) * x[i] + self.omega * gs;
+            }
+            // residual check through the operator (one PMVC per sweep)
+            op.apply_into(&x, &mut ax).map_err(SolverError::Backend)?;
+            applies += 1;
+            let mut r2 = 0.0;
+            for i in 0..n {
+                let r = b[i] - ax[i];
+                r2 += r * r;
+            }
+            residual = r2.sqrt();
+            iterations = it + 1;
+            self.opts.note(&mut history, iterations, residual);
+            if residual <= threshold {
+                converged = true;
+                break;
+            }
+        }
+        Ok(finish_report(
+            "sor",
+            x,
+            iterations,
+            residual,
+            converged,
+            history,
+            t0,
+            applies,
+            phases0,
+            &*op,
+            None,
+            None,
+        ))
+    }
+}
+
+/// Gauss-Seidel / SOR report (pre-redesign shape).
 #[derive(Clone, Debug)]
 pub struct SorResult {
     pub x: Vec<f64>,
@@ -18,48 +146,47 @@ pub struct SorResult {
 }
 
 /// Solve `A·x = b` by SOR with relaxation `omega` (omega = 1.0 is plain
-/// Gauss-Seidel). Requires nonzero diagonal.
+/// Gauss-Seidel). Requires nonzero diagonal and 0 < ω < 2; violations
+/// (which used to panic) are reported as a non-converged [`SorResult`].
+#[deprecated(note = "use Sor::new(&a)?.omega(..).tol(..).solve(op, b)")]
 pub fn sor(a: &Csr, b: &[f64], omega: f64, tol: f64, max_iters: usize) -> SorResult {
+    // zero-copy residual operator: the shim must not duplicate the
+    // caller's matrix a second time on top of the solver's own copy
+    struct Borrowed<'a>(&'a Csr);
+    impl MatVecOp for Borrowed<'_> {
+        fn order(&self) -> usize {
+            self.0.n_rows
+        }
+        fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
+            anyhow::ensure!(x.len() == self.0.n_cols, "x length");
+            anyhow::ensure!(y.len() == self.0.n_rows, "y length");
+            self.0.matvec_into(x, y);
+            Ok(())
+        }
+    }
     let n = a.n_rows;
-    assert_eq!(b.len(), n);
-    assert!(omega > 0.0 && omega < 2.0, "SOR requires 0 < ω < 2");
-    let mut x = vec![0.0; n];
-    let b_norm = norm2(b).max(f64::MIN_POSITIVE);
-    // cache the diagonal
-    let mut diag = vec![0.0; n];
-    for i in 0..n {
-        for (c, v) in a.row(i) {
-            if c as usize == i {
-                diag[i] = v;
-            }
-        }
-        assert!(diag[i] != 0.0, "zero diagonal at row {i}");
+    let run = Sor::new(a)
+        .map(|s| s.omega(omega).tol(tol).max_iters(max_iters))
+        .and_then(|mut s| s.solve(&mut Borrowed(a), b));
+    match run {
+        Ok(r) => SorResult {
+            x: r.x,
+            iterations: r.iterations,
+            residual_norm: r.residual_norm,
+            converged: r.converged,
+        },
+        Err(_) => SorResult {
+            x: vec![0.0; n],
+            iterations: 0,
+            residual_norm: f64::INFINITY,
+            converged: false,
+        },
     }
-    for it in 0..max_iters {
-        // one forward sweep
-        for i in 0..n {
-            let mut sigma = 0.0;
-            for (c, v) in a.row(i) {
-                if c as usize != i {
-                    sigma += v * x[c as usize];
-                }
-            }
-            let gs = (b[i] - sigma) / diag[i];
-            x[i] = (1.0 - omega) * x[i] + omega * gs;
-        }
-        // residual check every sweep
-        let ax = a.matvec(&x);
-        let r_norm = norm2(&b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect::<Vec<_>>());
-        if r_norm <= tol * b_norm {
-            return SorResult { x, iterations: it + 1, residual_norm: r_norm, converged: true };
-        }
-    }
-    let ax = a.matvec(&x);
-    let r_norm = norm2(&b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect::<Vec<_>>());
-    SorResult { x, iterations: max_iters, residual_norm: r_norm, converged: false }
 }
 
 /// Plain Gauss-Seidel (ω = 1).
+#[deprecated(note = "use Sor::new(&a)?.tol(..).solve(op, b)")]
+#[allow(deprecated)]
 pub fn gauss_seidel(a: &Csr, b: &[f64], tol: f64, max_iters: usize) -> SorResult {
     sor(a, b, 1.0, tol, max_iters)
 }
@@ -67,7 +194,7 @@ pub fn gauss_seidel(a: &Csr, b: &[f64], tol: f64, max_iters: usize) -> SorResult
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::solver::jacobi::{diagonal, jacobi};
+    use crate::solver::jacobi::Jacobi;
     use crate::sparse::gen;
 
     #[test]
@@ -75,8 +202,11 @@ mod tests {
         let a = gen::generate_spd(250, 4, 1500, 3).to_csr();
         let x_true: Vec<f64> = (0..250).map(|i| ((i % 9) as f64) * 0.5 - 2.0).collect();
         let b = a.matvec(&x_true);
-        let r = gauss_seidel(&a, &b, 1e-10, 3000);
+        let mut op = a.clone();
+        let mut solver = Sor::new(&a).unwrap().tol(1e-10).max_iters(3000);
+        let r = solver.solve(&mut op, &b).unwrap();
         assert!(r.converged, "residual {}", r.residual_norm);
+        assert_eq!(r.solver, "sor");
         for i in 0..250 {
             assert!((r.x[i] - x_true[i]).abs() < 1e-6);
         }
@@ -88,10 +218,14 @@ mod tests {
         let a = gen::generate_spd(300, 4, 1800, 5).to_csr();
         let x_true: Vec<f64> = (0..300).map(|i| (i as f64 * 0.03).cos()).collect();
         let b = a.matvec(&x_true);
-        let gs = gauss_seidel(&a, &b, 1e-9, 5000);
-        let mut op = a.clone();
-        let d = diagonal(&a);
-        let jc = jacobi(&mut op, &d, &b, 1e-9, 5000);
+        let mut gs_solver = Sor::new(&a).unwrap().tol(1e-9).max_iters(5000);
+        let gs = gs_solver.solve(&mut a.clone(), &b).unwrap();
+        let jc = Jacobi::from_matrix(&a)
+            .unwrap()
+            .tol(1e-9)
+            .max_iters(5000)
+            .solve(&mut a.clone(), &b)
+            .unwrap();
         assert!(gs.converged && jc.converged);
         assert!(gs.iterations <= jc.iterations, "GS {} vs Jacobi {}", gs.iterations, jc.iterations);
     }
@@ -101,17 +235,49 @@ mod tests {
         let a = gen::generate_spd(300, 3, 1500, 9).to_csr();
         let x_true: Vec<f64> = (0..300).map(|i| (i % 5) as f64).collect();
         let b = a.matvec(&x_true);
-        let gs = sor(&a, &b, 1.0, 1e-9, 5000);
-        let over = sor(&a, &b, 1.3, 1e-9, 5000);
+        let mut gs_solver = Sor::new(&a).unwrap().tol(1e-9).max_iters(5000);
+        let gs = gs_solver.solve(&mut a.clone(), &b).unwrap();
+        let over = Sor::new(&a)
+            .unwrap()
+            .omega(1.3)
+            .tol(1e-9)
+            .max_iters(5000)
+            .solve(&mut a.clone(), &b)
+            .unwrap();
         assert!(gs.converged && over.converged);
         // over-relaxation should not be dramatically worse; usually better
         assert!(over.iterations <= gs.iterations + 5);
     }
 
     #[test]
-    #[should_panic(expected = "SOR requires")]
-    fn sor_rejects_bad_omega() {
+    fn sor_rejects_bad_omega_as_typed_error() {
         let a = gen::generate_spd(10, 2, 40, 1).to_csr();
-        sor(&a, &vec![1.0; 10], 2.5, 1e-6, 10);
+        let b = vec![1.0; 10];
+        let mut solver = Sor::new(&a).unwrap().omega(2.5);
+        let err = solver.solve(&mut a.clone(), &b).unwrap_err();
+        assert!(matches!(err, SolverError::BadOmega { omega } if omega == 2.5));
+    }
+
+    #[test]
+    fn sor_rejects_mismatched_operator() {
+        let a = gen::generate_spd(10, 2, 40, 1).to_csr();
+        let other = gen::generate_spd(20, 2, 80, 1).to_csr();
+        let b = vec![1.0; 10];
+        let err = Sor::new(&a).unwrap().solve(&mut other.clone(), &b).unwrap_err();
+        assert!(matches!(err, SolverError::DimensionMismatch { expected: 10, got: 20, .. }));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_report_instead_of_panicking() {
+        let a = gen::generate_spd(60, 2, 240, 4).to_csr();
+        let x_true: Vec<f64> = (0..60).map(|i| (i % 3) as f64).collect();
+        let b = a.matvec(&x_true);
+        let ok = gauss_seidel(&a, &b, 1e-9, 3000);
+        assert!(ok.converged);
+        // the old `assert!(omega in (0,2))` panic is now a clean report
+        let bad = sor(&a, &b, 2.5, 1e-6, 10);
+        assert!(!bad.converged);
+        assert_eq!(bad.iterations, 0);
     }
 }

@@ -5,13 +5,31 @@
 //! is the paper's motivation for distributing A once (scatter) and then
 //! paying only compute + gather per iteration. [`DistributedOp`] makes
 //! that structural: it builds one [`PmvcEngine`] (plan + persistent
-//! worker pool) per decomposition and every `apply` reuses it.
+//! worker pool) per decomposition and every apply reuses it.
+//!
+//! The solver layer itself is unified behind [`IterativeSolver`] /
+//! [`SolveReport`] (see [`api`]): five unit-struct methods ([`Cg`],
+//! [`Jacobi`], [`Sor`], [`Power`], [`Lanczos`]) share one builder-style
+//! configuration and one result type, and every matrix-vector product
+//! flows through the fallible, allocation-free
+//! [`MatVecOp::apply_into`].
 
+pub mod api;
 pub mod cg;
 pub mod gauss_seidel;
 pub mod jacobi;
 pub mod lanczos;
 pub mod power;
+
+pub use api::{
+    make_solver, IterativeSolver, Observer, SolveOptions, SolveReport, SolverError, SolverKind,
+    StoppingCriterion,
+};
+pub use cg::Cg;
+pub use gauss_seidel::Sor;
+pub use jacobi::Jacobi;
+pub use lanczos::Lanczos;
+pub use power::Power;
 
 use crate::partition::combined::TwoLevelDecomposition;
 use crate::pmvc::{CommPlan, ExecBackend, PhaseTimes, PmvcEngine};
@@ -20,84 +38,101 @@ use std::sync::Arc;
 
 /// Anything that can apply `y = A·x` — serial CSR or the distributed
 /// pipeline.
+///
+/// The contract is fallible and allocation-free: the product is written
+/// into a caller-owned buffer and backend failures surface as `Err`
+/// instead of being masked (the pre-redesign trait returned a zero
+/// vector on error, which made solvers stall silently).
 pub trait MatVecOp {
     /// Matrix order (square systems).
     fn order(&self) -> usize;
-    /// `y = A·x`.
-    fn apply(&mut self, x: &[f64]) -> Vec<f64>;
+
+    /// `y = A·x` into caller-owned scratch. `x.len()` and `y.len()`
+    /// must equal [`MatVecOp::order`].
+    fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<()>;
+
+    /// Accumulated phase breakdown, when the operator measures one
+    /// (the distributed op does; serial CSR returns `None`).
+    fn phase_times(&self) -> Option<PhaseTimes> {
+        None
+    }
+
+    /// Allocating convenience wrapper for one-off products (tests,
+    /// residual checks). Iteration loops should hold scratch and call
+    /// [`MatVecOp::apply_into`].
+    fn apply(&mut self, x: &[f64]) -> crate::Result<Vec<f64>> {
+        let mut y = vec![0.0; self.order()];
+        self.apply_into(x, &mut y)?;
+        Ok(y)
+    }
 }
 
 impl MatVecOp for Csr {
     fn order(&self) -> usize {
         self.n_rows
     }
-    fn apply(&mut self, x: &[f64]) -> Vec<f64> {
-        self.matvec(x)
+
+    fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
+        anyhow::ensure!(
+            x.len() == self.n_cols,
+            "x length {} != matrix columns {}",
+            x.len(),
+            self.n_cols
+        );
+        anyhow::ensure!(
+            y.len() == self.n_rows,
+            "y length {} != matrix rows {}",
+            y.len(),
+            self.n_rows
+        );
+        self.matvec_into(x, y);
+        Ok(())
     }
 }
 
-/// Distributed PMVC operator: plans once, then drives every `apply`
+/// Distributed PMVC operator: plans once, then drives every apply
 /// through a persistent [`ExecBackend`] and accumulates per-phase
 /// statistics — what an iterative solver on the cluster would observe.
 ///
-/// Execution errors no longer panic: [`DistributedOp::try_apply`]
-/// propagates them, and the infallible [`MatVecOp::apply`] records the
-/// error (see [`DistributedOp::last_error`]) and returns a zero vector,
-/// which makes any well-formed solver stop cleanly (CG bails on
-/// `p·Ap <= 0`, stationary methods stall without converging).
+/// Construction is eager: a broken decomposition fails in
+/// [`DistributedOp::new`], and execution failures propagate out of
+/// [`MatVecOp::apply_into`] (and therefore out of
+/// [`IterativeSolver::solve`]) as errors.
 pub struct DistributedOp {
-    backend: Option<Box<dyn ExecBackend>>,
+    backend: Box<dyn ExecBackend>,
     /// The engine's frozen plan (engine-backed ops only) — exposed so
     /// callers and tests can assert plan identity across iterations.
     plan: Option<Arc<CommPlan>>,
-    /// Accumulated phase times over all `apply` calls.
+    /// Accumulated phase times over all applies.
     pub accumulated: PhaseTimes,
-    /// Number of `apply` calls (iterations driven through the cluster).
+    /// Number of applies (iterations driven through the cluster).
     pub applications: usize,
-    last_error: Option<anyhow::Error>,
     plan_builds: usize,
     n: usize,
 }
 
 impl DistributedOp {
     /// Build an engine-backed operator. Plan construction happens here,
-    /// exactly once; a construction failure is stored and surfaces on
-    /// the first apply (use [`DistributedOp::try_new`] to fail eagerly).
-    pub fn new(decomposition: TwoLevelDecomposition) -> Self {
-        let n = decomposition.n;
-        match PmvcEngine::new(Arc::new(decomposition)) {
-            Ok(engine) => {
-                let plan = Arc::clone(engine.plan());
-                Self {
-                    backend: Some(Box::new(engine)),
-                    plan: Some(plan),
-                    accumulated: PhaseTimes::default(),
-                    applications: 0,
-                    last_error: None,
-                    plan_builds: 1,
-                    n,
-                }
-            }
-            Err(e) => Self {
-                backend: None,
-                plan: None,
-                accumulated: PhaseTimes::default(),
-                applications: 0,
-                last_error: Some(e),
-                plan_builds: 0,
-                n,
-            },
-        }
+    /// exactly once, and construction errors surface immediately.
+    pub fn new(decomposition: TwoLevelDecomposition) -> crate::Result<Self> {
+        let engine = PmvcEngine::new(Arc::new(decomposition))?;
+        let plan = Arc::clone(engine.plan());
+        let n = engine.order();
+        Ok(Self {
+            backend: Box::new(engine),
+            plan: Some(plan),
+            accumulated: PhaseTimes::default(),
+            applications: 0,
+            plan_builds: 1,
+            n,
+        })
     }
 
-    /// Build an engine-backed operator, propagating plan-construction
-    /// errors instead of deferring them.
+    /// Former eager-failure constructor; [`DistributedOp::new`] now
+    /// fails eagerly itself.
+    #[deprecated(note = "DistributedOp::new now fails eagerly; call it directly")]
     pub fn try_new(decomposition: TwoLevelDecomposition) -> crate::Result<Self> {
-        let mut op = Self::new(decomposition);
-        if let Some(e) = op.last_error.take() {
-            return Err(e);
-        }
-        Ok(op)
+        Self::new(decomposition)
     }
 
     /// Drive the solver over any [`ExecBackend`] (simulated cluster,
@@ -105,38 +140,19 @@ impl DistributedOp {
     pub fn with_backend(backend: Box<dyn ExecBackend>) -> Self {
         let n = backend.order();
         Self {
-            backend: Some(backend),
+            backend,
             plan: None,
             accumulated: PhaseTimes::default(),
             applications: 0,
-            last_error: None,
             plan_builds: 0,
             n,
         }
     }
 
-    /// `y = A·x` with error propagation.
+    /// Allocating apply with error propagation.
+    #[deprecated(note = "use MatVecOp::apply_into (scratch reuse) or MatVecOp::apply")]
     pub fn try_apply(&mut self, x: &[f64]) -> crate::Result<Vec<f64>> {
-        let backend = match self.backend.as_mut() {
-            Some(b) => b,
-            None => {
-                let why = self
-                    .last_error
-                    .as_ref()
-                    .map(|e| format!("{e:#}"))
-                    .unwrap_or_else(|| "no backend".to_string());
-                anyhow::bail!("distributed backend unavailable: {why}");
-            }
-        };
-        let r = backend.apply(x)?;
-        self.accumulated.lb_nodes = r.times.lb_nodes;
-        self.accumulated.lb_cores = r.times.lb_cores;
-        self.accumulated.t_compute += r.times.t_compute;
-        self.accumulated.t_scatter += r.times.t_scatter;
-        self.accumulated.t_gather += r.times.t_gather;
-        self.accumulated.t_construct += r.times.t_construct;
-        self.applications += 1;
-        Ok(r.y)
+        MatVecOp::apply(self, x)
     }
 
     /// Mean per-iteration total time (compute + gather + construct).
@@ -149,30 +165,20 @@ impl DistributedOp {
     }
 
     /// The engine's frozen communication plan (None for non-engine
-    /// backends or failed construction).
+    /// backends).
     pub fn plan(&self) -> Option<&Arc<CommPlan>> {
         self.plan.as_ref()
     }
 
     /// How many communication plans this operator ever constructed —
-    /// 1 for an engine-backed op, never incremented by `apply`.
+    /// 1 for an engine-backed op, never incremented by apply.
     pub fn plan_builds(&self) -> usize {
         self.plan_builds
     }
 
-    /// The most recent execution or construction error, if any.
-    pub fn last_error(&self) -> Option<&anyhow::Error> {
-        self.last_error.as_ref()
-    }
-
-    /// Take (and clear) the most recent error.
-    pub fn take_error(&mut self) -> Option<anyhow::Error> {
-        self.last_error.take()
-    }
-
-    /// The active backend, if construction succeeded.
-    pub fn backend(&self) -> Option<&dyn ExecBackend> {
-        self.backend.as_deref()
+    /// The active backend.
+    pub fn backend(&self) -> &dyn ExecBackend {
+        self.backend.as_ref()
     }
 }
 
@@ -180,14 +186,21 @@ impl MatVecOp for DistributedOp {
     fn order(&self) -> usize {
         self.n
     }
-    fn apply(&mut self, x: &[f64]) -> Vec<f64> {
-        match self.try_apply(x) {
-            Ok(y) => y,
-            Err(e) => {
-                self.last_error = Some(e);
-                vec![0.0; self.n]
-            }
-        }
+
+    fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
+        let times = self.backend.apply_into(x, y)?;
+        self.accumulated.lb_nodes = times.lb_nodes;
+        self.accumulated.lb_cores = times.lb_cores;
+        self.accumulated.t_compute += times.t_compute;
+        self.accumulated.t_scatter += times.t_scatter;
+        self.accumulated.t_gather += times.t_gather;
+        self.accumulated.t_construct += times.t_construct;
+        self.applications += 1;
+        Ok(())
+    }
+
+    fn phase_times(&self) -> Option<PhaseTimes> {
+        Some(self.accumulated)
     }
 }
 
@@ -218,44 +231,53 @@ mod tests {
         let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.01).sin()).collect();
         let mut serial = a.clone();
         let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
-        let mut dist = DistributedOp::new(d);
-        let ys = serial.apply(&x);
-        let yd = dist.apply(&x);
+        let mut dist = DistributedOp::new(d).unwrap();
+        let ys = serial.apply(&x).unwrap();
+        let mut yd = vec![0.0; 300];
+        dist.apply_into(&x, &mut yd).unwrap();
         for i in 0..300 {
             assert!((ys[i] - yd[i]).abs() < 1e-9 * (1.0 + ys[i].abs()));
         }
         assert_eq!(dist.applications, 1);
         assert!(dist.mean_iteration_time() > 0.0);
-        assert!(dist.last_error().is_none());
+        assert!(dist.phase_times().is_some());
+        assert!(serial.phase_times().is_none());
     }
 
     #[test]
     fn distributed_op_plans_exactly_once() {
         let a = gen::generate_spd(120, 3, 700, 5).to_csr();
         let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
-        let mut dist = DistributedOp::new(d);
+        let mut dist = DistributedOp::new(d).unwrap();
         let p0 = Arc::as_ptr(dist.plan().expect("engine-backed op has a plan"));
         let x = vec![1.0; 120];
+        let mut y = vec![0.0; 120];
         for _ in 0..10 {
-            dist.apply(&x);
+            dist.apply_into(&x, &mut y).unwrap();
         }
         assert_eq!(dist.plan_builds(), 1);
         assert_eq!(p0, Arc::as_ptr(dist.plan().unwrap()));
+        assert_eq!(dist.applications, 10);
     }
 
     #[test]
-    fn corrupt_decomposition_fails_cleanly() {
+    fn corrupt_decomposition_fails_eagerly() {
         let a = gen::generate_spd(80, 3, 400, 7).to_csr();
         let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
         let frag = d.fragments.iter_mut().find(|fr| !fr.global_rows.is_empty()).unwrap();
         frag.global_rows.pop();
-        assert!(DistributedOp::try_new(d.clone()).is_err());
-        let mut op = DistributedOp::new(d);
-        assert!(op.last_error().is_some());
-        let y = op.apply(&vec![1.0; 80]);
-        assert!(y.iter().all(|&v| v == 0.0), "failed apply must return zeros");
-        assert_eq!(op.applications, 0);
-        assert!(op.try_apply(&vec![1.0; 80]).is_err());
+        assert!(DistributedOp::new(d).is_err());
+    }
+
+    #[test]
+    fn csr_apply_into_validates_lengths() {
+        let mut a = gen::generate_spd(50, 3, 300, 1).to_csr();
+        let x = vec![1.0; 50];
+        let mut y = vec![0.0; 50];
+        assert!(a.apply_into(&x, &mut y).is_ok());
+        assert!(a.apply_into(&x[..10], &mut y).is_err());
+        let mut y_short = vec![0.0; 10];
+        assert!(a.apply_into(&x, &mut y_short).is_err());
     }
 
     #[test]

@@ -2,9 +2,133 @@
 //! d'un vecteur propre d'une énorme matrice, associé à la valeur propre
 //! 1"), driven entirely by repeated PMVCs.
 
-use super::{norm2, MatVecOp};
+use super::api::{
+    finish_report, impl_solver_builder, IterativeSolver, SolveOptions, SolveReport, SolverError,
+};
+use super::{dot, norm2, MatVecOp};
+use std::time::Instant;
 
-/// Power iteration report.
+/// Power iteration with L1 normalization (PageRank convention) behind
+/// the unified [`IterativeSolver`] API.
+///
+/// `b` is not a right-hand side here: an empty slice selects the
+/// uniform starting vector, a nonzero `b` is used (L1-normalized) as
+/// the start. The tolerance is an absolute bound on the per-iteration
+/// L1 update delta; [`SolveReport::x`] is the dominant eigenvector and
+/// [`SolveReport::lambda`] its Rayleigh estimate under the *undamped*
+/// operator.
+#[derive(Debug)]
+pub struct Power {
+    opts: SolveOptions,
+    damping: f64,
+}
+
+impl Power {
+    pub fn new() -> Power {
+        Power { opts: SolveOptions::default(), damping: 1.0 }
+    }
+
+    /// Google teleportation factor: `v' = damping·A·v + (1-damping)/n`
+    /// (1.0 = plain power iteration).
+    pub fn damping(mut self, damping: f64) -> Self {
+        self.damping = damping;
+        self
+    }
+}
+
+impl Default for Power {
+    fn default() -> Self {
+        Power::new()
+    }
+}
+
+impl_solver_builder!(Power);
+
+impl IterativeSolver for Power {
+    fn name(&self) -> &'static str {
+        "power"
+    }
+
+    fn options(&self) -> &SolveOptions {
+        &self.opts
+    }
+
+    fn options_mut(&mut self) -> &mut SolveOptions {
+        &mut self.opts
+    }
+
+    fn solve(&mut self, a: &mut dyn MatVecOp, b: &[f64]) -> Result<SolveReport, SolverError> {
+        let n = a.order();
+        if !b.is_empty() && b.len() != n {
+            return Err(SolverError::DimensionMismatch {
+                what: "starting vector b",
+                expected: n,
+                got: b.len(),
+            });
+        }
+        let t0 = Instant::now();
+        let phases0 = a.phase_times();
+
+        let mut v: Vec<f64> = if b.iter().any(|&x| x != 0.0) {
+            let s: f64 = b.iter().map(|x| x.abs()).sum();
+            b.iter().map(|x| x / s).collect()
+        } else {
+            vec![1.0 / n as f64; n]
+        };
+        let mut w = vec![0.0; n]; // matvec scratch, swapped with v each iteration
+        let teleport = (1.0 - self.damping) / n as f64;
+        let mut history = Vec::new();
+        let mut residual = f64::INFINITY;
+        let mut converged = false;
+        let mut iterations = 0usize;
+        let mut applies = 0usize;
+
+        for it in 0..self.opts.max_iters {
+            a.apply_into(&v, &mut w).map_err(SolverError::Backend)?;
+            applies += 1;
+            for wi in w.iter_mut() {
+                *wi = self.damping * *wi + teleport;
+            }
+            // L1 normalize (keeps stochastic vectors stochastic; guards
+            // against dangling-node mass loss)
+            let s: f64 = w.iter().map(|x| x.abs()).sum();
+            if s > 0.0 {
+                for wi in w.iter_mut() {
+                    *wi /= s;
+                }
+            }
+            let delta: f64 = w.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
+            std::mem::swap(&mut v, &mut w);
+            residual = delta;
+            iterations = it + 1;
+            self.opts.note(&mut history, iterations, residual);
+            if delta < self.opts.tol {
+                converged = true;
+                break;
+            }
+        }
+        // Rayleigh estimate of the dominant eigenvalue of the raw A
+        a.apply_into(&v, &mut w).map_err(SolverError::Backend)?;
+        applies += 1;
+        let lambda = dot(&v, &w) / dot(&v, &v).max(f64::MIN_POSITIVE);
+        Ok(finish_report(
+            "power",
+            v,
+            iterations,
+            residual,
+            converged,
+            history,
+            t0,
+            applies,
+            phases0,
+            &*a,
+            Some(lambda),
+            None,
+        ))
+    }
+}
+
+/// Power iteration report (pre-redesign shape).
 #[derive(Clone, Debug)]
 pub struct PowerResult {
     /// Dominant eigenvector (L1-normalized for stochastic matrices).
@@ -18,6 +142,10 @@ pub struct PowerResult {
 /// Plain power iteration with L1 normalization (PageRank convention).
 /// `damping < 1.0` applies the Google teleportation:
 /// `v' = damping·A·v + (1-damping)/n`.
+///
+/// Backend failures (which the old signature could not express) are
+/// reported as a non-converged [`PowerResult`].
+#[deprecated(note = "use Power::new().damping(..).tol(..).solve(op, &[])")]
 pub fn power_iteration(
     a: &mut dyn MatVecOp,
     damping: f64,
@@ -25,38 +153,27 @@ pub fn power_iteration(
     max_iters: usize,
 ) -> PowerResult {
     let n = a.order();
-    let mut v = vec![1.0 / n as f64; n];
-    let teleport = (1.0 - damping) / n as f64;
-    for it in 0..max_iters {
-        let mut w = a.apply(&v);
-        for wi in w.iter_mut() {
-            *wi = damping * *wi + teleport;
-        }
-        // L1 normalize (keeps stochastic vectors stochastic; guards
-        // against dangling-node mass loss)
-        let s: f64 = w.iter().map(|x| x.abs()).sum();
-        if s > 0.0 {
-            for wi in w.iter_mut() {
-                *wi /= s;
-            }
-        }
-        let delta: f64 = w.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
-        v = w;
-        if delta < tol {
-            let av = a.apply(&v);
-            let lambda = super::dot(&v, &av) / super::dot(&v, &v).max(f64::MIN_POSITIVE);
-            return PowerResult { v, lambda, iterations: it + 1, converged: true };
-        }
+    let mut solver = Power::new().damping(damping).tol(tol).max_iters(max_iters);
+    match solver.solve(a, &[]) {
+        Ok(r) => PowerResult {
+            v: r.x,
+            lambda: r.lambda.unwrap_or(0.0),
+            iterations: r.iterations,
+            converged: r.converged,
+        },
+        Err(_) => PowerResult {
+            v: vec![0.0; n],
+            lambda: 0.0,
+            iterations: 0,
+            converged: false,
+        },
     }
-    let av = a.apply(&v);
-    let lambda = super::dot(&v, &av) / super::dot(&v, &v).max(f64::MIN_POSITIVE);
-    PowerResult { v, lambda, iterations: max_iters, converged: false }
 }
 
 /// Norm-2 residual ‖A·v − λ·v‖ (verification helper).
-pub fn eigen_residual(a: &mut dyn MatVecOp, v: &[f64], lambda: f64) -> f64 {
-    let av = a.apply(v);
-    norm2(&av.iter().zip(v).map(|(a, b)| a - lambda * b).collect::<Vec<_>>())
+pub fn eigen_residual(a: &mut dyn MatVecOp, v: &[f64], lambda: f64) -> crate::Result<f64> {
+    let av = a.apply(v)?;
+    Ok(norm2(&av.iter().zip(v).map(|(x, y)| x - lambda * y).collect::<Vec<_>>()))
 }
 
 #[cfg(test)]
@@ -68,28 +185,85 @@ mod tests {
     fn pagerank_on_link_matrix_converges() {
         let q = gen::generate_link_matrix(500, 8, 4).to_csr();
         let mut op = q.clone();
-        let r = power_iteration(&mut op, 0.85, 1e-12, 500);
+        let mut solver = Power::new().damping(0.85).tol(1e-12).max_iters(500);
+        let r = solver.solve(&mut op, &[]).unwrap();
         assert!(r.converged);
+        assert_eq!(r.solver, "power");
         // scores form a probability distribution
-        let s: f64 = r.v.iter().sum();
+        let s: f64 = r.x.iter().sum();
         assert!((s - 1.0).abs() < 1e-9);
-        assert!(r.v.iter().all(|&x| x >= 0.0));
+        assert!(r.x.iter().all(|&x| x >= 0.0));
         // fixed-point residual of the DAMPED operator: v = d·A·v + (1-d)/n
-        let av = op.apply(&r.v);
-        let n = r.v.len() as f64;
+        let av = op.apply(&r.x).unwrap();
+        let n = r.x.len() as f64;
         let res: f64 = av
             .iter()
-            .zip(&r.v)
+            .zip(&r.x)
             .map(|(a, v)| (0.85 * a + 0.15 / n - v).abs())
             .sum();
         assert!(res < 1e-9, "damped fixed-point residual {res}");
+        // the final apply for the Rayleigh estimate is accounted for
+        assert_eq!(r.applies, r.iterations + 1);
     }
 
     #[test]
     fn undamped_stochastic_matrix_has_lambda_one() {
         let q = gen::generate_link_matrix(200, 5, 1).to_csr();
         let mut op = q;
-        let r = power_iteration(&mut op, 1.0, 1e-13, 2000);
-        assert!((r.lambda - 1.0).abs() < 1e-6, "lambda = {}", r.lambda);
+        let r = Power::new().tol(1e-13).max_iters(2000).solve(&mut op, &[]).unwrap();
+        let lambda = r.lambda.unwrap();
+        assert!((lambda - 1.0).abs() < 1e-6, "lambda = {lambda}");
+    }
+
+    #[test]
+    fn nonzero_b_seeds_the_iteration() {
+        let q = gen::generate_link_matrix(100, 4, 9).to_csr();
+        // deliberately non-uniform start — the damped iteration is a
+        // contraction, so it still lands on the same fixed point
+        let start: Vec<f64> = (0..100).map(|i| (i + 1) as f64).collect();
+        let mut op = q.clone();
+        let mut s1 = Power::new().damping(0.85).tol(1e-12).max_iters(400);
+        let seeded = s1.solve(&mut op, &start).unwrap();
+        let mut op2 = q;
+        let mut s2 = Power::new().damping(0.85).tol(1e-12).max_iters(400);
+        let uniform = s2.solve(&mut op2, &[]).unwrap();
+        assert!(seeded.converged && uniform.converged);
+        // same fixed point regardless of the start
+        for i in 0..100 {
+            assert!((seeded.x[i] - uniform.x[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn eigen_residual_helper_propagates() {
+        // diag(3, 1, 1, ..., 1): dominant eigenpair (3, e0), convergence
+        // rate (1/3)^k — deterministic and fast
+        let mut m = crate::sparse::Coo::new(40, 40);
+        m.push(0, 0, 3.0);
+        for i in 1..40u32 {
+            m.push(i, i, 1.0);
+        }
+        let mut op = m.to_csr();
+        let mut solver = Power::new().tol(1e-13).max_iters(200);
+        let r = solver.solve(&mut op, &[]).unwrap();
+        assert!(r.converged);
+        let lambda = r.lambda.unwrap();
+        assert!((lambda - 3.0).abs() < 1e-9, "lambda = {lambda}");
+        let res = eigen_residual(&mut op, &r.x, lambda).unwrap();
+        assert!(res < 1e-9, "eigen residual {res}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_matches_new_api() {
+        let q = gen::generate_link_matrix(150, 5, 7).to_csr();
+        let shim = power_iteration(&mut q.clone(), 0.85, 1e-12, 500);
+        let mut solver = Power::new().damping(0.85).tol(1e-12).max_iters(500);
+        let new = solver.solve(&mut q.clone(), &[]).unwrap();
+        assert!(shim.converged && new.converged);
+        assert_eq!(shim.iterations, new.iterations);
+        for i in 0..150 {
+            assert_eq!(shim.v[i], new.x[i]);
+        }
     }
 }

@@ -126,6 +126,22 @@ impl Csr {
         (0..self.n_cols as u32).filter(|&c| seen[c as usize]).collect()
     }
 
+    /// The diagonal of the matrix, zeros where the entry is
+    /// structurally absent — shared by the Jacobi and SOR solvers
+    /// (which validate nonzero entries as a typed `Result`, not an
+    /// `assert!`).
+    pub fn diagonal(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.n_rows];
+        for i in 0..self.n_rows {
+            for (c, v) in self.row(i) {
+                if c as usize == i {
+                    d[i] = v;
+                }
+            }
+        }
+        d
+    }
+
     /// nnz per row, the NEZGT_ligne weight vector.
     pub fn row_counts(&self) -> Vec<usize> {
         (0..self.n_rows).map(|i| self.row_nnz(i)).collect()
@@ -205,6 +221,17 @@ mod tests {
         assert_eq!(a.columns_touched(&[0, 1]), vec![0, 2, 3]);
         assert_eq!(a.columns_touched(&[2]), vec![0, 1, 2]);
         assert_eq!(a.columns_touched(&[]), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn diagonal_extraction() {
+        let a = example();
+        // example() has no (1,1) entry — the hole reads back as zero
+        assert_eq!(a.diagonal(), vec![1.0, 0.0, 6.0, 8.0]);
+        let spd = gen::generate_spd(50, 2, 200, 2).to_csr();
+        let d = spd.diagonal();
+        assert_eq!(d.len(), 50);
+        assert!(d.iter().all(|&v| v > 0.0)); // SPD generator guarantees it
     }
 
     #[test]
