@@ -22,7 +22,7 @@ fn main() -> pmvc::Result<()> {
     let b = a.matvec(&x_true);
 
     for combo in Combination::all() {
-        let d = decompose(&a, combo, 4, 4, &DecomposeConfig::default());
+        let d = decompose(&a, combo, 4, 4, &DecomposeConfig::default())?;
         // plans + launches the persistent engine once (errors are eager);
         // every CG iteration below reuses it through the allocation-free
         // apply_into path — only X/Y traffic per apply

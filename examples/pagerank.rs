@@ -19,7 +19,7 @@ fn main() -> pmvc::Result<()> {
 
     // column fragments suit a column-stochastic matrix: each node owns the
     // out-links of a page block (NC inter), hypergraph splits cores (HC).
-    let d = decompose(&q, Combination::NcHc, 4, 4, &DecomposeConfig::default());
+    let d = decompose(&q, Combination::NcHc, 4, 4, &DecomposeConfig::default())?;
     println!(
         "decomposition {}: LB_noeuds={:.3} LB_coeurs={:.3}",
         d.combo,

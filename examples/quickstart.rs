@@ -27,7 +27,7 @@ fn main() -> pmvc::Result<()> {
     //    HYPER_ligne intra-node (communication volume) — the paper's
     //    winning combination.
     let (f, c) = (4usize, 4usize);
-    let d = decompose(&a, Combination::NlHl, f, c, &DecomposeConfig::default());
+    let d = decompose(&a, Combination::NlHl, f, c, &DecomposeConfig::default())?;
     println!("\ndecomposition {} over {f} nodes x {c} cores:", d.combo);
     println!("  LB_noeuds = {:.3}  LB_coeurs = {:.3}", d.lb_nodes(), d.lb_cores());
     let cv = CommVolumes::of(&d);

@@ -13,7 +13,7 @@
 //! ```
 
 use pmvc::cluster::{ClusterTopology, NetworkPreset};
-use pmvc::partition::combined::{decompose, Combination, DecomposeConfig, IntraMethod};
+use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
 use pmvc::partition::hypergraph::Hypergraph;
 use pmvc::partition::metrics::CommVolumes;
 use pmvc::partition::multilevel::Multilevel;
@@ -43,9 +43,10 @@ fn main() {
     );
     for name in matrices {
         let a = generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr();
-        for (label, method) in [("HYP", IntraMethod::Hypergraph), ("NEZ", IntraMethod::Nezgt)] {
-            let cfg = DecomposeConfig { intra_method: method, ..Default::default() };
-            let d = decompose(&a, Combination::NlHl, 8, 8, &cfg);
+        for (label, cfg) in
+            [("HYP", DecomposeConfig::default()), ("NEZ", DecomposeConfig::nezgt_both())]
+        {
+            let d = decompose(&a, Combination::NlHl, 8, 8, &cfg).unwrap();
             let cv = CommVolumes::of(&d);
             println!(
                 "{:<12} {:>8} {:>10.3} {:>14} {:>14}",
@@ -79,7 +80,7 @@ fn main() {
     println!("\n--- ablation 4: interconnect presets (epb1, NL-HL, f=16) ---");
     println!("{:<12} {:>12} {:>12} {:>12}", "network", "scatter", "gather", "total");
     let a = generate(&MatrixSpec::paper("epb1").unwrap(), 1).to_csr();
-    let d = decompose(&a, Combination::NlHl, 16, 8, &DecomposeConfig::default());
+    let d = decompose(&a, Combination::NlHl, 16, 8, &DecomposeConfig::default()).unwrap();
     let topo = ClusterTopology::paravance(16);
     for (label, preset) in [
         ("GbE", NetworkPreset::GigabitEthernet),
@@ -102,7 +103,7 @@ fn main() {
     let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
     let net = NetworkPreset::TenGigabitEthernet.model();
     for f in [2usize, 4, 8, 16, 32, 64] {
-        let d = decompose(&a, Combination::NlHl, f, 8, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, f, 8, &DecomposeConfig::default()).unwrap();
         let t = simulate(&d, &ClusterTopology::paravance(f), &net);
         println!("{:<6} {:>10.3}ms {:>10.4}ms", f, t.t_scatter * 1e3, t.t_gather * 1e3);
     }

@@ -106,7 +106,7 @@ fn main() {
         let applies = if test_mode { 3usize } else { 20usize };
         let mat = if test_mode { "bcsstm09" } else { "epb1" };
         let a = generate(&MatrixSpec::paper(mat).unwrap(), 1).to_csr();
-        let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default()).unwrap();
         let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
 
         let t0 = Instant::now();
@@ -136,7 +136,7 @@ fn main() {
         let applies = if test_mode { 10usize } else { 500usize };
         let mat = if test_mode { "bcsstm09" } else { "epb1" };
         let a = generate(&MatrixSpec::paper(mat).unwrap(), 1).to_csr();
-        let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default()).unwrap();
         let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
         let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
         let mut y = vec![0.0; a.n_rows];

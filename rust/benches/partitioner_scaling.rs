@@ -55,7 +55,7 @@ fn main() {
         for combo in [Combination::NlHl, Combination::NcHc] {
             for f in [8usize, 64] {
                 let t0 = Instant::now();
-                let d = decompose(&a, combo, f, 8, &DecomposeConfig::default());
+                let d = decompose(&a, combo, f, 8, &DecomposeConfig::default()).unwrap();
                 let dt = t0.elapsed().as_secs_f64();
                 println!(
                     "{:<12} {:>8} {:>6} {:>10.2}ms  (LB_c={:.2})",

@@ -35,6 +35,7 @@ pub enum NetworkPreset {
 }
 
 impl NetworkPreset {
+    /// The calibrated α–β model of this interconnect.
     pub fn model(&self) -> NetworkModel {
         match self {
             NetworkPreset::GigabitEthernet => NetworkModel {

@@ -8,6 +8,7 @@
 /// One NUMA bank: a memory controller plus the cores attached to it.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct NumaNode {
+    /// Cores attached to this bank.
     pub cores: usize,
     /// Local memory bandwidth, bytes/s.
     pub local_bw: f64,

@@ -6,8 +6,11 @@ use std::collections::HashMap;
 /// options (`--flag` with no value stores an empty string).
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// The subcommand (first argument).
     pub command: String,
+    /// Positional arguments in order.
     pub positional: Vec<String>,
+    /// `--key value` options (`--flag` stores an empty string).
     pub options: HashMap<String, String>,
 }
 
@@ -37,14 +40,17 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Option value, if present.
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Option value with a default.
     pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.opt(key).unwrap_or(default)
     }
 
+    /// Whether an option/flag was given.
     pub fn has(&self, key: &str) -> bool {
         self.options.contains_key(key)
     }
@@ -68,6 +74,7 @@ impl Args {
         }
     }
 
+    /// Parse a usize option with a default.
     pub fn opt_usize(&self, key: &str, default: usize) -> crate::Result<usize> {
         match self.opt(key) {
             None => Ok(default),
@@ -75,6 +82,7 @@ impl Args {
         }
     }
 
+    /// Parse a u64 option with a default.
     pub fn opt_u64(&self, key: &str, default: u64) -> crate::Result<u64> {
         match self.opt(key) {
             None => Ok(default),

@@ -73,8 +73,11 @@ impl Default for ExperimentConfig {
 /// One cell of the sweep — a row of Tables 4.3–4.6.
 #[derive(Clone, Debug)]
 pub struct SweepRow {
+    /// Matrix name (Table 4.2 name, `spd`, or an `.mtx` path).
     pub matrix: String,
+    /// Inter/intra axis combination of the cell.
     pub combo: Combination,
+    /// Node count of the cell.
     pub f: usize,
     /// Phase times: the probe PMVC's (probe mode) or the mean per
     /// solver iteration (solver mode).
@@ -88,6 +91,14 @@ pub struct SweepRow {
     pub iterations: usize,
     /// Whether the solver met its stopping criterion (true for probes).
     pub converged: bool,
+    /// Which partitioners fragmented the cell (`inter+intra`, e.g.
+    /// `nezgt+hypergraph`).
+    pub partitioner: String,
+    /// (λ−1) cut of the inter-node partition.
+    pub cut: u64,
+    /// Per-iteration communication volume in bytes (X fan-out + Y
+    /// fan-in from the frozen plan).
+    pub comm_bytes: usize,
 }
 
 /// A paravance-class cluster of `f` nodes resized to `cores_per_node`
@@ -162,7 +173,8 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
         for &combo in &cfg.combos {
             for &f in &cfg.node_counts {
                 let topo = topology_for(f, cfg.cores_per_node);
-                let d = decompose(&a, combo, f, cfg.cores_per_node, &cfg.decompose);
+                let d = decompose(&a, combo, f, cfg.cores_per_node, &cfg.decompose)?;
+                let quality = d.quality.clone();
                 let mut backend = make_backend(cfg.backend, d, &topo, &net)?;
                 let row = match cfg.solver {
                     None => {
@@ -183,6 +195,9 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
                             solver: "probe",
                             iterations: 1,
                             converged: true,
+                            partitioner: quality.label(),
+                            cut: quality.cut,
+                            comm_bytes: quality.comm_bytes,
                         }
                     }
                     Some(kind) => {
@@ -205,6 +220,9 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
                             solver: kind.name(),
                             iterations: report.iterations,
                             converged: report.converged,
+                            partitioner: quality.label(),
+                            cut: quality.cut,
+                            comm_bytes: quality.comm_bytes,
                         }
                     }
                 };
@@ -293,7 +311,33 @@ mod tests {
             assert_eq!(r.solver, "probe");
             assert_eq!(r.iterations, 1);
             assert!(r.converged);
+            assert_eq!(r.partitioner, "nezgt+hypergraph");
+            assert!(r.comm_bytes > 0, "{} {} f={}", r.matrix, r.combo, r.f);
         }
+    }
+
+    #[test]
+    fn partitioner_selection_changes_quality_columns() {
+        use crate::partition::PartitionerKind;
+        let base = ExperimentConfig {
+            matrices: vec!["t2dal".into()],
+            node_counts: vec![8],
+            combos: vec![Combination::NlHl],
+            cores_per_node: 2,
+            ..Default::default()
+        };
+        let nez = run_sweep(&base).unwrap();
+        let mut swapped = base.clone();
+        swapped.decompose =
+            DecomposeConfig::with_kinds(PartitionerKind::Hypergraph, PartitionerKind::Hypergraph)
+                .unwrap();
+        let hyp = run_sweep(&swapped).unwrap();
+        assert_eq!(nez[0].partitioner, "nezgt+hypergraph");
+        assert_eq!(hyp[0].partitioner, "hypergraph+hypergraph");
+        // the selected inter strategy must be visible in the quality
+        // columns: hypergraph wins the cut it optimizes
+        assert!(hyp[0].cut < nez[0].cut, "hyp {} vs nez {}", hyp[0].cut, nez[0].cut);
+        assert!(hyp[0].comm_bytes < nez[0].comm_bytes);
     }
 
     #[test]

@@ -61,16 +61,19 @@ pub fn recap_table(rows: &[SweepRow], combos: &[Combination]) -> String {
 
 /// CSV export of the full sweep (one row per cell). Solver cells carry
 /// the solver name, its iteration count and convergence flag next to
-/// the phase times; probe cells read `probe,1,true`.
+/// the phase times; probe cells read `probe,1,true`. The trailing
+/// partition-quality columns record which strategies fragmented the
+/// cell (`partitioner` = `inter+intra`), the (λ−1) cut of the
+/// inter-node partition, and the per-iteration wire volume in bytes.
 pub fn to_csv(rows: &[SweepRow]) -> String {
     let mut out = String::from(
-        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend,solver,iterations,converged\n",
+        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend,solver,iterations,converged,partitioner,cut,comm_bytes\n",
     );
     for r in rows {
         let t = &r.times;
         let _ = writeln!(
             out,
-            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{},{},{},{}",
+            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{},{},{},{},{},{},{}",
             r.matrix,
             r.combo.name(),
             r.f,
@@ -85,7 +88,10 @@ pub fn to_csv(rows: &[SweepRow]) -> String {
             r.backend,
             r.solver,
             r.iterations,
-            r.converged
+            r.converged,
+            r.partitioner,
+            r.cut,
+            r.comm_bytes
         );
     }
     out
@@ -216,10 +222,14 @@ mod tests {
     fn csv_has_header_and_rows() {
         let csv = to_csv(&rows());
         assert!(csv.starts_with("matrix,combo"));
-        assert!(csv.lines().next().unwrap().ends_with(",backend,solver,iterations,converged"));
+        assert!(csv
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with(",backend,solver,iterations,converged,partitioner,cut,comm_bytes"));
         assert_eq!(csv.lines().count(), 1 + 2 * 4 * 1);
         for line in csv.lines().skip(1) {
-            assert!(line.ends_with(",sim,probe,1,true"), "probe row: {line}");
+            assert!(line.contains(",sim,probe,1,true,nezgt+hypergraph,"), "probe row: {line}");
         }
     }
 
@@ -238,7 +248,7 @@ mod tests {
         let csv = to_csv(&rows);
         let row = csv.lines().nth(1).unwrap();
         assert!(row.contains(",sim,cg,"), "solver+backend columns: {row}");
-        assert!(row.ends_with(",true"), "convergence column: {row}");
+        assert!(row.contains(",true,nezgt+hypergraph,"), "convergence + quality columns: {row}");
     }
 
     #[test]

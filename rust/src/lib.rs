@@ -22,11 +22,17 @@
 //!
 //! ## Layout
 //!
+//! (See `ARCHITECTURE.md` at the repository root for the full
+//! layer-by-layer guide with the data-flow diagram.)
+//!
 //! * [`sparse`] — COO/CSR/CSC/ELL formats, MatrixMarket I/O, generators
 //!   for the paper's 8-matrix SuiteSparse test suite.
-//! * [`partition`] — NEZGT (row/column), multilevel hypergraph
-//!   partitioner, the combined two-level decomposition, baselines and
-//!   balance/communication metrics.
+//! * [`partition`] — every fragmentation strategy (NEZGT, multilevel
+//!   hypergraph, PETSc-style baselines, 2-D fine-grain/checkerboard)
+//!   behind the [`partition::Partitioner`] trait and
+//!   [`partition::PartitionerKind`] registry; the combined two-level
+//!   decomposition carries a [`partition::QualityReport`] (cut, comm
+//!   bytes, load balance) so strategies compare on one scale.
 //! * [`cluster`] — machine model: topology, NUMA banks, α–β network.
 //! * [`pmvc`] — the distributed PMVC pipeline, split plan/engine:
 //!   [`pmvc::plan`] precomputes the immutable communication plan
@@ -40,8 +46,13 @@
 //!   [`solver::SolveReport`] API over the fallible, allocation-free
 //!   [`solver::MatVecOp::apply_into`] contract (plan once, apply every
 //!   iteration into reusable scratch).
-//! * [`coordinator`] — experiment driver (backend- and
-//!   solver-selectable sweeps), reporting, CLI.
+//! * [`coordinator`] — experiment driver (backend-, solver- and
+//!   partitioner-selectable sweeps), reporting, CLI.
+
+// Every public item carries documentation; the CI doc gate
+// (`RUSTDOCFLAGS="-D warnings" cargo doc --no-deps`) promotes any
+// regression to an error.
+#![warn(missing_docs)]
 
 pub mod cluster;
 pub mod coordinator;

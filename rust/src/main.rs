@@ -13,6 +13,7 @@ use pmvc::coordinator::cli::{parse_network, Args};
 use pmvc::coordinator::experiment::{run_sweep, topology_for, ExperimentConfig};
 use pmvc::coordinator::report;
 use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
+use pmvc::partition::{make_partitioner, PartitionError, PartitionerKind};
 use pmvc::pmvc::{make_backend, BackendKind, ExecBackend};
 use pmvc::solver::SolverKind;
 
@@ -58,7 +59,18 @@ fn config_from(args: &Args) -> pmvc::Result<ExperimentConfig> {
         cfg.solver_tol = t.parse().map_err(|e| anyhow::anyhow!("--tol: {e}"))?;
     }
     cfg.solver_max_iters = args.opt_usize("iters", cfg.solver_max_iters)?;
+    if let Some(p) = args.opt("partitioner") {
+        cfg.decompose.inter = make_partitioner(parse_partitioner(p)?)?;
+    }
+    if let Some(p) = args.opt("intra") {
+        cfg.decompose.intra = make_partitioner(parse_partitioner(p)?)?;
+    }
     Ok(cfg)
+}
+
+fn parse_partitioner(s: &str) -> pmvc::Result<PartitionerKind> {
+    Ok(PartitionerKind::parse(s)
+        .ok_or_else(|| PartitionError::UnknownPartitioner { name: s.to_string() })?)
 }
 
 fn dispatch(args: &Args) -> pmvc::Result<()> {
@@ -96,6 +108,12 @@ COMMON OPTIONS:
   --cores N          cores per node (default 8)
   --network 10gbe    gbe|10gbe|ib|myrinet
   --backend KIND     threads|sim|mpi (sweep default: sim; run default: threads)
+  --partitioner K    inter-node strategy: contig|contig-balanced|cyclic|
+                     nezgt|hypergraph (default nezgt). The sweep CSV
+                     records it with the cut/comm_bytes quality columns.
+                     `run` also accepts the 2-D kinds fine2d|checker
+                     (nonzero-level partition + 2-D PMVC check).
+  --intra K          intra-node strategy (default hypergraph)
   --solver KIND      cg|jacobi|sor|power|lanczos: drive a full iterative
                      solve through every sweep cell (CSV gains solver,
                      iterations and convergence columns; phase times are
@@ -180,9 +198,36 @@ fn cmd_run(args: &Args) -> pmvc::Result<()> {
     let mut rng = pmvc::rng::SplitMix64::new(seed);
     let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
 
+    // validate both strategy flags before branching, so a bad --intra is
+    // diagnosed even on the 2-D path
+    let inter_kind = args.opt("partitioner").map(parse_partitioner).transpose()?;
+    let intra_kind = args.opt("intra").map(parse_partitioner).transpose()?;
+    if let Some(pkind) = inter_kind.filter(|k| k.is_2d()) {
+        // nonzero-level strategies bypass the 1-D two-level pipeline
+        for (flag, given) in [
+            ("--intra", intra_kind.is_some()),
+            ("--combo", args.has("combo")),
+            ("--backend", args.has("backend")),
+            ("--network", args.has("network")),
+            ("--xla", args.has("xla")),
+        ] {
+            if given {
+                eprintln!("note: {flag} does not apply to the 2-D {pkind} partitioner; ignored");
+            }
+        }
+        return run_2d(pkind, matrix, &a, &x, f, c);
+    }
+    let mut dcfg = DecomposeConfig::default();
+    if let Some(k) = inter_kind {
+        dcfg.inter = make_partitioner(k)?;
+    }
+    if let Some(k) = intra_kind {
+        dcfg.intra = make_partitioner(k)?;
+    }
+
     let topo = topology_for(f, c);
     let net = parse_network(args.opt_or("network", "10gbe"))?.model();
-    let d = decompose(&a, combo, f, c, &DecomposeConfig::default());
+    let d = decompose(&a, combo, f, c, &dcfg)?;
     let mut backend = make_backend(kind, d.clone(), &topo, &net)?;
     let r = backend.apply(&x)?;
     let y_ref = a.matvec(&x);
@@ -201,6 +246,12 @@ fn cmd_run(args: &Args) -> pmvc::Result<()> {
         backend.name()
     );
     println!("LB_noeuds={:.3} LB_coeurs={:.3}", r.times.lb_nodes, r.times.lb_cores);
+    println!(
+        "partitioner={} cut={} comm_bytes={}",
+        d.quality.label(),
+        d.quality.cut,
+        d.quality.comm_bytes
+    );
     println!(
         "distribute(A)={:.6}s scatter={:.6}s compute={:.6}s construct={:.6}s gather={:.6}s total={:.6}s",
         backend.setup_time(),
@@ -244,6 +295,49 @@ fn cmd_run(args: &Args) -> pmvc::Result<()> {
         );
         anyhow::ensure!(max_err32 < 1e-3, "XLA (f32) path diverges");
     }
+    Ok(())
+}
+
+/// The 2-D (nonzero-level) run path: assign individual nonzeros with the
+/// fine-grain hypergraph or the checkerboard grid, execute the
+/// "version bloc 2D" PMVC, and report the exact 2-D communication
+/// volume next to the load balance.
+fn run_2d(
+    pkind: PartitionerKind,
+    matrix: &str,
+    a: &pmvc::sparse::Csr,
+    x: &[f64],
+    f: usize,
+    c: usize,
+) -> pmvc::Result<()> {
+    use pmvc::partition::hypergraph2d::{checkerboard, fine_grain_partition};
+    use pmvc::partition::multilevel::Multilevel;
+    let units = f * c;
+    let owner = match pkind {
+        PartitionerKind::Fine2d => fine_grain_partition(a, units, &Multilevel::default()),
+        PartitionerKind::Checker => checkerboard(a, f, c),
+        _ => anyhow::bail!("run_2d called with 1-D kind {pkind}"),
+    };
+    let y = owner.matvec_2d(a, x);
+    let y_ref = a.matvec(x);
+    let max_err = y
+        .iter()
+        .zip(&y_ref)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "matrix={matrix} N={} NNZ={} partitioner={} units={units} ({f}x{c})",
+        a.n_rows,
+        a.nnz(),
+        pkind.name()
+    );
+    println!(
+        "LB={:.3} comm_volume={} elements (2-D λ-1 over rows + columns)",
+        owner.imbalance(a.nnz()),
+        owner.comm_volume(a)
+    );
+    println!("max |y - y_ref| = {max_err:.3e}");
+    anyhow::ensure!(max_err < 1e-8, "2-D distributed result diverges from serial");
     Ok(())
 }
 

@@ -1,0 +1,513 @@
+//! The unified partitioner API: every fragmentation strategy behind one
+//! trait, selectable at run time.
+//!
+//! The paper's core experiment (ch. 4) compares *how* the matrix is
+//! fragmented — NEZGT load balancing vs. hypergraph communication-volume
+//! minimization — yet each strategy historically lived behind its own
+//! free function, so call sites hard-coded one. This module mirrors the
+//! registries the execution and solver layers already expose
+//! ([`crate::pmvc::BackendKind`] / [`crate::solver::SolverKind`]):
+//!
+//! * [`Partitioner`] — one fallible contract (`partition(matrix, axis,
+//!   k)`), implemented by the PETSc-style baselines
+//!   ([`ContiguousBlocks`], [`ContiguousBalanced`],
+//!   [`CyclicPartitioner`]), the
+//!   NEZGT heuristic ([`super::Nezgt`]) and the multilevel hypergraph
+//!   partitioner ([`super::multilevel::Multilevel`]);
+//! * [`PartitionerKind`] / [`make_partitioner`] — the value-level
+//!   selector behind the CLI's `--partitioner` / `--intra` flags;
+//! * [`PartitionError`] — typed failures replacing the old
+//!   `assert!`-panics at the partitioning entry points.
+//!
+//! The 2-D (nonzero-level) strategies of [`super::hypergraph2d`] are
+//! registered too ([`PartitionerKind::Fine2d`],
+//! [`PartitionerKind::Checker`]) but produce an
+//! [`super::hypergraph2d::Owner2d`] instead of a 1-D [`Partition`];
+//! [`make_partitioner`] reports them as [`PartitionError::TwoDimensional`]
+//! and the CLI routes them to the dedicated 2-D path.
+
+use super::hypergraph::Hypergraph;
+use super::multilevel::Multilevel;
+use super::nezgt::Nezgt;
+use super::{Axis, Partition};
+use crate::sparse::Csr;
+
+/// Typed partitioning failures — the replacements for the `assert!`
+/// panics at the partitioning entry points.
+#[derive(Debug)]
+pub enum PartitionError {
+    /// A partition into zero parts was requested.
+    ZeroParts,
+    /// An assignment points outside `[0, k)` (structural corruption).
+    InvalidAssignment {
+        /// The offending item index.
+        item: usize,
+        /// The part it was assigned to.
+        part: u32,
+        /// The number of parts of the partition.
+        k: usize,
+    },
+    /// The requested kind is a 2-D (nonzero-level) strategy that yields
+    /// an [`super::hypergraph2d::Owner2d`], not a 1-D [`Partition`].
+    TwoDimensional {
+        /// The 2-D kind that was requested.
+        kind: PartitionerKind,
+    },
+    /// The partitioner name did not parse.
+    UnknownPartitioner {
+        /// The unrecognized name.
+        name: String,
+    },
+}
+
+impl std::fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionError::ZeroParts => {
+                write!(f, "cannot partition into zero parts (k must be >= 1)")
+            }
+            PartitionError::InvalidAssignment { item, part, k } => {
+                write!(f, "item {item} assigned to part {part} >= k={k}")
+            }
+            PartitionError::TwoDimensional { kind } => write!(
+                f,
+                "'{}' is a 2-D nonzero-level partitioner (Owner2d); it cannot serve as either \
+                 level of the 1-D two-level decomposition — run it standalone with \
+                 `pmvc run --partitioner {}`",
+                kind.name(),
+                kind.name()
+            ),
+            PartitionError::UnknownPartitioner { name } => {
+                write!(f, "unknown partitioner '{name}' ({})", PartitionerKind::usage())
+            }
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
+
+/// One 1-D fragmentation strategy behind one interface: partition the
+/// rows (or columns) of a sparse matrix into `k` parts.
+///
+/// Implementors are self-describing ([`Partitioner::name`]) and
+/// cloneable as trait objects ([`Partitioner::clone_box`]), so a
+/// [`super::combined::DecomposeConfig`] can carry boxed inter- and
+/// intra-level strategies and the sweep driver can swap them from the
+/// command line.
+///
+/// ```
+/// use pmvc::partition::api::{make_partitioner, Partitioner, PartitionerKind};
+/// use pmvc::partition::Axis;
+/// use pmvc::sparse::Coo;
+///
+/// let a = Coo::from_triplets(4, 4, [(0, 0, 1.0), (1, 1, 2.0), (2, 2, 3.0), (3, 3, 4.0)])
+///     .unwrap()
+///     .to_csr();
+/// let nezgt = make_partitioner(PartitionerKind::Nezgt).unwrap();
+/// let part = nezgt.partition(&a, Axis::Row, 2).unwrap();
+/// assert_eq!(part.k, 2);
+/// assert_eq!(part.assign.len(), 4); // every row assigned
+/// assert!(part.validate().is_ok());
+/// assert!(nezgt.partition(&a, Axis::Row, 0).is_err()); // typed, no panic
+/// ```
+pub trait Partitioner: std::fmt::Debug + Send + Sync {
+    /// Stable strategy identifier (matches [`PartitionerKind::name`]).
+    fn name(&self) -> &'static str;
+
+    /// Partition the items of `a` along `axis` (rows or columns) into
+    /// `k` parts. Every item must be assigned; `k == 0` is
+    /// [`PartitionError::ZeroParts`].
+    fn partition(&self, a: &Csr, axis: Axis, k: usize) -> Result<Partition, PartitionError>;
+
+    /// Clone as a boxed trait object (what [`Clone`] for
+    /// `Box<dyn Partitioner>` dispatches to).
+    fn clone_box(&self) -> Box<dyn Partitioner>;
+
+    /// A variant of this partitioner decorrelated by `salt`: seeded
+    /// strategies fold the salt into their RNG seed (so per-node intra
+    /// partitions explore different matching orders while staying
+    /// deterministic); unseeded strategies return a plain clone.
+    fn reseed(&self, salt: u64) -> Box<dyn Partitioner> {
+        let _ = salt;
+        self.clone_box()
+    }
+}
+
+impl Clone for Box<dyn Partitioner> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+fn ensure_parts(k: usize) -> Result<(), PartitionError> {
+    if k == 0 {
+        Err(PartitionError::ZeroParts)
+    } else {
+        Ok(())
+    }
+}
+
+fn items_along(a: &Csr, axis: Axis) -> usize {
+    match axis {
+        Axis::Row => a.n_rows,
+        Axis::Col => a.n_cols,
+    }
+}
+
+fn weights_along(a: &Csr, axis: Axis) -> Vec<usize> {
+    match axis {
+        Axis::Row => a.row_counts(),
+        Axis::Col => a.col_counts(),
+    }
+}
+
+/// PETSc-style contiguous equal-count blocks (ownership ranges that
+/// ignore weights) — see [`super::baseline::contiguous_blocks`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ContiguousBlocks;
+
+impl Partitioner for ContiguousBlocks {
+    fn name(&self) -> &'static str {
+        "contig"
+    }
+
+    fn partition(&self, a: &Csr, axis: Axis, k: usize) -> Result<Partition, PartitionError> {
+        ensure_parts(k)?;
+        Ok(super::baseline::contiguous_blocks(items_along(a, axis), k))
+    }
+
+    fn clone_box(&self) -> Box<dyn Partitioner> {
+        Box::new(*self)
+    }
+}
+
+/// Contiguous blocks with greedy nnz-balanced prefix cuts — see
+/// [`super::baseline::contiguous_balanced`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ContiguousBalanced;
+
+impl Partitioner for ContiguousBalanced {
+    fn name(&self) -> &'static str {
+        "contig-balanced"
+    }
+
+    fn partition(&self, a: &Csr, axis: Axis, k: usize) -> Result<Partition, PartitionError> {
+        ensure_parts(k)?;
+        Ok(super::baseline::contiguous_balanced(&weights_along(a, axis), k))
+    }
+
+    fn clone_box(&self) -> Box<dyn Partitioner> {
+        Box::new(*self)
+    }
+}
+
+/// Cyclic (round-robin) distribution — see [`super::baseline::cyclic`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CyclicPartitioner;
+
+impl Partitioner for CyclicPartitioner {
+    fn name(&self) -> &'static str {
+        "cyclic"
+    }
+
+    fn partition(&self, a: &Csr, axis: Axis, k: usize) -> Result<Partition, PartitionError> {
+        ensure_parts(k)?;
+        Ok(super::baseline::cyclic(items_along(a, axis), k))
+    }
+
+    fn clone_box(&self) -> Box<dyn Partitioner> {
+        Box::new(*self)
+    }
+}
+
+impl Partitioner for Nezgt {
+    fn name(&self) -> &'static str {
+        "nezgt"
+    }
+
+    /// The trait call's `axis` selects the NEZGT variant
+    /// (`Row` = NEZGT_ligne, `Col` = NEZGT_colonne), overriding
+    /// [`Nezgt::axis`]; the refinement knobs are honored.
+    fn partition(&self, a: &Csr, axis: Axis, k: usize) -> Result<Partition, PartitionError> {
+        ensure_parts(k)?;
+        let oriented = Nezgt { axis, ..self.clone() };
+        Ok(oriented.partition(a, k))
+    }
+
+    fn clone_box(&self) -> Box<dyn Partitioner> {
+        Box::new(self.clone())
+    }
+}
+
+impl Partitioner for Multilevel {
+    fn name(&self) -> &'static str {
+        "hypergraph"
+    }
+
+    /// Builds the 1-D hypergraph model of `a` along `axis`
+    /// (vertices = items of the axis, nets = the other axis) and runs
+    /// the multilevel scheme over it.
+    fn partition(&self, a: &Csr, axis: Axis, k: usize) -> Result<Partition, PartitionError> {
+        ensure_parts(k)?;
+        let hg = Hypergraph::from_matrix(a, axis);
+        Ok(Multilevel::partition(self, &hg, k))
+    }
+
+    fn clone_box(&self) -> Box<dyn Partitioner> {
+        Box::new(self.clone())
+    }
+
+    fn reseed(&self, salt: u64) -> Box<dyn Partitioner> {
+        Box::new(Multilevel { seed: self.seed ^ salt, ..self.clone() })
+    }
+}
+
+/// Strategy selector for call sites that pick a partitioner at run time
+/// (the sweep driver's `--partitioner` / `--intra` flags) — the
+/// partition-layer sibling of [`crate::pmvc::BackendKind`] and
+/// [`crate::solver::SolverKind`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PartitionerKind {
+    /// Contiguous equal-count blocks (PETSc default ownership ranges).
+    Contig,
+    /// Contiguous nnz-balanced blocks (greedy prefix cuts).
+    ContigBalanced,
+    /// Cyclic / round-robin.
+    Cyclic,
+    /// NEZGT three-phase load-balancing heuristic (the paper's
+    /// inter-node level).
+    Nezgt,
+    /// Multilevel 1-D hypergraph partitioner minimizing the (λ−1) cut
+    /// (the paper's intra-node level; Zoltan-PHG substitute).
+    Hypergraph,
+    /// 2-D fine-grain hypergraph of Çatalyürek & Aykanat 2001: one
+    /// vertex per nonzero ([`super::hypergraph2d::fine_grain_partition`]).
+    Fine2d,
+    /// 2-D checkerboard p×q block partition
+    /// ([`super::hypergraph2d::checkerboard`]).
+    Checker,
+}
+
+impl PartitionerKind {
+    /// Every registered kind, 1-D strategies first.
+    pub fn all() -> [PartitionerKind; 7] {
+        [
+            PartitionerKind::Contig,
+            PartitionerKind::ContigBalanced,
+            PartitionerKind::Cyclic,
+            PartitionerKind::Nezgt,
+            PartitionerKind::Hypergraph,
+            PartitionerKind::Fine2d,
+            PartitionerKind::Checker,
+        ]
+    }
+
+    /// The kinds that produce a 1-D [`Partition`] and can drive the
+    /// two-level decomposition.
+    pub fn one_dimensional() -> [PartitionerKind; 5] {
+        [
+            PartitionerKind::Contig,
+            PartitionerKind::ContigBalanced,
+            PartitionerKind::Cyclic,
+            PartitionerKind::Nezgt,
+            PartitionerKind::Hypergraph,
+        ]
+    }
+
+    /// Whether the kind assigns individual nonzeros (2-D model,
+    /// [`super::hypergraph2d::Owner2d`]) instead of whole rows/columns.
+    pub fn is_2d(&self) -> bool {
+        matches!(self, PartitionerKind::Fine2d | PartitionerKind::Checker)
+    }
+
+    /// Stable identifier (matches [`Partitioner::name`] for 1-D kinds).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionerKind::Contig => "contig",
+            PartitionerKind::ContigBalanced => "contig-balanced",
+            PartitionerKind::Cyclic => "cyclic",
+            PartitionerKind::Nezgt => "nezgt",
+            PartitionerKind::Hypergraph => "hypergraph",
+            PartitionerKind::Fine2d => "fine2d",
+            PartitionerKind::Checker => "checker",
+        }
+    }
+
+    /// The accepted names, for error messages.
+    pub fn usage() -> &'static str {
+        "contig|contig-balanced|cyclic|nezgt|hypergraph|fine2d|checker"
+    }
+
+    /// Parse a kind name (case-insensitive, with a few aliases).
+    pub fn parse(s: &str) -> Option<PartitionerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "contig" | "contiguous" | "blocks" | "petsc" => Some(PartitionerKind::Contig),
+            "contig-balanced" | "balanced" | "contiguous-balanced" => {
+                Some(PartitionerKind::ContigBalanced)
+            }
+            "cyclic" | "round-robin" | "rr" => Some(PartitionerKind::Cyclic),
+            "nezgt" | "nez" => Some(PartitionerKind::Nezgt),
+            "hypergraph" | "hyper" | "multilevel" | "ml" | "phg" => {
+                Some(PartitionerKind::Hypergraph)
+            }
+            "fine2d" | "fine-grain" | "finegrain" => Some(PartitionerKind::Fine2d),
+            "checker" | "checkerboard" => Some(PartitionerKind::Checker),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for PartitionerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Construct a boxed 1-D partitioner of the requested kind with default
+/// tuning. The 2-D kinds ([`PartitionerKind::Fine2d`],
+/// [`PartitionerKind::Checker`]) yield
+/// [`PartitionError::TwoDimensional`] — they assign nonzeros, not
+/// rows/columns, and are driven through
+/// [`super::hypergraph2d`] instead.
+pub fn make_partitioner(kind: PartitionerKind) -> Result<Box<dyn Partitioner>, PartitionError> {
+    match kind {
+        PartitionerKind::Contig => Ok(Box::new(ContiguousBlocks)),
+        PartitionerKind::ContigBalanced => Ok(Box::new(ContiguousBalanced)),
+        PartitionerKind::Cyclic => Ok(Box::new(CyclicPartitioner)),
+        PartitionerKind::Nezgt => Ok(Box::new(Nezgt::default())),
+        PartitionerKind::Hypergraph => Ok(Box::new(Multilevel::default())),
+        PartitionerKind::Fine2d | PartitionerKind::Checker => {
+            Err(PartitionError::TwoDimensional { kind })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::sparse::gen::{generate, MatrixSpec};
+
+    fn matrix() -> Csr {
+        generate(&MatrixSpec::paper("t2dal").unwrap(), 11).to_csr()
+    }
+
+    #[test]
+    fn kind_roundtrips_through_parse() {
+        for kind in PartitionerKind::all() {
+            assert_eq!(PartitionerKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(PartitionerKind::parse("smoke-signals"), None);
+        assert_eq!(PartitionerKind::parse("HYPER"), Some(PartitionerKind::Hypergraph));
+        assert_eq!(PartitionerKind::parse("rr"), Some(PartitionerKind::Cyclic));
+    }
+
+    #[test]
+    fn registry_names_match_trait_names() {
+        for kind in PartitionerKind::one_dimensional() {
+            let p = make_partitioner(kind).unwrap();
+            assert_eq!(p.name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn two_dimensional_kinds_are_typed_errors() {
+        for kind in [PartitionerKind::Fine2d, PartitionerKind::Checker] {
+            assert!(kind.is_2d());
+            match make_partitioner(kind) {
+                Err(PartitionError::TwoDimensional { kind: k }) => assert_eq!(k, kind),
+                other => panic!("expected TwoDimensional, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_partitioner_yields_valid_partitions_on_both_axes() {
+        let a = matrix();
+        for kind in PartitionerKind::one_dimensional() {
+            let p = make_partitioner(kind).unwrap();
+            for axis in [Axis::Row, Axis::Col] {
+                for k in [1usize, 2, 7] {
+                    let part = p.partition(&a, axis, k).unwrap();
+                    assert_eq!(part.k, k, "{kind} {axis:?}");
+                    assert_eq!(
+                        part.n_items(),
+                        match axis {
+                            Axis::Row => a.n_rows,
+                            Axis::Col => a.n_cols,
+                        },
+                        "{kind} {axis:?}"
+                    );
+                    part.validate().unwrap_or_else(|e| panic!("{kind} {axis:?} k={k}: {e}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_parts_is_a_typed_error_not_a_panic() {
+        let a = matrix();
+        for kind in PartitionerKind::one_dimensional() {
+            let p = make_partitioner(kind).unwrap();
+            match p.partition(&a, Axis::Row, 0) {
+                Err(PartitionError::ZeroParts) => {}
+                other => panic!("{kind}: expected ZeroParts, got {other:?}"),
+            }
+        }
+    }
+
+    /// Property: under random permutations of a structured matrix, every
+    /// registered partitioner still assigns every item into `[0, k)`
+    /// (the SplitMix64-driven substitute for proptest permutations).
+    #[test]
+    fn prop_valid_under_permutations() {
+        let mut rng = SplitMix64::new(0x9A27);
+        for trial in 0..10 {
+            let base = matrix();
+            // random row permutation via COO rebuild
+            let mut perm: Vec<u32> = (0..base.n_rows as u32).collect();
+            rng.shuffle(&mut perm);
+            let mut coo = crate::sparse::Coo::new(base.n_rows, base.n_cols);
+            for i in 0..base.n_rows {
+                for (c, v) in base.row(i) {
+                    coo.push(perm[i], c, v);
+                }
+            }
+            let a = coo.to_csr();
+            let k = 2 + rng.next_below(9);
+            for kind in PartitionerKind::one_dimensional() {
+                let p = make_partitioner(kind).unwrap();
+                let part = p.partition(&a, Axis::Row, k).unwrap();
+                part.validate().unwrap_or_else(|e| panic!("trial {trial} {kind}: {e}"));
+                assert_eq!(part.n_items(), a.n_rows, "trial {trial} {kind}");
+            }
+        }
+    }
+
+    #[test]
+    fn reseed_decorrelates_the_multilevel_seed_only() {
+        let ml = Multilevel::default();
+        let salted = ml.reseed(0xDEAD_BEEF);
+        // the reseeded partitioner still partitions validly
+        let a = matrix();
+        let p = salted.partition(&a, Axis::Row, 4).unwrap();
+        p.validate().unwrap();
+        // deterministic strategies return an equivalent clone
+        let nez = Nezgt::default();
+        let nez2 = nez.reseed(0xDEAD_BEEF);
+        let p1 = Partitioner::partition(&nez, &a, Axis::Row, 4).unwrap();
+        let p2 = nez2.partition(&a, Axis::Row, 4).unwrap();
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn errors_render_their_context() {
+        assert!(PartitionError::ZeroParts.to_string().contains("zero parts"));
+        let e = PartitionError::InvalidAssignment { item: 3, part: 9, k: 4 };
+        assert!(e.to_string().contains("item 3"));
+        let e = PartitionError::TwoDimensional { kind: PartitionerKind::Fine2d };
+        assert!(e.to_string().contains("fine2d"));
+        let e = PartitionError::UnknownPartitioner { name: "bogus".into() };
+        assert!(e.to_string().contains("bogus"));
+    }
+}

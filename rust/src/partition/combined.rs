@@ -14,7 +14,8 @@
 //! | NL-HC  | NEZGT_ligne     | HYPER_colonne   |
 //! | NL-HL  | NEZGT_ligne     | HYPER_ligne     |
 
-use super::hypergraph::Hypergraph;
+use super::api::{make_partitioner, PartitionError, Partitioner, PartitionerKind};
+use super::metrics::QualityReport;
 use super::multilevel::Multilevel;
 use super::nezgt::Nezgt;
 use super::{Axis, Partition};
@@ -23,9 +24,13 @@ use crate::sparse::{Coo, Csr};
 /// The four inter/intra combinations of ch. 4 (Table 4.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Combination {
+    /// NEZGT_colonne inter, HYPER_colonne intra.
     NcHc,
+    /// NEZGT_colonne inter, HYPER_ligne intra.
     NcHl,
+    /// NEZGT_ligne inter, HYPER_colonne intra.
     NlHc,
+    /// NEZGT_ligne inter, HYPER_ligne intra.
     NlHl,
 }
 
@@ -79,29 +84,43 @@ impl std::fmt::Display for Combination {
     }
 }
 
-/// Which algorithm fragments the intra-node level (ablation switch; the
-/// paper's ch. 4 always uses the hypergraph, MeH12 also studied NEZ-NEZ).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum IntraMethod {
-    Hypergraph,
-    Nezgt,
-}
-
-/// Decomposition tunables.
+/// Decomposition tunables: which [`Partitioner`] runs at each level.
+///
+/// The default reproduces the paper's pipeline — NEZGT inter-node (load
+/// balance across nodes), multilevel hypergraph intra-node
+/// (communication volume within a node) — but any registered strategy
+/// can be slotted at either level (`--partitioner` / `--intra` on the
+/// CLI), which is exactly the comparison the paper's ch. 4 runs.
 #[derive(Clone, Debug)]
 pub struct DecomposeConfig {
-    pub intra_method: IntraMethod,
-    pub multilevel: Multilevel,
-    pub nezgt_refine: bool,
+    /// Level-1 (inter-node) strategy, applied along the combination's
+    /// inter axis over the whole matrix.
+    pub inter: Box<dyn Partitioner>,
+    /// Level-2 (intra-node) strategy, applied along the intra axis to
+    /// each compacted node fragment (reseeded per node so seeded
+    /// strategies decorrelate while staying deterministic).
+    pub intra: Box<dyn Partitioner>,
 }
 
 impl Default for DecomposeConfig {
     fn default() -> Self {
-        Self {
-            intra_method: IntraMethod::Hypergraph,
-            multilevel: Multilevel::default(),
-            nezgt_refine: true,
-        }
+        Self { inter: Box::new(Nezgt::default()), intra: Box::new(Multilevel::default()) }
+    }
+}
+
+impl DecomposeConfig {
+    /// Build a config from registry kinds (2-D kinds are
+    /// [`PartitionError::TwoDimensional`]).
+    pub fn with_kinds(
+        inter: PartitionerKind,
+        intra: PartitionerKind,
+    ) -> Result<Self, PartitionError> {
+        Ok(Self { inter: make_partitioner(inter)?, intra: make_partitioner(intra)? })
+    }
+
+    /// The paper's NEZ-NEZ ablation: NEZGT at both levels.
+    pub fn nezgt_both() -> Self {
+        Self { inter: Box::new(Nezgt::default()), intra: Box::new(Nezgt::default()) }
     }
 }
 
@@ -111,7 +130,9 @@ impl Default for DecomposeConfig {
 /// the gather phase returns.
 #[derive(Clone, Debug)]
 pub struct CoreFragment {
+    /// Owning node index.
     pub node: usize,
+    /// Core index within the node.
     pub core: usize,
     /// Local matrix: `csr.n_rows == global_rows.len()`,
     /// `csr.n_cols == global_cols.len()`.
@@ -123,6 +144,7 @@ pub struct CoreFragment {
 }
 
 impl CoreFragment {
+    /// Nonzeros of this fragment (its compute weight).
     pub fn nnz(&self) -> usize {
         self.csr.nnz()
     }
@@ -132,8 +154,11 @@ impl CoreFragment {
 /// cores, produced by [`decompose`].
 #[derive(Clone, Debug)]
 pub struct TwoLevelDecomposition {
+    /// Which inter/intra axis combination produced this decomposition.
     pub combo: Combination,
+    /// Node count.
     pub f: usize,
+    /// Cores per node.
     pub c: usize,
     /// Matrix order N.
     pub n: usize,
@@ -144,6 +169,9 @@ pub struct TwoLevelDecomposition {
     /// Core fragments, indexed `node * c + core`. Fragments may be empty
     /// (0 rows) when a node/core receives no work.
     pub fragments: Vec<CoreFragment>,
+    /// Quality metrics of this decomposition (cut, comm bytes, load
+    /// balance), computed exactly once by [`decompose`].
+    pub quality: QualityReport,
 }
 
 impl TwoLevelDecomposition {
@@ -241,22 +269,21 @@ impl TwoLevelDecomposition {
 }
 
 /// Decompose matrix `a` for `f` nodes × `c` cores with the given
-/// combination — the paper's two-level pipeline.
+/// combination — the paper's two-level pipeline, with the strategy at
+/// each level supplied by [`DecomposeConfig`]. Fails with a typed error
+/// on degenerate shapes (`f == 0` / `c == 0`) or when a partitioner
+/// rejects its input, instead of panicking.
 pub fn decompose(
     a: &Csr,
     combo: Combination,
     f: usize,
     c: usize,
     cfg: &DecomposeConfig,
-) -> TwoLevelDecomposition {
-    assert!(f > 0 && c > 0);
-    // ---- level 1: inter-node NEZGT along the combination's inter axis.
-    let nez = Nezgt {
-        axis: combo.inter_axis(),
-        refine: cfg.nezgt_refine,
-        ..Nezgt::default()
-    };
-    let inter = nez.partition(a, f);
+) -> crate::Result<TwoLevelDecomposition> {
+    anyhow::ensure!(f > 0 && c > 0, "degenerate decomposition shape {f}x{c}");
+    // ---- level 1: inter-node partition along the combination's inter
+    // axis (the paper: NEZGT).
+    let inter = cfg.inter.partition(a, combo.inter_axis(), f)?;
 
     // ---- gather per-node entry lists (global coords + CSR position).
     let mut node_entries: Vec<Vec<(u32, u32, f64)>> = vec![Vec::new(); f];
@@ -287,23 +314,9 @@ pub fn decompose(
         let intra: Partition = if n_items == 0 {
             Partition::trivial(0, c)
         } else {
-            match cfg.intra_method {
-                IntraMethod::Hypergraph => {
-                    let hg = Hypergraph::from_matrix(&local, combo.intra_axis());
-                    let mut ml = cfg.multilevel.clone();
-                    // decorrelate seeds across nodes, keep determinism
-                    ml.seed = cfg.multilevel.seed ^ (node as u64).wrapping_mul(0x9E3779B97F4A7C15);
-                    ml.partition(&hg, c)
-                }
-                IntraMethod::Nezgt => {
-                    let nez = Nezgt {
-                        axis: combo.intra_axis(),
-                        refine: cfg.nezgt_refine,
-                        ..Nezgt::default()
-                    };
-                    nez.partition(&local, c)
-                }
-            }
+            // decorrelate seeded strategies across nodes, keep determinism
+            let level2 = cfg.intra.reseed((node as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            level2.partition(&local, combo.intra_axis(), c)?
         };
 
         // split the node's entries into core fragments
@@ -324,7 +337,7 @@ pub fn decompose(
         }
     }
 
-    TwoLevelDecomposition {
+    let mut d = TwoLevelDecomposition {
         combo,
         f,
         c,
@@ -332,7 +345,10 @@ pub fn decompose(
         nnz: a.nnz(),
         inter,
         fragments,
-    }
+        quality: QualityReport::default(),
+    };
+    d.quality = QualityReport::of(a, &d, cfg.inter.name(), cfg.intra.name());
+    Ok(d)
 }
 
 /// Reusable dense inverse-map scratch for [`compact`].
@@ -401,7 +417,7 @@ mod tests {
     fn all_combinations_cover_all_nonzeros() {
         let a = small_matrix();
         for combo in Combination::all() {
-            let d = decompose(&a, combo, 4, 4, &DecomposeConfig::default());
+            let d = decompose(&a, combo, 4, 4, &DecomposeConfig::default()).unwrap();
             d.validate(&a).unwrap_or_else(|e| panic!("{combo}: {e}"));
         }
     }
@@ -410,7 +426,7 @@ mod tests {
     fn node_loads_balanced_by_nezgt() {
         let a = small_matrix();
         for combo in Combination::all() {
-            let d = decompose(&a, combo, 8, 4, &DecomposeConfig::default());
+            let d = decompose(&a, combo, 8, 4, &DecomposeConfig::default()).unwrap();
             let lb = d.lb_nodes();
             assert!(lb < 1.05, "{combo}: LB_nodes = {lb}");
         }
@@ -419,7 +435,7 @@ mod tests {
     #[test]
     fn row_combination_keeps_rows_whole_per_node() {
         let a = small_matrix();
-        let d = decompose(&a, Combination::NlHl, 4, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 4, 2, &DecomposeConfig::default()).unwrap();
         // each global row appears in exactly one node
         let mut node_of_row = vec![usize::MAX; a.n_rows];
         for frag in &d.fragments {
@@ -434,7 +450,7 @@ mod tests {
     #[test]
     fn col_combination_keeps_cols_whole_per_node() {
         let a = small_matrix();
-        let d = decompose(&a, Combination::NcHc, 4, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NcHc, 4, 2, &DecomposeConfig::default()).unwrap();
         let mut node_of_col = vec![usize::MAX; a.n_cols];
         for frag in &d.fragments {
             for &g in &frag.global_cols {
@@ -448,7 +464,7 @@ mod tests {
     #[test]
     fn nl_hl_cores_own_disjoint_rows() {
         let a = small_matrix();
-        let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default()).unwrap();
         let mut owner = vec![None::<(usize, usize)>; a.n_rows];
         for frag in &d.fragments {
             for &g in &frag.global_rows {
@@ -463,7 +479,7 @@ mod tests {
         // paper ch.3 §4.2.3: 1 <= C_Xk <= N
         let a = small_matrix();
         for combo in Combination::all() {
-            let d = decompose(&a, combo, 4, 4, &DecomposeConfig::default());
+            let d = decompose(&a, combo, 4, 4, &DecomposeConfig::default()).unwrap();
             for node in 0..4 {
                 let cx = d.node_x_footprint(node);
                 let cy = d.node_y_footprint(node);
@@ -478,8 +494,8 @@ mod tests {
         // NL fragments own whole rows => node Y footprints partition N.
         // NC fragments touch most rows => sum of Y footprints >> N.
         let a = small_matrix();
-        let dl = decompose(&a, Combination::NlHl, 4, 2, &DecomposeConfig::default());
-        let dc = decompose(&a, Combination::NcHc, 4, 2, &DecomposeConfig::default());
+        let dl = decompose(&a, Combination::NlHl, 4, 2, &DecomposeConfig::default()).unwrap();
+        let dc = decompose(&a, Combination::NcHc, 4, 2, &DecomposeConfig::default()).unwrap();
         let yl: usize = (0..4).map(|k| dl.node_y_footprint(k)).sum();
         let yc: usize = (0..4).map(|k| dc.node_y_footprint(k)).sum();
         assert_eq!(yl, a.n_rows);
@@ -489,10 +505,44 @@ mod tests {
     #[test]
     fn nezgt_intra_ablation_runs() {
         let a = small_matrix();
-        let cfg = DecomposeConfig { intra_method: IntraMethod::Nezgt, ..Default::default() };
-        let d = decompose(&a, Combination::NlHl, 2, 4, &cfg);
+        let cfg = DecomposeConfig::nezgt_both();
+        let d = decompose(&a, Combination::NlHl, 2, 4, &cfg).unwrap();
         d.validate(&a).unwrap();
         assert!(d.lb_cores() < 1.3);
+        assert_eq!(d.quality.intra_partitioner, "nezgt");
+    }
+
+    #[test]
+    fn quality_report_is_populated_and_strategy_sensitive() {
+        let a = small_matrix();
+        let nez = decompose(&a, Combination::NlHl, 4, 2, &DecomposeConfig::default()).unwrap();
+        let q = &nez.quality;
+        assert_eq!(q.inter_partitioner, "nezgt");
+        assert_eq!(q.intra_partitioner, "hypergraph");
+        assert_eq!(q.lb_nodes, nez.lb_nodes());
+        assert_eq!(q.lb_cores, nez.lb_cores());
+        assert!(q.comm_bytes > 0);
+        assert_eq!(q.label(), "nezgt+hypergraph");
+        // swapping the inter strategy must change the recorded label
+        let cfg =
+            DecomposeConfig::with_kinds(PartitionerKind::Hypergraph, PartitionerKind::Hypergraph)
+                .unwrap();
+        let hyp = decompose(&a, Combination::NlHl, 4, 2, &cfg).unwrap();
+        assert_eq!(hyp.quality.label(), "hypergraph+hypergraph");
+        // the hypergraph inter level optimizes the cut it is scored on
+        assert!(
+            hyp.quality.cut <= nez.quality.cut,
+            "hypergraph inter cut {} should not exceed NEZGT cut {}",
+            hyp.quality.cut,
+            nez.quality.cut
+        );
+    }
+
+    #[test]
+    fn degenerate_shapes_are_errors_not_panics() {
+        let a = small_matrix();
+        assert!(decompose(&a, Combination::NlHl, 0, 2, &DecomposeConfig::default()).is_err());
+        assert!(decompose(&a, Combination::NlHl, 2, 0, &DecomposeConfig::default()).is_err());
     }
 
     #[test]
@@ -501,7 +551,7 @@ mod tests {
         let a = Coo::from_triplets(3, 3, [(0, 0, 1.0), (1, 1, 2.0), (2, 2, 3.0)])
             .unwrap()
             .to_csr();
-        let d = decompose(&a, Combination::NlHl, 8, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 8, 2, &DecomposeConfig::default()).unwrap();
         d.validate(&a).unwrap();
         // empty fragments must be well-formed
         for frag in &d.fragments {
@@ -512,8 +562,8 @@ mod tests {
     #[test]
     fn deterministic() {
         let a = small_matrix();
-        let d1 = decompose(&a, Combination::NlHc, 4, 4, &DecomposeConfig::default());
-        let d2 = decompose(&a, Combination::NlHc, 4, 4, &DecomposeConfig::default());
+        let d1 = decompose(&a, Combination::NlHc, 4, 4, &DecomposeConfig::default()).unwrap();
+        let d2 = decompose(&a, Combination::NlHc, 4, 4, &DecomposeConfig::default()).unwrap();
         assert_eq!(d1.core_loads(), d2.core_loads());
         assert_eq!(d1.inter, d2.inter);
     }

@@ -19,7 +19,9 @@ use crate::sparse::Csr;
 /// k-th nonzero of the CSR (row-major order).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Owner2d {
+    /// Number of units.
     pub k: usize,
+    /// Owning unit of each nonzero, in CSR row-major order.
     pub owner: Vec<u32>,
 }
 

@@ -1,7 +1,9 @@
-//! Partition quality metrics: the paper's LB (load balance) columns and
-//! the communication-volume quantities of ch. 3 §4.2.3.
+//! Partition quality metrics: the paper's LB (load balance) columns,
+//! the communication-volume quantities of ch. 3 §4.2.3, and the
+//! per-decomposition [`QualityReport`] the sweep CSV exports.
 
 use super::TwoLevelDecomposition;
+use crate::sparse::Csr;
 
 /// Load-balance ratio `max/avg` — the paper's LB_noeuds / LB_coeurs.
 /// Returns 1.0 for empty or all-zero loads (perfectly "balanced").
@@ -15,6 +17,120 @@ pub fn imbalance(loads: &[u64]) -> f64 {
         1.0
     } else {
         max / avg
+    }
+}
+
+/// Quality metrics of one two-level decomposition, on one common scale
+/// for every partitioning strategy — computed exactly once per
+/// [`super::combined::decompose`] call, stored on the
+/// [`TwoLevelDecomposition`], and exported as the sweep CSV's
+/// `partitioner`/`cut`/`comm_bytes`/`lb_nodes`/`lb_cores` columns.
+///
+/// `cut` is the (λ−1) connectivity cut of the **inter-node** partition
+/// under the 1-D hypergraph model along the combination's inter axis —
+/// by Çatalyürek & Aykanat's result, exactly the number of vector
+/// elements that must cross a node boundary per iteration.
+/// `comm_bytes` is the per-iteration wire volume `Σ_k (C_Xk + C_Yk)`
+/// in bytes — the full X fan-out + Y fan-in footprints the
+/// [`crate::pmvc::CommPlan`] prices. It includes each node's own
+/// elements, so it carries a ~`2N` element baseline on top of the cut:
+/// a zero-cut decomposition still ships every X in and every Y out.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QualityReport {
+    /// Inter-node strategy name (e.g. `nezgt`).
+    pub inter_partitioner: &'static str,
+    /// Intra-node strategy name (e.g. `hypergraph`).
+    pub intra_partitioner: &'static str,
+    /// (λ−1) cut of the inter-node partition (vector elements crossing
+    /// node boundaries per iteration).
+    pub cut: u64,
+    /// Nets (rows/columns) spanning ≥ 2 nodes.
+    pub cut_nets: u64,
+    /// Per-iteration communication volume in bytes (X fan-out + Y
+    /// fan-in over all nodes, from the [`crate::pmvc::CommPlan`]).
+    pub comm_bytes: usize,
+    /// LB_noeuds — max/avg nonzero load over nodes.
+    pub lb_nodes: f64,
+    /// LB_coeurs — max/avg nonzero load over all cores.
+    pub lb_cores: f64,
+}
+
+impl QualityReport {
+    /// Score decomposition `d` of matrix `a` (consulted for its
+    /// dimensions only). `inter`/`intra` are the strategy names recorded
+    /// in the report.
+    ///
+    /// Everything is derived from the fragments in one O(pins) stamp
+    /// pass — no hypergraph or [`crate::pmvc::CommPlan`] is
+    /// materialized, so `decompose` stays cheap and the engine's later
+    /// plan build is not duplicated. The identity used: a net (column
+    /// for a row-wise inter level, row for a column-wise one) has
+    /// connectivity λ = the number of nodes whose fragments touch it,
+    /// so `Σ_k C_Xk = Σ_nets λ` and the (λ−1) cut follows from the
+    /// per-net touch counts; the byte volume is the same
+    /// `Σ_k (C_Xk + C_Yk)` the [`crate::pmvc::CommPlan`] prices.
+    pub fn of(
+        a: &Csr,
+        d: &TwoLevelDecomposition,
+        inter: &'static str,
+        intra: &'static str,
+    ) -> QualityReport {
+        use super::Axis;
+        use crate::pmvc::plan::BYTES_PER_ELEM;
+        // stamp[g] = last (node, axis) that counted global id g; lambda
+        // counts per net of the inter axis's dual (columns for Row, rows
+        // for Col). Sized for both id spaces so rectangular matrices
+        // (n_cols != n_rows) stay in bounds.
+        let n_ids = a.n_rows.max(a.n_cols);
+        let mut stamp = vec![u32::MAX; n_ids];
+        let mut lambda = vec![0u32; n_ids];
+        let mut x_elems = 0usize;
+        let mut y_elems = 0usize;
+        let net_axis_is_col = d.combo.inter_axis() == Axis::Row;
+        for node in 0..d.f {
+            let sx = (node * 2) as u32;
+            let sy = (node * 2 + 1) as u32;
+            for core in 0..d.c {
+                let frag = d.fragment(node, core);
+                for &g in &frag.global_cols {
+                    if stamp[g as usize] != sx {
+                        stamp[g as usize] = sx;
+                        x_elems += 1;
+                        if net_axis_is_col {
+                            lambda[g as usize] += 1;
+                        }
+                    }
+                }
+            }
+            for core in 0..d.c {
+                let frag = d.fragment(node, core);
+                for &g in &frag.global_rows {
+                    if stamp[g as usize] != sy {
+                        stamp[g as usize] = sy;
+                        y_elems += 1;
+                        if !net_axis_is_col {
+                            lambda[g as usize] += 1;
+                        }
+                    }
+                }
+            }
+        }
+        let cut: u64 = lambda.iter().map(|&l| (l.saturating_sub(1)) as u64).sum();
+        let cut_nets = lambda.iter().filter(|&&l| l >= 2).count() as u64;
+        QualityReport {
+            inter_partitioner: inter,
+            intra_partitioner: intra,
+            cut,
+            cut_nets,
+            comm_bytes: (x_elems + y_elems) * BYTES_PER_ELEM,
+            lb_nodes: d.lb_nodes(),
+            lb_cores: d.lb_cores(),
+        }
+    }
+
+    /// `inter+intra` label for CSV/table cells, e.g. `nezgt+hypergraph`.
+    pub fn label(&self) -> String {
+        format!("{}+{}", self.inter_partitioner, self.intra_partitioner)
     }
 }
 
@@ -82,7 +198,7 @@ mod tests {
         let n = a.n_rows;
         let nz = a.nnz();
         for combo in Combination::all() {
-            let d = decompose(&a, combo, 4, 4, &DecomposeConfig::default());
+            let d = decompose(&a, combo, 4, 4, &DecomposeConfig::default()).unwrap();
             let cv = CommVolumes::of(&d);
             // 1 <= C_Xk <= N ; 1 <= C_Yk <= N ; Σ NZ_k == NZ
             for k in 0..4 {
@@ -100,9 +216,31 @@ mod tests {
     }
 
     #[test]
+    fn quality_report_matches_reference_models() {
+        // the stamp-pass shortcut must equal the explicit hypergraph
+        // cut and the CommPlan byte pricing on every combination
+        use crate::partition::hypergraph::Hypergraph;
+        use crate::pmvc::CommPlan;
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 3).to_csr();
+        for combo in Combination::all() {
+            let d = decompose(&a, combo, 4, 2, &DecomposeConfig::default()).unwrap();
+            let hg = Hypergraph::from_matrix(&a, combo.inter_axis());
+            assert_eq!(d.quality.cut, hg.lambda_minus_one_cut(&d.inter), "{combo}");
+            assert_eq!(d.quality.cut_nets, hg.cut_nets(&d.inter), "{combo}");
+            let plan = CommPlan::build(&d).unwrap();
+            assert_eq!(
+                d.quality.comm_bytes,
+                plan.scatter_x_bytes() + plan.gather_y_bytes(),
+                "{combo}"
+            );
+            assert_eq!(d.quality.lb_nodes, d.lb_nodes(), "{combo}");
+        }
+    }
+
+    #[test]
     fn row_decomposition_gathers_exactly_n() {
         let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 2).to_csr();
-        let d = decompose(&a, Combination::NlHl, 8, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 8, 2, &DecomposeConfig::default()).unwrap();
         let cv = CommVolumes::of(&d);
         assert_eq!(cv.total_gather(), a.n_rows);
     }

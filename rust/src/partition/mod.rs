@@ -6,7 +6,15 @@
 //!   Généralisé, Trié*), optimizing load balance;
 //! * [`hypergraph`] + [`multilevel`] — 1-D hypergraph partitioning,
 //!   optimizing communication volume (Zoltan-PHG substitute).
+//!
+//! Every strategy (the two above, the [`baseline`] distributions, and
+//! the 2-D models of [`hypergraph2d`]) is registered behind the
+//! [`api::Partitioner`] trait / [`api::PartitionerKind`] selector, so
+//! the decomposition pipeline and the sweep driver pick strategies by
+//! value instead of hard-coding calls; [`metrics::QualityReport`]
+//! scores whatever they produce on one common scale.
 
+pub mod api;
 pub mod baseline;
 pub mod combined;
 pub mod hypergraph;
@@ -15,7 +23,9 @@ pub mod metrics;
 pub mod multilevel;
 pub mod nezgt;
 
+pub use api::{make_partitioner, PartitionError, Partitioner, PartitionerKind};
 pub use combined::{Combination, TwoLevelDecomposition};
+pub use metrics::QualityReport;
 pub use nezgt::Nezgt;
 
 /// Which axis of the matrix a 1-D partition cuts.
@@ -28,6 +38,7 @@ pub enum Axis {
 }
 
 impl Axis {
+    /// Paper shorthand: `L` (ligne) for rows, `C` (colonne) for columns.
     pub fn short(&self) -> &'static str {
         match self {
             Axis::Row => "L",
@@ -40,7 +51,9 @@ impl Axis {
 /// `assign[i]`, `0 <= assign[i] < k`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Partition {
+    /// Number of parts.
     pub k: usize,
+    /// Part of each item.
     pub assign: Vec<u32>,
 }
 
@@ -88,10 +101,15 @@ impl Partition {
     }
 
     /// Check structural sanity: every assignment within `[0, k)`.
-    pub fn validate(&self) -> crate::Result<()> {
-        anyhow::ensure!(self.k > 0, "k must be positive");
+    /// Failures are typed [`api::PartitionError`] values, not panics.
+    pub fn validate(&self) -> Result<(), api::PartitionError> {
+        if self.k == 0 {
+            return Err(api::PartitionError::ZeroParts);
+        }
         for (i, &p) in self.assign.iter().enumerate() {
-            anyhow::ensure!((p as usize) < self.k, "item {i} assigned to part {p} >= k={}", self.k);
+            if (p as usize) >= self.k {
+                return Err(api::PartitionError::InvalidAssignment { item: i, part: p, k: self.k });
+            }
         }
         Ok(())
     }

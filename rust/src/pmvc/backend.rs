@@ -274,7 +274,7 @@ mod tests {
         let topo = ClusterTopology::paravance(2);
         let net = NetworkPreset::TenGigabitEthernet.model();
         for kind in BackendKind::all() {
-            let d = decompose(&a, Combination::NlHl, 2, topo.cores_per_node(), &DecomposeConfig::default());
+            let d = decompose(&a, Combination::NlHl, 2, topo.cores_per_node(), &DecomposeConfig::default()).unwrap();
             let mut backend = make_backend(kind, d, &topo, &net).unwrap();
             assert_eq!(backend.name(), kind.name());
             assert_eq!(backend.order(), a.n_rows);

@@ -15,6 +15,7 @@ use std::time::Instant;
 /// Result of a dynamic-scheduled SpMV.
 #[derive(Clone, Debug)]
 pub struct DynamicResult {
+    /// The product vector.
     pub y: Vec<f64>,
     /// Wall time of the parallel section.
     pub t_compute: f64,

@@ -331,7 +331,7 @@ mod tests {
     #[test]
     fn engine_matches_serial_product_across_applies() {
         let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 13).to_csr();
-        let d = decompose(&a, Combination::NlHc, 2, 3, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHc, 2, 3, &DecomposeConfig::default()).unwrap();
         let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
         let mut rng = crate::rng::SplitMix64::new(2);
         for trial in 0..8 {
@@ -354,7 +354,7 @@ mod tests {
     #[test]
     fn engine_rejects_wrong_x_length() {
         let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
-        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
         assert!(engine.apply(&[1.0, 2.0]).is_err());
         // the pool survives a rejected call
@@ -365,7 +365,7 @@ mod tests {
     #[test]
     fn apply_into_reuses_caller_scratch() {
         let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
-        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
         let x = vec![1.0; a.n_cols];
         // stale contents must be overwritten, not accumulated into
@@ -383,7 +383,7 @@ mod tests {
     #[test]
     fn plan_identity_is_stable_across_applies() {
         let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
-        let d = decompose(&a, Combination::NcHl, 2, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NcHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
         let p0 = Arc::as_ptr(engine.plan());
         let x = vec![0.5; a.n_cols];

@@ -51,7 +51,7 @@ mod tests {
         let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-2.0, 2.0)).collect();
         let y_ref = a.matvec(&x);
         for combo in Combination::all() {
-            let d = decompose(&a, combo, 2, 4, &DecomposeConfig::default());
+            let d = decompose(&a, combo, 2, 4, &DecomposeConfig::default()).unwrap();
             let r = execute_threads(&d, &x).unwrap();
             for i in 0..a.n_rows {
                 assert!(
@@ -67,7 +67,7 @@ mod tests {
     #[test]
     fn wrong_x_length_rejected() {
         let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
-        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         assert!(execute_threads(&d, &vec![0.0; 10]).is_err());
     }
 
@@ -75,7 +75,7 @@ mod tests {
     fn diagonal_matrix_identity_product() {
         let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
         let x = vec![1.0; a.n_cols];
-        let d = decompose(&a, Combination::NcHl, 2, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NcHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let r = execute_threads(&d, &x).unwrap();
         // diag values in (0.5, 2.0)
         for (i, &v) in r.y.iter().enumerate() {
@@ -86,7 +86,7 @@ mod tests {
     #[test]
     fn one_shot_scatter_includes_setup() {
         let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
-        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let r = execute_threads(&d, &vec![1.0; a.n_cols]).unwrap();
         assert!(r.times.t_scatter > 0.0);
     }

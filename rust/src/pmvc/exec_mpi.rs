@@ -63,7 +63,9 @@ pub struct MpiCluster {
     /// Per node: global column ids of the X footprint (leader-side pack
     /// list — what MPI would carry in the scatter's index datatype).
     node_x_cols: Vec<Vec<u32>>,
+    /// Matrix order N.
     pub n: usize,
+    /// Node (rank) count.
     pub f: usize,
     /// One-time scatter duration measured at launch.
     pub t_scatter: f64,
@@ -232,13 +234,18 @@ fn node_rank(
 /// [`crate::solver::MatVecOp`] adapter so the iterative solvers can run
 /// over the message-passing cluster.
 pub struct MpiOp {
+    /// The long-lived node ranks.
     pub cluster: MpiCluster,
+    /// Applies driven through the cluster so far.
     pub iterations: usize,
+    /// Accumulated leader wall time, seconds.
     pub accumulated_wall: f64,
+    /// Accumulated max node compute time, seconds.
     pub accumulated_compute: f64,
 }
 
 impl MpiOp {
+    /// Launch the ranks and perform the one-time A scatter.
     pub fn new(d: &TwoLevelDecomposition) -> MpiOp {
         MpiOp {
             cluster: MpiCluster::launch(d),
@@ -289,7 +296,7 @@ mod tests {
         let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
         let y_ref = a.matvec(&x);
         for combo in Combination::all() {
-            let d = decompose(&a, combo, 3, 2, &DecomposeConfig::default());
+            let d = decompose(&a, combo, 3, 2, &DecomposeConfig::default()).unwrap();
             let mut cluster = MpiCluster::launch(&d);
             let (y, times) = cluster.matvec(&x);
             for i in 0..a.n_rows {
@@ -306,7 +313,7 @@ mod tests {
     #[test]
     fn repeated_iterations_reuse_distributed_matrix() {
         let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
-        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let mut cluster = MpiCluster::launch(&d);
         let x1 = vec![1.0; a.n_cols];
         let x2: Vec<f64> = (0..a.n_cols).map(|i| i as f64).collect();
@@ -324,7 +331,7 @@ mod tests {
         let a = crate::sparse::gen::generate_spd(150, 3, 900, 23).to_csr();
         let x_true: Vec<f64> = (0..150).map(|i| ((i % 11) as f64) * 0.2).collect();
         let b = a.matvec(&x_true);
-        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let mut op = MpiOp::new(&d);
         let r = Cg::new().tol(1e-10).max_iters(600).solve(&mut op, &b).unwrap();
         assert!(r.converged);

@@ -70,6 +70,25 @@ pub struct CommPlan {
 impl CommPlan {
     /// Precompute the plan from a decomposition, validating every index
     /// once so the execution hot path can trust the maps blindly.
+    ///
+    /// ```
+    /// use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
+    /// use pmvc::pmvc::CommPlan;
+    /// use pmvc::sparse::Coo;
+    ///
+    /// let a = Coo::from_triplets(
+    ///     4,
+    ///     4,
+    ///     [(0, 0, 2.0), (1, 1, 2.0), (2, 2, 2.0), (3, 3, 2.0), (0, 3, 1.0), (3, 0, 1.0)],
+    /// )
+    /// .unwrap()
+    /// .to_csr();
+    /// let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
+    /// let plan = CommPlan::build(&d).unwrap();       // all index maps frozen here
+    /// assert_eq!((plan.f, plan.c, plan.n), (2, 2, 4));
+    /// // per-iteration wire volumes are already priced in bytes
+    /// assert!(plan.scatter_x_bytes() > 0 && plan.gather_y_bytes() > 0);
+    /// ```
     pub fn build(d: &TwoLevelDecomposition) -> crate::Result<CommPlan> {
         anyhow::ensure!(d.f > 0 && d.c > 0, "degenerate decomposition {}x{}", d.f, d.c);
         anyhow::ensure!(
@@ -202,7 +221,7 @@ mod tests {
 
     fn plan_for(combo: Combination, f: usize, c: usize) -> (CommPlan, TwoLevelDecomposition) {
         let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 5).to_csr();
-        let d = decompose(&a, combo, f, c, &DecomposeConfig::default());
+        let d = decompose(&a, combo, f, c, &DecomposeConfig::default()).unwrap();
         (CommPlan::build(&d).unwrap(), d)
     }
 
@@ -246,7 +265,7 @@ mod tests {
     #[test]
     fn corrupt_row_map_rejected() {
         let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 5).to_csr();
-        let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let frag = d.fragments.iter_mut().find(|fr| !fr.global_rows.is_empty()).unwrap();
         frag.global_rows.pop();
         assert!(CommPlan::build(&d).is_err());
@@ -255,7 +274,7 @@ mod tests {
     #[test]
     fn out_of_range_id_rejected() {
         let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 5).to_csr();
-        let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let n = d.n as u32;
         let frag = d.fragments.iter_mut().find(|fr| !fr.global_cols.is_empty()).unwrap();
         frag.global_cols[0] = n + 7;

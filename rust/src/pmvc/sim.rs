@@ -113,7 +113,7 @@ mod tests {
         let a = generate(&MatrixSpec::paper("epb1").unwrap(), 1).to_csr();
         let topo = ClusterTopology::paravance(f);
         let net = NetworkPreset::TenGigabitEthernet.model();
-        let d = decompose(&a, combo, f, topo.cores_per_node(), &DecomposeConfig::default());
+        let d = decompose(&a, combo, f, topo.cores_per_node(), &DecomposeConfig::default()).unwrap();
         simulate(&d, &topo, &net)
     }
 
@@ -164,7 +164,7 @@ mod tests {
     fn slower_network_slower_comm_phases() {
         let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 1).to_csr();
         let topo = ClusterTopology::paravance(4);
-        let d = decompose(&a, Combination::NlHl, 4, 8, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 4, 8, &DecomposeConfig::default()).unwrap();
         let fast = simulate(&d, &topo, &NetworkPreset::Infiniband.model());
         let slow = simulate(&d, &topo, &NetworkPreset::GigabitEthernet.model());
         assert!(slow.t_scatter > fast.t_scatter);

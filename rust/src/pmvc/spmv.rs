@@ -82,7 +82,7 @@ mod tests {
         let y_ref = a.matvec(&x);
 
         for combo in Combination::all() {
-            let d = decompose(&a, combo, 3, 4, &DecomposeConfig::default());
+            let d = decompose(&a, combo, 3, 4, &DecomposeConfig::default()).unwrap();
             let mut y = vec![0.0; a.n_rows];
             let mut x_local = Vec::new();
             let mut y_local = Vec::new();
@@ -116,7 +116,7 @@ mod tests {
     #[test]
     fn gather_x_respects_map() {
         let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
-        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let x: Vec<f64> = (0..a.n_cols).map(|i| i as f64).collect();
         let mut xl = Vec::new();
         let frag = d.fragment(0, 0);

@@ -18,14 +18,18 @@ pub fn artifacts_dir() -> PathBuf {
 /// One manifest entry.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ManifestEntry {
+    /// Artifact file stem (e.g. `pfvc_r256_w32`).
     pub stem: String,
+    /// The shape bucket it was compiled for.
     pub bucket: Bucket,
+    /// Absolute path of the HLO text file.
     pub path: PathBuf,
 }
 
 /// Parsed artifact manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Entries in manifest order.
     pub entries: Vec<ManifestEntry>,
 }
 

@@ -32,13 +32,21 @@ pub enum SolverError {
     DimensionMismatch {
         /// What was mis-sized (`"rhs b"`, `"diagonal"`, `"operator"`).
         what: &'static str,
+        /// The length the solver required.
         expected: usize,
+        /// The length it received.
         got: usize,
     },
     /// Jacobi/SOR require every diagonal entry nonzero.
-    ZeroDiagonal { row: usize },
+    ZeroDiagonal {
+        /// Row whose diagonal entry is zero or absent.
+        row: usize,
+    },
     /// SOR relaxation factor outside (0, 2).
-    BadOmega { omega: f64 },
+    BadOmega {
+        /// The rejected relaxation factor.
+        omega: f64,
+    },
     /// The operator's backend failed during an `apply_into`.
     Backend(anyhow::Error),
 }
@@ -91,6 +99,20 @@ pub type Observer = Box<dyn FnMut(usize, f64) + Send>;
 /// implementor and populated through its builder methods
 /// (`.tol(..)`, `.max_iters(..)`, `.criterion(..)`,
 /// `.record_history(..)`, `.observer(..)`).
+///
+/// ```
+/// use pmvc::solver::{Cg, IterativeSolver};
+/// use pmvc::sparse::Coo;
+///
+/// // a 2x2 SPD system solved through the builder-configured options
+/// let mut a = Coo::from_triplets(2, 2, [(0, 0, 4.0), (1, 1, 2.0)]).unwrap().to_csr();
+/// let mut solver = Cg::new().tol(1e-12).max_iters(50).record_history(true);
+/// assert_eq!(solver.options().max_iters, 50);
+/// let r = solver.solve(&mut a, &[8.0, 6.0]).unwrap();
+/// assert!(r.converged);
+/// assert!((r.x[0] - 2.0).abs() < 1e-9 && (r.x[1] - 3.0).abs() < 1e-9);
+/// assert!(!r.history.is_empty()); // record_history captured residuals
+/// ```
 pub struct SolveOptions {
     /// Convergence tolerance (interpreted per [`StoppingCriterion`];
     /// the eigen solvers treat it as an absolute update-delta bound).
@@ -293,10 +315,15 @@ pub(crate) fn finish_report(
 /// sweep driver's `--solver` flag).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SolverKind {
+    /// Conjugate gradient (SPD systems).
     Cg,
+    /// Jacobi iteration.
     Jacobi,
+    /// Gauss-Seidel / successive over-relaxation.
     Sor,
+    /// Power iteration (dominant eigenpair / PageRank).
     Power,
+    /// Lanczos tridiagonalization (extreme Ritz values).
     Lanczos,
 }
 

@@ -22,6 +22,7 @@ pub struct Cg {
 }
 
 impl Cg {
+    /// CG with default [`SolveOptions`].
     pub fn new() -> Cg {
         Cg::default()
     }
@@ -109,9 +110,13 @@ impl IterativeSolver for Cg {
 /// CG convergence report (pre-redesign shape).
 #[derive(Clone, Debug)]
 pub struct CgResult {
+    /// Solution estimate.
     pub x: Vec<f64>,
+    /// Iterations performed.
     pub iterations: usize,
+    /// Final residual norm.
     pub residual_norm: f64,
+    /// Whether the tolerance was met.
     pub converged: bool,
     /// ‖r‖ after every iteration (for convergence plots).
     pub history: Vec<f64>,
@@ -183,7 +188,7 @@ mod tests {
         let mut serial = a.clone();
         let rs = Cg::new().tol(1e-10).max_iters(800).solve(&mut serial, &b).unwrap();
 
-        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let mut dist = DistributedOp::new(d).unwrap();
         let rd = Cg::new().tol(1e-10).max_iters(800).solve(&mut dist, &b).unwrap();
 

@@ -139,9 +139,13 @@ impl IterativeSolver for Sor {
 /// Gauss-Seidel / SOR report (pre-redesign shape).
 #[derive(Clone, Debug)]
 pub struct SorResult {
+    /// Solution estimate.
     pub x: Vec<f64>,
+    /// Iterations performed.
     pub iterations: usize,
+    /// Final residual norm.
     pub residual_norm: f64,
+    /// Whether the tolerance was met.
     pub converged: bool,
 }
 

@@ -125,9 +125,13 @@ impl IterativeSolver for Jacobi {
 /// Jacobi convergence report (pre-redesign shape).
 #[derive(Clone, Debug)]
 pub struct JacobiResult {
+    /// Solution estimate.
     pub x: Vec<f64>,
+    /// Iterations performed.
     pub iterations: usize,
+    /// Final residual norm.
     pub residual_norm: f64,
+    /// Whether the tolerance was met.
     pub converged: bool,
 }
 

@@ -35,6 +35,7 @@ pub struct Lanczos {
 }
 
 impl Lanczos {
+    /// Lanczos with default [`SolveOptions`] (`max_iters` = steps).
     pub fn new() -> Lanczos {
         Lanczos { opts: SolveOptions::default(), seed: 1, tridiagonal: None }
     }
@@ -304,7 +305,7 @@ mod tests {
         let mut serial = a.clone();
         let mut s1 = Lanczos::new().max_iters(40).seed(2);
         let rs = s1.solve(&mut serial, &[]).unwrap();
-        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let mut dist = DistributedOp::new(d).unwrap();
         let mut s2 = Lanczos::new().max_iters(40).seed(2);
         let rd = s2.solve(&mut dist, &[]).unwrap();

@@ -230,7 +230,7 @@ mod tests {
         let a = gen::generate_spd(300, 4, 1800, 3).to_csr();
         let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.01).sin()).collect();
         let mut serial = a.clone();
-        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let mut dist = DistributedOp::new(d).unwrap();
         let ys = serial.apply(&x).unwrap();
         let mut yd = vec![0.0; 300];
@@ -247,7 +247,7 @@ mod tests {
     #[test]
     fn distributed_op_plans_exactly_once() {
         let a = gen::generate_spd(120, 3, 700, 5).to_csr();
-        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let mut dist = DistributedOp::new(d).unwrap();
         let p0 = Arc::as_ptr(dist.plan().expect("engine-backed op has a plan"));
         let x = vec![1.0; 120];
@@ -263,7 +263,7 @@ mod tests {
     #[test]
     fn corrupt_decomposition_fails_eagerly() {
         let a = gen::generate_spd(80, 3, 400, 7).to_csr();
-        let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+        let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
         let frag = d.fragments.iter_mut().find(|fr| !fr.global_rows.is_empty()).unwrap();
         frag.global_rows.pop();
         assert!(DistributedOp::new(d).is_err());

@@ -24,6 +24,7 @@ pub struct Power {
 }
 
 impl Power {
+    /// Plain power iteration with default [`SolveOptions`].
     pub fn new() -> Power {
         Power { opts: SolveOptions::default(), damping: 1.0 }
     }
@@ -135,7 +136,9 @@ pub struct PowerResult {
     pub v: Vec<f64>,
     /// Rayleigh estimate of the dominant eigenvalue.
     pub lambda: f64,
+    /// Iterations performed.
     pub iterations: usize,
+    /// Whether the update delta met the tolerance.
     pub converged: bool,
 }
 

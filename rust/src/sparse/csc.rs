@@ -9,7 +9,9 @@ use super::{Coo, Csr};
 /// `ptr[j]..ptr[j+1]` delimits column j.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Csc {
+    /// Row count.
     pub n_rows: usize,
+    /// Column count.
     pub n_cols: usize,
     /// Column pointer, length `n_cols + 1`.
     pub ptr: Vec<usize>,

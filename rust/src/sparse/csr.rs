@@ -8,7 +8,9 @@ use super::{Coo, Csc};
 /// `ptr[i]..ptr[i+1]` delimits row i.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Csr {
+    /// Row count.
     pub n_rows: usize,
+    /// Column count.
     pub n_cols: usize,
     /// Row pointer, length `n_rows + 1` (`Ptr` in the paper).
     pub ptr: Vec<usize>,

@@ -30,7 +30,9 @@ pub struct Ell {
 /// A shape bucket `(R, K)` an AOT artifact was compiled for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Bucket {
+    /// Padded row capacity.
     pub rows: usize,
+    /// Padded per-row width capacity.
     pub width: usize,
 }
 
@@ -39,6 +41,7 @@ impl Bucket {
     /// by powers of two from 64 to 8192; widths are the VPU-lane-aligned
     /// ladder {8, 16, 32, 64, 128}.
     pub const ROWS: &'static [usize] = &[64, 128, 256, 512, 1024, 2048, 4096, 8192];
+    /// The width ladder (VPU-lane aligned).
     pub const WIDTHS: &'static [usize] = &[8, 16, 32, 64, 128];
 
     /// Smallest bucket covering `(rows, width)`, if one exists.

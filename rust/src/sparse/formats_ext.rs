@@ -20,7 +20,9 @@ use super::Csr;
 /// nonzeros live on few distinct diagonals.
 #[derive(Clone, Debug)]
 pub struct Dia {
+    /// Row count.
     pub n_rows: usize,
+    /// Column count.
     pub n_cols: usize,
     /// Offsets of stored diagonals (j − i), ascending.
     pub offsets: Vec<i64>,
@@ -87,17 +89,22 @@ impl Dia {
 /// k-th nonzero of every row packed contiguously (column-major jags).
 #[derive(Clone, Debug)]
 pub struct Jad {
+    /// Row count.
     pub n_rows: usize,
+    /// Column count.
     pub n_cols: usize,
     /// Permutation: `perm[k]` = original row index of packed row k.
     pub perm: Vec<u32>,
     /// Start of each jag in `val`/`col`; `jag_ptr.len() = max_len + 1`.
     pub jag_ptr: Vec<usize>,
+    /// Column index per packed nonzero.
     pub col: Vec<u32>,
+    /// Value per packed nonzero.
     pub val: Vec<f64>,
 }
 
 impl Jad {
+    /// Convert from CSR (stable sort by decreasing row length).
     pub fn from_csr(a: &Csr) -> Jad {
         let mut perm: Vec<u32> = (0..a.n_rows as u32).collect();
         perm.sort_by_key(|&i| std::cmp::Reverse(a.row_nnz(i as usize)));
@@ -119,6 +126,7 @@ impl Jad {
         Jad { n_rows: a.n_rows, n_cols: a.n_cols, perm, jag_ptr, col, val }
     }
 
+    /// Dense product `y = A·x`.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.n_cols);
         let mut yp = vec![0.0; self.n_rows]; // permuted accumulator
@@ -143,8 +151,11 @@ impl Jad {
 /// Block Sparse Row with square `b × b` blocks (dense blocks, zero-filled).
 #[derive(Clone, Debug)]
 pub struct Bsr {
+    /// Row count.
     pub n_rows: usize,
+    /// Column count.
     pub n_cols: usize,
+    /// Block edge size.
     pub b: usize,
     /// Block-row pointer (length `ceil(n_rows/b) + 1`).
     pub ptr: Vec<usize>,
@@ -155,6 +166,7 @@ pub struct Bsr {
 }
 
 impl Bsr {
+    /// Convert from CSR with `b × b` blocks.
     pub fn from_csr(a: &Csr, b: usize) -> Bsr {
         assert!(b >= 1);
         let nbr = a.n_rows.div_ceil(b);
@@ -188,6 +200,7 @@ impl Bsr {
         Bsr { n_rows: a.n_rows, n_cols: a.n_cols, b, ptr, bcol, blocks }
     }
 
+    /// Dense product `y = A·x`.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.n_cols);
         let b = self.b;
@@ -224,17 +237,22 @@ impl Bsr {
 /// must pull.
 #[derive(Clone, Debug)]
 pub struct CsrDu {
+    /// Row count.
     pub n_rows: usize,
+    /// Column count.
     pub n_cols: usize,
+    /// Row pointer into the nonzero count space.
     pub ptr: Vec<usize>,
     /// Variable-length encoded column stream.
     pub stream: Vec<u8>,
     /// Per-row byte offsets into `stream`.
     pub row_offsets: Vec<usize>,
+    /// Value per nonzero (row-major).
     pub val: Vec<f64>,
 }
 
 impl CsrDu {
+    /// Convert from CSR, delta-encoding each row's column indices.
     pub fn from_csr(a: &Csr) -> CsrDu {
         let mut stream = Vec::with_capacity(a.nnz());
         let mut row_offsets = Vec::with_capacity(a.n_rows + 1);
@@ -258,6 +276,7 @@ impl CsrDu {
         }
     }
 
+    /// Dense product `y = A·x`.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.n_cols);
         let mut y = vec![0.0; self.n_rows];

@@ -19,7 +19,10 @@ pub enum Family {
     Diagonal,
     /// Constant-ish band: every nonzero within `half_width` of the
     /// diagonal, row counts jittered around the mean (paper fig. 1.2).
-    Band { half_width: usize },
+    Band {
+        /// Maximum |i − j| of a nonzero.
+        half_width: usize,
+    },
     /// FEM-like stencil: a band carrying most nonzeros plus a fraction
     /// `long_range` of far couplings (mesh wrap-around / constraint rows),
     /// giving the irregular "bande variable" look (paper fig. 1.5).
@@ -27,18 +30,32 @@ pub enum Family {
     /// thermal/ex19/af23560 matrices are (near-)structurally symmetric,
     /// which matters to the partitioners: row and column nnz
     /// distributions coincide.
-    FemStencil { half_width: usize, long_range: f64, symmetric: bool },
+    FemStencil {
+        /// Band half-width carrying most nonzeros.
+        half_width: usize,
+        /// Fraction of far couplings outside the band.
+        long_range: f64,
+        /// Emit a structurally symmetric pattern.
+        symmetric: bool,
+    },
     /// Fully scattered irregular structure (paper fig. 1.6), with a
     /// skewed rows-load distribution (a few heavy rows, many light ones).
-    Scattered { skew: f64 },
+    Scattered {
+        /// Row-load skew exponent (higher = heavier heavy rows).
+        skew: f64,
+    },
 }
 
 /// Full description of a matrix to generate.
 #[derive(Clone, Debug)]
 pub struct MatrixSpec {
+    /// Matrix name (Table 4.2 names for the paper suite).
     pub name: &'static str,
+    /// Order N (square).
     pub n: usize,
+    /// Target nonzero count.
     pub nnz: usize,
+    /// Structural family.
     pub family: Family,
     /// Application domain from Table 4.2 (documentation only).
     pub domain: &'static str,
@@ -550,7 +567,7 @@ mod tests {
         let x: Vec<f64> = (1..=15).map(|v| v as f64).collect();
         let y_ref = a.matvec(&x);
         for combo in Combination::all() {
-            let d = decompose(&a, combo, 2, 4, &DecomposeConfig::default());
+            let d = decompose(&a, combo, 2, 4, &DecomposeConfig::default()).unwrap();
             d.validate(&a).unwrap();
             // NEZGT inter must split 104 nonzeros 52/52 (both weight
             // vectors admit an exact bisection; phase 2 finds it)

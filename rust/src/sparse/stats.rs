@@ -6,15 +6,25 @@ use super::Csr;
 /// Summary statistics of a sparse matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MatrixStats {
+    /// Row count.
     pub n_rows: usize,
+    /// Column count.
     pub n_cols: usize,
+    /// Stored nonzeros.
     pub nnz: usize,
+    /// Percent of entries that are nonzero.
     pub density_pct: f64,
+    /// Minimum row nonzero count.
     pub row_nnz_min: usize,
+    /// Maximum row nonzero count.
     pub row_nnz_max: usize,
+    /// Mean row nonzero count.
     pub row_nnz_mean: f64,
+    /// Standard deviation of the row nonzero counts.
     pub row_nnz_stddev: f64,
+    /// Minimum column nonzero count.
     pub col_nnz_min: usize,
+    /// Maximum column nonzero count.
     pub col_nnz_max: usize,
     /// Maximum |i - j| over nonzeros (paper's band half-width m).
     pub bandwidth: usize,

@@ -17,7 +17,7 @@ fn engine_reuse_matches_serial_for_50_vectors_all_combinations() {
     let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 11).to_csr();
     let mut rng = SplitMix64::new(0xE6);
     for combo in Combination::all() {
-        let d = decompose(&a, combo, 2, 4, &DecomposeConfig::default());
+        let d = decompose(&a, combo, 2, 4, &DecomposeConfig::default()).unwrap();
         let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
         // one scratch buffer for all 50 applies — the engine writes in
         // place, nothing is allocated per iteration
@@ -44,7 +44,7 @@ fn engine_reuse_matches_serial_for_50_vectors_all_combinations() {
 #[test]
 fn distributed_op_plans_once_for_many_iterations() {
     let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 2).to_csr();
-    let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+    let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
     let mut op = DistributedOp::new(d).unwrap();
     let p0 = Arc::as_ptr(op.plan().expect("engine-backed op exposes its plan"));
     let mut rng = SplitMix64::new(3);
@@ -67,7 +67,7 @@ fn all_backends_reachable_through_trait_and_agree_with_oneshot() {
     let (f, c) = (3usize, 2usize);
     let topo = topology_for(f, c);
     let net = NetworkPreset::TenGigabitEthernet.model();
-    let d = decompose(&a, Combination::NcHl, f, c, &DecomposeConfig::default());
+    let d = decompose(&a, Combination::NcHl, f, c, &DecomposeConfig::default()).unwrap();
     let y_oneshot = execute_threads(&d, &x).unwrap().y;
     for kind in BackendKind::all() {
         let mut backend = make_backend(kind, d.clone(), &topo, &net).unwrap();
@@ -96,7 +96,7 @@ fn solvers_run_over_any_backend() {
     let topo = topology_for(f, c);
     let net = NetworkPreset::TenGigabitEthernet.model();
     for kind in BackendKind::all() {
-        let d = decompose(&a, Combination::NlHl, f, c, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, f, c, &DecomposeConfig::default()).unwrap();
         let backend = make_backend(kind, d, &topo, &net).unwrap();
         let mut op = DistributedOp::with_backend(backend);
         let r = Cg::new().tol(1e-10).max_iters(600).solve(&mut op, &b).unwrap();
@@ -112,7 +112,7 @@ fn solvers_run_over_any_backend() {
 #[test]
 fn corrupt_decomposition_surfaces_error_instead_of_panicking() {
     let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
-    let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+    let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
     let frag = d.fragments.iter_mut().find(|fr| !fr.global_rows.is_empty()).unwrap();
     frag.global_rows.pop();
 

@@ -2,12 +2,13 @@
 //! every combination covers every nonzero, respects balance, and the
 //! hypergraph intra level beats NEZGT intra on communication volume.
 
-use pmvc::partition::combined::{decompose, Combination, DecomposeConfig, IntraMethod};
+use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
 use pmvc::partition::hypergraph::Hypergraph;
 use pmvc::partition::metrics::CommVolumes;
 use pmvc::partition::multilevel::Multilevel;
-use pmvc::partition::{baseline, Axis, Nezgt};
+use pmvc::partition::{baseline, make_partitioner, Axis, Nezgt, Partitioner, PartitionerKind};
 use pmvc::sparse::gen::{generate, MatrixSpec};
+use pmvc::sparse::{Coo, Csr};
 
 #[test]
 fn full_suite_decompositions_are_exact_covers() {
@@ -15,7 +16,7 @@ fn full_suite_decompositions_are_exact_covers() {
     for name in ["bcsstm09", "thermal", "t2dal", "epb1"] {
         let a = generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr();
         for combo in Combination::all() {
-            let d = decompose(&a, combo, 4, 8, &DecomposeConfig::default());
+            let d = decompose(&a, combo, 4, 8, &DecomposeConfig::default()).unwrap();
             d.validate(&a).unwrap_or_else(|e| panic!("{name} {combo}: {e}"));
             assert!(d.lb_nodes() < 1.6, "{name} {combo}: LB_nodes {}", d.lb_nodes());
         }
@@ -62,8 +63,8 @@ fn comm_volume_row_vs_col_inter_node() {
     // footprints partition N (scatter X = N) — the structural duality the
     // paper's ch. 3 §4.2.3 describes.
     let a = generate(&MatrixSpec::paper("epb1").unwrap(), 1).to_csr();
-    let dl = decompose(&a, Combination::NlHl, 8, 8, &DecomposeConfig::default());
-    let dc = decompose(&a, Combination::NcHc, 8, 8, &DecomposeConfig::default());
+    let dl = decompose(&a, Combination::NlHl, 8, 8, &DecomposeConfig::default()).unwrap();
+    let dc = decompose(&a, Combination::NcHc, 8, 8, &DecomposeConfig::default()).unwrap();
     let vl = CommVolumes::of(&dl);
     let vc = CommVolumes::of(&dc);
     assert_eq!(vl.total_gather(), a.n_rows);
@@ -75,18 +76,101 @@ fn comm_volume_row_vs_col_inter_node() {
 #[test]
 fn intra_method_ablation_hypergraph_vs_nezgt() {
     let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 5).to_csr();
-    let hyp = decompose(&a, Combination::NlHl, 4, 8, &DecomposeConfig::default());
-    let nez = decompose(
-        &a,
-        Combination::NlHl,
-        4,
-        8,
-        &DecomposeConfig { intra_method: IntraMethod::Nezgt, ..Default::default() },
-    );
+    let hyp = decompose(&a, Combination::NlHl, 4, 8, &DecomposeConfig::default()).unwrap();
+    let nez = decompose(&a, Combination::NlHl, 4, 8, &DecomposeConfig::nezgt_both()).unwrap();
     hyp.validate(&a).unwrap();
     nez.validate(&a).unwrap();
     // NEZGT intra balances at least as well (it optimizes only balance)
     assert!(nez.lb_cores() <= hyp.lb_cores() + 0.35);
+}
+
+/// A block-diagonal matrix (plus a thin inter-block coupling) whose
+/// rows are *striped*: row `r` belongs to block `r % blocks`, so the
+/// block structure is invisible to index order but fully visible to
+/// connectivity. Contiguous index splits shred every block across every
+/// part; a connectivity-driven partitioner can keep blocks whole.
+fn striped_block_diagonal_plus_coupling(blocks: usize, size: usize) -> Csr {
+    let n = blocks * size;
+    let row_of = |b: usize, i: usize| (i * blocks + b) as u32;
+    let mut m = Coo::new(n, n);
+    for b in 0..blocks {
+        for i in 0..size {
+            for j in 0..size {
+                m.push(row_of(b, i), row_of(b, j), 1.0);
+            }
+        }
+    }
+    // sparse coupling: one symmetric link between consecutive blocks
+    for b in 1..blocks {
+        m.push(row_of(b - 1, 0), row_of(b, 0), 0.5);
+        m.push(row_of(b, 0), row_of(b - 1, 0), 0.5);
+    }
+    m.to_csr()
+}
+
+#[test]
+fn multilevel_beats_contiguous_blocks_on_lambda1_cut() {
+    // 8 striped blocks of 8 into k=4 (2 whole blocks per part is both
+    // balanced and nearly cut-free): contiguous quarters intersect every
+    // block, giving λ ≈ 4 on every column net.
+    let a = striped_block_diagonal_plus_coupling(8, 8);
+    let hg = Hypergraph::from_matrix(&a, Axis::Row);
+    let ml = make_partitioner(PartitionerKind::Hypergraph).unwrap();
+    let contig = make_partitioner(PartitionerKind::Contig).unwrap();
+    let p_ml = ml.partition(&a, Axis::Row, 4).unwrap();
+    let p_ct = contig.partition(&a, Axis::Row, 4).unwrap();
+    let cut_ml = hg.lambda_minus_one_cut(&p_ml);
+    let cut_ct = hg.lambda_minus_one_cut(&p_ct);
+    assert!(
+        cut_ml < cut_ct,
+        "multilevel cut {cut_ml} must beat contiguous blocks cut {cut_ct} on block structure"
+    );
+}
+
+#[test]
+fn every_registered_partitioner_produces_exact_covers() {
+    // the registry end-to-end: any 1-D strategy at either level still
+    // yields a valid decomposition (all nonzeros exactly once)
+    let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+    for inter in PartitionerKind::one_dimensional() {
+        let cfg = DecomposeConfig::with_kinds(inter, PartitionerKind::Hypergraph).unwrap();
+        let d = decompose(&a, Combination::NlHl, 4, 4, &cfg).unwrap();
+        d.validate(&a).unwrap_or_else(|e| panic!("inter={inter}: {e}"));
+        assert_eq!(d.quality.inter_partitioner, inter.name());
+        assert!(d.quality.comm_bytes > 0, "inter={inter}");
+    }
+}
+
+#[test]
+fn nezgt_vs_hypergraph_inter_trade_balance_for_cut() {
+    // the paper's central trade-off, now selectable: NEZGT optimizes
+    // LB_nodes, the hypergraph optimizes the (λ−1) cut — each should
+    // win its own metric on a structured matrix
+    let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 1).to_csr();
+    let nez = decompose(&a, Combination::NlHl, 8, 2, &DecomposeConfig::default()).unwrap();
+    let cfg =
+        DecomposeConfig::with_kinds(PartitionerKind::Hypergraph, PartitionerKind::Hypergraph)
+            .unwrap();
+    let hyp = decompose(&a, Combination::NlHl, 8, 2, &cfg).unwrap();
+    assert!(
+        nez.quality.lb_nodes <= hyp.quality.lb_nodes + 1e-9,
+        "NEZGT LB_nodes {} vs hypergraph {}",
+        nez.quality.lb_nodes,
+        hyp.quality.lb_nodes
+    );
+    assert!(
+        hyp.quality.cut < nez.quality.cut,
+        "hypergraph cut {} vs NEZGT {}",
+        hyp.quality.cut,
+        nez.quality.cut
+    );
+    // and the cut difference prices through to bytes on the wire
+    assert!(
+        hyp.quality.comm_bytes < nez.quality.comm_bytes,
+        "hypergraph comm {} B vs NEZGT {} B",
+        hyp.quality.comm_bytes,
+        nez.quality.comm_bytes
+    );
 }
 
 #[test]
@@ -94,7 +178,7 @@ fn scaling_f_reduces_fragment_sizes() {
     let a = generate(&MatrixSpec::paper("thermal").unwrap(), 1).to_csr();
     let mut prev_max = usize::MAX;
     for f in [2usize, 4, 8, 16] {
-        let d = decompose(&a, Combination::NlHl, f, 8, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, f, 8, &DecomposeConfig::default()).unwrap();
         let max_core = d.core_loads().into_iter().max().unwrap() as usize;
         assert!(max_core <= prev_max, "f={f}: {max_core} > {prev_max}");
         prev_max = max_core;

@@ -21,7 +21,7 @@ fn threaded_execution_equals_serial_across_suite() {
         let y_ref = a.matvec(&x);
         for combo in Combination::all() {
             for (f, c) in [(2usize, 2usize), (3, 4), (5, 2)] {
-                let d = decompose(&a, combo, f, c, &DecomposeConfig::default());
+                let d = decompose(&a, combo, f, c, &DecomposeConfig::default()).unwrap();
                 let r = execute_threads(&d, &x).unwrap();
                 for i in 0..a.n_rows {
                     assert!(
@@ -48,7 +48,7 @@ fn simulator_reproduces_paper_orderings_epb1() {
         let mut best_constr = (f64::INFINITY, Combination::NlHl);
         let mut best_total = (f64::INFINITY, Combination::NlHl);
         for combo in Combination::all() {
-            let d = decompose(&a, combo, f, 8, &DecomposeConfig::default());
+            let d = decompose(&a, combo, f, 8, &DecomposeConfig::default()).unwrap();
             let t = simulate(&d, &topo, &net);
             if t.t_construct < best_constr.0 {
                 best_constr = (t.t_construct, combo);
@@ -71,7 +71,7 @@ fn makespan_scales_down_with_cluster_size() {
     let mut prev = f64::INFINITY;
     for f in [2usize, 8, 32] {
         let topo = ClusterTopology::paravance(f);
-        let d = decompose(&a, Combination::NlHl, f, 8, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, f, 8, &DecomposeConfig::default()).unwrap();
         let t = simulate(&d, &topo, &net);
         assert!(t.t_compute < prev, "f={f}");
         prev = t.t_compute;
@@ -85,11 +85,11 @@ fn scatter_grows_with_cluster_size_on_small_matrix() {
     let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
     let net = NetworkPreset::TenGigabitEthernet.model();
     let t2 = {
-        let d = decompose(&a, Combination::NlHl, 2, 8, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 2, 8, &DecomposeConfig::default()).unwrap();
         simulate(&d, &ClusterTopology::paravance(2), &net).t_scatter
     };
     let t64 = {
-        let d = decompose(&a, Combination::NlHl, 64, 8, &DecomposeConfig::default());
+        let d = decompose(&a, Combination::NlHl, 64, 8, &DecomposeConfig::default()).unwrap();
         simulate(&d, &ClusterTopology::paravance(64), &net).t_scatter
     };
     assert!(t64 > t2, "{t64} !> {t2}");
@@ -101,7 +101,7 @@ fn mpi_backend_agrees_with_threaded_backend() {
     let a = generate(&MatrixSpec::paper("thermal").unwrap(), 8).to_csr();
     let x = x_for(a.n_cols, 4);
     for combo in [Combination::NlHl, Combination::NcHc] {
-        let d = decompose(&a, combo, 4, 2, &DecomposeConfig::default());
+        let d = decompose(&a, combo, 4, 2, &DecomposeConfig::default()).unwrap();
         let rt = execute_threads(&d, &x).unwrap();
         let mut cluster = MpiCluster::launch(&d);
         let (ym, times) = cluster.matvec(&x);
@@ -152,7 +152,7 @@ fn alternate_formats_agree_with_distributed_pipeline() {
     use pmvc::sparse::formats_ext::{CsrDu, Jad};
     let a = generate(&MatrixSpec::paper("spmsrtls").unwrap(), 2).to_csr();
     let x = x_for(a.n_cols, 6);
-    let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default());
+    let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default()).unwrap();
     let r = execute_threads(&d, &x).unwrap();
     let jad = Jad::from_csr(&a).matvec(&x);
     let du = CsrDu::from_csr(&a).matvec(&x);
@@ -166,7 +166,7 @@ fn alternate_formats_agree_with_distributed_pipeline() {
 fn phase_times_are_consistent() {
     let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 2).to_csr();
     let x = x_for(a.n_cols, 1);
-    let d = decompose(&a, Combination::NlHc, 2, 4, &DecomposeConfig::default());
+    let d = decompose(&a, Combination::NlHc, 2, 4, &DecomposeConfig::default()).unwrap();
     let r = execute_threads(&d, &x).unwrap();
     let t = r.times;
     assert!((t.t_total() - (t.t_compute + t.t_gather + t.t_construct)).abs() < 1e-15);

@@ -73,7 +73,7 @@ fn whole_decomposition_through_xla_matches_serial() {
     let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
 
     for combo in [Combination::NlHl, Combination::NcHc] {
-        let d = decompose(&a, combo, 2, 4, &DecomposeConfig::default());
+        let d = decompose(&a, combo, 2, 4, &DecomposeConfig::default()).unwrap();
         let mut y = vec![0f64; a.n_rows];
         for frag in &d.fragments {
             if frag.csr.nnz() == 0 {

@@ -57,7 +57,7 @@ fn solve_over(
             let (f, c) = (2usize, 2usize);
             let topo = topology_for(f, c);
             let net = NetworkPreset::TenGigabitEthernet.model();
-            let d = decompose(a, Combination::NlHl, f, c, &DecomposeConfig::default());
+            let d = decompose(a, Combination::NlHl, f, c, &DecomposeConfig::default()).unwrap();
             let be = make_backend(bk, d, &topo, &net).unwrap();
             let mut op = DistributedOp::with_backend(be);
             let report = solver.solve(&mut op, b).unwrap();
@@ -129,7 +129,7 @@ fn trait_objects_sweep_all_solvers() {
 #[test]
 fn corrupted_decomposition_makes_solve_fail() {
     let (a, b) = spd_system();
-    let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default());
+    let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
     let frag = d.fragments.iter_mut().find(|fr| !fr.global_rows.is_empty()).unwrap();
     frag.global_rows.pop();
     // the plan validator rejects the corruption eagerly
@@ -164,7 +164,7 @@ fn residual_history_and_observer_survive_the_distributed_path() {
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
     let (a, b) = spd_system();
-    let d = decompose(&a, Combination::NcHc, 2, 2, &DecomposeConfig::default());
+    let d = decompose(&a, Combination::NcHc, 2, 2, &DecomposeConfig::default()).unwrap();
     let mut op = DistributedOp::new(d).unwrap();
     let seen = Arc::new(AtomicUsize::new(0));
     let s2 = Arc::clone(&seen);

@@ -38,7 +38,7 @@ fn prop_every_nonzero_owned_exactly_once() {
         let combo = Combination::all()[rng.next_below(4)];
         let f = 1 + rng.next_below(6);
         let c = 1 + rng.next_below(6);
-        let d = decompose(&a, combo, f, c, &DecomposeConfig::default());
+        let d = decompose(&a, combo, f, c, &DecomposeConfig::default()).unwrap();
         d.validate(&a)
             .unwrap_or_else(|e| panic!("trial {trial} ({combo} f={f} c={c}): {e}"));
     }
@@ -53,7 +53,7 @@ fn prop_distributed_product_equals_serial() {
         let f = 1 + rng.next_below(4);
         let c = 1 + rng.next_below(4);
         let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-5.0, 5.0)).collect();
-        let d = decompose(&a, combo, f, c, &DecomposeConfig::default());
+        let d = decompose(&a, combo, f, c, &DecomposeConfig::default()).unwrap();
         let r = execute_threads(&d, &x).unwrap();
         let y_ref = a.matvec(&x);
         for i in 0..a.n_rows {
@@ -117,7 +117,7 @@ fn prop_comm_plan_maps_are_permutations_consistent_with_decomposition() {
         let combo = Combination::all()[rng.next_below(4)];
         let f = 1 + rng.next_below(5);
         let c = 1 + rng.next_below(5);
-        let d = decompose(&a, combo, f, c, &DecomposeConfig::default());
+        let d = decompose(&a, combo, f, c, &DecomposeConfig::default()).unwrap();
         let plan = CommPlan::build(&d)
             .unwrap_or_else(|e| panic!("trial {trial} ({combo} f={f} c={c}): {e}"));
         assert_eq!((plan.f, plan.c, plan.n), (f, c, a.n_rows));
@@ -167,7 +167,7 @@ fn prop_footprints_cover_matrix_dimensions() {
         let a = random_matrix(&mut rng).to_csr();
         let combo = Combination::all()[rng.next_below(4)];
         let f = 1 + rng.next_below(5);
-        let d = decompose(&a, combo, f, 2, &DecomposeConfig::default());
+        let d = decompose(&a, combo, f, 2, &DecomposeConfig::default()).unwrap();
         // union of node X footprints must cover every column with a nonzero
         let mut covered = vec![false; a.n_cols];
         for node in 0..f {
@@ -205,6 +205,43 @@ fn prop_ell_roundtrip_matches_csr() {
         for i in 0..frag.n_rows {
             let err = (y_ell[i] as f64 - y_csr[i]).abs();
             assert!(err < 1e-3 * (1.0 + y_csr[i].abs()), "trial {trial} row {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_2d_matvec_equals_serial() {
+    // the ch. 3 §2.4 "version bloc 2D" invariant: any nonzero-level
+    // assignment (checkerboard grid or fine-grain hypergraph) must
+    // reproduce the serial product exactly
+    use pmvc::partition::hypergraph2d::{checkerboard, fine_grain_partition};
+    let mut rng = SplitMix64::new(0x2D2D);
+    for trial in 0..12 {
+        let a = random_matrix(&mut rng).to_csr();
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-3.0, 3.0)).collect();
+        let y_ref = a.matvec(&x);
+        let p = 1 + rng.next_below(4);
+        let q = 1 + rng.next_below(4);
+        let mut owners = vec![checkerboard(&a, p, q)];
+        if a.nnz() < 3000 {
+            // the fine-grain model has one vertex per nonzero — keep the
+            // multilevel partitioner's debug-mode cost bounded
+            owners.push(fine_grain_partition(&a, p * q, &Multilevel::default()));
+        }
+        for owner in owners {
+            assert_eq!(owner.owner.len(), a.nnz(), "trial {trial} ({p}x{q})");
+            assert_eq!(
+                owner.loads(a.nnz()).iter().sum::<u64>(),
+                a.nnz() as u64,
+                "trial {trial}: every nonzero owned exactly once"
+            );
+            let y = owner.matvec_2d(&a, &x);
+            for i in 0..a.n_rows {
+                assert!(
+                    (y[i] - y_ref[i]).abs() < 1e-9 * (1.0 + y_ref[i].abs()),
+                    "trial {trial} ({p}x{q}) row {i}"
+                );
+            }
         }
     }
 }
