@@ -177,7 +177,7 @@ fn main() {
             let t_static = t0.elapsed().as_secs_f64() / iters as f64;
             let t1 = std::time::Instant::now();
             for _ in 0..iters {
-                std::hint::black_box(pmvc::pmvc::dynamic::dynamic_spmv(&a, &x, workers, 64));
+                std::hint::black_box(pmvc::pmvc::dynamic::dynamic_spmv(&a, &x, workers, 64).unwrap());
             }
             let t_dyn = t1.elapsed().as_secs_f64() / iters as f64;
             println!(

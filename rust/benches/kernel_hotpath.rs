@@ -12,7 +12,7 @@
 
 use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
 use pmvc::pmvc::spmv::csr_mv;
-use pmvc::pmvc::{execute_threads, PmvcEngine};
+use pmvc::pmvc::{execute_threads, OverlapMode, PmvcEngine};
 use pmvc::rng::SplitMix64;
 use pmvc::sparse::ell::Ell;
 use pmvc::sparse::gen::{generate, MatrixSpec};
@@ -169,6 +169,53 @@ fn main() {
         println!("  apply (Vec per call):     {:>9.1}µs/apply", per_alloc * 1e6);
         println!("  apply_into (scratch):     {:>9.1}µs/apply", per_into * 1e6);
         println!("  allocation-free gain:     {:>9.2}x", per_alloc / per_into);
+    }
+
+    // blocking vs overlapped schedule on one engine: the double-buffered
+    // pipeline hides the halo pack behind interior-row computation. The
+    // --test smoke asserts the two schedules agree bitwise, which is the
+    // hot-path regression gate for the overlap path.
+    {
+        let applies = if test_mode { 5usize } else { 100usize };
+        // t2dal in test mode, NOT the diagonal bcsstm09: a banded matrix
+        // has non-empty halo and boundary sets, so the bitwise gate
+        // actually exercises the two-wave protocol
+        let mat = if test_mode { "t2dal" } else { "epb1" };
+        let a = generate(&MatrixSpec::paper(mat).unwrap(), 1).to_csr();
+        let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default()).unwrap();
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+        let mut y_blocking = vec![0.0; a.n_rows];
+        let mut y_overlapped = vec![0.0; a.n_rows];
+        engine.apply_into(&x, &mut y_blocking).unwrap(); // warm the pool
+
+        let t0 = Instant::now();
+        for _ in 0..applies {
+            engine.apply_into(&x, &mut y_blocking).unwrap();
+            std::hint::black_box(&y_blocking);
+        }
+        let per_blocking = t0.elapsed().as_secs_f64() / applies as f64;
+
+        engine.set_overlap_mode(OverlapMode::Overlapped);
+        engine.apply_into(&x, &mut y_overlapped).unwrap(); // warm the split path
+        let mut saved = 0.0;
+        let t1 = Instant::now();
+        for _ in 0..applies {
+            saved += engine.apply_into(&x, &mut y_overlapped).unwrap().t_overlap_saved;
+            std::hint::black_box(&y_overlapped);
+        }
+        let per_overlapped = t1.elapsed().as_secs_f64() / applies as f64;
+
+        // correctness gate: the schedules must agree bitwise
+        assert_eq!(
+            y_blocking, y_overlapped,
+            "overlapped schedule diverges from blocking"
+        );
+
+        println!("\nblocking vs overlapped schedule ({mat}, NL-HL, 2x4, {applies} applies):");
+        println!("  blocking apply_into:      {:>9.1}µs/apply", per_blocking * 1e6);
+        println!("  overlapped apply_into:    {:>9.1}µs/apply", per_overlapped * 1e6);
+        println!("  halo hidden per apply:    {:>9.1}µs", saved / applies as f64 * 1e6);
     }
 
     // XLA artifact path (if built)

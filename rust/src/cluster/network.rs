@@ -120,8 +120,8 @@ mod tests {
         // more nodes costs MORE because of per-message overheads
         let m = NetworkPreset::TenGigabitEthernet.model();
         let total = 1_000_000usize;
-        let t2 = m.scatter(&vec![total / 2; 2]);
-        let t64 = m.scatter(&vec![total / 64; 64]);
+        let t2 = m.scatter(&[total / 2; 2]);
+        let t64 = m.scatter(&[total / 64; 64]);
         assert!(t64 > t2);
     }
 

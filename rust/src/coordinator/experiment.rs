@@ -17,7 +17,7 @@
 
 use crate::cluster::{ClusterTopology, NetworkPreset};
 use crate::partition::combined::{decompose, Combination, DecomposeConfig};
-use crate::pmvc::{make_backend, BackendKind, ExecBackend, PhaseTimes};
+use crate::pmvc::{make_backend, BackendKind, ExecBackend, OverlapMode, PhaseTimes};
 use crate::solver::{make_solver, DistributedOp, IterativeSolver, SolverKind};
 use crate::sparse::gen::{generate, MatrixSpec};
 use crate::sparse::Csr;
@@ -39,6 +39,10 @@ pub struct ExperimentConfig {
     /// measured backends spawn f·c real threads per cell, so keep the
     /// grid small when selecting them).
     pub backend: BackendKind,
+    /// Communication/computation schedule for every cell (default:
+    /// the paper's blocking pipeline; `Overlapped` hides the halo
+    /// exchange behind interior rows and reports `t_overlap_saved`).
+    pub overlap: OverlapMode,
     /// Iterative solver to drive through each cell's backend (None:
     /// one probe PMVC per cell, the paper's measurement mode).
     pub solver: Option<SolverKind>,
@@ -61,6 +65,7 @@ impl Default for ExperimentConfig {
             cores_per_node: 8,
             network: NetworkPreset::TenGigabitEthernet,
             backend: BackendKind::Sim,
+            overlap: OverlapMode::Blocking,
             solver: None,
             solver_tol: 1e-10,
             solver_max_iters: 1000,
@@ -84,6 +89,8 @@ pub struct SweepRow {
     pub times: PhaseTimes,
     /// Which backend produced the times (`threads` | `sim` | `mpi`).
     pub backend: &'static str,
+    /// Which schedule the cell ran (`blocking` | `overlapped`).
+    pub overlap: &'static str,
     /// Which solver ran through the cell (`probe` when the cell is a
     /// single measurement PMVC).
     pub solver: &'static str,
@@ -144,6 +151,7 @@ fn mean_times(acc: &PhaseTimes, applies: usize) -> PhaseTimes {
         t_scatter: acc.t_scatter / k,
         t_gather: acc.t_gather / k,
         t_construct: acc.t_construct / k,
+        t_overlap_saved: acc.t_overlap_saved / k,
     }
 }
 
@@ -176,6 +184,7 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
                 let d = decompose(&a, combo, f, cfg.cores_per_node, &cfg.decompose)?;
                 let quality = d.quality.clone();
                 let mut backend = make_backend(cfg.backend, d, &topo, &net)?;
+                backend.set_overlap_mode(cfg.overlap)?;
                 let row = match cfg.solver {
                     None => {
                         // warm-up apply: the first call through a
@@ -192,6 +201,7 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
                             f,
                             times,
                             backend: cfg.backend.name(),
+                            overlap: cfg.overlap.name(),
                             solver: "probe",
                             iterations: 1,
                             converged: true,
@@ -217,6 +227,7 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
                             f,
                             times: mean_times(&op.accumulated, op.applications),
                             backend: cfg.backend.name(),
+                            overlap: cfg.overlap.name(),
                             solver: kind.name(),
                             iterations: report.iterations,
                             converged: report.converged,
@@ -308,12 +319,43 @@ mod tests {
         for r in &rows {
             assert!(r.times.t_total() > 0.0, "{} {} f={}", r.matrix, r.combo, r.f);
             assert_eq!(r.backend, "sim");
+            assert_eq!(r.overlap, "blocking");
+            assert_eq!(r.times.t_overlap_saved, 0.0);
             assert_eq!(r.solver, "probe");
             assert_eq!(r.iterations, 1);
             assert!(r.converged);
             assert_eq!(r.partitioner, "nezgt+hypergraph");
             assert!(r.comm_bytes > 0, "{} {} f={}", r.matrix, r.combo, r.f);
         }
+    }
+
+    #[test]
+    fn overlapped_sweep_reports_savings_on_contiguous_inter_epb1() {
+        // the acceptance scenario: a communication-heavy decomposition
+        // (contiguous inter blocks) on epb1, priced by the sim backend,
+        // must show hidden exchange time in the new column
+        use crate::partition::PartitionerKind;
+        let cfg = ExperimentConfig {
+            matrices: vec!["epb1".into()],
+            node_counts: vec![4],
+            combos: vec![Combination::NlHl],
+            cores_per_node: 8,
+            overlap: OverlapMode::Overlapped,
+            decompose: DecomposeConfig::with_kinds(
+                PartitionerKind::Contig,
+                PartitionerKind::Hypergraph,
+            )
+            .unwrap(),
+            ..Default::default()
+        };
+        let rows = run_sweep(&cfg).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].overlap, "overlapped");
+        assert!(
+            rows[0].times.t_overlap_saved > 0.0,
+            "sim must price hidden exchange time, got {}",
+            rows[0].times.t_overlap_saved
+        );
     }
 
     #[test]
@@ -385,18 +427,22 @@ mod tests {
     #[test]
     fn sweep_runs_on_measured_backends() {
         for kind in [BackendKind::Threads, BackendKind::Mpi] {
-            let cfg = ExperimentConfig {
-                matrices: vec!["bcsstm09".into()],
-                node_counts: vec![2],
-                combos: vec![Combination::NlHl],
-                cores_per_node: 2,
-                backend: kind,
-                ..Default::default()
-            };
-            let rows = run_sweep(&cfg).unwrap();
-            assert_eq!(rows.len(), 1);
-            assert_eq!(rows[0].backend, kind.name());
-            assert!(rows[0].times.t_total() > 0.0, "{kind}");
+            for overlap in [OverlapMode::Blocking, OverlapMode::Overlapped] {
+                let cfg = ExperimentConfig {
+                    matrices: vec!["bcsstm09".into()],
+                    node_counts: vec![2],
+                    combos: vec![Combination::NlHl],
+                    cores_per_node: 2,
+                    backend: kind,
+                    overlap,
+                    ..Default::default()
+                };
+                let rows = run_sweep(&cfg).unwrap();
+                assert_eq!(rows.len(), 1);
+                assert_eq!(rows[0].backend, kind.name());
+                assert_eq!(rows[0].overlap, overlap.name());
+                assert!(rows[0].times.t_total() > 0.0, "{kind}/{overlap}");
+            }
         }
     }
 

@@ -65,15 +65,18 @@ pub fn recap_table(rows: &[SweepRow], combos: &[Combination]) -> String {
 /// partition-quality columns record which strategies fragmented the
 /// cell (`partitioner` = `inter+intra`), the (λ−1) cut of the
 /// inter-node partition, and the per-iteration wire volume in bytes.
+/// The final pair records the schedule: `overlap` is the cell's
+/// [`crate::pmvc::OverlapMode`] and `t_overlap_saved` the exchange time
+/// it hid behind interior computation (0 for blocking cells).
 pub fn to_csv(rows: &[SweepRow]) -> String {
     let mut out = String::from(
-        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend,solver,iterations,converged,partitioner,cut,comm_bytes\n",
+        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved\n",
     );
     for r in rows {
         let t = &r.times;
         let _ = writeln!(
             out,
-            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{},{},{},{},{},{},{}",
+            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{},{},{},{},{},{},{},{},{:.9}",
             r.matrix,
             r.combo.name(),
             r.f,
@@ -91,7 +94,9 @@ pub fn to_csv(rows: &[SweepRow]) -> String {
             r.converged,
             r.partitioner,
             r.cut,
-            r.comm_bytes
+            r.comm_bytes,
+            r.overlap,
+            t.t_overlap_saved
         );
     }
     out
@@ -222,14 +227,30 @@ mod tests {
     fn csv_has_header_and_rows() {
         let csv = to_csv(&rows());
         assert!(csv.starts_with("matrix,combo"));
-        assert!(csv
-            .lines()
-            .next()
-            .unwrap()
-            .ends_with(",backend,solver,iterations,converged,partitioner,cut,comm_bytes"));
+        assert!(csv.lines().next().unwrap().ends_with(
+            ",backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved"
+        ));
         assert_eq!(csv.lines().count(), 1 + 2 * 4 * 1);
         for line in csv.lines().skip(1) {
             assert!(line.contains(",sim,probe,1,true,nezgt+hypergraph,"), "probe row: {line}");
+            assert!(line.contains(",blocking,0.000000000"), "blocking schedule column: {line}");
+        }
+    }
+
+    #[test]
+    fn csv_carries_overlapped_cells() {
+        use crate::pmvc::OverlapMode;
+        let cfg = ExperimentConfig {
+            matrices: vec!["bcsstm09".into()],
+            node_counts: vec![2],
+            cores_per_node: 4,
+            overlap: OverlapMode::Overlapped,
+            ..Default::default()
+        };
+        let rows = run_sweep(&cfg).unwrap();
+        let csv = to_csv(&rows);
+        for line in csv.lines().skip(1) {
+            assert!(line.contains(",overlapped,"), "overlap column: {line}");
         }
     }
 

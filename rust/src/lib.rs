@@ -36,10 +36,13 @@
 //! * [`cluster`] — machine model: topology, NUMA banks, α–β network.
 //! * [`pmvc`] — the distributed PMVC pipeline, split plan/engine:
 //!   [`pmvc::plan`] precomputes the immutable communication plan
-//!   (footprints, row maps, byte volumes) once per decomposition;
+//!   (footprints, row maps, byte volumes, and the interior/boundary
+//!   row split of the overlapped schedule) once per decomposition;
 //!   [`pmvc::engine`] drives a persistent worker pool against it;
 //!   [`pmvc::backend`] unifies the threaded, simulated and MPI-style
-//!   runtimes behind one `ExecBackend` trait.
+//!   runtimes behind one `ExecBackend` trait, each honoring the
+//!   [`pmvc::OverlapMode`] knob (hide the halo exchange behind
+//!   interior-row computation, or run the paper's blocking pipeline).
 //! * [`runtime`] — PJRT client, artifact loading, executable cache.
 //! * [`solver`] — CG, Jacobi, Gauss-Seidel/SOR, Lanczos and power
 //!   iteration unified behind the [`solver::IterativeSolver`] /

@@ -7,17 +7,90 @@
 //! call sites (solvers, the experiment driver, the CLI) one interface —
 //! construct once per decomposition, `apply` once per iteration — so
 //! selecting a backend is a value choice ([`BackendKind`]) instead of a
-//! hard-coded function call.
+//! hard-coded function call. The communication/computation schedule is
+//! a value choice too ([`OverlapMode`], set through
+//! [`ExecBackend::set_overlap_mode`]) and every backend honors it.
 
 use super::engine::PmvcEngine;
 use super::exec::ExecResult;
 use super::exec_mpi::MpiCluster;
 use super::phases::PhaseTimes;
-use super::sim::simulate;
+use super::sim::simulate_with;
 use super::spmv;
 use crate::cluster::{ClusterTopology, NetworkModel};
 use crate::partition::combined::TwoLevelDecomposition;
 use std::sync::Arc;
+
+/// When the per-iteration X exchange runs relative to the PFVC.
+///
+/// `Blocking` is the paper's strictly sequential pipeline
+/// (scatter → compute → collect). `Overlapped` is the double-buffered
+/// schedule of Agullo et al. (2012): the locally-owned X goes out
+/// first, every core computes its *interior* rows while the halo is in
+/// flight, and the *boundary* rows finish once it lands. Both schedules
+/// replay the same frozen [`super::plan::CommPlan`] and produce
+/// bitwise-identical products:
+///
+/// ```
+/// use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
+/// use pmvc::pmvc::{OverlapMode, PmvcEngine};
+/// use pmvc::sparse::Coo;
+/// use std::sync::Arc;
+///
+/// let a = Coo::from_triplets(
+///     4,
+///     4,
+///     [(0, 0, 2.0), (1, 1, 2.0), (2, 2, 2.0), (3, 3, 2.0), (0, 3, 1.0), (3, 0, 1.0)],
+/// )
+/// .unwrap()
+/// .to_csr();
+/// let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
+/// let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+/// let x = [1.0, 2.0, 3.0, 4.0];
+///
+/// let blocking = engine.apply(&x).unwrap().y;      // sequential schedule
+/// engine.set_overlap_mode(OverlapMode::Overlapped);
+/// let overlapped = engine.apply(&x).unwrap();      // halo hidden behind interior rows
+/// assert_eq!(blocking, overlapped.y);              // same product, bit for bit
+/// assert!(overlapped.times.t_overlap_saved >= 0.0);
+/// assert_eq!(OverlapMode::parse("overlapped"), Some(OverlapMode::Overlapped));
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// Scatter completes before any core computes (the paper's
+    /// Tables 4.3–4.6 schedule).
+    #[default]
+    Blocking,
+    /// Interior rows compute while the halo exchange is in flight;
+    /// boundary rows finish afterwards.
+    Overlapped,
+}
+
+impl OverlapMode {
+    /// Stable identifier (`blocking` | `overlapped`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapMode::Blocking => "blocking",
+            OverlapMode::Overlapped => "overlapped",
+        }
+    }
+
+    /// Parse `blocking` / `overlapped` (case-insensitive, with on/off
+    /// aliases).
+    pub fn parse(s: &str) -> Option<OverlapMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "blocking" | "block" | "off" | "no" | "sequential" => Some(OverlapMode::Blocking),
+            "overlapped" | "overlap" | "on" | "yes" => Some(OverlapMode::Overlapped),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for OverlapMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// A distributed-PMVC executor bound to one decomposition: plan/launch
 /// once at construction, then one apply per iteration.
@@ -51,6 +124,23 @@ pub trait ExecBackend {
     fn setup_time(&self) -> f64 {
         0.0
     }
+
+    /// The active communication/computation schedule.
+    fn overlap_mode(&self) -> OverlapMode {
+        OverlapMode::Blocking
+    }
+
+    /// Select the schedule for subsequent applies. The default
+    /// implementation accepts only [`OverlapMode::Blocking`]; the three
+    /// built-in backends all support both modes.
+    fn set_overlap_mode(&mut self, mode: OverlapMode) -> crate::Result<()> {
+        anyhow::ensure!(
+            mode == OverlapMode::Blocking,
+            "backend '{}' does not support overlapped execution",
+            self.name()
+        );
+        Ok(())
+    }
 }
 
 impl ExecBackend for PmvcEngine {
@@ -69,15 +159,30 @@ impl ExecBackend for PmvcEngine {
     fn setup_time(&self) -> f64 {
         self.setup_seconds()
     }
+
+    fn overlap_mode(&self) -> OverlapMode {
+        PmvcEngine::overlap_mode(self)
+    }
+
+    fn set_overlap_mode(&mut self, mode: OverlapMode) -> crate::Result<()> {
+        PmvcEngine::set_overlap_mode(self, mode);
+        Ok(())
+    }
 }
 
-/// Analytic backend: phase times come from the machine model (priced
-/// once at construction — the decomposition is immutable), the product
-/// itself is computed exactly through the fragment pipeline so solvers
-/// can iterate over simulated clusters.
+/// Analytic backend: phase times come from the machine model (each
+/// schedule priced at most once — the decomposition is immutable, and
+/// the overlapped pricing is only paid when that schedule is actually
+/// selected), the product itself is computed exactly through the
+/// fragment pipeline so solvers can iterate over simulated clusters.
 pub struct SimBackend {
     d: Arc<TwoLevelDecomposition>,
-    times: PhaseTimes,
+    topo: ClusterTopology,
+    net: NetworkModel,
+    /// Lazily-filled phase pricings, indexed by schedule:
+    /// `[Blocking, Overlapped]`.
+    times: [Option<PhaseTimes>; 2],
+    mode: OverlapMode,
     x_local: Vec<f64>,
     y_local: Vec<f64>,
 }
@@ -90,8 +195,28 @@ impl SimBackend {
         topo: &ClusterTopology,
         net: &NetworkModel,
     ) -> SimBackend {
-        let times = simulate(&d, topo, net);
-        SimBackend { d, times, x_local: Vec::new(), y_local: Vec::new() }
+        let blocking = simulate_with(&d, topo, net, OverlapMode::Blocking);
+        SimBackend {
+            d,
+            topo: topo.clone(),
+            net: *net,
+            times: [Some(blocking), None],
+            mode: OverlapMode::Blocking,
+            x_local: Vec::new(),
+            y_local: Vec::new(),
+        }
+    }
+
+    /// The active schedule's pricing, computed on first use.
+    fn times(&mut self) -> PhaseTimes {
+        let idx = match self.mode {
+            OverlapMode::Blocking => 0,
+            OverlapMode::Overlapped => 1,
+        };
+        if self.times[idx].is_none() {
+            self.times[idx] = Some(simulate_with(&self.d, &self.topo, &self.net, self.mode));
+        }
+        self.times[idx].unwrap_or_default()
     }
 }
 
@@ -123,13 +248,22 @@ impl ExecBackend for SimBackend {
             spmv::pfvc(frag, &self.x_local, &mut self.y_local);
             spmv::scatter_y_accumulate(frag, &self.y_local, y);
         }
-        Ok(self.times)
+        Ok(self.times())
     }
 
     // setup_time stays at the default 0.0: the simulator models the
     // paper's one-shot pipeline, so its A shipment is already inside
     // the reported per-apply scatter phase — returning it here too
     // would double-count the same modeled cost.
+
+    fn overlap_mode(&self) -> OverlapMode {
+        self.mode
+    }
+
+    fn set_overlap_mode(&mut self, mode: OverlapMode) -> crate::Result<()> {
+        self.mode = mode;
+        Ok(())
+    }
 }
 
 /// Message-passing backend: wraps the long-lived [`MpiCluster`] ranks.
@@ -143,8 +277,14 @@ pub struct MpiBackend {
 
 impl MpiBackend {
     /// Launch the node ranks and perform the one-time A scatter.
-    pub fn new(d: &TwoLevelDecomposition) -> MpiBackend {
-        MpiBackend { cluster: MpiCluster::launch(d), lb_nodes: d.lb_nodes(), lb_cores: d.lb_cores() }
+    /// Fails (instead of panicking) on a decomposition the plan
+    /// validator rejects.
+    pub fn new(d: &TwoLevelDecomposition) -> crate::Result<MpiBackend> {
+        Ok(MpiBackend {
+            cluster: MpiCluster::launch(d)?,
+            lb_nodes: d.lb_nodes(),
+            lb_cores: d.lb_cores(),
+        })
     }
 }
 
@@ -172,7 +312,7 @@ impl ExecBackend for MpiBackend {
         );
         // the ranks assemble their reply in fresh message buffers (MPI
         // semantics); the leader copies the payload into caller scratch
-        let (yv, t) = self.cluster.matvec(x);
+        let (yv, t) = self.cluster.matvec(x)?;
         y.copy_from_slice(&yv);
         Ok(PhaseTimes {
             lb_nodes: self.lb_nodes,
@@ -183,11 +323,21 @@ impl ExecBackend for MpiBackend {
             t_scatter: 0.0,
             t_gather: (t.t_wall - t.t_compute_max - t.t_construct_max).max(0.0),
             t_construct: t.t_construct_max,
+            t_overlap_saved: t.t_overlap_saved,
         })
     }
 
     fn setup_time(&self) -> f64 {
         self.cluster.t_scatter
+    }
+
+    fn overlap_mode(&self) -> OverlapMode {
+        self.cluster.overlap_mode()
+    }
+
+    fn set_overlap_mode(&mut self, mode: OverlapMode) -> crate::Result<()> {
+        self.cluster.set_overlap_mode(mode);
+        Ok(())
     }
 }
 
@@ -236,7 +386,9 @@ impl std::fmt::Display for BackendKind {
 }
 
 /// Construct a backend of the requested kind for one decomposition.
-/// `topo`/`net` are only consulted by [`BackendKind::Sim`].
+/// `topo`/`net` are only consulted by [`BackendKind::Sim`]. The backend
+/// starts on the blocking schedule; select the overlapped one with
+/// [`ExecBackend::set_overlap_mode`].
 pub fn make_backend(
     kind: BackendKind,
     d: TwoLevelDecomposition,
@@ -246,7 +398,7 @@ pub fn make_backend(
     Ok(match kind {
         BackendKind::Threads => Box::new(PmvcEngine::new(Arc::new(d))?),
         BackendKind::Sim => Box::new(SimBackend::new(Arc::new(d), topo, net)),
-        BackendKind::Mpi => Box::new(MpiBackend::new(&d)),
+        BackendKind::Mpi => Box::new(MpiBackend::new(&d)?),
     })
 }
 
@@ -263,6 +415,16 @@ mod tests {
             assert_eq!(BackendKind::parse(kind.name()), Some(kind));
         }
         assert_eq!(BackendKind::parse("smoke-signals"), None);
+    }
+
+    #[test]
+    fn overlap_mode_roundtrips_through_parse() {
+        for mode in [OverlapMode::Blocking, OverlapMode::Overlapped] {
+            assert_eq!(OverlapMode::parse(mode.name()), Some(mode));
+        }
+        assert_eq!(OverlapMode::parse("on"), Some(OverlapMode::Overlapped));
+        assert_eq!(OverlapMode::parse("telepathy"), None);
+        assert_eq!(OverlapMode::default(), OverlapMode::Blocking);
     }
 
     #[test]
@@ -291,6 +453,14 @@ mod tests {
             for i in 0..a.n_rows {
                 assert!((y[i] - r.y[i]).abs() < 1e-12, "{kind} apply_into row {i}");
             }
+            // the overlapped schedule agrees bitwise on every backend
+            assert_eq!(backend.overlap_mode(), OverlapMode::Blocking);
+            backend.set_overlap_mode(OverlapMode::Overlapped).unwrap();
+            assert_eq!(backend.overlap_mode(), OverlapMode::Overlapped);
+            let mut y_ov = vec![0.0; a.n_rows];
+            let t_ov = backend.apply_into(&x, &mut y_ov).unwrap();
+            assert_eq!(y, y_ov, "{kind}: schedules must agree bitwise");
+            assert!(t_ov.t_overlap_saved >= 0.0, "{kind}");
             assert!(backend.apply(&[0.0; 3]).is_err(), "{kind} must reject bad x");
             let mut y_short = vec![0.0; 3];
             assert!(backend.apply_into(&x, &mut y_short).is_err(), "{kind} must reject bad y");

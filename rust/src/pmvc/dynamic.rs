@@ -7,10 +7,53 @@
 //! The `static_vs_dynamic` ablation quantifies the paper's claim: the
 //! dynamic scheme absorbs skew without any partitioner, but pays queue
 //! contention and loses all locality/communication planning.
+//!
+//! Like every other entry point of the crate, [`dynamic_spmv`] is
+//! fallible: bad arguments and worker panics come back as a typed
+//! [`DynamicError`] instead of an `assert!` abort or a poisoned scope.
 
 use crate::sparse::Csr;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
+
+/// Typed failures of the dynamic-scheduled SpMV — the replacements for
+/// the old `assert!` / `.expect("worker")` panics.
+#[derive(Debug)]
+pub enum DynamicError {
+    /// `x.len()` does not match the matrix column count.
+    DimensionMismatch {
+        /// The column count the matrix requires.
+        expected: usize,
+        /// The length received.
+        got: usize,
+    },
+    /// `workers == 0`: nobody to drain the queue.
+    NoWorkers,
+    /// `chunk == 0`: the cursor would never advance.
+    ZeroChunk,
+    /// A worker thread panicked while draining the queue.
+    WorkerPanicked {
+        /// Index of the panicking worker.
+        worker: usize,
+    },
+}
+
+impl std::fmt::Display for DynamicError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DynamicError::DimensionMismatch { expected, got } => {
+                write!(f, "x length {got} != matrix columns {expected}")
+            }
+            DynamicError::NoWorkers => write!(f, "dynamic schedule needs at least one worker"),
+            DynamicError::ZeroChunk => write!(f, "chunk size must be at least 1"),
+            DynamicError::WorkerPanicked { worker } => {
+                write!(f, "dynamic worker {worker} panicked while draining the queue")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DynamicError {}
 
 /// Result of a dynamic-scheduled SpMV.
 #[derive(Clone, Debug)]
@@ -25,9 +68,21 @@ pub struct DynamicResult {
 
 /// Run `y = A·x` with `workers` threads pulling `chunk` rows at a time
 /// from a shared atomic cursor (the classic self-scheduling loop).
-pub fn dynamic_spmv(a: &Csr, x: &[f64], workers: usize, chunk: usize) -> DynamicResult {
-    assert_eq!(x.len(), a.n_cols);
-    assert!(workers >= 1 && chunk >= 1);
+pub fn dynamic_spmv(
+    a: &Csr,
+    x: &[f64],
+    workers: usize,
+    chunk: usize,
+) -> Result<DynamicResult, DynamicError> {
+    if x.len() != a.n_cols {
+        return Err(DynamicError::DimensionMismatch { expected: a.n_cols, got: x.len() });
+    }
+    if workers == 0 {
+        return Err(DynamicError::NoWorkers);
+    }
+    if chunk == 0 {
+        return Err(DynamicError::ZeroChunk);
+    }
     let n = a.n_rows;
     let mut y = vec![0.0; n];
     let cursor = AtomicUsize::new(0);
@@ -74,12 +129,20 @@ pub fn dynamic_spmv(a: &Csr, x: &[f64], workers: usize, chunk: usize) -> Dynamic
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("worker")).collect()
+        // join each worker in place: a panicking worker becomes a typed
+        // error for the caller, not a poisoned scope
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(worker, h)| h.join().map_err(|_| DynamicError::WorkerPanicked { worker }))
+            .collect::<Result<Vec<usize>, DynamicError>>()
     })
-    .expect("scope");
+    // every spawned thread is joined above, so the scope itself can only
+    // fail if a join was somehow skipped — fold it into the same error
+    .map_err(|_| DynamicError::WorkerPanicked { worker: workers })??;
     let t_compute = t0.elapsed().as_secs_f64();
 
-    DynamicResult { y, t_compute, chunks_per_worker }
+    Ok(DynamicResult { y, t_compute, chunks_per_worker })
 }
 
 #[cfg(test)]
@@ -96,7 +159,7 @@ mod tests {
         let y_ref = a.matvec(&x);
         for workers in [1usize, 2, 4] {
             for chunk in [1usize, 16, 512] {
-                let r = dynamic_spmv(&a, &x, workers, chunk);
+                let r = dynamic_spmv(&a, &x, workers, chunk).unwrap();
                 for i in 0..a.n_rows {
                     assert!(
                         (r.y[i] - y_ref[i]).abs() < 1e-12,
@@ -108,11 +171,27 @@ mod tests {
     }
 
     #[test]
+    fn bad_arguments_come_back_as_typed_errors() {
+        let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+        let x = vec![1.0; a.n_cols];
+        assert!(matches!(
+            dynamic_spmv(&a, &x[..5], 2, 8),
+            Err(DynamicError::DimensionMismatch { got: 5, .. })
+        ));
+        assert!(matches!(dynamic_spmv(&a, &x, 0, 8), Err(DynamicError::NoWorkers)));
+        assert!(matches!(dynamic_spmv(&a, &x, 2, 0), Err(DynamicError::ZeroChunk)));
+        // errors render their context
+        let e = dynamic_spmv(&a, &x[..5], 2, 8).unwrap_err();
+        assert!(e.to_string().contains("x length 5"));
+        assert!(DynamicError::WorkerPanicked { worker: 3 }.to_string().contains("worker 3"));
+    }
+
+    #[test]
     fn all_chunks_processed_exactly_once() {
         let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
         let x = vec![1.0; a.n_cols];
         let chunk = 64;
-        let r = dynamic_spmv(&a, &x, 4, chunk);
+        let r = dynamic_spmv(&a, &x, 4, chunk).unwrap();
         let total: usize = r.chunks_per_worker.iter().sum();
         assert_eq!(total, a.n_rows.div_ceil(chunk));
     }
@@ -126,7 +205,7 @@ mod tests {
         let a = generate(&MatrixSpec::paper("epb1").unwrap(), 1).to_csr();
         let x = vec![1.0; a.n_cols];
         for workers in [1usize, 4] {
-            let r = dynamic_spmv(&a, &x, workers, 8);
+            let r = dynamic_spmv(&a, &x, workers, 8).unwrap();
             let total: usize = r.chunks_per_worker.iter().sum();
             assert_eq!(total, a.n_rows.div_ceil(8), "workers={workers}");
             assert_eq!(r.chunks_per_worker.len(), workers);

@@ -22,7 +22,19 @@
 //!    Y_k through the plan's assembly maps (max node duration);
 //! 4. **gather** — the master drains the node Y_k buffers;
 //! 5. **construct (master)** — final assembly of the global Y.
+//!
+//! Under [`OverlapMode::Overlapped`] phase 1 splits in two: the
+//! locally-owned X values go out first and every core starts its
+//! *interior* rows immediately, while the leader packs and posts the
+//! halo (the remote X) concurrently — the double-buffered pipeline of
+//! Agullo et al. Cores finish with their *boundary* rows once the halo
+//! lands. The split is frozen in the plan
+//! ([`super::plan::NodePlan::core_interior_rows`]), so the per-iteration
+//! cost stays allocation-free, and each row is assembled in the same
+//! order either way — the two schedules produce bitwise-identical
+//! products.
 
+use super::backend::OverlapMode;
 use super::exec::ExecResult;
 use super::phases::PhaseTimes;
 use super::plan::CommPlan;
@@ -35,8 +47,13 @@ use std::time::Instant;
 
 /// Leader -> worker messages.
 enum ToWorker {
-    /// Execute one PFVC against the node's packed X values.
+    /// Blocking schedule: one message carrying the node's full packed X.
     Apply { seq: u64, node_x: Arc<Vec<f64>> },
+    /// Overlapped phase 1: the node's locally-owned X values — start
+    /// the interior rows.
+    ApplyInterior { seq: u64, owned: Arc<Vec<f64>> },
+    /// Overlapped phase 2: the halo values — finish the boundary rows.
+    ApplyBoundary { seq: u64, halo: Arc<Vec<f64>> },
     Shutdown,
 }
 
@@ -44,12 +61,61 @@ enum ToWorker {
 struct WorkerDone {
     idx: usize,
     seq: u64,
-    /// PFVC span relative to the engine epoch, seconds.
+    /// PFVC span relative to the engine epoch, seconds. Under the
+    /// overlapped schedule the span covers interior start → boundary
+    /// end.
     start: f64,
+    /// When the interior rows finished (== `end` on the blocking
+    /// schedule) — what the leader needs to price how much of the halo
+    /// exchange the interior computation actually covered.
+    interior_end: f64,
+    /// When the boundary rows started, i.e. after the halo landed
+    /// (== `start` on the blocking schedule). Lets the leader exclude
+    /// halo-wait idle time from the reported compute makespan.
+    boundary_start: f64,
     end: f64,
     /// False when the worker's PFVC panicked; the leader turns this
     /// into an error instead of hanging on a missing notice.
     ok: bool,
+}
+
+impl WorkerDone {
+    /// A failure notice: tells the leader this apply is lost without
+    /// leaving it blocked on a completion that will never arrive.
+    fn failure(idx: usize, seq: u64) -> WorkerDone {
+        WorkerDone {
+            idx,
+            seq,
+            start: 0.0,
+            interior_end: 0.0,
+            boundary_start: 0.0,
+            end: 0.0,
+            ok: false,
+        }
+    }
+}
+
+/// Everything one worker owns: its share of the frozen plan plus its
+/// channels — the one-time "index datatype" shipment of the MPI model.
+struct WorkerCtx {
+    idx: usize,
+    d: Arc<TwoLevelDecomposition>,
+    /// Local column -> position in the node's packed X.
+    x_map: Vec<u32>,
+    /// Positions of the node's locally-owned X values (shared per node).
+    owned_x: Arc<Vec<u32>>,
+    /// Positions of the node's halo X values (shared per node).
+    halo_x: Arc<Vec<u32>>,
+    /// This core's interior rows (all columns locally owned).
+    interior_rows: Vec<u32>,
+    /// This core's boundary rows (need halo X).
+    boundary_rows: Vec<u32>,
+    /// Node X footprint size (the packed-X buffer length).
+    x_len: usize,
+    y_slot: Arc<Mutex<Vec<f64>>>,
+    rx: Receiver<ToWorker>,
+    done: Sender<WorkerDone>,
+    epoch: Instant,
 }
 
 /// A persistent distributed-PMVC executor bound to one decomposition.
@@ -65,6 +131,7 @@ pub struct PmvcEngine {
     y_slots: Vec<Arc<Mutex<Vec<f64>>>>,
     /// Reusable per-node Y_k accumulation buffers.
     node_y: Vec<Vec<f64>>,
+    mode: OverlapMode,
     seq: u64,
     setup_s: f64,
     applies: usize,
@@ -85,21 +152,36 @@ impl PmvcEngine {
         let mut to_workers = Vec::with_capacity(n_workers);
         let mut handles = Vec::with_capacity(n_workers);
         let mut y_slots = Vec::with_capacity(n_workers);
+        // owned/halo position lists are per node — share one copy
+        let owned_arcs: Vec<Arc<Vec<u32>>> =
+            plan.nodes.iter().map(|np| Arc::new(np.owned_x.clone())).collect();
+        let halo_arcs: Vec<Arc<Vec<u32>>> =
+            plan.nodes.iter().map(|np| Arc::new(np.halo_x.clone())).collect();
         for idx in 0..n_workers {
             let node = idx / d.c;
             let core = idx % d.c;
-            // each worker owns its gather map (part of the one-time
-            // index-datatype shipment, like the MPI backend's launch)
-            let x_map = plan.nodes[node].core_x_maps[core].clone();
+            // each worker owns its gather map and row split (part of the
+            // one-time index-datatype shipment, like the MPI backend's
+            // launch)
             let slot = Arc::new(Mutex::new(Vec::new()));
             y_slots.push(Arc::clone(&slot));
             let (tx, rx) = channel::<ToWorker>();
             to_workers.push(tx);
-            let dd = Arc::clone(&d);
-            let done = done_tx.clone();
-            handles.push(std::thread::spawn(move || {
-                worker_loop(idx, dd, x_map, slot, rx, done, epoch)
-            }));
+            let ctx = WorkerCtx {
+                idx,
+                d: Arc::clone(&d),
+                x_map: plan.nodes[node].core_x_maps[core].clone(),
+                owned_x: Arc::clone(&owned_arcs[node]),
+                halo_x: Arc::clone(&halo_arcs[node]),
+                interior_rows: plan.nodes[node].core_interior_rows[core].clone(),
+                boundary_rows: plan.nodes[node].core_boundary_rows[core].clone(),
+                x_len: plan.nodes[node].x_cols.len(),
+                y_slot: slot,
+                rx,
+                done: done_tx.clone(),
+                epoch,
+            };
+            handles.push(std::thread::spawn(move || worker_loop(ctx)));
         }
         let node_y = vec![Vec::new(); d.f];
         Ok(PmvcEngine {
@@ -109,12 +191,25 @@ impl PmvcEngine {
             handles,
             y_slots,
             node_y,
+            mode: OverlapMode::Blocking,
             seq: 0,
             setup_s: t0.elapsed().as_secs_f64(),
             applies: 0,
             plan_builds: 1,
             d,
         })
+    }
+
+    /// The active schedule ([`OverlapMode::Blocking`] by default).
+    pub fn overlap_mode(&self) -> OverlapMode {
+        self.mode
+    }
+
+    /// Select the schedule for subsequent applies. Both schedules drive
+    /// the same frozen plan and produce bitwise-identical products; the
+    /// overlapped one hides the halo exchange behind interior rows.
+    pub fn set_overlap_mode(&mut self, mode: OverlapMode) {
+        self.mode = mode;
     }
 
     /// Execute `y = A·x` through the persistent pool into a fresh
@@ -148,41 +243,138 @@ impl PmvcEngine {
 
         // ---------- phase 1: scatter — pack each node's X footprint
         // values (the per-iteration fan-out payload; A was distributed
-        // once at engine construction)
-        let t0 = Instant::now();
-        let node_x: Vec<Arc<Vec<f64>>> = self
-            .plan
-            .nodes
-            .iter()
-            .map(|np| Arc::new(np.x_cols.iter().map(|&g| x[g as usize]).collect::<Vec<f64>>()))
-            .collect();
-        let t_scatter = t0.elapsed().as_secs_f64();
+        // once at engine construction). `t_pack` is the first (or only)
+        // wave, `t_halo` the concurrent second wave (0 when blocking).
+        let (t_pack, t_halo) = match self.mode {
+            OverlapMode::Blocking => {
+                let t0 = Instant::now();
+                let node_x: Vec<Arc<Vec<f64>>> = self
+                    .plan
+                    .nodes
+                    .iter()
+                    .map(|np| {
+                        Arc::new(np.x_cols.iter().map(|&g| x[g as usize]).collect::<Vec<f64>>())
+                    })
+                    .collect();
+                for (idx, tx) in self.to_workers.iter().enumerate() {
+                    let node = idx / self.d.c;
+                    tx.send(ToWorker::Apply { seq, node_x: Arc::clone(&node_x[node]) })
+                        .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
+                }
+                // clock stops after the sends, exactly like the
+                // overlapped waves — the schedules' scatter columns
+                // must measure the same work to be comparable
+                (t0.elapsed().as_secs_f64(), 0.0)
+            }
+            OverlapMode::Overlapped => {
+                // 1a: pack + post the locally-owned values; interior
+                // rows start computing as soon as each message lands
+                let t0 = Instant::now();
+                let owned: Vec<Arc<Vec<f64>>> = self
+                    .plan
+                    .nodes
+                    .iter()
+                    .map(|np| {
+                        Arc::new(
+                            np.owned_x
+                                .iter()
+                                .map(|&p| x[np.x_cols[p as usize] as usize])
+                                .collect::<Vec<f64>>(),
+                        )
+                    })
+                    .collect();
+                for (idx, tx) in self.to_workers.iter().enumerate() {
+                    let node = idx / self.d.c;
+                    tx.send(ToWorker::ApplyInterior { seq, owned: Arc::clone(&owned[node]) })
+                        .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
+                }
+                let t_owned = t0.elapsed().as_secs_f64();
+                // 1b: pack + post the halo WHILE the interior rows
+                // compute — the exchange work the pipeline can hide
+                // (priced against the interior spans after the done
+                // notices arrive)
+                let t1 = Instant::now();
+                let halo: Vec<Arc<Vec<f64>>> = self
+                    .plan
+                    .nodes
+                    .iter()
+                    .map(|np| {
+                        Arc::new(
+                            np.halo_x
+                                .iter()
+                                .map(|&p| x[np.x_cols[p as usize] as usize])
+                                .collect::<Vec<f64>>(),
+                        )
+                    })
+                    .collect();
+                for (idx, tx) in self.to_workers.iter().enumerate() {
+                    let node = idx / self.d.c;
+                    tx.send(ToWorker::ApplyBoundary { seq, halo: Arc::clone(&halo[node]) })
+                        .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
+                }
+                let t_halo = t1.elapsed().as_secs_f64();
+                (t_owned, t_halo)
+            }
+        };
 
-        // ---------- phase 2: compute — wake every core, makespan over
-        // the reported spans
-        for (idx, tx) in self.to_workers.iter().enumerate() {
-            let node = idx / self.d.c;
-            tx.send(ToWorker::Apply { seq, node_x: Arc::clone(&node_x[node]) })
-                .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
-        }
+        // ---------- phase 2: compute — makespan over the reported
+        // spans. Notices from an apply that errored out mid-flight may
+        // still sit in the channel; they carry an older seq and are
+        // drained silently instead of wedging every later apply.
         let mut first_start = f64::INFINITY;
+        let mut last_interior_end = 0f64;
+        let mut first_boundary_start = f64::INFINITY;
         let mut last_end = 0f64;
-        for _ in 0..self.to_workers.len() {
+        let mut remaining = self.to_workers.len();
+        while remaining > 0 {
             let done = self
                 .done_rx
                 .recv()
                 .map_err(|_| anyhow::anyhow!("engine worker died mid-apply"))?;
+            if done.seq < seq {
+                continue; // leftover notice from an aborted apply
+            }
             anyhow::ensure!(
                 done.seq == seq,
-                "worker {} answered stale sequence {} (expected {seq})",
+                "worker {} answered future sequence {} (expected {seq})",
                 done.idx,
                 done.seq
             );
             anyhow::ensure!(done.ok, "engine worker {} panicked during its PFVC", done.idx);
             first_start = first_start.min(done.start);
+            last_interior_end = last_interior_end.max(done.interior_end);
+            first_boundary_start = first_boundary_start.min(done.boundary_start);
             last_end = last_end.max(done.end);
+            remaining -= 1;
         }
-        let t_compute = (last_end - first_start).max(0.0);
+        // compute makespan: the blocking schedule is one busy span; the
+        // overlapped one sums the interior and boundary makespans so a
+        // worker idling on the in-flight halo does not inflate the
+        // reported compute (keeping the paper columns comparable
+        // across schedules)
+        let t_compute = match self.mode {
+            OverlapMode::Blocking => (last_end - first_start).max(0.0),
+            OverlapMode::Overlapped => {
+                (last_interior_end - first_start).max(0.0)
+                    + (last_end - first_boundary_start).max(0.0)
+            }
+        };
+
+        // what the overlapped schedule actually hid: the halo exchange
+        // ran concurrently with the interior rows, so the hidden time
+        // is bounded by both — min(t_halo, interior makespan), same
+        // accounting as the analytic model. The visible scatter is the
+        // first wave plus whatever part of the halo the interior work
+        // did NOT cover; a boundary-heavy split (interior ≈ 0) hides
+        // nothing and degenerates to the blocking report.
+        let (t_scatter, t_overlap_saved) = match self.mode {
+            OverlapMode::Blocking => (t_pack, 0.0),
+            OverlapMode::Overlapped => {
+                let interior_span = (last_interior_end - first_start).max(0.0);
+                let saved = t_halo.min(interior_span);
+                (t_pack + t_halo - saved, saved)
+            }
+        };
 
         // ---------- phase 3: node-local Y construction (parallel across
         // nodes in reality -> report the max node duration)
@@ -194,13 +386,7 @@ impl PmvcEngine {
             yk.clear();
             yk.resize(np.y_rows.len(), 0.0);
             for core in 0..self.d.c {
-                // poisoning is benign here: apply() already failed on the
-                // panicking worker's !ok notice, and the slot is fully
-                // overwritten on every successful PFVC
-                let slot = match self.y_slots[node * self.d.c + core].lock() {
-                    Ok(guard) => guard,
-                    Err(poisoned) => poisoned.into_inner(),
-                };
+                let slot = lock_slot(&self.y_slots[node * self.d.c + core]);
                 for (lr, &p) in np.core_y_maps[core].iter().enumerate() {
                     yk[p as usize] += slot[lr];
                 }
@@ -228,6 +414,7 @@ impl PmvcEngine {
             t_scatter,
             t_gather,
             t_construct,
+            t_overlap_saved,
         })
     }
 
@@ -276,46 +463,129 @@ impl Drop for PmvcEngine {
     }
 }
 
+/// Lock a partial-Y slot, treating poisoning as benign (the leader
+/// already errors on the panicking worker's !ok notice and every
+/// successful PFVC fully overwrites the slot).
+fn lock_slot(slot: &Mutex<Vec<f64>>) -> std::sync::MutexGuard<'_, Vec<f64>> {
+    match slot.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
 /// Worker main loop: park on the channel, run the core's PFVC on wake.
-/// `x_local` and the Y slot keep their allocations across applies.
-fn worker_loop(
-    idx: usize,
-    d: Arc<TwoLevelDecomposition>,
-    x_map: Vec<u32>,
-    y_slot: Arc<Mutex<Vec<f64>>>,
-    rx: Receiver<ToWorker>,
-    done: Sender<WorkerDone>,
-    epoch: Instant,
-) {
-    let frag = &d.fragments[idx];
+/// `x_local` / `x_node` and the Y slot keep their allocations across
+/// applies. Any PFVC panic turns into a `!ok` notice instead of a
+/// silent death, so the leader errors out rather than blocking forever
+/// on a completion that will never arrive.
+fn worker_loop(ctx: WorkerCtx) {
+    let frag = &ctx.d.fragments[ctx.idx];
+    // blocking-path scratch: the fragment-local gathered X
     let mut x_local: Vec<f64> = Vec::new();
-    while let Ok(msg) = rx.recv() {
+    // overlapped-path scratch: the node-footprint X, filled in two
+    // waves (owned, then halo); allocated on first overlapped apply
+    let mut x_node: Vec<f64> = Vec::new();
+    // overlapped: (sequence, interior start, interior end) of the
+    // in-flight apply
+    let mut pending: Option<(u64, f64, f64)> = None;
+    while let Ok(msg) = ctx.rx.recv() {
         match msg {
             ToWorker::Shutdown => return,
             ToWorker::Apply { seq, node_x } => {
-                // report a !ok notice instead of dying silently on a
-                // panic, so the leader errors out rather than blocking
-                // forever on a completion that will never arrive
                 let span = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    let start = epoch.elapsed().as_secs_f64();
+                    let start = ctx.epoch.elapsed().as_secs_f64();
                     x_local.clear();
-                    x_local.extend(x_map.iter().map(|&p| node_x[p as usize]));
+                    x_local.extend(ctx.x_map.iter().map(|&p| node_x[p as usize]));
                     {
-                        let mut y = match y_slot.lock() {
-                            Ok(guard) => guard,
-                            Err(poisoned) => poisoned.into_inner(),
-                        };
+                        let mut y = lock_slot(&ctx.y_slot);
                         spmv::pfvc(frag, &x_local, &mut y);
                     }
-                    (start, epoch.elapsed().as_secs_f64())
+                    (start, ctx.epoch.elapsed().as_secs_f64())
                 }));
                 let notice = match span {
-                    Ok((start, end)) => WorkerDone { idx, seq, start, end, ok: true },
-                    Err(_) => WorkerDone { idx, seq, start: 0.0, end: 0.0, ok: false },
+                    Ok((start, end)) => WorkerDone {
+                        idx: ctx.idx,
+                        seq,
+                        start,
+                        interior_end: end,
+                        boundary_start: start,
+                        end,
+                        ok: true,
+                    },
+                    Err(_) => WorkerDone::failure(ctx.idx, seq),
                 };
                 let failed = !notice.ok;
-                if done.send(notice).is_err() || failed {
+                if ctx.done.send(notice).is_err() || failed {
                     return; // engine dropped mid-apply, or this worker is unsound
+                }
+            }
+            ToWorker::ApplyInterior { seq, owned } => {
+                let span = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let start = ctx.epoch.elapsed().as_secs_f64();
+                    if x_node.len() != ctx.x_len {
+                        x_node.resize(ctx.x_len, 0.0);
+                    }
+                    for (&p, &v) in ctx.owned_x.iter().zip(owned.iter()) {
+                        x_node[p as usize] = v;
+                    }
+                    {
+                        let mut y = lock_slot(&ctx.y_slot);
+                        // size-only resize, like the blocking path's
+                        // pfvc: interior ∪ boundary assign every element
+                        // each apply, so re-zeroing would be a wasted
+                        // full pass over the slot per iteration
+                        y.resize(frag.csr.n_rows, 0.0);
+                        spmv::pfvc_rows(frag, &ctx.interior_rows, &ctx.x_map, &x_node, &mut y);
+                    }
+                    (start, ctx.epoch.elapsed().as_secs_f64())
+                }));
+                match span {
+                    Ok((start, interior_end)) => pending = Some((seq, start, interior_end)),
+                    Err(_) => {
+                        // no completion will follow this apply — tell the
+                        // leader now and retire the unsound worker
+                        let _ = ctx.done.send(WorkerDone::failure(ctx.idx, seq));
+                        return;
+                    }
+                }
+            }
+            ToWorker::ApplyBoundary { seq, halo } => {
+                let (started, interior_end) = match pending.take() {
+                    Some((s, start, interior_end)) if s == seq => (start, interior_end),
+                    // a boundary wave with no matching interior wave can
+                    // only follow a leader-side abort; report failure for
+                    // this apply but stay alive for the next one
+                    _ => {
+                        let _ = ctx.done.send(WorkerDone::failure(ctx.idx, seq));
+                        continue;
+                    }
+                };
+                let span = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let boundary_start = ctx.epoch.elapsed().as_secs_f64();
+                    for (&p, &v) in ctx.halo_x.iter().zip(halo.iter()) {
+                        x_node[p as usize] = v;
+                    }
+                    {
+                        let mut y = lock_slot(&ctx.y_slot);
+                        spmv::pfvc_rows(frag, &ctx.boundary_rows, &ctx.x_map, &x_node, &mut y);
+                    }
+                    (boundary_start, ctx.epoch.elapsed().as_secs_f64())
+                }));
+                let notice = match span {
+                    Ok((boundary_start, end)) => WorkerDone {
+                        idx: ctx.idx,
+                        seq,
+                        start: started,
+                        interior_end,
+                        boundary_start,
+                        end,
+                        ok: true,
+                    },
+                    Err(_) => WorkerDone::failure(ctx.idx, seq),
+                };
+                let failed = !notice.ok;
+                if ctx.done.send(notice).is_err() || failed {
+                    return;
                 }
             }
         }
@@ -352,6 +622,50 @@ mod tests {
     }
 
     #[test]
+    fn overlapped_schedule_is_bitwise_equal_to_blocking() {
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 23).to_csr();
+        let mut rng = crate::rng::SplitMix64::new(5);
+        for combo in Combination::all() {
+            let d = decompose(&a, combo, 2, 3, &DecomposeConfig::default()).unwrap();
+            let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+            for trial in 0..4 {
+                let x: Vec<f64> =
+                    (0..a.n_cols).map(|_| rng.next_f64_range(-2.0, 2.0)).collect();
+                engine.set_overlap_mode(OverlapMode::Blocking);
+                let yb = engine.apply(&x).unwrap().y;
+                engine.set_overlap_mode(OverlapMode::Overlapped);
+                let r = engine.apply(&x).unwrap();
+                assert_eq!(yb, r.y, "{combo} trial {trial}: schedules must agree bitwise");
+                assert!(r.times.t_overlap_saved >= 0.0);
+            }
+            assert_eq!(engine.applies(), 8);
+        }
+    }
+
+    #[test]
+    fn mode_switches_freely_between_applies() {
+        let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
+        let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+        assert_eq!(engine.overlap_mode(), OverlapMode::Blocking);
+        let x = vec![1.0; a.n_cols];
+        let y_ref = a.matvec(&x);
+        for mode in [
+            OverlapMode::Overlapped,
+            OverlapMode::Blocking,
+            OverlapMode::Overlapped,
+            OverlapMode::Overlapped,
+        ] {
+            engine.set_overlap_mode(mode);
+            assert_eq!(engine.overlap_mode(), mode);
+            let r = engine.apply(&x).unwrap();
+            for i in 0..a.n_rows {
+                assert!((r.y[i] - y_ref[i]).abs() < 1e-12, "{mode:?} row {i}");
+            }
+        }
+    }
+
+    #[test]
     fn engine_rejects_wrong_x_length() {
         let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
         let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
@@ -359,6 +673,10 @@ mod tests {
         assert!(engine.apply(&[1.0, 2.0]).is_err());
         // the pool survives a rejected call
         let x = vec![1.0; a.n_cols];
+        assert!(engine.apply(&x).is_ok());
+        // same over the overlapped schedule
+        engine.set_overlap_mode(OverlapMode::Overlapped);
+        assert!(engine.apply(&[1.0, 2.0]).is_err());
         assert!(engine.apply(&x).is_ok());
     }
 

@@ -68,7 +68,7 @@ mod tests {
     fn wrong_x_length_rejected() {
         let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
         let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
-        assert!(execute_threads(&d, &vec![0.0; 10]).is_err());
+        assert!(execute_threads(&d, &[0.0; 10]).is_err());
     }
 
     #[test]

@@ -7,16 +7,25 @@
 //! messages carrying real copied payloads, mirroring MPI semantics:
 //!
 //! * `launch` performs the one-time **scatter**: A_k payloads and the
-//!   X-footprint index map move to the node ranks;
+//!   X-footprint index maps (taken from the frozen
+//!   [`CommPlan`]) move to the node ranks;
 //! * every [`MpiCluster::matvec`] sends each rank its packed X_k values
 //!   (fan-out), the rank computes its cores' PFVCs on scoped threads
 //!   (the "OpenMP" level), locally constructs Y_k, and replies with
 //!   `(rows, values)` (fan-in) for the leader to assemble.
 //!
-//! This is the backend the iterative-method examples use to mimic the
-//! paper's per-iteration cost structure: A distributed once, only
-//! X/Y traffic afterwards.
+//! Under [`OverlapMode::Overlapped`] the fan-out is double-buffered:
+//! the locally-owned X values go out first, each rank starts its
+//! interior rows immediately, and the halo wave — packed and posted
+//! while those rows compute — unblocks the boundary rows.
+//!
+//! Every failure a long-running pipeline can meet — a dead rank, a
+//! dropped reply channel, a PFVC panic inside a rank — surfaces as
+//! `Err` from [`MpiCluster::matvec`] (and therefore from the solvers'
+//! `apply_into`) instead of aborting the process.
 
+use super::backend::OverlapMode;
+use super::plan::CommPlan;
 use crate::partition::combined::{CoreFragment, TwoLevelDecomposition};
 use crate::pmvc::spmv;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -24,9 +33,15 @@ use std::time::Instant;
 
 /// Leader -> node messages.
 enum ToNode {
-    /// Packed X_k values, in the node's footprint order. Tagged with an
-    /// iteration id for sanity.
+    /// Blocking schedule: packed X_k values in footprint order, tagged
+    /// with an iteration id for sanity.
     X { iter: usize, values: Vec<f64> },
+    /// Overlapped phase 1: the locally-owned X values — start the
+    /// interior rows.
+    XOwned { iter: usize, values: Vec<f64> },
+    /// Overlapped phase 2: the halo values — finish the boundary rows
+    /// and reply.
+    XHalo { iter: usize, values: Vec<f64> },
     Shutdown,
 }
 
@@ -38,10 +53,34 @@ struct FromNode {
     rows: Vec<u32>,
     /// Partial Y values aligned with `rows`.
     values: Vec<f64>,
-    /// Node-measured compute duration (PFVC makespan over its cores).
+    /// Node-measured compute duration (PFVC makespan over its cores;
+    /// interior + boundary under the overlapped schedule).
     compute_s: f64,
+    /// Interior-rows share of `compute_s` (0 on the blocking schedule)
+    /// — what the leader prices the hidden exchange against.
+    interior_s: f64,
     /// Node-measured local construction duration.
     construct_s: f64,
+    /// False when the rank's compute section panicked — the leader
+    /// turns this into an error instead of assembling garbage.
+    ok: bool,
+}
+
+impl FromNode {
+    /// A failure reply: tells the leader this iteration is lost without
+    /// leaving it blocked on a count that will never be reached.
+    fn failure(node: usize, iter: usize) -> FromNode {
+        FromNode {
+            node,
+            iter,
+            rows: Vec::new(),
+            values: Vec::new(),
+            compute_s: 0.0,
+            interior_s: 0.0,
+            construct_s: 0.0,
+            ok: false,
+        }
+    }
 }
 
 /// Per-iteration timing summary from the message-passing backend.
@@ -53,182 +92,392 @@ pub struct MpiIterTimes {
     pub t_compute_max: f64,
     /// Max node-reported local construction time.
     pub t_construct_max: f64,
+    /// Exchange time the overlapped schedule hid: min of the leader's
+    /// halo pack+post duration and the max rank-reported interior
+    /// compute time (0 on the blocking schedule, or when a
+    /// boundary-heavy split leaves nothing to hide behind).
+    pub t_overlap_saved: f64,
+}
+
+/// One rank's share of the frozen plan, shipped at launch — what MPI
+/// would carry in the scatter's index datatypes.
+struct NodeCtx {
+    node: usize,
+    fragments: Vec<CoreFragment>,
+    /// Per-core gather map: local col -> position in the node's X.
+    core_maps: Vec<Vec<u32>>,
+    /// Global row ids of the node's Y footprint.
+    yrows: Vec<u32>,
+    /// Per-core assembly map: local row -> position in `yrows`.
+    core_ymaps: Vec<Vec<u32>>,
+    /// Positions of the locally-owned X values in the node's X.
+    owned: Vec<u32>,
+    /// Positions of the halo X values.
+    halo: Vec<u32>,
+    /// Per-core interior rows (computable from owned X alone).
+    core_interior: Vec<Vec<u32>>,
+    /// Per-core boundary rows (need the halo).
+    core_boundary: Vec<Vec<u32>>,
+    /// Node X footprint size.
+    x_len: usize,
 }
 
 /// A running message-passing cluster.
 pub struct MpiCluster {
     senders: Vec<Sender<ToNode>>,
     replies: Receiver<FromNode>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<Option<std::thread::JoinHandle<()>>>,
     /// Per node: global column ids of the X footprint (leader-side pack
     /// list — what MPI would carry in the scatter's index datatype).
     node_x_cols: Vec<Vec<u32>>,
+    /// Per node: positions in `node_x_cols` the node owns locally.
+    node_owned: Vec<Vec<u32>>,
+    /// Per node: halo positions in `node_x_cols`.
+    node_halo: Vec<Vec<u32>>,
     /// Matrix order N.
     pub n: usize,
     /// Node (rank) count.
     pub f: usize,
     /// One-time scatter duration measured at launch.
     pub t_scatter: f64,
+    mode: OverlapMode,
     iter: usize,
 }
 
 impl MpiCluster {
-    /// Launch node ranks and perform the one-time A scatter.
-    pub fn launch(d: &TwoLevelDecomposition) -> MpiCluster {
+    /// Launch node ranks and perform the one-time A scatter. Fails
+    /// (instead of panicking) when the decomposition does not validate.
+    pub fn launch(d: &TwoLevelDecomposition) -> crate::Result<MpiCluster> {
+        // the frozen plan carries every index map the ranks need —
+        // including the interior/boundary split of the overlapped
+        // schedule — validated once
+        let plan = CommPlan::build(d)?;
         let f = d.f;
         let c = d.c;
         let (reply_tx, replies) = channel::<FromNode>();
         let mut senders = Vec::with_capacity(f);
         let mut handles = Vec::with_capacity(f);
         let mut node_x_cols: Vec<Vec<u32>> = Vec::with_capacity(f);
+        let mut node_owned: Vec<Vec<u32>> = Vec::with_capacity(f);
+        let mut node_halo: Vec<Vec<u32>> = Vec::with_capacity(f);
 
         let t0 = Instant::now();
-        for node in 0..f {
+        for (node, np) in plan.nodes.iter().enumerate() {
             // ---- leader-side pack: fragments + footprint maps (this IS
             // the scatter payload; `.clone()` moves real bytes)
             let fragments: Vec<CoreFragment> =
                 (0..c).map(|core| d.fragment(node, core).clone()).collect();
-            // node X footprint and the position of each global col in it
-            let mut pos_of = vec![u32::MAX; d.n];
-            let mut cols: Vec<u32> = Vec::new();
-            for frag in &fragments {
-                for &g in &frag.global_cols {
-                    if pos_of[g as usize] == u32::MAX {
-                        pos_of[g as usize] = cols.len() as u32;
-                        cols.push(g);
-                    }
-                }
-            }
-            // per-core gather map: local col -> position in node X
-            let core_maps: Vec<Vec<u32>> = fragments
-                .iter()
-                .map(|fr| fr.global_cols.iter().map(|&g| pos_of[g as usize]).collect())
-                .collect();
-            // node Y footprint + per-core scatter map
-            let mut ypos_of = vec![u32::MAX; d.n];
-            let mut yrows: Vec<u32> = Vec::new();
-            for frag in &fragments {
-                for &g in &frag.global_rows {
-                    if ypos_of[g as usize] == u32::MAX {
-                        ypos_of[g as usize] = yrows.len() as u32;
-                        yrows.push(g);
-                    }
-                }
-            }
-            let core_ymaps: Vec<Vec<u32>> = fragments
-                .iter()
-                .map(|fr| fr.global_rows.iter().map(|&g| ypos_of[g as usize]).collect())
-                .collect();
-
+            let ctx = NodeCtx {
+                node,
+                fragments,
+                core_maps: np.core_x_maps.clone(),
+                yrows: np.y_rows.clone(),
+                core_ymaps: np.core_y_maps.clone(),
+                owned: np.owned_x.clone(),
+                halo: np.halo_x.clone(),
+                core_interior: np.core_interior_rows.clone(),
+                core_boundary: np.core_boundary_rows.clone(),
+                x_len: np.x_cols.len(),
+            };
+            node_x_cols.push(np.x_cols.clone());
+            node_owned.push(np.owned_x.clone());
+            node_halo.push(np.halo_x.clone());
             let (tx, rx) = channel::<ToNode>();
             senders.push(tx);
-            node_x_cols.push(cols);
             let reply = reply_tx.clone();
-            handles.push(std::thread::spawn(move || {
-                node_rank(node, fragments, core_maps, yrows, core_ymaps, rx, reply);
-            }));
+            handles.push(Some(std::thread::spawn(move || node_rank(ctx, rx, reply))));
         }
         let t_scatter = t0.elapsed().as_secs_f64();
-        MpiCluster { senders, replies, handles, node_x_cols, n: d.n, f, t_scatter, iter: 0 }
+        Ok(MpiCluster {
+            senders,
+            replies,
+            handles,
+            node_x_cols,
+            node_owned,
+            node_halo,
+            n: d.n,
+            f,
+            t_scatter,
+            mode: OverlapMode::Blocking,
+            iter: 0,
+        })
+    }
+
+    /// The active communication/computation schedule.
+    pub fn overlap_mode(&self) -> OverlapMode {
+        self.mode
+    }
+
+    /// Select the schedule for subsequent iterations.
+    pub fn set_overlap_mode(&mut self, mode: OverlapMode) {
+        self.mode = mode;
     }
 
     /// One distributed `y = A·x` through the message-passing pipeline.
-    pub fn matvec(&mut self, x: &[f64]) -> (Vec<f64>, MpiIterTimes) {
-        assert_eq!(x.len(), self.n);
+    /// A dead rank, a closed reply channel or a panic inside a rank's
+    /// compute section surfaces as `Err` — the caller's solve fails,
+    /// the process survives.
+    pub fn matvec(&mut self, x: &[f64]) -> crate::Result<(Vec<f64>, MpiIterTimes)> {
+        anyhow::ensure!(
+            x.len() == self.n,
+            "x length {} != matrix order {}",
+            x.len(),
+            self.n
+        );
         self.iter += 1;
         let iter = self.iter;
         let t0 = Instant::now();
-        // fan-out: pack X_k per node
-        for (node, tx) in self.senders.iter().enumerate() {
-            let values: Vec<f64> =
-                self.node_x_cols[node].iter().map(|&g| x[g as usize]).collect();
-            tx.send(ToNode::X { iter, values }).expect("node rank died");
-        }
-        // fan-in + assembly
-        let mut y = vec![0.0; self.n];
         let mut times = MpiIterTimes::default();
-        for _ in 0..self.f {
-            let r = self.replies.recv().expect("reply channel closed");
-            assert_eq!(r.iter, iter, "iteration mismatch from node {}", r.node);
+        let mut t_halo_wave = 0.0f64;
+        match self.mode {
+            OverlapMode::Blocking => {
+                // fan-out: pack X_k per node
+                for (node, tx) in self.senders.iter().enumerate() {
+                    let values: Vec<f64> =
+                        self.node_x_cols[node].iter().map(|&g| x[g as usize]).collect();
+                    tx.send(ToNode::X { iter, values })
+                        .map_err(|_| anyhow::anyhow!("node rank {node} is down"))?;
+                }
+            }
+            OverlapMode::Overlapped => {
+                // wave 1: owned values — ranks start interior rows on
+                // arrival
+                for (node, tx) in self.senders.iter().enumerate() {
+                    let cols = &self.node_x_cols[node];
+                    let values: Vec<f64> =
+                        self.node_owned[node].iter().map(|&p| x[cols[p as usize] as usize]).collect();
+                    tx.send(ToNode::XOwned { iter, values })
+                        .map_err(|_| anyhow::anyhow!("node rank {node} is down"))?;
+                }
+                // wave 2: the halo, packed and posted while interior
+                // rows compute — the exchange work the pipeline can
+                // hide (priced against the interior spans below)
+                let t1 = Instant::now();
+                for (node, tx) in self.senders.iter().enumerate() {
+                    let cols = &self.node_x_cols[node];
+                    let values: Vec<f64> =
+                        self.node_halo[node].iter().map(|&p| x[cols[p as usize] as usize]).collect();
+                    tx.send(ToNode::XHalo { iter, values })
+                        .map_err(|_| anyhow::anyhow!("node rank {node} is down"))?;
+                }
+                t_halo_wave = t1.elapsed().as_secs_f64();
+            }
+        }
+        // fan-in; replies from an iteration that aborted mid-flight may
+        // still sit in the channel — drain them instead of wedging
+        // every later call. Replies are buffered and folded in node
+        // order below so the floating-point assembly is deterministic
+        // (arrival order races between runs and schedules).
+        let mut received: Vec<Option<FromNode>> = (0..self.f).map(|_| None).collect();
+        let mut remaining = self.f;
+        while remaining > 0 {
+            let r = self
+                .replies
+                .recv()
+                .map_err(|_| anyhow::anyhow!("reply channel closed: all node ranks are down"))?;
+            if r.iter < iter {
+                continue; // stale reply from an aborted iteration
+            }
+            anyhow::ensure!(
+                r.iter == iter,
+                "future iteration {} from node {} (expected {iter})",
+                r.iter,
+                r.node
+            );
+            anyhow::ensure!(r.ok, "node rank {} failed mid-iteration", r.node);
+            anyhow::ensure!(
+                received[r.node].replace(r).is_none(),
+                "duplicate reply for iteration {iter}"
+            );
+            remaining -= 1;
+        }
+        // assembly, in node order
+        let mut y = vec![0.0; self.n];
+        let mut interior_max = 0.0f64;
+        for r in received.iter().flatten() {
             for (i, &g) in r.rows.iter().enumerate() {
                 y[g as usize] += r.values[i];
             }
             times.t_compute_max = times.t_compute_max.max(r.compute_s);
             times.t_construct_max = times.t_construct_max.max(r.construct_s);
+            interior_max = interior_max.max(r.interior_s);
         }
+        // hidden exchange time: the halo wave ran while interior rows
+        // computed, so the saving is bounded by both (same accounting
+        // as the engine and the analytic model)
+        times.t_overlap_saved = t_halo_wave.min(interior_max);
         times.t_wall = t0.elapsed().as_secs_f64();
-        (y, times)
+        Ok((y, times))
+    }
+
+    /// Fault injection for tests and chaos drills: shut one rank down
+    /// and join it, so the next [`MpiCluster::matvec`] deterministically
+    /// observes the dead rank and reports `Err`.
+    pub fn kill_rank(&mut self, node: usize) {
+        if let Some(h) = self.handles.get_mut(node).and_then(|h| h.take()) {
+            let _ = self.senders[node].send(ToNode::Shutdown);
+            let _ = h.join();
+        }
     }
 
     /// Shut the ranks down and join them.
-    pub fn shutdown(self) {
+    pub fn shutdown(mut self) {
         for tx in &self.senders {
             let _ = tx.send(ToNode::Shutdown);
         }
-        for h in self.handles {
+        for h in self.handles.iter_mut().filter_map(|h| h.take()) {
             let _ = h.join();
         }
     }
 }
 
 /// Node rank main loop: wait for X, compute the cores' PFVCs in
-/// parallel, construct the local Y_k, reply.
-fn node_rank(
-    node: usize,
-    fragments: Vec<CoreFragment>,
-    core_maps: Vec<Vec<u32>>,
-    yrows: Vec<u32>,
-    core_ymaps: Vec<Vec<u32>>,
-    rx: Receiver<ToNode>,
-    reply: Sender<FromNode>,
-) {
+/// parallel, construct the local Y_k, reply. A panic inside any scoped
+/// compute thread is caught by the scope and reported as a `!ok` reply
+/// instead of poisoning the process.
+fn node_rank(ctx: NodeCtx, rx: Receiver<ToNode>, reply: Sender<FromNode>) {
+    // persistent rank state: the assembled node X and per-core partials
+    let mut x_node: Vec<f64> = vec![0.0; ctx.x_len];
+    let mut y_locals: Vec<Vec<f64>> = vec![Vec::new(); ctx.fragments.len()];
+    // overlapped: iteration id + accumulated interior compute time
+    let mut pending: Option<(usize, f64)> = None;
     while let Ok(msg) = rx.recv() {
         match msg {
             ToNode::Shutdown => return,
             ToNode::X { iter, values } => {
                 // ---- compute (the intra-node "OpenMP" level)
                 let tc = Instant::now();
-                let mut y_locals: Vec<Vec<f64>> = vec![Vec::new(); fragments.len()];
-                crossbeam_utils::thread::scope(|scope| {
+                let scope_ok = crossbeam_utils::thread::scope(|scope| {
                     for ((frag, map), slot) in
-                        fragments.iter().zip(&core_maps).zip(y_locals.iter_mut())
+                        ctx.fragments.iter().zip(&ctx.core_maps).zip(y_locals.iter_mut())
                     {
-                        let x_node = &values;
+                        let x_k = &values;
                         scope.spawn(move |_| {
                             let x_local: Vec<f64> =
-                                map.iter().map(|&p| x_node[p as usize]).collect();
-                            let mut y_local = Vec::new();
+                                map.iter().map(|&p| x_k[p as usize]).collect();
+                            let mut y_local = std::mem::take(slot);
                             spmv::pfvc(frag, &x_local, &mut y_local);
                             *slot = y_local;
                         });
                     }
                 })
-                .expect("core scope");
-                let compute_s = tc.elapsed().as_secs_f64();
-
-                // ---- local construction of Y_k
-                let tk = Instant::now();
-                let mut yk = vec![0.0; yrows.len()];
-                for (ymap, y_local) in core_ymaps.iter().zip(&y_locals) {
-                    for (i, &p) in ymap.iter().enumerate() {
-                        yk[p as usize] += y_local[i];
-                    }
+                .is_ok();
+                if !scope_ok {
+                    // a core panicked: report the failed iteration and
+                    // retire the rank (its partials are unsound)
+                    let _ = reply.send(FromNode::failure(ctx.node, iter));
+                    return;
                 }
-                let construct_s = tk.elapsed().as_secs_f64();
-
-                reply
-                    .send(FromNode {
-                        node,
-                        iter,
-                        rows: yrows.clone(),
-                        values: yk,
-                        compute_s,
-                        construct_s,
-                    })
-                    .expect("leader gone");
+                let compute_s = tc.elapsed().as_secs_f64();
+                if construct_and_reply(&ctx, &y_locals, iter, compute_s, 0.0, &reply).is_err() {
+                    return; // leader gone
+                }
+            }
+            ToNode::XOwned { iter, values } => {
+                let tc = Instant::now();
+                for (&p, &v) in ctx.owned.iter().zip(values.iter()) {
+                    x_node[p as usize] = v;
+                }
+                let scope_ok = crossbeam_utils::thread::scope(|scope| {
+                    for (((frag, map), rows), slot) in ctx
+                        .fragments
+                        .iter()
+                        .zip(&ctx.core_maps)
+                        .zip(&ctx.core_interior)
+                        .zip(y_locals.iter_mut())
+                    {
+                        let xn = &x_node;
+                        scope.spawn(move |_| {
+                            // size-only resize: interior ∪ boundary
+                            // assign every element each iteration, so
+                            // re-zeroing would be a wasted full pass
+                            slot.resize(frag.csr.n_rows, 0.0);
+                            spmv::pfvc_rows(frag, rows, map, xn, slot);
+                        });
+                    }
+                })
+                .is_ok();
+                if !scope_ok {
+                    let _ = reply.send(FromNode::failure(ctx.node, iter));
+                    return;
+                }
+                pending = Some((iter, tc.elapsed().as_secs_f64()));
+            }
+            ToNode::XHalo { iter, values } => {
+                let interior_s = match pending.take() {
+                    Some((i, s)) if i == iter => s,
+                    // a halo wave with no matching owned wave can only
+                    // follow a leader-side abort; fail the iteration but
+                    // keep serving
+                    _ => {
+                        let _ = reply.send(FromNode::failure(ctx.node, iter));
+                        continue;
+                    }
+                };
+                let tc = Instant::now();
+                for (&p, &v) in ctx.halo.iter().zip(values.iter()) {
+                    x_node[p as usize] = v;
+                }
+                let scope_ok = crossbeam_utils::thread::scope(|scope| {
+                    for (((frag, map), rows), slot) in ctx
+                        .fragments
+                        .iter()
+                        .zip(&ctx.core_maps)
+                        .zip(&ctx.core_boundary)
+                        .zip(y_locals.iter_mut())
+                    {
+                        let xn = &x_node;
+                        scope.spawn(move |_| {
+                            spmv::pfvc_rows(frag, rows, map, xn, slot);
+                        });
+                    }
+                })
+                .is_ok();
+                if !scope_ok {
+                    let _ = reply.send(FromNode::failure(ctx.node, iter));
+                    return;
+                }
+                let compute_s = interior_s + tc.elapsed().as_secs_f64();
+                if construct_and_reply(&ctx, &y_locals, iter, compute_s, interior_s, &reply)
+                    .is_err()
+                {
+                    return; // leader gone
+                }
             }
         }
     }
+}
+
+/// Rank-side tail of one iteration: accumulate the core partials into
+/// Y_k and send the reply. `Err` means the leader dropped the channel.
+fn construct_and_reply(
+    ctx: &NodeCtx,
+    y_locals: &[Vec<f64>],
+    iter: usize,
+    compute_s: f64,
+    interior_s: f64,
+    reply: &Sender<FromNode>,
+) -> Result<(), ()> {
+    let tk = Instant::now();
+    let mut yk = vec![0.0; ctx.yrows.len()];
+    for (ymap, y_local) in ctx.core_ymaps.iter().zip(y_locals) {
+        for (i, &p) in ymap.iter().enumerate() {
+            yk[p as usize] += y_local[i];
+        }
+    }
+    let construct_s = tk.elapsed().as_secs_f64();
+    reply
+        .send(FromNode {
+            node: ctx.node,
+            iter,
+            rows: ctx.yrows.clone(),
+            values: yk,
+            compute_s,
+            interior_s,
+            construct_s,
+            ok: true,
+        })
+        .map_err(|_| ())
 }
 
 /// [`crate::solver::MatVecOp`] adapter so the iterative solvers can run
@@ -245,14 +494,15 @@ pub struct MpiOp {
 }
 
 impl MpiOp {
-    /// Launch the ranks and perform the one-time A scatter.
-    pub fn new(d: &TwoLevelDecomposition) -> MpiOp {
-        MpiOp {
-            cluster: MpiCluster::launch(d),
+    /// Launch the ranks and perform the one-time A scatter. Fails on a
+    /// decomposition the plan validator rejects.
+    pub fn new(d: &TwoLevelDecomposition) -> crate::Result<MpiOp> {
+        Ok(MpiOp {
+            cluster: MpiCluster::launch(d)?,
             iterations: 0,
             accumulated_wall: 0.0,
             accumulated_compute: 0.0,
-        }
+        })
     }
 }
 
@@ -273,7 +523,7 @@ impl crate::solver::MatVecOp for MpiOp {
             y.len(),
             self.cluster.n
         );
-        let (yv, t) = self.cluster.matvec(x);
+        let (yv, t) = self.cluster.matvec(x)?;
         y.copy_from_slice(&yv);
         self.iterations += 1;
         self.accumulated_wall += t.t_wall;
@@ -297,8 +547,8 @@ mod tests {
         let y_ref = a.matvec(&x);
         for combo in Combination::all() {
             let d = decompose(&a, combo, 3, 2, &DecomposeConfig::default()).unwrap();
-            let mut cluster = MpiCluster::launch(&d);
-            let (y, times) = cluster.matvec(&x);
+            let mut cluster = MpiCluster::launch(&d).unwrap();
+            let (y, times) = cluster.matvec(&x).unwrap();
             for i in 0..a.n_rows {
                 assert!(
                     (y[i] - y_ref[i]).abs() < 1e-9 * (1.0 + y_ref[i].abs()),
@@ -306,6 +556,12 @@ mod tests {
                 );
             }
             assert!(times.t_wall > 0.0 && times.t_compute_max > 0.0);
+            // the overlapped schedule reproduces the blocking product
+            // bit for bit
+            cluster.set_overlap_mode(OverlapMode::Overlapped);
+            let (y2, t2) = cluster.matvec(&x).unwrap();
+            assert_eq!(y, y2, "{combo}: schedules must agree bitwise");
+            assert!(t2.t_overlap_saved >= 0.0);
             cluster.shutdown();
         }
     }
@@ -314,15 +570,41 @@ mod tests {
     fn repeated_iterations_reuse_distributed_matrix() {
         let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
         let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
-        let mut cluster = MpiCluster::launch(&d);
+        let mut cluster = MpiCluster::launch(&d).unwrap();
         let x1 = vec![1.0; a.n_cols];
         let x2: Vec<f64> = (0..a.n_cols).map(|i| i as f64).collect();
-        let (y1, _) = cluster.matvec(&x1);
-        let (y2, _) = cluster.matvec(&x2);
+        let (y1, _) = cluster.matvec(&x1).unwrap();
+        let (y2, _) = cluster.matvec(&x2).unwrap();
         assert_eq!(y1.len(), a.n_rows);
         assert!((0..a.n_rows).all(|i| (y2[i] - a.matvec(&x2)[i]).abs() < 1e-9));
         assert!(y1 != y2);
         cluster.shutdown();
+    }
+
+    #[test]
+    fn dead_rank_surfaces_as_error_not_abort() {
+        let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
+        let mut cluster = MpiCluster::launch(&d).unwrap();
+        let x = vec![1.0; a.n_cols];
+        assert!(cluster.matvec(&x).is_ok());
+        cluster.kill_rank(1);
+        let err = cluster.matvec(&x).unwrap_err();
+        assert!(err.to_string().contains("rank 1"), "{err:#}");
+        // the overlapped schedule reports the same failure
+        cluster.set_overlap_mode(OverlapMode::Overlapped);
+        assert!(cluster.matvec(&x).is_err());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn corrupt_decomposition_fails_launch_eagerly() {
+        let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+        let mut d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
+        let frag = d.fragments.iter_mut().find(|fr| !fr.global_rows.is_empty()).unwrap();
+        frag.global_rows.pop();
+        assert!(MpiCluster::launch(&d).is_err());
+        assert!(MpiOp::new(&d).is_err());
     }
 
     #[test]
@@ -332,7 +614,7 @@ mod tests {
         let x_true: Vec<f64> = (0..150).map(|i| ((i % 11) as f64) * 0.2).collect();
         let b = a.matvec(&x_true);
         let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
-        let mut op = MpiOp::new(&d);
+        let mut op = MpiOp::new(&d).unwrap();
         let r = Cg::new().tol(1e-10).max_iters(600).solve(&mut op, &b).unwrap();
         assert!(r.converged);
         for i in 0..150 {

@@ -23,6 +23,14 @@
 //!     scales to the paper's 64 × 8-core sweeps;
 //!   * [`exec_mpi`] (`mpi`) — MPI-style leader/worker ranks with typed
 //!     channel messages.
+//!
+//! All three backends honor the [`OverlapMode`] knob: `Blocking` is the
+//! paper's strictly sequential scatter → compute → collect pipeline;
+//! `Overlapped` double-buffers the X exchange (locally-owned values
+//! first, halo while *interior* rows compute, *boundary* rows after) —
+//! the interior/boundary split is frozen in the [`CommPlan`], so both
+//! schedules replay the same plan and produce bitwise-identical
+//! products.
 
 pub mod backend;
 pub mod dynamic;
@@ -34,10 +42,11 @@ pub mod plan;
 pub mod sim;
 pub mod spmv;
 
-pub use backend::{make_backend, BackendKind, ExecBackend, MpiBackend, SimBackend};
+pub use backend::{make_backend, BackendKind, ExecBackend, MpiBackend, OverlapMode, SimBackend};
+pub use dynamic::{dynamic_spmv, DynamicError, DynamicResult};
 pub use engine::PmvcEngine;
 pub use exec::{execute_threads, ExecResult};
-pub use exec_mpi::{MpiCluster, MpiOp};
+pub use exec_mpi::{MpiCluster, MpiIterTimes, MpiOp};
 pub use phases::PhaseTimes;
 pub use plan::{CommPlan, NodePlan};
-pub use sim::simulate;
+pub use sim::{simulate, simulate_with};

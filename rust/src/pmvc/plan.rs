@@ -35,6 +35,20 @@ pub struct NodePlan {
     pub core_y_maps: Vec<Vec<u32>>,
     /// One-time A_k scatter payload (values + column indices), in bytes.
     pub a_bytes: usize,
+    /// Positions in [`Self::x_cols`] whose global column the node owns
+    /// (it also appears in [`Self::y_rows`]) — X values a real cluster
+    /// node holds locally, available before any exchange completes.
+    pub owned_x: Vec<u32>,
+    /// Positions in [`Self::x_cols`] the node does *not* own — the halo
+    /// the overlapped schedule fetches while interior rows compute.
+    pub halo_x: Vec<u32>,
+    /// Per-core *interior* rows (local row ids): rows whose every column
+    /// is locally owned, computable before the halo exchange lands.
+    pub core_interior_rows: Vec<Vec<u32>>,
+    /// Per-core *boundary* rows: the complement — at least one column
+    /// waits on remote X. Interior ∪ boundary partitions each core's
+    /// rows exactly.
+    pub core_boundary_rows: Vec<Vec<u32>>,
 }
 
 impl NodePlan {
@@ -46,6 +60,17 @@ impl NodePlan {
     /// Per-iteration fan-in payload for this node, in bytes.
     pub fn y_bytes(&self) -> usize {
         self.y_rows.len() * BYTES_PER_ELEM
+    }
+
+    /// Halo share of the per-iteration fan-out — the only part of the X
+    /// exchange the overlapped schedule must wait for, in bytes.
+    pub fn halo_bytes(&self) -> usize {
+        self.halo_x.len() * BYTES_PER_ELEM
+    }
+
+    /// Locally-owned share of the per-iteration fan-out, in bytes.
+    pub fn owned_bytes(&self) -> usize {
+        self.owned_x.len() * BYTES_PER_ELEM
     }
 }
 
@@ -138,7 +163,58 @@ impl CommPlan {
                     frag.csr.val.len() * 8 + frag.csr.col.len() * 4
                 })
                 .sum();
-            nodes.push(NodePlan { x_cols, core_x_maps, y_rows, core_y_maps, a_bytes });
+
+            // ---- interior/boundary classification (the overlapped
+            // schedule's task split, Agullo et al. 2012): a column is
+            // locally owned iff the node also produces that Y row; a row
+            // is interior iff every column it touches is owned. Reuses
+            // the pos scratch as an ownership marker (restored below).
+            for &g in &y_rows {
+                pos[g as usize] = 0;
+            }
+            let mut owned_x = Vec::new();
+            let mut halo_x = Vec::new();
+            for (p, &g) in x_cols.iter().enumerate() {
+                if pos[g as usize] != u32::MAX {
+                    owned_x.push(p as u32);
+                } else {
+                    halo_x.push(p as u32);
+                }
+            }
+            let mut core_interior_rows = Vec::with_capacity(d.c);
+            let mut core_boundary_rows = Vec::with_capacity(d.c);
+            for core in 0..d.c {
+                let frag = d.fragment(node, core);
+                let mut interior = Vec::new();
+                let mut boundary = Vec::new();
+                for lr in 0..frag.csr.n_rows {
+                    let all_owned = frag.csr.col[frag.csr.ptr[lr]..frag.csr.ptr[lr + 1]]
+                        .iter()
+                        .all(|&lc| pos[frag.global_cols[lc as usize] as usize] != u32::MAX);
+                    if all_owned {
+                        interior.push(lr as u32);
+                    } else {
+                        boundary.push(lr as u32);
+                    }
+                }
+                core_interior_rows.push(interior);
+                core_boundary_rows.push(boundary);
+            }
+            for &g in &y_rows {
+                pos[g as usize] = u32::MAX;
+            }
+
+            nodes.push(NodePlan {
+                x_cols,
+                core_x_maps,
+                y_rows,
+                core_y_maps,
+                a_bytes,
+                owned_x,
+                halo_x,
+                core_interior_rows,
+                core_boundary_rows,
+            });
         }
 
         Ok(CommPlan {
@@ -164,6 +240,12 @@ impl CommPlan {
     /// Per-iteration Y fan-in volume over all nodes, in bytes.
     pub fn gather_y_bytes(&self) -> usize {
         self.nodes.iter().map(|np| np.y_bytes()).sum()
+    }
+
+    /// Per-iteration halo volume over all nodes, in bytes — the only
+    /// X traffic on the overlapped schedule's critical path.
+    pub fn halo_x_bytes(&self) -> usize {
+        self.nodes.iter().map(|np| np.halo_bytes()).sum()
     }
 
     /// X footprint size of a node (`C_Xk`).
@@ -260,6 +342,51 @@ mod tests {
             d.fragments.iter().map(|fr| fr.csr.val.len() * 8 + fr.csr.col.len() * 4).sum();
         assert_eq!(plan.scatter_a_bytes(), expect_a);
         assert!(plan.scatter_x_bytes() > 0 && plan.gather_y_bytes() > 0);
+    }
+
+    #[test]
+    fn interior_boundary_partition_each_cores_rows_exactly() {
+        for combo in Combination::all() {
+            let (plan, d) = plan_for(combo, 3, 4);
+            for node in 0..3 {
+                let np = &plan.nodes[node];
+                // owned/halo partition the X footprint positions exactly
+                let mut seen_pos = vec![false; np.x_cols.len()];
+                for &p in np.owned_x.iter().chain(&np.halo_x) {
+                    assert!(!seen_pos[p as usize], "{combo} node {node}: position {p} twice");
+                    seen_pos[p as usize] = true;
+                }
+                assert!(seen_pos.iter().all(|&s| s), "{combo} node {node}: position missed");
+                for core in 0..4 {
+                    let frag = d.fragment(node, core);
+                    let mut seen = vec![false; frag.csr.n_rows];
+                    for &r in np.core_interior_rows[core].iter().chain(&np.core_boundary_rows[core])
+                    {
+                        assert!(
+                            !seen[r as usize],
+                            "{combo} node {node} core {core}: row {r} classified twice"
+                        );
+                        seen[r as usize] = true;
+                    }
+                    assert!(
+                        seen.iter().all(|&s| s),
+                        "{combo} node {node} core {core}: row left unclassified"
+                    );
+                    // interior rows really touch only owned columns
+                    let mut owned = vec![false; np.x_cols.len()];
+                    for &p in &np.owned_x {
+                        owned[p as usize] = true;
+                    }
+                    for &r in &np.core_interior_rows[core] {
+                        let (s, e) = (frag.csr.ptr[r as usize], frag.csr.ptr[r as usize + 1]);
+                        for &lc in &frag.csr.col[s..e] {
+                            let p = np.core_x_maps[core][lc as usize];
+                            assert!(owned[p as usize], "{combo}: interior row {r} needs halo");
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -59,6 +59,36 @@ pub fn csr_mv(ptr: &[usize], col: &[u32], val: &[f64], x: &[f64], y: &mut [f64])
     }
 }
 
+/// Compute a subset of a core's PFVC rows, reading X *indirectly*
+/// through the node-footprint buffer: row `r`'s product is assembled
+/// from `x_node[x_map[local col]]`. This is the overlapped schedule's
+/// kernel — interior rows run against the locally-owned X while the
+/// halo is still in flight, boundary rows run once it lands, and each
+/// row is assigned exactly once (same accumulation order as
+/// [`csr_mv`], so the two-pass product is bitwise identical to the
+/// blocking one-pass product).
+///
+/// `y_local` must already be sized to the fragment's row count; rows
+/// outside `rows` are left untouched.
+#[inline]
+pub fn pfvc_rows(
+    frag: &CoreFragment,
+    rows: &[u32],
+    x_map: &[u32],
+    x_node: &[f64],
+    y_local: &mut [f64],
+) {
+    let csr = &frag.csr;
+    for &r in rows {
+        let i = r as usize;
+        let mut acc = 0.0;
+        for k in csr.ptr[i]..csr.ptr[i + 1] {
+            acc += csr.val[k] * x_node[x_map[csr.col[k] as usize] as usize];
+        }
+        y_local[i] = acc;
+    }
+}
+
 /// Scatter-accumulate a core's partial Y into a node/global vector:
 /// `y[global_rows[lr]] += y_local[lr]`.
 #[inline]
@@ -98,6 +128,31 @@ mod tests {
                     y[i],
                     y_ref[i]
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn pfvc_rows_two_pass_equals_one_pass_pfvc() {
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 9).to_csr();
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
+        let plan = crate::pmvc::CommPlan::build(&d).unwrap();
+        let mut rng = crate::rng::SplitMix64::new(11);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        for node in 0..2 {
+            let np = &plan.nodes[node];
+            let x_node: Vec<f64> = np.x_cols.iter().map(|&g| x[g as usize]).collect();
+            for core in 0..2 {
+                let frag = d.fragment(node, core);
+                let mut x_local = Vec::new();
+                let mut y_one = Vec::new();
+                gather_x(frag, &x, &mut x_local);
+                pfvc(frag, &x_local, &mut y_one);
+                let mut y_two = vec![0.0; frag.csr.n_rows];
+                let map = &np.core_x_maps[core];
+                pfvc_rows(frag, &np.core_interior_rows[core], map, &x_node, &mut y_two);
+                pfvc_rows(frag, &np.core_boundary_rows[core], map, &x_node, &mut y_two);
+                assert_eq!(y_one, y_two, "node {node} core {core}: must be bitwise equal");
             }
         }
     }

@@ -273,6 +273,7 @@ pub(crate) fn phase_delta(
             t_scatter: a.t_scatter - b.t_scatter,
             t_gather: a.t_gather - b.t_gather,
             t_construct: a.t_construct - b.t_construct,
+            t_overlap_saved: a.t_overlap_saved - b.t_overlap_saved,
         }),
         (None, after) => after,
         (Some(_), None) => None,

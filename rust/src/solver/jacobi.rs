@@ -229,7 +229,7 @@ mod tests {
             assert!((r.x[i] - x_true[i]).abs() < 1e-6);
         }
         // the old panic on a zero diagonal is now a clean non-converged report
-        let bad = jacobi(&mut op, &vec![0.0; 150], &b, 1e-10, 10);
+        let bad = jacobi(&mut op, &[0.0; 150], &b, 1e-10, 10);
         assert!(!bad.converged);
     }
 }

@@ -32,7 +32,7 @@ pub use lanczos::Lanczos;
 pub use power::Power;
 
 use crate::partition::combined::TwoLevelDecomposition;
-use crate::pmvc::{CommPlan, ExecBackend, PhaseTimes, PmvcEngine};
+use crate::pmvc::{CommPlan, ExecBackend, OverlapMode, PhaseTimes, PmvcEngine};
 use crate::sparse::Csr;
 use std::sync::Arc;
 
@@ -180,6 +180,18 @@ impl DistributedOp {
     pub fn backend(&self) -> &dyn ExecBackend {
         self.backend.as_ref()
     }
+
+    /// The backend's communication/computation schedule.
+    pub fn overlap_mode(&self) -> OverlapMode {
+        self.backend.overlap_mode()
+    }
+
+    /// Select the backend's schedule. The operator passes the mode
+    /// through unchanged — solvers never see it; they just observe a
+    /// larger or smaller accumulated `t_overlap_saved`.
+    pub fn set_overlap_mode(&mut self, mode: OverlapMode) -> crate::Result<()> {
+        self.backend.set_overlap_mode(mode)
+    }
 }
 
 impl MatVecOp for DistributedOp {
@@ -195,6 +207,7 @@ impl MatVecOp for DistributedOp {
         self.accumulated.t_scatter += times.t_scatter;
         self.accumulated.t_gather += times.t_gather;
         self.accumulated.t_construct += times.t_construct;
+        self.accumulated.t_overlap_saved += times.t_overlap_saved;
         self.applications += 1;
         Ok(())
     }
@@ -258,6 +271,23 @@ mod tests {
         assert_eq!(dist.plan_builds(), 1);
         assert_eq!(p0, Arc::as_ptr(dist.plan().unwrap()));
         assert_eq!(dist.applications, 10);
+    }
+
+    #[test]
+    fn overlap_mode_passes_through_to_the_backend() {
+        let a = gen::generate_spd(200, 3, 1200, 9).to_csr();
+        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.03).cos()).collect();
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
+        let mut dist = DistributedOp::new(d).unwrap();
+        assert_eq!(dist.overlap_mode(), OverlapMode::Blocking);
+        let mut yb = vec![0.0; 200];
+        dist.apply_into(&x, &mut yb).unwrap();
+        dist.set_overlap_mode(OverlapMode::Overlapped).unwrap();
+        assert_eq!(dist.overlap_mode(), OverlapMode::Overlapped);
+        let mut yo = vec![0.0; 200];
+        dist.apply_into(&x, &mut yo).unwrap();
+        assert_eq!(yb, yo, "schedules must agree bitwise through the operator");
+        assert!(dist.phase_times().unwrap().t_overlap_saved >= 0.0);
     }
 
     #[test]

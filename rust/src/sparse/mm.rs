@@ -8,6 +8,7 @@
 //! real/integer/pattern, general/symmetric/skew-symmetric).
 
 use super::Coo;
+use std::collections::HashSet;
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
@@ -78,9 +79,19 @@ pub fn read_from(reader: impl BufRead) -> crate::Result<Coo> {
         .map_err(|e| anyhow::anyhow!("bad size line '{size_line}': {e}"))?;
     anyhow::ensure!(dims.len() == 3, "size line must have 3 fields");
     let (n_rows, n_cols, nnz) = (dims[0], dims[1], dims[2]);
+    // the claimed entry count is untrusted input: bound it before it
+    // drives any allocation (an oversized reserve aborts the process,
+    // which no malformed file should be able to do)
+    anyhow::ensure!(
+        nnz <= n_rows.saturating_mul(n_cols),
+        "size line claims {nnz} entries for a {n_rows}x{n_cols} matrix"
+    );
 
     let mut m = Coo::new(n_rows, n_cols);
     let mut read = 0usize;
+    // capacity is a hint only — capped so a large (but self-consistent)
+    // header cannot force a huge up-front reservation either
+    let mut seen: HashSet<(u32, u32)> = HashSet::with_capacity(nnz.min(1 << 20));
     for line in lines {
         let line = line?;
         let t = line.trim();
@@ -96,9 +107,26 @@ pub fn read_from(reader: impl BufRead) -> crate::Result<Coo> {
         };
         anyhow::ensure!(
             (1..=n_rows).contains(&i) && (1..=n_cols).contains(&j),
-            "entry ({i},{j}) out of bounds"
+            "entry ({i},{j}) out of bounds for a {n_rows}x{n_cols} matrix (1-based indices)"
+        );
+        // symmetric storage keeps one triangle; an upper-triangle entry
+        // would be silently double-counted by the mirror push below
+        anyhow::ensure!(
+            symmetry == Symmetry::General || i >= j,
+            "entry ({i},{j}) above the diagonal in a {} file",
+            if symmetry == Symmetry::Symmetric { "symmetric" } else { "skew-symmetric" }
+        );
+        // a skew-symmetric matrix has a_ii = -a_ii = 0; a nonzero
+        // diagonal entry used to slip through unmirrored
+        anyhow::ensure!(
+            symmetry != Symmetry::SkewSymmetric || i != j || v == 0.0,
+            "nonzero diagonal entry ({i},{i}) in a skew-symmetric file"
         );
         let (r, c) = ((i - 1) as u32, (j - 1) as u32);
+        anyhow::ensure!(
+            seen.insert((r, c)),
+            "duplicate entry ({i},{j}); MatrixMarket coordinate entries must be unique"
+        );
         m.push(r, c, v);
         match symmetry {
             Symmetry::General => {}
@@ -171,6 +199,71 @@ mod tests {
         let csr = m.to_csr();
         assert_eq!(csr.row(0).collect::<Vec<_>>(), vec![(1, -3.0)]);
         assert_eq!(csr.row(1).collect::<Vec<_>>(), vec![(0, 3.0)]);
+    }
+
+    #[test]
+    fn rejects_out_of_range_indices() {
+        // row beyond n_rows
+        let src = "%%MatrixMarket matrix coordinate real general\n3 3 1\n4 1 1.0\n";
+        assert!(read_from(src.as_bytes()).unwrap_err().to_string().contains("out of bounds"));
+        // column beyond n_cols
+        let src = "%%MatrixMarket matrix coordinate real general\n3 3 1\n1 4 1.0\n";
+        assert!(read_from(src.as_bytes()).is_err());
+        // MatrixMarket is 1-based: a 0 index is out of range, not row 0
+        let src = "%%MatrixMarket matrix coordinate real general\n3 3 1\n0 1 1.0\n";
+        assert!(read_from(src.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_impossible_entry_count_without_allocating() {
+        // a corrupt size line must come back as Err before any
+        // entry-driven allocation happens
+        let src = "%%MatrixMarket matrix coordinate real general\n3 3 99999999999999\n1 1 1.0\n";
+        let err = read_from(src.as_bytes()).unwrap_err().to_string();
+        assert!(err.contains("claims"), "{err}");
+    }
+
+    #[test]
+    fn rejects_nonzero_diagonal_in_skew_symmetric() {
+        let src = "%%MatrixMarket matrix coordinate real skew-symmetric\n2 2 1\n1 1 3.0\n";
+        let err = read_from(src.as_bytes()).unwrap_err().to_string();
+        assert!(err.contains("skew-symmetric"), "{err}");
+        // an explicit zero on the diagonal is harmless and still parses
+        let src = "%%MatrixMarket matrix coordinate real skew-symmetric\n2 2 2\n1 1 0.0\n2 1 3.0\n";
+        assert!(read_from(src.as_bytes()).is_ok());
+    }
+
+    #[test]
+    fn rejects_duplicate_entries() {
+        let src = "%%MatrixMarket matrix coordinate real general\n3 3 2\n1 2 1.0\n1 2 2.5\n";
+        let err = read_from(src.as_bytes()).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn rejects_upper_triangle_in_symmetric_storage() {
+        // both triangles given: the mirror push would double-count
+        let src = "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n2 1 1.0\n1 2 1.0\n";
+        let err = read_from(src.as_bytes()).unwrap_err().to_string();
+        assert!(err.contains("above the diagonal"), "{err}");
+        let src = "%%MatrixMarket matrix coordinate real skew-symmetric\n2 2 1\n1 2 3.0\n";
+        assert!(read_from(src.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn pattern_and_integer_fields_roundtrip() {
+        // pattern: every entry reads as 1.0 and survives CSR conversion
+        let src = "%%MatrixMarket matrix coordinate pattern general\n3 3 3\n1 2\n2 3\n3 1\n";
+        let m = read_from(src.as_bytes()).unwrap();
+        assert_eq!(m.val, vec![1.0, 1.0, 1.0]);
+        let csr = m.to_csr();
+        assert_eq!(csr.row(0).collect::<Vec<_>>(), vec![(1, 1.0)]);
+        // integer: values parse exactly into f64
+        let src = "%%MatrixMarket matrix coordinate integer general\n2 2 2\n1 1 3\n2 2 -7\n";
+        let m = read_from(src.as_bytes()).unwrap();
+        assert_eq!(m.val, vec![3.0, -7.0]);
+        let csr = m.to_csr();
+        assert_eq!(csr.row(1).collect::<Vec<_>>(), vec![(1, -7.0)]);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 use pmvc::cluster::NetworkPreset;
 use pmvc::coordinator::experiment::topology_for;
 use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
-use pmvc::pmvc::{execute_threads, make_backend, BackendKind, ExecBackend, PmvcEngine};
+use pmvc::pmvc::{execute_threads, make_backend, BackendKind, ExecBackend, OverlapMode, PmvcEngine};
 use pmvc::rng::SplitMix64;
 use pmvc::solver::{Cg, DistributedOp, IterativeSolver, MatVecOp};
 use pmvc::sparse::gen::{generate, MatrixSpec};
@@ -84,6 +84,11 @@ fn all_backends_reachable_through_trait_and_agree_with_oneshot() {
         let t2 = backend.apply_into(&x, &mut y2).unwrap();
         assert_eq!(r.y.len(), y2.len());
         assert!(t2.t_total() > 0.0, "{kind}");
+        // the overlapped schedule agrees bitwise on a 3×2 cluster too
+        backend.set_overlap_mode(OverlapMode::Overlapped).unwrap();
+        let mut y3 = vec![0.0; a.n_rows];
+        backend.apply_into(&x, &mut y3).unwrap();
+        assert_eq!(y2, y3, "{kind}: overlapped must match blocking bitwise");
     }
 }
 

@@ -103,8 +103,8 @@ fn mpi_backend_agrees_with_threaded_backend() {
     for combo in [Combination::NlHl, Combination::NcHc] {
         let d = decompose(&a, combo, 4, 2, &DecomposeConfig::default()).unwrap();
         let rt = execute_threads(&d, &x).unwrap();
-        let mut cluster = MpiCluster::launch(&d);
-        let (ym, times) = cluster.matvec(&x);
+        let mut cluster = MpiCluster::launch(&d).unwrap();
+        let (ym, times) = cluster.matvec(&x).unwrap();
         for i in 0..a.n_rows {
             assert!((rt.y[i] - ym[i]).abs() < 1e-12, "{combo} row {i}");
         }
@@ -119,7 +119,7 @@ fn dynamic_scheduling_equals_static_result() {
     let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 2).to_csr();
     let x = x_for(a.n_cols, 3);
     let y_static = a.matvec(&x);
-    let r = dynamic_spmv(&a, &x, 4, 32);
+    let r = dynamic_spmv(&a, &x, 4, 32).unwrap();
     for i in 0..a.n_rows {
         assert!((r.y[i] - y_static[i]).abs() < 1e-12, "row {i}");
     }

@@ -1,15 +1,18 @@
 //! Integration: the solver × backend matrix. Every [`IterativeSolver`]
 //! runs through the one trait over serial CSR, the persistent threaded
-//! engine and the simulated cluster, converging to the same answer; a
-//! corrupted decomposition or a dying backend surfaces as `Err` from
-//! `solve` instead of the old silent zero-vector stall.
+//! engine and the simulated cluster, converging to the same answer —
+//! on both the blocking and the overlapped schedule, which must agree
+//! to 1e-12; a corrupted decomposition, a dying backend or a dead MPI
+//! rank surfaces as `Err` from `solve` instead of the old silent
+//! zero-vector stall (or process abort).
 
 use pmvc::cluster::NetworkPreset;
 use pmvc::coordinator::experiment::topology_for;
 use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
-use pmvc::pmvc::{make_backend, BackendKind, ExecBackend, PhaseTimes};
+use pmvc::pmvc::{make_backend, BackendKind, ExecBackend, MpiOp, OverlapMode, PhaseTimes};
 use pmvc::solver::{
-    make_solver, Cg, DistributedOp, IterativeSolver, Power, SolveReport, SolverError, SolverKind,
+    make_solver, Cg, DistributedOp, IterativeSolver, MatVecOp, Power, SolveReport, SolverError,
+    SolverKind,
 };
 use pmvc::sparse::gen;
 use pmvc::sparse::Csr;
@@ -37,10 +40,11 @@ fn configure(solver: &mut dyn IterativeSolver, kind: SolverKind) {
 }
 
 /// Run `kind` over the serial CSR (backend `None`) or a distributed
-/// backend wrapped in [`DistributedOp`].
-fn solve_over(
+/// backend wrapped in [`DistributedOp`], on the requested schedule.
+fn solve_over_mode(
     kind: SolverKind,
     backend: Option<BackendKind>,
+    mode: OverlapMode,
     a: &Csr,
     b: &[f64],
 ) -> SolveReport {
@@ -60,6 +64,7 @@ fn solve_over(
             let d = decompose(a, Combination::NlHl, f, c, &DecomposeConfig::default()).unwrap();
             let be = make_backend(bk, d, &topo, &net).unwrap();
             let mut op = DistributedOp::with_backend(be);
+            op.set_overlap_mode(mode).unwrap();
             let report = solver.solve(&mut op, b).unwrap();
             assert_eq!(op.applications, report.applies, "{kind}/{bk}");
             assert!(
@@ -69,6 +74,15 @@ fn solve_over(
             report
         }
     }
+}
+
+fn solve_over(
+    kind: SolverKind,
+    backend: Option<BackendKind>,
+    a: &Csr,
+    b: &[f64],
+) -> SolveReport {
+    solve_over_mode(kind, backend, OverlapMode::Blocking, a, b)
 }
 
 #[test]
@@ -108,6 +122,53 @@ fn every_solver_matches_serial_over_threads_and_sim() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn blocking_and_overlapped_agree_across_solver_backend_matrix() {
+    // the overlap acceptance gate: for every solver × backend cell, the
+    // two schedules must produce the same answer to 1e-12 (the threaded
+    // engine is in fact bitwise-identical; 1e-12 leaves room for the
+    // solvers' own floating-point reductions)
+    let (a_spd, b_spd) = spd_system();
+    let a_link = link_system();
+    for kind in SolverKind::all() {
+        let (a, b): (&Csr, &[f64]) = if kind == SolverKind::Power {
+            (&a_link, &[])
+        } else {
+            (&a_spd, &b_spd)
+        };
+        for bk in [BackendKind::Threads, BackendKind::Sim] {
+            let blocking = solve_over_mode(kind, Some(bk), OverlapMode::Blocking, a, b);
+            let overlapped = solve_over_mode(kind, Some(bk), OverlapMode::Overlapped, a, b);
+            assert!(blocking.converged && overlapped.converged, "{kind}/{bk}");
+            assert_eq!(blocking.iterations, overlapped.iterations, "{kind}/{bk}");
+            if blocking.x.is_empty() {
+                let (lb, lo) = (blocking.lambda.unwrap(), overlapped.lambda.unwrap());
+                assert!((lb - lo).abs() <= 1e-12 * (1.0 + lb.abs()), "{kind}/{bk}: {lb} vs {lo}");
+            } else {
+                for i in 0..blocking.x.len() {
+                    assert!(
+                        (blocking.x[i] - overlapped.x[i]).abs() <= 1e-12,
+                        "{kind}/{bk} x[{i}]: {} vs {}",
+                        blocking.x[i],
+                        overlapped.x[i]
+                    );
+                }
+            }
+            let saved = overlapped.phases.unwrap().t_overlap_saved;
+            assert!(saved >= 0.0, "{kind}/{bk}");
+        }
+    }
+    // mpi spawns real rank threads per cell — one representative cell
+    // instead of the full matrix
+    let blocking = solve_over_mode(SolverKind::Cg, Some(BackendKind::Mpi), OverlapMode::Blocking, &a_spd, &b_spd);
+    let overlapped =
+        solve_over_mode(SolverKind::Cg, Some(BackendKind::Mpi), OverlapMode::Overlapped, &a_spd, &b_spd);
+    assert!(blocking.converged && overlapped.converged);
+    for i in 0..blocking.x.len() {
+        assert!((blocking.x[i] - overlapped.x[i]).abs() <= 1e-12, "cg/mpi x[{i}]");
     }
 }
 
@@ -157,6 +218,28 @@ fn corrupted_decomposition_makes_solve_fail() {
     let err = Cg::new().tol(1e-10).max_iters(100).solve(&mut op, &b).unwrap_err();
     assert!(matches!(err, SolverError::Backend(_)));
     assert!(err.to_string().contains("simulated node failure"));
+}
+
+#[test]
+fn dying_mpi_rank_makes_solve_fail_instead_of_aborting() {
+    // a rank that dies mid-solve used to hit `.expect("node rank died")`
+    // and take the whole process down; now the solve reports Err on
+    // both schedules and the caller decides what to do next
+    let (a, b) = spd_system();
+    for mode in [OverlapMode::Blocking, OverlapMode::Overlapped] {
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
+        let mut op = MpiOp::new(&d).unwrap();
+        op.cluster.set_overlap_mode(mode);
+        // a first iteration goes through fine
+        let mut y = vec![0.0; a.n_rows];
+        op.apply_into(&b, &mut y).unwrap();
+        // then rank 0 dies; the next solve must surface a typed error
+        op.cluster.kill_rank(0);
+        let err = Cg::new().tol(1e-10).max_iters(100).solve(&mut op, &b).unwrap_err();
+        assert!(matches!(err, SolverError::Backend(_)), "{mode}");
+        assert!(err.to_string().contains("rank 0"), "{mode}: {err}");
+        op.cluster.shutdown();
+    }
 }
 
 #[test]

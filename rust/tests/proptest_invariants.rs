@@ -6,10 +6,11 @@ use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
 use pmvc::partition::hypergraph::Hypergraph;
 use pmvc::partition::multilevel::Multilevel;
 use pmvc::partition::{Axis, Nezgt};
-use pmvc::pmvc::{execute_threads, CommPlan};
+use pmvc::pmvc::{execute_threads, CommPlan, OverlapMode, PmvcEngine};
 use pmvc::rng::SplitMix64;
 use pmvc::sparse::gen::{generate, Family, MatrixSpec};
 use pmvc::sparse::Coo;
+use std::sync::Arc;
 
 /// Random sparse matrix for property tests.
 fn random_matrix(rng: &mut SplitMix64) -> Coo {
@@ -157,6 +158,73 @@ fn prop_comm_plan_maps_are_permutations_consistent_with_decomposition() {
         let expect_a: usize =
             d.fragments.iter().map(|fr| fr.csr.val.len() * 8 + fr.csr.col.len() * 4).sum();
         assert_eq!(plan.scatter_a_bytes(), expect_a, "trial {trial}");
+    }
+}
+
+#[test]
+fn prop_interior_boundary_rows_partition_each_core_exactly() {
+    // the overlapped schedule's task split: for every node, interior ∪
+    // boundary must cover each core's rows exactly once, and interior
+    // rows must never reference a halo column
+    let mut rng = SplitMix64::new(0x0B17);
+    for trial in 0..20 {
+        let a = random_matrix(&mut rng).to_csr();
+        let combo = Combination::all()[rng.next_below(4)];
+        let f = 1 + rng.next_below(5);
+        let c = 1 + rng.next_below(5);
+        let d = decompose(&a, combo, f, c, &DecomposeConfig::default()).unwrap();
+        let plan = CommPlan::build(&d).unwrap();
+        for node in 0..f {
+            let np = &plan.nodes[node];
+            assert_eq!(
+                np.owned_x.len() + np.halo_x.len(),
+                np.x_cols.len(),
+                "trial {trial} node {node}: owned/halo must split the X footprint"
+            );
+            let mut owned = vec![false; np.x_cols.len()];
+            for &p in &np.owned_x {
+                owned[p as usize] = true;
+            }
+            for core in 0..c {
+                let frag = d.fragment(node, core);
+                let mut seen = vec![0u8; frag.csr.n_rows];
+                for &r in &np.core_interior_rows[core] {
+                    seen[r as usize] += 1;
+                    // interior rows read owned columns only
+                    let (s, e) = (frag.csr.ptr[r as usize], frag.csr.ptr[r as usize + 1]);
+                    for &lc in &frag.csr.col[s..e] {
+                        let p = np.core_x_maps[core][lc as usize] as usize;
+                        assert!(owned[p], "trial {trial}: interior row {r} reads the halo");
+                    }
+                }
+                for &r in &np.core_boundary_rows[core] {
+                    seen[r as usize] += 1;
+                }
+                assert!(
+                    seen.iter().all(|&s| s == 1),
+                    "trial {trial} ({combo} f={f} c={c}) node {node} core {core}: \
+                     rows not partitioned exactly"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_overlapped_engine_is_bitwise_equal_to_blocking() {
+    let mut rng = SplitMix64::new(0x0E0E);
+    for trial in 0..10 {
+        let a = random_matrix(&mut rng).to_csr();
+        let combo = Combination::all()[rng.next_below(4)];
+        let f = 1 + rng.next_below(4);
+        let c = 1 + rng.next_below(4);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-5.0, 5.0)).collect();
+        let d = decompose(&a, combo, f, c, &DecomposeConfig::default()).unwrap();
+        let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+        let yb = engine.apply(&x).unwrap().y;
+        engine.set_overlap_mode(OverlapMode::Overlapped);
+        let yo = engine.apply(&x).unwrap().y;
+        assert_eq!(yb, yo, "trial {trial} ({combo} f={f} c={c})");
     }
 }
 
