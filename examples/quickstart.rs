@@ -13,6 +13,7 @@ use pmvc::pmvc::PmvcEngine;
 use pmvc::rng::SplitMix64;
 use pmvc::sparse::gen::{generate, MatrixSpec};
 use pmvc::sparse::stats::MatrixStats;
+use pmvc::sparse::FormatKind;
 use std::sync::Arc;
 
 fn main() -> pmvc::Result<()> {
@@ -25,11 +26,21 @@ fn main() -> pmvc::Result<()> {
 
     // 2. two-level decomposition: NEZGT_ligne inter-node (load balance),
     //    HYPER_ligne intra-node (communication volume) — the paper's
-    //    winning combination.
+    //    winning combination — with the kernel storage of every
+    //    fragment auto-selected from its own structure (the ch. 1 §2.3
+    //    format study as a config knob).
     let (f, c) = (4usize, 4usize);
-    let d = decompose(&a, Combination::NlHl, f, c, &DecomposeConfig::default())?;
+    let cfg = DecomposeConfig::default().with_format(FormatKind::Auto);
+    let d = decompose(&a, Combination::NlHl, f, c, &cfg)?;
     println!("\ndecomposition {} over {f} nodes x {c} cores:", d.combo);
     println!("  LB_noeuds = {:.3}  LB_coeurs = {:.3}", d.lb_nodes(), d.lb_cores());
+    let census = d
+        .format_census()
+        .iter()
+        .map(|(kind, count)| format!("{kind}:{count}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    println!("  kernel storage (auto-selected) = [{census}], {} B resident", d.stored_bytes());
     let cv = CommVolumes::of(&d);
     println!(
         "  scatter volume = {} elements (A) + {} (X), gather = {} (Y)",

@@ -9,7 +9,12 @@
 //! 5. simulator sensitivity: per-message overhead × node count.
 //!
 //! ```bash
-//! cargo bench --bench ablations
+//! cargo bench --bench ablations           # full measurement run
+//! cargo bench --bench ablations -- --test # CI smoke: runs the
+//!                                         # format_comparison ablation
+//!                                         # (6) on tiny sizes and
+//!                                         # asserts every format's
+//!                                         # product against CSR
 //! ```
 
 use pmvc::cluster::{ClusterTopology, NetworkPreset};
@@ -22,6 +27,14 @@ use pmvc::pmvc::simulate;
 use pmvc::sparse::gen::{generate, MatrixSpec};
 
 fn main() {
+    // --test: smoke the format kernels only — the gate that keeps the
+    // ch. 1 §2.3 formats from silently rotting again
+    if std::env::args().any(|a| a == "--test") {
+        format_comparison(true);
+        println!("\nablations OK (test mode)");
+        return;
+    }
+
     let matrices = ["t2dal", "epb1", "zhao1"];
 
     println!("--- ablation 1: NEZGT refinement (phase 2) ---");
@@ -108,45 +121,60 @@ fn main() {
         println!("{:<6} {:>10.3}ms {:>10.4}ms", f, t.t_scatter * 1e3, t.t_gather * 1e3);
     }
 
-    println!("\n--- ablation 6: compression formats (ch.1 §2.3 / related work) ---");
+    format_comparison(false);
+
+    ablation7();
+}
+
+/// Ablation 6: the compression-format trade-off (ch. 1 §2.3 / related
+/// work), over the serial `mv_into` kernels. In test mode (`--test`,
+/// the CI smoke) sizes shrink and every format's product is asserted
+/// against the CSR reference — the gate that keeps these kernels alive.
+fn format_comparison(test_mode: bool) {
+    use pmvc::sparse::formats_ext::{Bsr, CsrDu, Dia, Jad};
+    println!("--- ablation 6: compression formats (ch.1 §2.3 / related work) ---");
     println!(
         "{:<12} {:>10} {:>12} {:>12} {:>12} {:>12} {:>12}",
         "matrix", "nnz", "CSR", "DIA", "JAD", "BSR(4)", "CSR-DU"
     );
-    for name in ["bcsstm09", "t2dal", "epb1", "spmsrtls"] {
+    let names: &[&str] =
+        if test_mode { &["bcsstm09", "t2dal"] } else { &["bcsstm09", "t2dal", "epb1", "spmsrtls"] };
+    for &name in names {
         let a = generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr();
         let mut rng = pmvc::rng::SplitMix64::new(1);
         let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
-        let iters = (20_000_000 / a.nnz().max(1)).clamp(5, 500);
-        let time = |mut f: Box<dyn FnMut() -> Vec<f64>>| {
-            for _ in 0..3 {
-                std::hint::black_box(f());
+        let y_ref = a.matvec(&x);
+        let iters =
+            if test_mode { 3 } else { (20_000_000 / a.nnz().max(1)).clamp(5, 500) };
+        let mut y = vec![0.0; a.n_rows];
+        let check = |label: &str, y: &[f64]| {
+            for i in 0..y_ref.len() {
+                assert!(
+                    (y[i] - y_ref[i]).abs() < 1e-10 * (1.0 + y_ref[i].abs()),
+                    "{name}/{label} row {i}: {} vs {}",
+                    y[i],
+                    y_ref[i]
+                );
             }
-            let t0 = std::time::Instant::now();
-            for _ in 0..iters {
-                std::hint::black_box(f());
-            }
-            t0.elapsed().as_secs_f64() / iters as f64 * 1e6 // µs
         };
-        use pmvc::sparse::formats_ext::{Bsr, CsrDu, Dia, Jad};
-        let a2 = a.clone();
-        let x2 = x.clone();
-        let t_csr = time(Box::new(move || a2.matvec(&x2)));
-        let t_dia = Dia::from_csr(&a, 4096).map(|d| {
-            let x2 = x.clone();
-            time(Box::new(move || d.matvec(&x2)))
+        let t_csr = time_mv(iters, &mut y, &mut |y| a.matvec_into(&x, y));
+        check("csr", &y);
+        let t_dia = Dia::from_csr(&a, 4096).ok().map(|d| {
+            let t = time_mv(iters, &mut y, &mut |y| d.mv_into(&x, y).unwrap());
+            check("dia", &y);
+            t
         });
         let jad = Jad::from_csr(&a);
-        let x2 = x.clone();
-        let t_jad = time(Box::new(move || jad.matvec(&x2)));
+        let t_jad = time_mv(iters, &mut y, &mut |y| jad.mv_into(&x, y).unwrap());
+        check("jad", &y);
         let bsr = Bsr::from_csr(&a, 4);
         let fill = bsr.fill_ratio(a.nnz());
-        let x2 = x.clone();
-        let t_bsr = time(Box::new(move || bsr.matvec(&x2)));
+        let t_bsr = time_mv(iters, &mut y, &mut |y| bsr.mv_into(&x, y).unwrap());
+        check("bsr", &y);
         let du = CsrDu::from_csr(&a);
         let idx_ratio = du.index_bytes() as f64 / (4.0 * a.nnz() as f64);
-        let x2 = x.clone();
-        let t_du = time(Box::new(move || du.matvec(&x2)));
+        let t_du = time_mv(iters, &mut y, &mut |y| du.mv_into(&x, y).unwrap());
+        check("csrdu", &y);
         println!(
             "{:<12} {:>10} {:>10.1}µs {:>12} {:>10.1}µs {:>12} {:>12}",
             name,
@@ -158,7 +186,24 @@ fn main() {
             format!("{t_du:.1}µs i{idx_ratio:.2}")
         );
     }
+}
 
+/// Warm up, then time `iters` calls of `f` on the shared scratch `y`,
+/// returning µs per call.
+fn time_mv(iters: usize, y: &mut [f64], f: &mut dyn FnMut(&mut [f64])) -> f64 {
+    for _ in 0..3 {
+        f(y);
+        std::hint::black_box(&*y);
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        f(y);
+        std::hint::black_box(&*y);
+    }
+    t0.elapsed().as_secs_f64() / iters as f64 * 1e6
+}
+
+fn ablation7() {
     println!("\n--- ablation 7: static NEZGT vs dynamic scheduling [LeE08] ---");
     println!("{:<12} {:>10} {:>14} {:>14}", "matrix", "workers", "static", "dynamic(c=64)");
     for name in ["epb1", "af23560"] {

@@ -1,11 +1,15 @@
 //! Hot-path microbenchmarks: the per-core PFVC kernel (native CSR, native
 //! ELL, XLA artifact) measured against the memory-bandwidth roofline,
 //! plus the solver-loop instruments: plan-once engine reuse vs one-shot
-//! execution, and allocating `apply` vs allocation-free `apply_into`.
-//! This is the §Perf instrument for L1/L3.
+//! execution, allocating `apply` vs allocation-free `apply_into`, and
+//! the storage-format × schedule grid over the distributed engine
+//! (which also emits the machine-readable `BENCH_pr5.json` perf
+//! trajectory point). This is the §Perf instrument for L1/L3.
 //!
 //! ```bash
-//! cargo bench --bench kernel_hotpath            # full measurement run
+//! cargo bench --bench kernel_hotpath            # full measurement run;
+//!                                               # writes BENCH_pr5.json
+//!                                               # (in rust/, the crate dir)
 //! cargo bench --bench kernel_hotpath -- --test  # CI smoke: tiny sizes,
 //!                                               # asserts the hot path
 //! ```
@@ -16,6 +20,7 @@ use pmvc::pmvc::{execute_threads, OverlapMode, PmvcEngine};
 use pmvc::rng::SplitMix64;
 use pmvc::sparse::ell::Ell;
 use pmvc::sparse::gen::{generate, MatrixSpec};
+use pmvc::sparse::FormatKind;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -79,9 +84,11 @@ fn main() {
         let frag = a.select_rows(&rows);
         if let Ok((ell, bucket)) = Ell::from_csr_auto(&frag) {
             let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let mut yf = vec![0f32; ell.rows];
             let dt = time_it(
                 || {
-                    std::hint::black_box(ell.matvec(&xf));
+                    ell.mv_into(&xf, &mut yf).unwrap();
+                    std::hint::black_box(&yf);
                 },
                 if test_mode { 5 } else { iters.max(100) },
             );
@@ -216,6 +223,85 @@ fn main() {
         println!("  blocking apply_into:      {:>9.1}µs/apply", per_blocking * 1e6);
         println!("  overlapped apply_into:    {:>9.1}µs/apply", per_overlapped * 1e6);
         println!("  halo hidden per apply:    {:>9.1}µs", saved / applies as f64 * 1e6);
+    }
+
+    // storage format × schedule over the distributed engine: the format
+    // study (ch. 1 §2.3 / [KGK08]) meets the overlap study, end to end
+    // through the real worker pool. Every cell is gated against the
+    // serial product (the --test smoke), and the grid is emitted as
+    // machine-readable BENCH_pr5.json so the perf trajectory finally
+    // has a first data point.
+    {
+        let applies = if test_mode { 3usize } else { 50usize };
+        let mats: &[&str] = if test_mode { &["t2dal"] } else { &["t2dal", "epb1"] };
+        let mut json_rows: Vec<String> = Vec::new();
+        println!("\nformat × schedule (NL-HL, 2x4, {applies} applies/cell):");
+        println!("{:<10} {:>8} {:>12} {:>12}", "matrix", "format", "blocking", "overlapped");
+        for &mat in mats {
+            let a = generate(&MatrixSpec::paper(mat).unwrap(), 1).to_csr();
+            let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+            let y_ref = a.matvec(&x);
+            for kind in FormatKind::all() {
+                let cfg = DecomposeConfig::default().with_format(kind);
+                let d = match decompose(&a, Combination::NlHl, 2, 4, &cfg) {
+                    Ok(d) => d,
+                    Err(e) => {
+                        println!("{:<10} {:>8} skipped: {e}", mat, kind.name());
+                        continue;
+                    }
+                };
+                let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+                let mut y = vec![0.0; a.n_rows];
+                let mut per = [0f64; 2];
+                for (si, mode) in
+                    [OverlapMode::Blocking, OverlapMode::Overlapped].into_iter().enumerate()
+                {
+                    engine.set_overlap_mode(mode);
+                    engine.apply_into(&x, &mut y).unwrap(); // warm the schedule
+                    let t0 = Instant::now();
+                    for _ in 0..applies {
+                        engine.apply_into(&x, &mut y).unwrap();
+                        std::hint::black_box(&y);
+                    }
+                    per[si] = t0.elapsed().as_secs_f64() / applies as f64;
+                    // correctness gate: every format × schedule cell
+                    // must reproduce the serial product
+                    let max_err = y
+                        .iter()
+                        .zip(&y_ref)
+                        .map(|(u, v)| (u - v).abs() / (1.0 + v.abs()))
+                        .fold(0.0f64, f64::max);
+                    assert!(
+                        max_err < 1e-12,
+                        "{mat}/{}/{}: diverges from serial by {max_err:.3e}",
+                        kind.name(),
+                        mode.name()
+                    );
+                    json_rows.push(format!(
+                        "  {{\"matrix\": \"{mat}\", \"format\": \"{}\", \"schedule\": \"{}\", \"us_per_iter\": {:.3}}}",
+                        kind.name(),
+                        mode.name(),
+                        per[si] * 1e6
+                    ));
+                }
+                println!(
+                    "{:<10} {:>8} {:>10.1}µs {:>10.1}µs",
+                    mat,
+                    kind.name(),
+                    per[0] * 1e6,
+                    per[1] * 1e6
+                );
+            }
+        }
+        let json = format!("[\n{}\n]\n", json_rows.join(",\n"));
+        std::fs::write("BENCH_pr5.json", &json).expect("write BENCH_pr5.json");
+        println!(
+            "wrote {} format × schedule points to {}",
+            json_rows.len(),
+            std::env::current_dir()
+                .map(|d| d.join("BENCH_pr5.json").display().to_string())
+                .unwrap_or_else(|_| "BENCH_pr5.json".into())
+        );
     }
 
     // XLA artifact path (if built)

@@ -71,6 +71,15 @@ impl ClusterTopology {
     /// clamped below by the flop roofline (2 flops per nonzero).
     pub fn core_spmv_time(&self, nnz: usize, rows: usize, x_elems: usize) -> f64 {
         let bytes = nnz as f64 * 12.0 + rows as f64 * 12.0 + x_elems as f64 * 8.0;
+        self.core_stream_time(bytes, nnz)
+    }
+
+    /// Memory-roofline time to stream `bytes` for a kernel doing 2
+    /// flops per nonzero, clamped below by the flop ceiling — the
+    /// general form [`ClusterTopology::core_spmv_time`] is a CSR
+    /// instance of. The format-generic simulator prices each storage
+    /// format's own bytes-touched model through this.
+    pub fn core_stream_time(&self, bytes: f64, nnz: usize) -> f64 {
         let t_mem = bytes / self.core_bw;
         let t_flop = (2.0 * nnz as f64) / self.core_flops;
         t_mem.max(t_flop)

@@ -106,6 +106,13 @@ pub struct SweepRow {
     /// Per-iteration communication volume in bytes (X fan-out + Y
     /// fan-in from the frozen plan).
     pub comm_bytes: usize,
+    /// Which kernel storage format the cell's fragments were built
+    /// with (`csr` | `ell` | ... | `auto`; `auto` selects per
+    /// fragment).
+    pub format: &'static str,
+    /// Resident bytes of the per-fragment kernel storage summed over
+    /// the cell — the format study's memory axis.
+    pub stored_bytes: usize,
 }
 
 /// A paravance-class cluster of `f` nodes resized to `cores_per_node`
@@ -183,6 +190,7 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
                 let topo = topology_for(f, cfg.cores_per_node);
                 let d = decompose(&a, combo, f, cfg.cores_per_node, &cfg.decompose)?;
                 let quality = d.quality.clone();
+                let stored_bytes = d.stored_bytes();
                 let mut backend = make_backend(cfg.backend, d, &topo, &net)?;
                 backend.set_overlap_mode(cfg.overlap)?;
                 let row = match cfg.solver {
@@ -208,6 +216,8 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
                             partitioner: quality.label(),
                             cut: quality.cut,
                             comm_bytes: quality.comm_bytes,
+                            format: cfg.decompose.format.name(),
+                            stored_bytes,
                         }
                     }
                     Some(kind) => {
@@ -234,6 +244,8 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
                             partitioner: quality.label(),
                             cut: quality.cut,
                             comm_bytes: quality.comm_bytes,
+                            format: cfg.decompose.format.name(),
+                            stored_bytes,
                         }
                     }
                 };
@@ -326,6 +338,37 @@ mod tests {
             assert!(r.converged);
             assert_eq!(r.partitioner, "nezgt+hypergraph");
             assert!(r.comm_bytes > 0, "{} {} f={}", r.matrix, r.combo, r.f);
+            assert_eq!(r.format, "csr");
+            assert!(r.stored_bytes > 0, "{} {} f={}", r.matrix, r.combo, r.f);
+        }
+    }
+
+    #[test]
+    fn format_sweep_runs_on_every_backend_and_schedule() {
+        use crate::sparse::FormatKind;
+        for kind in [FormatKind::Ell, FormatKind::CsrDu, FormatKind::Auto] {
+            for backend in [BackendKind::Sim, BackendKind::Threads, BackendKind::Mpi] {
+                for overlap in [OverlapMode::Blocking, OverlapMode::Overlapped] {
+                    let cfg = ExperimentConfig {
+                        matrices: vec!["t2dal".into()],
+                        node_counts: vec![2],
+                        combos: vec![Combination::NlHl],
+                        cores_per_node: 2,
+                        backend,
+                        overlap,
+                        decompose: DecomposeConfig::default().with_format(kind),
+                        ..Default::default()
+                    };
+                    let rows = run_sweep(&cfg).unwrap();
+                    assert_eq!(rows.len(), 1, "{kind}/{backend}/{overlap}");
+                    assert_eq!(rows[0].format, kind.name());
+                    assert!(rows[0].stored_bytes > 0, "{kind}/{backend}/{overlap}");
+                    assert!(
+                        rows[0].times.t_total() > 0.0,
+                        "{kind}/{backend}/{overlap}"
+                    );
+                }
+            }
         }
     }
 

@@ -65,18 +65,22 @@ pub fn recap_table(rows: &[SweepRow], combos: &[Combination]) -> String {
 /// partition-quality columns record which strategies fragmented the
 /// cell (`partitioner` = `inter+intra`), the (λ−1) cut of the
 /// inter-node partition, and the per-iteration wire volume in bytes.
-/// The final pair records the schedule: `overlap` is the cell's
-/// [`crate::pmvc::OverlapMode`] and `t_overlap_saved` the exchange time
-/// it hid behind interior computation (0 for blocking cells).
+/// `overlap` is the cell's [`crate::pmvc::OverlapMode`] and
+/// `t_overlap_saved` the exchange time it hid behind interior
+/// computation (0 for blocking cells). The final pair records the
+/// format axis: `format` is the cell's kernel storage
+/// ([`crate::sparse::FormatKind`]; `auto` selects per fragment) and
+/// `stored_bytes` the resident bytes of that storage summed over the
+/// cell's fragments.
 pub fn to_csv(rows: &[SweepRow]) -> String {
     let mut out = String::from(
-        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved\n",
+        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,format,stored_bytes\n",
     );
     for r in rows {
         let t = &r.times;
         let _ = writeln!(
             out,
-            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{},{},{},{},{},{},{},{},{:.9}",
+            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{},{},{},{},{},{},{},{},{:.9},{},{}",
             r.matrix,
             r.combo.name(),
             r.f,
@@ -96,7 +100,9 @@ pub fn to_csv(rows: &[SweepRow]) -> String {
             r.cut,
             r.comm_bytes,
             r.overlap,
-            t.t_overlap_saved
+            t.t_overlap_saved,
+            r.format,
+            r.stored_bytes
         );
     }
     out
@@ -228,12 +234,32 @@ mod tests {
         let csv = to_csv(&rows());
         assert!(csv.starts_with("matrix,combo"));
         assert!(csv.lines().next().unwrap().ends_with(
-            ",backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved"
+            ",backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,format,stored_bytes"
         ));
         assert_eq!(csv.lines().count(), 1 + 2 * 4 * 1);
         for line in csv.lines().skip(1) {
             assert!(line.contains(",sim,probe,1,true,nezgt+hypergraph,"), "probe row: {line}");
-            assert!(line.contains(",blocking,0.000000000"), "blocking schedule column: {line}");
+            assert!(line.contains(",blocking,0.000000000,csr,"), "schedule+format: {line}");
+        }
+    }
+
+    #[test]
+    fn csv_carries_format_cells() {
+        use crate::partition::combined::DecomposeConfig;
+        use crate::sparse::FormatKind;
+        let cfg = ExperimentConfig {
+            matrices: vec!["t2dal".into()],
+            node_counts: vec![2],
+            cores_per_node: 4,
+            decompose: DecomposeConfig::default().with_format(FormatKind::Auto),
+            ..Default::default()
+        };
+        let rows = run_sweep(&cfg).unwrap();
+        let csv = to_csv(&rows);
+        for line in csv.lines().skip(1) {
+            assert!(line.contains(",auto,"), "format column: {line}");
+            let stored: usize = line.rsplit(',').next().unwrap().parse().unwrap();
+            assert!(stored > 0, "stored_bytes column: {line}");
         }
     }
 

@@ -25,8 +25,12 @@
 //! (See `ARCHITECTURE.md` at the repository root for the full
 //! layer-by-layer guide with the data-flow diagram.)
 //!
-//! * [`sparse`] — COO/CSR/CSC/ELL formats, MatrixMarket I/O, generators
-//!   for the paper's 8-matrix SuiteSparse test suite.
+//! * [`sparse`] — COO/CSR/CSC/ELL formats plus the ch. 1 §2.3
+//!   compression catalogue (DIA/JAD/BSR/CSR-DU) and the per-fragment
+//!   kernel-storage registry ([`sparse::FormatKind`] /
+//!   [`sparse::FragmentStorage`], `--format`, auto-selection via
+//!   [`sparse::stats`]); MatrixMarket I/O; generators for the paper's
+//!   8-matrix SuiteSparse test suite.
 //! * [`partition`] — every fragmentation strategy (NEZGT, multilevel
 //!   hypergraph, PETSc-style baselines, 2-D fine-grain/checkerboard)
 //!   behind the [`partition::Partitioner`] trait and

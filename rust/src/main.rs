@@ -16,6 +16,7 @@ use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
 use pmvc::partition::{make_partitioner, PartitionError, PartitionerKind};
 use pmvc::pmvc::{make_backend, BackendKind, ExecBackend, OverlapMode};
 use pmvc::solver::SolverKind;
+use pmvc::sparse::FormatKind;
 
 fn main() {
     let args = Args::from_env();
@@ -68,7 +69,15 @@ fn config_from(args: &Args) -> pmvc::Result<ExperimentConfig> {
     if let Some(p) = args.opt("intra") {
         cfg.decompose.intra = make_partitioner(parse_partitioner(p)?)?;
     }
+    if let Some(s) = args.opt("format") {
+        cfg.decompose.format = parse_format(s)?;
+    }
     Ok(cfg)
+}
+
+fn parse_format(s: &str) -> pmvc::Result<FormatKind> {
+    FormatKind::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown format '{s}' (csr|ell|dia|jad|bsr|csrdu|auto)"))
 }
 
 fn parse_partitioner(s: &str) -> pmvc::Result<PartitionerKind> {
@@ -132,6 +141,13 @@ COMMON OPTIONS:
                      `run` also accepts the 2-D kinds fine2d|checker
                      (nonzero-level partition + 2-D PMVC check).
   --intra K          intra-node strategy (default hypergraph)
+  --format K         per-fragment kernel storage: csr|ell|dia|jad|bsr|
+                     csrdu|auto (default csr — the construction format,
+                     zero overhead). 'auto' scores each fragment's
+                     structure (diagonal occupancy -> dia, uniform rows
+                     -> ell, dense 4x4 blocks -> bsr, skewed rows ->
+                     jad, compressible index stream -> csrdu). The CSV
+                     records format and stored_bytes columns.
   --solver KIND      cg|jacobi|sor|power|lanczos: drive a full iterative
                      solve through every sweep cell (CSV gains solver,
                      iterations and convergence columns; phase times are
@@ -228,6 +244,7 @@ fn cmd_run(args: &Args) -> pmvc::Result<()> {
             ("--backend", args.has("backend")),
             ("--network", args.has("network")),
             ("--overlap", args.has("overlap")),
+            ("--format", args.has("format")),
             ("--xla", args.has("xla")),
         ] {
             if given {
@@ -242,6 +259,9 @@ fn cmd_run(args: &Args) -> pmvc::Result<()> {
     }
     if let Some(k) = intra_kind {
         dcfg.intra = make_partitioner(k)?;
+    }
+    if let Some(s) = args.opt("format") {
+        dcfg.format = parse_format(s)?;
     }
 
     let topo = topology_for(f, c);
@@ -274,6 +294,13 @@ fn cmd_run(args: &Args) -> pmvc::Result<()> {
         d.quality.cut,
         d.quality.comm_bytes
     );
+    let census = d
+        .format_census()
+        .iter()
+        .map(|(kind, count)| format!("{kind}:{count}"))
+        .collect::<Vec<_>>()
+        .join(",");
+    println!("format={} stored_bytes={} fragments=[{census}]", dcfg.format, d.stored_bytes());
     println!(
         "distribute(A)={:.6}s scatter={:.6}s compute={:.6}s construct={:.6}s gather={:.6}s total={:.6}s",
         backend.setup_time(),

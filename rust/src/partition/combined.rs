@@ -19,6 +19,7 @@ use super::metrics::QualityReport;
 use super::multilevel::Multilevel;
 use super::nezgt::Nezgt;
 use super::{Axis, Partition};
+use crate::sparse::storage::{FormatKind, FragmentStorage};
 use crate::sparse::{Coo, Csr};
 
 /// The four inter/intra combinations of ch. 4 (Table 4.1).
@@ -100,11 +101,21 @@ pub struct DecomposeConfig {
     /// each compacted node fragment (reseeded per node so seeded
     /// strategies decorrelate while staying deterministic).
     pub intra: Box<dyn Partitioner>,
+    /// Kernel storage built for every core fragment after decomposition
+    /// (`--format` on the CLI). CSR stays the construction format; the
+    /// default `FormatKind::Csr` keeps the kernel on it with zero extra
+    /// storage, `FormatKind::Auto` scores each fragment via
+    /// [`crate::sparse::auto_select`].
+    pub format: FormatKind,
 }
 
 impl Default for DecomposeConfig {
     fn default() -> Self {
-        Self { inter: Box::new(Nezgt::default()), intra: Box::new(Multilevel::default()) }
+        Self {
+            inter: Box::new(Nezgt::default()),
+            intra: Box::new(Multilevel::default()),
+            format: FormatKind::Csr,
+        }
     }
 }
 
@@ -115,12 +126,26 @@ impl DecomposeConfig {
         inter: PartitionerKind,
         intra: PartitionerKind,
     ) -> Result<Self, PartitionError> {
-        Ok(Self { inter: make_partitioner(inter)?, intra: make_partitioner(intra)? })
+        Ok(Self {
+            inter: make_partitioner(inter)?,
+            intra: make_partitioner(intra)?,
+            format: FormatKind::Csr,
+        })
     }
 
     /// The paper's NEZ-NEZ ablation: NEZGT at both levels.
     pub fn nezgt_both() -> Self {
-        Self { inter: Box::new(Nezgt::default()), intra: Box::new(Nezgt::default()) }
+        Self {
+            inter: Box::new(Nezgt::default()),
+            intra: Box::new(Nezgt::default()),
+            format: FormatKind::Csr,
+        }
+    }
+
+    /// Select the per-fragment kernel storage format.
+    pub fn with_format(mut self, format: FormatKind) -> Self {
+        self.format = format;
+        self
     }
 }
 
@@ -134,19 +159,31 @@ pub struct CoreFragment {
     pub node: usize,
     /// Core index within the node.
     pub core: usize,
-    /// Local matrix: `csr.n_rows == global_rows.len()`,
-    /// `csr.n_cols == global_cols.len()`.
+    /// Local matrix in the construction format:
+    /// `csr.n_rows == global_rows.len()`,
+    /// `csr.n_cols == global_cols.len()`. The plan builder and the
+    /// validators always read this, whatever the kernel computes with.
     pub csr: Csr,
     /// Local row -> global row id.
     pub global_rows: Vec<u32>,
     /// Local col -> global col id.
     pub global_cols: Vec<u32>,
+    /// The storage the per-core kernel actually computes with, built
+    /// once from `csr` per [`DecomposeConfig::format`]
+    /// (`FragmentStorage::Csr` = run on `csr` in place, zero overhead).
+    pub storage: FragmentStorage,
 }
 
 impl CoreFragment {
     /// Nonzeros of this fragment (its compute weight).
     pub fn nnz(&self) -> usize {
         self.csr.nnz()
+    }
+
+    /// Resident bytes of the kernel storage (the CSV `stored_bytes`
+    /// unit of account).
+    pub fn stored_bytes(&self) -> usize {
+        self.storage.stored_bytes(&self.csr)
     }
 }
 
@@ -202,6 +239,32 @@ impl TwoLevelDecomposition {
     /// LB_coeurs — max/avg nonzero load over all cores (Table 4.3 col 4).
     pub fn lb_cores(&self) -> f64 {
         super::metrics::imbalance(&self.core_loads())
+    }
+
+    /// Total resident bytes of the per-fragment kernel storage — the
+    /// CSV `stored_bytes` column (for the CSR format this is the
+    /// construction CSRs themselves).
+    pub fn stored_bytes(&self) -> usize {
+        self.fragments.iter().map(|fr| fr.stored_bytes()).sum()
+    }
+
+    /// How many non-empty fragments ended up on each storage format —
+    /// interesting under `FormatKind::Auto`, where the choice is per
+    /// fragment. Kinds appear in registry order; empty fragments are
+    /// not counted.
+    pub fn format_census(&self) -> Vec<(FormatKind, usize)> {
+        FormatKind::concrete()
+            .into_iter()
+            .map(|kind| {
+                let count = self
+                    .fragments
+                    .iter()
+                    .filter(|fr| fr.nnz() > 0 && fr.storage.kind() == kind)
+                    .count();
+                (kind, count)
+            })
+            .filter(|&(_, count)| count > 0)
+            .collect()
     }
 
     /// X footprint of a node: distinct global columns over its cores
@@ -333,7 +396,12 @@ pub fn decompose(
         }
         for (core, entries) in core_entries.iter().enumerate() {
             let (csr, global_rows, global_cols) = compact(entries, &mut scratch);
-            fragments.push(CoreFragment { node, core, csr, global_rows, global_cols });
+            // per-fragment kernel storage (CSR = zero-cost marker; Auto
+            // scores this fragment's own structure)
+            let storage = FragmentStorage::build(&csr, cfg.format).map_err(|e| {
+                anyhow::anyhow!("fragment ({node},{core}): building {} storage: {e}", cfg.format)
+            })?;
+            fragments.push(CoreFragment { node, core, csr, global_rows, global_cols, storage });
         }
     }
 
@@ -536,6 +604,36 @@ mod tests {
             hyp.quality.cut,
             nez.quality.cut
         );
+    }
+
+    #[test]
+    fn format_config_builds_per_fragment_storage() {
+        let a = small_matrix();
+        for kind in [FormatKind::Csr, FormatKind::Jad, FormatKind::CsrDu, FormatKind::Auto] {
+            let cfg = DecomposeConfig::default().with_format(kind);
+            let d = decompose(&a, Combination::NlHl, 2, 3, &cfg).unwrap();
+            assert!(d.stored_bytes() > 0, "{kind}");
+            let census = d.format_census();
+            assert!(!census.is_empty(), "{kind}");
+            match kind {
+                FormatKind::Auto => {
+                    // auto picks per fragment — every non-empty fragment
+                    // lands on some concrete format
+                    let counted: usize = census.iter().map(|&(_, c)| c).sum();
+                    let nonempty = d.fragments.iter().filter(|fr| fr.nnz() > 0).count();
+                    assert_eq!(counted, nonempty);
+                }
+                k => {
+                    assert!(
+                        d.fragments.iter().all(|fr| fr.storage.kind() == k),
+                        "{kind}: every fragment uses the requested format"
+                    );
+                }
+            }
+        }
+        // the default config stays on the zero-overhead CSR marker
+        let d = decompose(&a, Combination::NlHl, 2, 3, &DecomposeConfig::default()).unwrap();
+        assert!(d.fragments.iter().all(|fr| fr.storage.kind() == FormatKind::Csr));
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! fallible: bad arguments and worker panics come back as a typed
 //! [`DynamicError`] instead of an `assert!` abort or a poisoned scope.
 
-use crate::sparse::Csr;
+use crate::sparse::{Csr, FragmentStorage};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
@@ -67,9 +67,25 @@ pub struct DynamicResult {
 }
 
 /// Run `y = A·x` with `workers` threads pulling `chunk` rows at a time
-/// from a shared atomic cursor (the classic self-scheduling loop).
+/// from a shared atomic cursor (the classic self-scheduling loop), on
+/// the plain CSR kernel.
 pub fn dynamic_spmv(
     a: &Csr,
+    x: &[f64],
+    workers: usize,
+    chunk: usize,
+) -> Result<DynamicResult, DynamicError> {
+    dynamic_spmv_format(a, &FragmentStorage::Csr, x, workers, chunk)
+}
+
+/// Format-generic dynamic-scheduled SpMV: the same self-scheduling
+/// protocol, but each claimed row runs the kernel of `storage` (which
+/// must have been built from `a`, e.g. via
+/// [`FragmentStorage::build`]) — so the [LeE08] dynamic-vs-static
+/// ablation extends across the whole format axis.
+pub fn dynamic_spmv_format(
+    a: &Csr,
+    storage: &FragmentStorage,
     x: &[f64],
     workers: usize,
     chunk: usize,
@@ -113,11 +129,7 @@ pub fn dynamic_spmv(
                         }
                         let end = (start + chunk).min(n);
                         for i in start..end {
-                            let (s, e) = (a.ptr[i], a.ptr[i + 1]);
-                            let mut acc = 0.0;
-                            for k in s..e {
-                                acc += a.val[k] * x[a.col[k] as usize];
-                            }
+                            let acc = storage.row_product(a, i, x);
                             // SAFETY: row i is claimed exactly once across
                             // workers (atomic cursor), so this write is the
                             // only one to y[i].
@@ -166,6 +178,25 @@ mod tests {
                         "workers={workers} chunk={chunk} row {i}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_is_format_generic() {
+        use crate::sparse::FormatKind;
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 4).to_csr();
+        let mut rng = SplitMix64::new(8);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        let y_ref = a.matvec(&x);
+        for kind in FormatKind::concrete() {
+            let storage = FragmentStorage::build(&a, kind).unwrap();
+            let r = dynamic_spmv_format(&a, &storage, &x, 2, 64).unwrap();
+            for i in 0..a.n_rows {
+                assert!(
+                    (r.y[i] - y_ref[i]).abs() < 1e-12 * (1.0 + y_ref[i].abs()),
+                    "{kind} row {i}"
+                );
             }
         }
     }

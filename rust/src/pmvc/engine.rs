@@ -643,6 +643,34 @@ mod tests {
     }
 
     #[test]
+    fn engine_is_format_generic_and_bitwise_schedule_stable() {
+        use crate::sparse::FormatKind;
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 23).to_csr();
+        let mut rng = crate::rng::SplitMix64::new(19);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-2.0, 2.0)).collect();
+        let y_ref = a.matvec(&x);
+        for kind in FormatKind::all() {
+            let cfg = DecomposeConfig::default().with_format(kind);
+            let d = decompose(&a, Combination::NlHl, 2, 3, &cfg).unwrap();
+            let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+            let yb = engine.apply(&x).unwrap().y;
+            for i in 0..a.n_rows {
+                assert!(
+                    (yb[i] - y_ref[i]).abs() < 1e-12 * (1.0 + y_ref[i].abs()),
+                    "{kind} row {i}: {} vs {}",
+                    yb[i],
+                    y_ref[i]
+                );
+            }
+            // the overlapped schedule replays the same kernel in the
+            // same per-row order — bitwise on every format
+            engine.set_overlap_mode(OverlapMode::Overlapped);
+            let yo = engine.apply(&x).unwrap().y;
+            assert_eq!(yb, yo, "{kind}: schedules must agree bitwise");
+        }
+    }
+
+    #[test]
     fn mode_switches_freely_between_applies() {
         let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
         let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();

@@ -31,6 +31,14 @@
 //! the interior/boundary split is frozen in the [`CommPlan`], so both
 //! schedules replay the same plan and produce bitwise-identical
 //! products.
+//!
+//! The per-core kernel itself is **format-generic**: [`spmv::pfvc`] and
+//! [`spmv::pfvc_rows`] dispatch on each fragment's
+//! [`crate::sparse::FragmentStorage`] (CSR / ELL / DIA / JAD / BSR /
+//! CSR-DU, selected by `--format`, per-fragment under
+//! `FormatKind::Auto`), all backends and both schedules run unchanged
+//! protocols over it, and the simulator prices compute from each
+//! format's own bytes-touched model.
 
 pub mod backend;
 pub mod dynamic;
@@ -43,7 +51,7 @@ pub mod sim;
 pub mod spmv;
 
 pub use backend::{make_backend, BackendKind, ExecBackend, MpiBackend, OverlapMode, SimBackend};
-pub use dynamic::{dynamic_spmv, DynamicError, DynamicResult};
+pub use dynamic::{dynamic_spmv, dynamic_spmv_format, DynamicError, DynamicResult};
 pub use engine::PmvcEngine;
 pub use exec::{execute_threads, ExecResult};
 pub use exec_mpi::{MpiCluster, MpiIterTimes, MpiOp};

@@ -33,8 +33,15 @@ pub struct NodePlan {
     pub y_rows: Vec<u32>,
     /// Per-core assembly map: local row -> position in [`Self::y_rows`].
     pub core_y_maps: Vec<Vec<u32>>,
-    /// One-time A_k scatter payload (values + column indices), in bytes.
+    /// One-time A_k scatter payload (values + column indices of the
+    /// construction CSR), in bytes.
     pub a_bytes: usize,
+    /// Resident bytes of the node's per-fragment kernel storage (the
+    /// format the cores actually compute with — equals `a_bytes` plus
+    /// row pointers for the CSR format, padded/compressed sizes for the
+    /// others). Frozen here so byte accounting follows the format axis,
+    /// while the plan's index maps stay format-agnostic.
+    pub stored_bytes: usize,
     /// Positions in [`Self::x_cols`] whose global column the node owns
     /// (it also appears in [`Self::y_rows`]) — X values a real cluster
     /// node holds locally, available before any exchange completes.
@@ -163,6 +170,7 @@ impl CommPlan {
                     frag.csr.val.len() * 8 + frag.csr.col.len() * 4
                 })
                 .sum();
+            let stored_bytes = (0..d.c).map(|core| d.fragment(node, core).stored_bytes()).sum();
 
             // ---- interior/boundary classification (the overlapped
             // schedule's task split, Agullo et al. 2012): a column is
@@ -210,6 +218,7 @@ impl CommPlan {
                 y_rows,
                 core_y_maps,
                 a_bytes,
+                stored_bytes,
                 owned_x,
                 halo_x,
                 core_interior_rows,
@@ -230,6 +239,12 @@ impl CommPlan {
     /// One-time A scatter volume over all nodes, in bytes.
     pub fn scatter_a_bytes(&self) -> usize {
         self.nodes.iter().map(|np| np.a_bytes).sum()
+    }
+
+    /// Resident kernel-storage bytes over all nodes — what the selected
+    /// `--format` actually keeps in memory cluster-wide.
+    pub fn stored_bytes(&self) -> usize {
+        self.nodes.iter().map(|np| np.stored_bytes).sum()
     }
 
     /// Per-iteration X fan-out volume over all nodes, in bytes.
@@ -342,6 +357,21 @@ mod tests {
             d.fragments.iter().map(|fr| fr.csr.val.len() * 8 + fr.csr.col.len() * 4).sum();
         assert_eq!(plan.scatter_a_bytes(), expect_a);
         assert!(plan.scatter_x_bytes() > 0 && plan.gather_y_bytes() > 0);
+        assert_eq!(plan.stored_bytes(), d.stored_bytes());
+    }
+
+    #[test]
+    fn stored_bytes_follow_the_format_axis() {
+        use crate::sparse::FormatKind;
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 5).to_csr();
+        let cfg = DecomposeConfig::default().with_format(FormatKind::CsrDu);
+        let d = decompose(&a, Combination::NlHl, 2, 2, &cfg).unwrap();
+        let plan = CommPlan::build(&d).unwrap();
+        assert_eq!(plan.stored_bytes(), d.stored_bytes());
+        // the delta-compressed index stream must undercut plain CSR
+        let csr_d =
+            decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
+        assert!(plan.stored_bytes() < CommPlan::build(&csr_d).unwrap().stored_bytes());
     }
 
     #[test]

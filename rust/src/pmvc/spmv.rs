@@ -6,6 +6,7 @@
 //! compacted column space back to the global X.
 
 use crate::partition::combined::CoreFragment;
+use crate::sparse::FragmentStorage;
 
 /// Gather the local X of a fragment from the global vector:
 /// `x_local[lc] = x[global_cols[lc]]`.
@@ -17,16 +18,21 @@ pub fn gather_x(frag: &CoreFragment, x: &[f64], x_local: &mut Vec<f64>) {
 
 /// Compute one core's PFVC: `y_local = A_local · x_local`.
 /// `y_local` is resized to the fragment's row count.
+///
+/// Dispatches on the fragment's [`FragmentStorage`]: the CSR marker
+/// (the default) runs the unchecked [`csr_mv`] kernel on the
+/// construction CSR in place — byte-for-byte the pre-format-generic hot
+/// path — while every other format runs its own allocation-free
+/// per-row kernel over the same local column space.
 #[inline]
 pub fn pfvc(frag: &CoreFragment, x_local: &[f64], y_local: &mut Vec<f64>) {
     y_local.resize(frag.csr.n_rows, 0.0);
-    csr_mv(
-        &frag.csr.ptr,
-        &frag.csr.col,
-        &frag.csr.val,
-        x_local,
-        y_local,
-    );
+    match &frag.storage {
+        FragmentStorage::Csr => {
+            csr_mv(&frag.csr.ptr, &frag.csr.col, &frag.csr.val, x_local, y_local)
+        }
+        storage => storage.mv(&frag.csr, x_local, y_local),
+    }
 }
 
 /// Raw CSR matvec on slices — the innermost loop, kept free of struct
@@ -64,9 +70,10 @@ pub fn csr_mv(ptr: &[usize], col: &[u32], val: &[f64], x: &[f64], y: &mut [f64])
 /// from `x_node[x_map[local col]]`. This is the overlapped schedule's
 /// kernel — interior rows run against the locally-owned X while the
 /// halo is still in flight, boundary rows run once it lands, and each
-/// row is assigned exactly once (same accumulation order as
-/// [`csr_mv`], so the two-pass product is bitwise identical to the
-/// blocking one-pass product).
+/// row is assigned exactly once in the same per-row accumulation order
+/// as the one-pass [`pfvc`] (whatever the fragment's storage format),
+/// so the two-pass product is bitwise identical to the blocking
+/// one-pass product.
 ///
 /// `y_local` must already be sized to the fragment's row count; rows
 /// outside `rows` are left untouched.
@@ -78,15 +85,7 @@ pub fn pfvc_rows(
     x_node: &[f64],
     y_local: &mut [f64],
 ) {
-    let csr = &frag.csr;
-    for &r in rows {
-        let i = r as usize;
-        let mut acc = 0.0;
-        for k in csr.ptr[i]..csr.ptr[i + 1] {
-            acc += csr.val[k] * x_node[x_map[csr.col[k] as usize] as usize];
-        }
-        y_local[i] = acc;
-    }
+    frag.storage.mv_rows(&frag.csr, rows, x_map, x_node, y_local);
 }
 
 /// Scatter-accumulate a core's partial Y into a node/global vector:
@@ -153,6 +152,64 @@ mod tests {
                 pfvc_rows(frag, &np.core_interior_rows[core], map, &x_node, &mut y_two);
                 pfvc_rows(frag, &np.core_boundary_rows[core], map, &x_node, &mut y_two);
                 assert_eq!(y_one, y_two, "node {node} core {core}: must be bitwise equal");
+            }
+        }
+    }
+
+    #[test]
+    fn fragment_pipeline_is_format_generic() {
+        use crate::sparse::FormatKind;
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 9).to_csr();
+        let mut rng = crate::rng::SplitMix64::new(6);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        let y_ref = a.matvec(&x);
+        for kind in FormatKind::all() {
+            let cfg = DecomposeConfig::default().with_format(kind);
+            let d = decompose(&a, Combination::NlHl, 2, 3, &cfg).unwrap();
+            let mut y = vec![0.0; a.n_rows];
+            let mut x_local = Vec::new();
+            let mut y_local = Vec::new();
+            for frag in &d.fragments {
+                gather_x(frag, &x, &mut x_local);
+                pfvc(frag, &x_local, &mut y_local);
+                scatter_y_accumulate(frag, &y_local, &mut y);
+            }
+            for i in 0..a.n_rows {
+                assert!(
+                    (y[i] - y_ref[i]).abs() < 1e-12 * (1.0 + y_ref[i].abs()),
+                    "{kind} row {i}: {} vs {}",
+                    y[i],
+                    y_ref[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pfvc_rows_two_pass_equals_one_pass_on_every_format() {
+        use crate::sparse::FormatKind;
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 9).to_csr();
+        let mut rng = crate::rng::SplitMix64::new(12);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        for kind in FormatKind::all() {
+            let cfg = DecomposeConfig::default().with_format(kind);
+            let d = decompose(&a, Combination::NlHl, 2, 2, &cfg).unwrap();
+            let plan = crate::pmvc::CommPlan::build(&d).unwrap();
+            for node in 0..2 {
+                let np = &plan.nodes[node];
+                let x_node: Vec<f64> = np.x_cols.iter().map(|&g| x[g as usize]).collect();
+                for core in 0..2 {
+                    let frag = d.fragment(node, core);
+                    let mut x_local = Vec::new();
+                    let mut y_one = Vec::new();
+                    gather_x(frag, &x, &mut x_local);
+                    pfvc(frag, &x_local, &mut y_one);
+                    let mut y_two = vec![0.0; frag.csr.n_rows];
+                    let map = &np.core_x_maps[core];
+                    pfvc_rows(frag, &np.core_interior_rows[core], map, &x_node, &mut y_two);
+                    pfvc_rows(frag, &np.core_boundary_rows[core], map, &x_node, &mut y_two);
+                    assert_eq!(y_one, y_two, "{kind} node {node} core {core}: bitwise");
+                }
             }
         }
     }

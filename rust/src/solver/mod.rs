@@ -90,6 +90,64 @@ impl MatVecOp for Csr {
     }
 }
 
+/// The ch. 1 §2.3 compression formats are operators too: their
+/// fallible, allocation-free `mv_into` *is* the [`MatVecOp`] contract,
+/// so every iterative solver runs serially on every storage format —
+/// the serial half of the format-generic PMVC study.
+macro_rules! format_matvec_op {
+    ($($ty:ty),* $(,)?) => {$(
+        impl MatVecOp for $ty {
+            fn order(&self) -> usize {
+                self.n_rows
+            }
+
+            fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
+                self.mv_into(x, y)
+            }
+        }
+    )*};
+}
+
+format_matvec_op!(
+    crate::sparse::formats_ext::Dia,
+    crate::sparse::formats_ext::Jad,
+    crate::sparse::formats_ext::Bsr,
+    crate::sparse::formats_ext::CsrDu,
+    crate::sparse::EllStore,
+);
+
+/// The f32 TPU-shaped ELL slab as a (serial) operator. The slab stores
+/// f32, so each apply converts through per-call scratch and the result
+/// carries f32 precision — fine for the eigen solvers and smoke runs,
+/// not for 1e-12 linear solves (use [`crate::sparse::EllStore`] there).
+impl MatVecOp for crate::sparse::Ell {
+    fn order(&self) -> usize {
+        self.rows
+    }
+
+    fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
+        anyhow::ensure!(
+            x.len() == self.n_cols,
+            "x length {} != matrix columns {}",
+            x.len(),
+            self.n_cols
+        );
+        anyhow::ensure!(
+            y.len() == self.rows,
+            "y length {} != slab rows {}",
+            y.len(),
+            self.rows
+        );
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut yf = vec![0f32; self.rows];
+        self.mv_into(&xf, &mut yf)?;
+        for (yo, &yi) in y.iter_mut().zip(&yf) {
+            *yo = yi as f64;
+        }
+        Ok(())
+    }
+}
+
 /// Distributed PMVC operator: plans once, then drives every apply
 /// through a persistent [`ExecBackend`] and accumulates per-phase
 /// statistics — what an iterative solver on the cluster would observe.
@@ -308,6 +366,46 @@ mod tests {
         assert!(a.apply_into(&x[..10], &mut y).is_err());
         let mut y_short = vec![0.0; 10];
         assert!(a.apply_into(&x, &mut y_short).is_err());
+    }
+
+    #[test]
+    fn every_format_is_a_serial_operator() {
+        use crate::sparse::storage::{FormatKind, FragmentStorage};
+        let a = gen::generate_spd(200, 4, 1200, 11).to_csr();
+        let x_true: Vec<f64> = (0..200).map(|i| ((i % 7) as f64) * 0.5 - 1.0).collect();
+        let b = a.matvec(&x_true);
+        let x_ref = {
+            let mut op = a.clone();
+            Cg::new().tol(1e-12).max_iters(800).solve(&mut op, &b).unwrap().x
+        };
+        for kind in FormatKind::concrete() {
+            let storage = FragmentStorage::build(&a, kind).unwrap();
+            let r = match storage {
+                FragmentStorage::Csr => continue, // the reference above
+                FragmentStorage::Ell(mut e) => {
+                    Cg::new().tol(1e-12).max_iters(800).solve(&mut e, &b).unwrap()
+                }
+                FragmentStorage::Dia(mut d) => {
+                    Cg::new().tol(1e-12).max_iters(800).solve(&mut d, &b).unwrap()
+                }
+                FragmentStorage::Jad(mut j) => {
+                    Cg::new().tol(1e-12).max_iters(800).solve(&mut j, &b).unwrap()
+                }
+                FragmentStorage::Bsr(mut m) => {
+                    Cg::new().tol(1e-12).max_iters(800).solve(&mut m, &b).unwrap()
+                }
+                FragmentStorage::CsrDu(mut du) => {
+                    Cg::new().tol(1e-12).max_iters(800).solve(&mut du, &b).unwrap()
+                }
+            };
+            assert!(r.converged, "{kind}: CG must converge on the SPD band system");
+            for i in 0..200 {
+                assert!(
+                    (r.x[i] - x_ref[i]).abs() < 1e-8 * (1.0 + x_ref[i].abs()),
+                    "{kind} row {i}"
+                );
+            }
+        }
     }
 
     #[test]

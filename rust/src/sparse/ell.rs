@@ -119,11 +119,25 @@ impl Ell {
         Ok((Self::from_csr(csr, bucket)?, bucket))
     }
 
-    /// Native ELL matvec (f32 accumulate, mirrors the Pallas kernel
-    /// semantics exactly — including the clamp-and-mask of padding).
-    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.n_cols);
-        let mut y = vec![0f32; self.rows];
+    /// Native ELL matvec into caller-owned scratch (f32 accumulate,
+    /// mirrors the Pallas kernel semantics exactly — including the
+    /// clamp-and-mask of padding). Fallible and allocation-free,
+    /// matching the [`crate::solver::MatVecOp`] contract shape (the old
+    /// `matvec` allocated a `Vec` per call and panicked on a dimension
+    /// mismatch).
+    pub fn mv_into(&self, x: &[f32], y: &mut [f32]) -> crate::Result<()> {
+        anyhow::ensure!(
+            x.len() == self.n_cols,
+            "x length {} != matrix columns {}",
+            x.len(),
+            self.n_cols
+        );
+        anyhow::ensure!(
+            y.len() == self.rows,
+            "y length {} != slab rows {}",
+            y.len(),
+            self.rows
+        );
         for i in 0..self.rows {
             let mut acc = 0f32;
             for k in 0..self.width {
@@ -134,7 +148,7 @@ impl Ell {
             }
             y[i] = acc;
         }
-        y
+        Ok(())
     }
 
     /// Padding overhead ratio: stored slots / real nonzeros.
@@ -183,7 +197,8 @@ mod tests {
         let (e, _) = Ell::from_csr_auto(&a).unwrap();
         let x: Vec<f64> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
         let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
-        let y = e.matvec(&xf);
+        let mut y = vec![0f32; e.rows];
+        e.mv_into(&xf, &mut y).unwrap();
         let yref = a.matvec(&x);
         assert_eq!(y.len(), 4);
         for i in 0..4 {
@@ -204,6 +219,18 @@ mod tests {
     fn fragment_too_wide_rejected() {
         let a = example();
         assert!(Ell::from_csr(&a, Bucket { rows: 64, width: 2 }).is_err());
+    }
+
+    #[test]
+    fn mv_into_rejects_bad_dimensions() {
+        let a = example();
+        let (e, _) = Ell::from_csr_auto(&a).unwrap();
+        let x = vec![1f32; a.n_cols];
+        let mut y = vec![0f32; e.rows];
+        assert!(e.mv_into(&x, &mut y).is_ok());
+        assert!(e.mv_into(&x[..2], &mut y).is_err());
+        let mut y_short = vec![0f32; 1];
+        assert!(e.mv_into(&x, &mut y_short).is_err());
     }
 
     #[test]

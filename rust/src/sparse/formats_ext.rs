@@ -9,12 +9,43 @@
 //!   Goumas & Koziris 2008, [KGK08] in the paper): compresses the index
 //!   stream to cut the memory-bound kernel's traffic.
 //!
-//! Each format carries its own matvec; the `format_comparison` ablation
+//! Every format follows the same contract as the solvers'
+//! [`crate::solver::MatVecOp`]: a fallible, allocation-free `mv_into`
+//! writing into caller-owned scratch (the old `matvec` methods that
+//! allocated a `Vec` per call and `assert!`-panicked on a dimension
+//! mismatch are gone), a `to_csr` round-trip back to the compute
+//! format, and a `bytes` storage account. The distributed stack wraps
+//! them in [`super::storage::FragmentStorage`] so the per-core PFVC
+//! kernel can run on any of them; the `format_comparison` ablation
 //! bench reproduces the related-work trade-off (bytes touched vs time).
 
-use super::Csr;
+use super::{Coo, Csr};
 
 // ---------------------------------------------------------------- DIA
+
+/// Typed reason [`Dia::from_csr`] rejected a matrix: the structure
+/// spreads over more distinct diagonals than the budget allows. The old
+/// `Option` return made this indistinguishable from a legitimately
+/// empty DIA, so `Auto` format selection could never say *why* DIA was
+/// skipped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DiaOverflow {
+    /// The distinct-diagonal budget that was exceeded (the matrix needs
+    /// at least `max_diags + 1`).
+    pub max_diags: usize,
+}
+
+impl std::fmt::Display for DiaOverflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "matrix spreads over more than {} distinct diagonals — DIA storage not worth it",
+            self.max_diags
+        )
+    }
+}
+
+impl std::error::Error for DiaOverflow {}
 
 /// Diagonal storage: a dense band of diagonals. Only efficient when the
 /// nonzeros live on few distinct diagonals.
@@ -32,21 +63,40 @@ pub struct Dia {
 }
 
 impl Dia {
-    /// Convert from CSR. Returns `None` when the diagonal count would
-    /// exceed `max_diags` (format not worth it).
-    pub fn from_csr(a: &Csr, max_diags: usize) -> Option<Dia> {
+    /// Discover the distinct diagonal offsets of `a` (ascending),
+    /// giving up with the typed reason as soon as the count would
+    /// exceed `max_diags` — shared by the conversion and the cheap
+    /// [`Dia::count_diagonals`] probe so the two can never drift apart.
+    fn discover_offsets(a: &Csr, max_diags: usize) -> Result<Vec<i64>, DiaOverflow> {
         let mut offs: Vec<i64> = Vec::new();
         for i in 0..a.n_rows {
             for (c, _) in a.row(i) {
                 let off = c as i64 - i as i64;
                 if let Err(pos) = offs.binary_search(&off) {
                     if offs.len() == max_diags {
-                        return None;
+                        return Err(DiaOverflow { max_diags });
                     }
                     offs.insert(pos, off);
                 }
             }
         }
+        Ok(offs)
+    }
+
+    /// Count the distinct diagonals of `a`, giving up (with the typed
+    /// reason) as soon as the count exceeds `max_diags` — the cheap
+    /// probe `Auto` format selection runs before committing to a
+    /// conversion.
+    pub fn count_diagonals(a: &Csr, max_diags: usize) -> Result<usize, DiaOverflow> {
+        Ok(Self::discover_offsets(a, max_diags)?.len())
+    }
+
+    /// Convert from CSR. Returns the typed [`DiaOverflow`] reason when
+    /// the diagonal count would exceed `max_diags` (format not worth
+    /// it) — an empty matrix converts successfully to an empty DIA, so
+    /// the two cases are no longer conflated.
+    pub fn from_csr(a: &Csr, max_diags: usize) -> Result<Dia, DiaOverflow> {
+        let offs = Self::discover_offsets(a, max_diags)?;
         let mut data = vec![0.0; offs.len() * a.n_rows];
         for i in 0..a.n_rows {
             for (c, v) in a.row(i) {
@@ -55,13 +105,27 @@ impl Dia {
                 data[d * a.n_rows + i] = v;
             }
         }
-        Some(Dia { n_rows: a.n_rows, n_cols: a.n_cols, offsets: offs, data })
+        Ok(Dia { n_rows: a.n_rows, n_cols: a.n_cols, offsets: offs, data })
     }
 
-    /// y = A·x, one pass per stored diagonal (long unit-stride streams).
-    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.n_cols);
-        let mut y = vec![0.0; self.n_rows];
+    /// `y = A·x` into caller-owned scratch, one pass per stored
+    /// diagonal (long unit-stride streams). Fallible and
+    /// allocation-free, matching the [`crate::solver::MatVecOp`]
+    /// contract.
+    pub fn mv_into(&self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
+        anyhow::ensure!(
+            x.len() == self.n_cols,
+            "x length {} != matrix columns {}",
+            x.len(),
+            self.n_cols
+        );
+        anyhow::ensure!(
+            y.len() == self.n_rows,
+            "y length {} != matrix rows {}",
+            y.len(),
+            self.n_rows
+        );
+        y.fill(0.0);
         for (d, &off) in self.offsets.iter().enumerate() {
             let base = d * self.n_rows;
             let (i_lo, i_hi) = if off >= 0 {
@@ -74,7 +138,28 @@ impl Dia {
                 y[i] += self.data[base + i] * x[j];
             }
         }
-        y
+        Ok(())
+    }
+
+    /// Round-trip back to CSR. Explicitly stored zeros (band slots with
+    /// no original nonzero) are dropped, so converting a matrix without
+    /// explicit zero entries reproduces it exactly.
+    pub fn to_csr(&self) -> Csr {
+        let mut coo = Coo::new(self.n_rows, self.n_cols);
+        for (d, &off) in self.offsets.iter().enumerate() {
+            let base = d * self.n_rows;
+            for i in 0..self.n_rows {
+                let j = i as i64 + off;
+                if j < 0 || j >= self.n_cols as i64 {
+                    continue;
+                }
+                let v = self.data[base + i];
+                if v != 0.0 {
+                    coo.push(i as u32, j as u32, v);
+                }
+            }
+        }
+        coo.to_csr()
     }
 
     /// Stored bytes (including explicit zeros — DIA's trade-off).
@@ -95,6 +180,9 @@ pub struct Jad {
     pub n_cols: usize,
     /// Permutation: `perm[k]` = original row index of packed row k.
     pub perm: Vec<u32>,
+    /// Inverse permutation: `pos[i]` = packed position of original row
+    /// i — what a row-subset kernel needs to find a row's jag slots.
+    pub pos: Vec<u32>,
     /// Start of each jag in `val`/`col`; `jag_ptr.len() = max_len + 1`.
     pub jag_ptr: Vec<usize>,
     /// Column index per packed nonzero.
@@ -108,6 +196,10 @@ impl Jad {
     pub fn from_csr(a: &Csr) -> Jad {
         let mut perm: Vec<u32> = (0..a.n_rows as u32).collect();
         perm.sort_by_key(|&i| std::cmp::Reverse(a.row_nnz(i as usize)));
+        let mut pos = vec![0u32; a.n_rows];
+        for (k, &i) in perm.iter().enumerate() {
+            pos[i as usize] = k as u32;
+        }
         let max_len = perm.first().map_or(0, |&i| a.row_nnz(i as usize));
         let mut jag_ptr = vec![0usize; max_len + 1];
         let mut col = Vec::with_capacity(a.nnz());
@@ -123,26 +215,68 @@ impl Jad {
             }
             jag_ptr[k + 1] = col.len();
         }
-        Jad { n_rows: a.n_rows, n_cols: a.n_cols, perm, jag_ptr, col, val }
+        Jad { n_rows: a.n_rows, n_cols: a.n_cols, perm, pos, jag_ptr, col, val }
     }
 
-    /// Dense product `y = A·x`.
-    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.n_cols);
-        let mut yp = vec![0.0; self.n_rows]; // permuted accumulator
+    /// Length (nonzero count) of original row `i` — the number of jags
+    /// its packed position reaches into.
+    #[inline]
+    pub fn row_len(&self, i: usize) -> usize {
+        let pr = self.pos[i] as usize;
+        let max_len = self.jag_ptr.len() - 1;
+        let mut len = 0usize;
+        while len < max_len && self.jag_ptr[len + 1] - self.jag_ptr[len] > pr {
+            len += 1;
+        }
+        len
+    }
+
+    /// `y = A·x` into caller-owned scratch, jag by jag. Fallible and
+    /// allocation-free: partials accumulate straight into `y` through
+    /// the permutation instead of the old permuted scratch vector.
+    pub fn mv_into(&self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
+        anyhow::ensure!(
+            x.len() == self.n_cols,
+            "x length {} != matrix columns {}",
+            x.len(),
+            self.n_cols
+        );
+        anyhow::ensure!(
+            y.len() == self.n_rows,
+            "y length {} != matrix rows {}",
+            y.len(),
+            self.n_rows
+        );
+        y.fill(0.0);
         let max_len = self.jag_ptr.len() - 1;
         for k in 0..max_len {
             let (s, e) = (self.jag_ptr[k], self.jag_ptr[k + 1]);
             for (r, idx) in (s..e).enumerate() {
-                yp[r] += self.val[idx] * x[self.col[idx] as usize];
+                y[self.perm[r] as usize] += self.val[idx] * x[self.col[idx] as usize];
             }
         }
-        // un-permute
-        let mut y = vec![0.0; self.n_rows];
-        for (r, &pi) in self.perm.iter().enumerate() {
-            y[pi as usize] = yp[r];
+        Ok(())
+    }
+
+    /// Round-trip back to CSR — exact: the permutation and jag pointers
+    /// recover every row in its original nonzero order.
+    pub fn to_csr(&self) -> Csr {
+        let mut coo = Coo::new(self.n_rows, self.n_cols);
+        for i in 0..self.n_rows {
+            let pr = self.pos[i] as usize;
+            for k in 0..self.row_len(i) {
+                let idx = self.jag_ptr[k] + pr;
+                coo.push(i as u32, self.col[idx], self.val[idx]);
+            }
         }
-        y
+        coo.to_csr()
+    }
+
+    /// Stored bytes: packed values + column indices + the permutation
+    /// pair + jag pointers.
+    pub fn bytes(&self) -> usize {
+        self.val.len() * 8 + self.col.len() * 4 + (self.perm.len() + self.pos.len()) * 4
+            + self.jag_ptr.len() * 8
     }
 }
 
@@ -200,11 +334,24 @@ impl Bsr {
         Bsr { n_rows: a.n_rows, n_cols: a.n_cols, b, ptr, bcol, blocks }
     }
 
-    /// Dense product `y = A·x`.
-    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.n_cols);
+    /// `y = A·x` into caller-owned scratch, block by block. Fallible
+    /// and allocation-free, matching the [`crate::solver::MatVecOp`]
+    /// contract.
+    pub fn mv_into(&self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
+        anyhow::ensure!(
+            x.len() == self.n_cols,
+            "x length {} != matrix columns {}",
+            x.len(),
+            self.n_cols
+        );
+        anyhow::ensure!(
+            y.len() == self.n_rows,
+            "y length {} != matrix rows {}",
+            y.len(),
+            self.n_rows
+        );
         let b = self.b;
-        let mut y = vec![0.0; self.n_rows];
+        y.fill(0.0);
         let nbr = self.ptr.len() - 1;
         for br in 0..nbr {
             let row_lo = br * b;
@@ -220,19 +367,50 @@ impl Bsr {
                 }
             }
         }
-        y
+        Ok(())
+    }
+
+    /// Round-trip back to CSR. Zero-filled block slots are dropped, so
+    /// converting a matrix without explicit zero entries reproduces it
+    /// exactly (blocks are re-sorted into column order per row).
+    pub fn to_csr(&self) -> Csr {
+        let b = self.b;
+        let mut coo = Coo::new(self.n_rows, self.n_cols);
+        let nbr = self.ptr.len() - 1;
+        for br in 0..nbr {
+            let row_lo = br * b;
+            for s in self.ptr[br]..self.ptr[br + 1] {
+                let col_lo = self.bcol[s] as usize * b;
+                let blk = &self.blocks[s * b * b..(s + 1) * b * b];
+                for li in 0..b.min(self.n_rows - row_lo) {
+                    for lj in 0..b.min(self.n_cols.saturating_sub(col_lo)) {
+                        let v = blk[li * b + lj];
+                        if v != 0.0 {
+                            coo.push((row_lo + li) as u32, (col_lo + lj) as u32, v);
+                        }
+                    }
+                }
+            }
+        }
+        coo.to_csr()
     }
 
     /// Fill ratio: stored slots / nonzeros.
     pub fn fill_ratio(&self, nnz: usize) -> f64 {
         self.blocks.len() as f64 / nnz.max(1) as f64
     }
+
+    /// Stored bytes: dense block payloads + block-column indices +
+    /// block-row pointers.
+    pub fn bytes(&self) -> usize {
+        self.blocks.len() * 8 + self.bcol.len() * 4 + self.ptr.len() * 8
+    }
 }
 
 // ------------------------------------------------------------ CSR-DU
 
 /// CSR with delta-encoded column indices (the [KGK08] idea): per row,
-/// store the first column as-is and subsequent columns as u8/u16 deltas
+/// store the first column as-is and subsequent columns as varint deltas
 /// where they fit, shrinking the index stream the memory-bound kernel
 /// must pull.
 #[derive(Clone, Debug)]
@@ -276,10 +454,38 @@ impl CsrDu {
         }
     }
 
-    /// Dense product `y = A·x`.
-    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.n_cols);
-        let mut y = vec![0.0; self.n_rows];
+    /// Size in bytes the delta stream of `a` would occupy, without
+    /// building it — the probe `Auto` format selection runs to decide
+    /// whether the encoding pays for itself (vs `4·nnz` for plain u32
+    /// columns).
+    pub fn encoded_bytes(a: &Csr) -> usize {
+        let mut total = 0usize;
+        for i in 0..a.n_rows {
+            let mut prev: i64 = -1;
+            for (c, _) in a.row(i) {
+                total += varint_len((c as i64 - prev) as u64);
+                prev = c as i64;
+            }
+        }
+        total
+    }
+
+    /// `y = A·x` into caller-owned scratch, decoding the delta stream
+    /// row by row. Fallible and allocation-free, matching the
+    /// [`crate::solver::MatVecOp`] contract.
+    pub fn mv_into(&self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
+        anyhow::ensure!(
+            x.len() == self.n_cols,
+            "x length {} != matrix columns {}",
+            x.len(),
+            self.n_cols
+        );
+        anyhow::ensure!(
+            y.len() == self.n_rows,
+            "y length {} != matrix rows {}",
+            y.len(),
+            self.n_rows
+        );
         for i in 0..self.n_rows {
             let mut pos = self.row_offsets[i];
             let end = self.row_offsets[i + 1];
@@ -295,12 +501,41 @@ impl CsrDu {
             }
             y[i] = acc;
         }
-        y
+        Ok(())
+    }
+
+    /// Round-trip back to CSR — exact: the delta stream recovers every
+    /// column index and the values were never re-encoded.
+    pub fn to_csr(&self) -> Csr {
+        let mut col = Vec::with_capacity(self.val.len());
+        for i in 0..self.n_rows {
+            let mut pos = self.row_offsets[i];
+            let end = self.row_offsets[i + 1];
+            let mut c: i64 = -1;
+            while pos < end {
+                let (delta, next) = decode_varint(&self.stream, pos);
+                pos = next;
+                c += delta as i64;
+                col.push(c as u32);
+            }
+        }
+        Csr {
+            n_rows: self.n_rows,
+            n_cols: self.n_cols,
+            ptr: self.ptr.clone(),
+            col,
+            val: self.val.clone(),
+        }
     }
 
     /// Index-stream bytes (vs `4·nnz` for plain CSR u32 columns).
     pub fn index_bytes(&self) -> usize {
         self.stream.len()
+    }
+
+    /// Stored bytes: values + delta stream + row offsets + row pointer.
+    pub fn bytes(&self) -> usize {
+        self.val.len() * 8 + self.stream.len() + self.row_offsets.len() * 8 + self.ptr.len() * 8
     }
 }
 
@@ -316,7 +551,13 @@ fn encode_varint(mut v: u64, out: &mut Vec<u8>) {
     }
 }
 
-fn decode_varint(buf: &[u8], mut pos: usize) -> (u64, usize) {
+/// Encoded length of one varint, in bytes.
+fn varint_len(v: u64) -> usize {
+    let bits = 64 - v.max(1).leading_zeros() as usize;
+    bits.div_ceil(7)
+}
+
+pub(crate) fn decode_varint(buf: &[u8], mut pos: usize) -> (u64, usize) {
     let mut v = 0u64;
     let mut shift = 0;
     loop {
@@ -353,21 +594,53 @@ mod tests {
         for (name, a) in suite() {
             let x = x_for(a.n_cols);
             let y_ref = a.matvec(&x);
-            if let Some(dia) = Dia::from_csr(&a, 4096) {
-                let y = dia.matvec(&x);
-                for i in 0..a.n_rows {
-                    assert!((y[i] - y_ref[i]).abs() < 1e-10, "{name} row {i}");
-                }
-            } else {
-                panic!("{name}: band matrix should fit in DIA");
+            let dia = Dia::from_csr(&a, 4096)
+                .unwrap_or_else(|e| panic!("{name}: band matrix should fit in DIA ({e})"));
+            let mut y = vec![0.0; a.n_rows];
+            dia.mv_into(&x, &mut y).unwrap();
+            for i in 0..a.n_rows {
+                assert!((y[i] - y_ref[i]).abs() < 1e-10, "{name} row {i}");
             }
         }
     }
 
     #[test]
-    fn dia_rejects_too_many_diagonals() {
+    fn dia_rejects_too_many_diagonals_with_typed_reason() {
         let a = generate(&MatrixSpec::paper("zhao1").unwrap(), 1).to_csr();
-        assert!(Dia::from_csr(&a, 64).is_none());
+        let err = Dia::from_csr(&a, 64).unwrap_err();
+        assert_eq!(err, DiaOverflow { max_diags: 64 });
+        assert!(err.to_string().contains("64 distinct diagonals"));
+        assert_eq!(Dia::count_diagonals(&a, 64), Err(DiaOverflow { max_diags: 64 }));
+    }
+
+    #[test]
+    fn dia_empty_matrix_is_not_an_overflow() {
+        // the case the old Option return conflated with rejection
+        let empty = Coo::new(4, 4).to_csr();
+        let dia = Dia::from_csr(&empty, 8).unwrap();
+        assert!(dia.offsets.is_empty());
+        assert_eq!(Dia::count_diagonals(&empty, 8), Ok(0));
+        assert_eq!(dia.to_csr(), empty);
+    }
+
+    #[test]
+    fn mv_into_rejects_bad_dimensions() {
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 1).to_csr();
+        let x = x_for(a.n_cols);
+        let mut y = vec![0.0; a.n_rows];
+        let mut y_short = vec![0.0; 3];
+        let dia = Dia::from_csr(&a, 4096).unwrap();
+        assert!(dia.mv_into(&x[..3], &mut y).is_err());
+        assert!(dia.mv_into(&x, &mut y_short).is_err());
+        let jad = Jad::from_csr(&a);
+        assert!(jad.mv_into(&x[..3], &mut y).is_err());
+        assert!(jad.mv_into(&x, &mut y_short).is_err());
+        let bsr = Bsr::from_csr(&a, 4);
+        assert!(bsr.mv_into(&x[..3], &mut y).is_err());
+        assert!(bsr.mv_into(&x, &mut y_short).is_err());
+        let du = CsrDu::from_csr(&a);
+        assert!(du.mv_into(&x[..3], &mut y).is_err());
+        assert!(du.mv_into(&x, &mut y_short).is_err());
     }
 
     #[test]
@@ -376,11 +649,20 @@ mod tests {
             let x = x_for(a.n_cols);
             let y_ref = a.matvec(&x);
             let jad = Jad::from_csr(&a);
-            let y = jad.matvec(&x);
+            let mut y = vec![0.0; a.n_rows];
+            jad.mv_into(&x, &mut y).unwrap();
             for i in 0..a.n_rows {
                 assert!((y[i] - y_ref[i]).abs() < 1e-10, "{name} row {i}");
             }
             assert_eq!(jad.val.len(), a.nnz());
+            // pos really is the inverse permutation
+            for (k, &i) in jad.perm.iter().enumerate() {
+                assert_eq!(jad.pos[i as usize] as usize, k, "{name}");
+            }
+            // row lengths agree with the CSR row structure
+            for i in 0..a.n_rows {
+                assert_eq!(jad.row_len(i), a.row_nnz(i), "{name} row {i}");
+            }
         }
     }
 
@@ -391,7 +673,8 @@ mod tests {
             let y_ref = a.matvec(&x);
             for b in [1usize, 2, 4, 8] {
                 let bsr = Bsr::from_csr(&a, b);
-                let y = bsr.matvec(&x);
+                let mut y = vec![0.0; a.n_rows];
+                bsr.mv_into(&x, &mut y).unwrap();
                 for i in 0..a.n_rows {
                     assert!((y[i] - y_ref[i]).abs() < 1e-10, "{name} b={b} row {i}");
                 }
@@ -414,7 +697,8 @@ mod tests {
             let x = x_for(a.n_cols);
             let y_ref = a.matvec(&x);
             let du = CsrDu::from_csr(&a);
-            let y = du.matvec(&x);
+            let mut y = vec![0.0; a.n_rows];
+            du.mv_into(&x, &mut y).unwrap();
             for i in 0..a.n_rows {
                 assert!((y[i] - y_ref[i]).abs() < 1e-10, "{name} row {i}");
             }
@@ -426,6 +710,20 @@ mod tests {
                 du.index_bytes(),
                 4 * a.nnz()
             );
+            // the pre-build probe predicts the built stream exactly
+            assert_eq!(CsrDu::encoded_bytes(&a), du.index_bytes(), "{name}");
+        }
+    }
+
+    #[test]
+    fn every_format_roundtrips_to_the_original_csr() {
+        for (name, a) in suite() {
+            assert_eq!(Jad::from_csr(&a).to_csr(), a, "{name}: JAD");
+            assert_eq!(CsrDu::from_csr(&a).to_csr(), a, "{name}: CSR-DU");
+            assert_eq!(Dia::from_csr(&a, 4096).unwrap().to_csr(), a, "{name}: DIA");
+            for b in [1usize, 2, 4, 8] {
+                assert_eq!(Bsr::from_csr(&a, b).to_csr(), a, "{name}: BSR b={b}");
+            }
         }
     }
 
@@ -438,6 +736,7 @@ mod tests {
             let (got, pos) = decode_varint(&buf, 0);
             assert_eq!(got, v);
             assert_eq!(pos, buf.len());
+            assert_eq!(varint_len(v), buf.len());
         }
     }
 }

@@ -3,7 +3,13 @@
 //! The paper (ch. 1 §2.3) works with the three classic compressed formats
 //! COO, CSR and CSC; the per-core kernel consumes CSR (row fragments) or
 //! CSC (column fragments), and the Pallas/TPU path consumes ELL slabs
-//! ([`ell`], see DESIGN.md §Hardware-Adaptation).
+//! ([`ell`], see DESIGN.md §Hardware-Adaptation). The ch. 1 §2.3 /
+//! related-work compression formats live in [`formats_ext`]
+//! (DIA/JAD/BSR/CSR-DU), and [`storage`] wraps all of them — plus the
+//! f64 ELL slab — behind [`FragmentStorage`], the per-fragment kernel
+//! storage the distributed PMVC selects at decomposition time
+//! (`--format`, with [`FormatKind::Auto`] scoring each fragment via
+//! [`stats`]).
 
 pub mod coo;
 pub mod csc;
@@ -13,11 +19,13 @@ pub mod formats_ext;
 pub mod gen;
 pub mod mm;
 pub mod stats;
+pub mod storage;
 
 pub use coo::Coo;
 pub use csc::Csc;
 pub use csr::Csr;
 pub use ell::Ell;
+pub use storage::{auto_select, EllStore, FormatKind, FragmentStorage};
 
 /// A dense vector of f64 — X and Y in the PMVC `y = A·x`.
 pub type DenseVec = Vec<f64>;

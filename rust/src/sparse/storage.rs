@@ -1,0 +1,718 @@
+//! Per-fragment kernel storage selection — the format axis of the
+//! campaign.
+//!
+//! The memoir's ch. 1 §2.3 catalogues six compression formats and its
+//! related-work chapter ([KGK08]) shows format choice — not just
+//! partitioning — decides the memory-bound SpMV's throughput. This
+//! module makes the per-core PFVC kernel format-generic:
+//!
+//! * [`FormatKind`] is the registry row (parallel to
+//!   `PartitionerKind` / `BackendKind` / `SolverKind`): a parseable
+//!   run-time selector, including [`FormatKind::Auto`];
+//! * [`FragmentStorage`] is the storage a core fragment actually
+//!   computes with — built once per fragment after decomposition (CSR
+//!   stays the construction format) and carrying a uniform
+//!   allocation-free kernel contract: [`FragmentStorage::mv`] for the
+//!   blocking schedule plus the row-subset
+//!   [`FragmentStorage::mv_rows`] the overlapped interior/boundary
+//!   schedule needs;
+//! * [`auto_select`] scores a fragment's structure via
+//!   [`super::stats`] — diagonal occupancy → DIA, dense register
+//!   blocks → BSR, row-length variance → ELL vs JAD, else
+//!   CSR/CSR-DU — the way Agullo et al. (2012) let a runtime pick the
+//!   kernel per task. Rejections carry their typed reason (e.g.
+//!   [`super::formats_ext::DiaOverflow`]) so the choice is auditable.
+//!
+//! Every non-CSR kernel assigns each row exactly once in the row's
+//! CSR nonzero order (JAD/ELL/CSR-DU are bit-compatible with the CSR
+//! per-row accumulation; DIA/BSR add explicitly stored zeros), so the
+//! blocking and overlapped schedules stay bitwise-identical to each
+//! other on every format, and `FormatKind::Csr` leaves the pre-existing
+//! hot path untouched.
+
+use super::formats_ext::{decode_varint, Bsr, CsrDu, Dia, Jad};
+use super::stats::MatrixStats;
+use super::{Coo, Csr};
+
+/// Block edge used by the BSR format (register blocking, ch. 1 §2.3).
+pub const BSR_BLOCK: usize = 4;
+
+/// Registry of per-fragment kernel formats — the fourth parallel
+/// registry row next to `PartitionerKind`, `BackendKind` and
+/// `SolverKind`.
+///
+/// ```
+/// use pmvc::sparse::FormatKind;
+///
+/// assert_eq!(FormatKind::parse("csr-du"), Some(FormatKind::CsrDu));
+/// assert_eq!(FormatKind::parse("AUTO"), Some(FormatKind::Auto));
+/// assert_eq!(FormatKind::Auto.name(), "auto");
+/// assert_eq!(FormatKind::parse("morse-code"), None);
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum FormatKind {
+    /// The construction format itself — the paper's per-core kernel.
+    #[default]
+    Csr,
+    /// ELLPACK slab (f64): rows padded to the fragment's max length.
+    Ell,
+    /// Diagonal storage — band matrices.
+    Dia,
+    /// Jagged diagonals — skewed row-length distributions.
+    Jad,
+    /// Block Sparse Row with 4×4 register blocks.
+    Bsr,
+    /// CSR with delta-encoded column indices ([KGK08]).
+    CsrDu,
+    /// Score each fragment with [`auto_select`] and pick per fragment.
+    Auto,
+}
+
+impl FormatKind {
+    /// All selectable kinds, `csr` first, `auto` last.
+    pub fn all() -> [FormatKind; 7] {
+        [
+            FormatKind::Csr,
+            FormatKind::Ell,
+            FormatKind::Dia,
+            FormatKind::Jad,
+            FormatKind::Bsr,
+            FormatKind::CsrDu,
+            FormatKind::Auto,
+        ]
+    }
+
+    /// The six concrete storage formats (everything but `auto`).
+    pub fn concrete() -> [FormatKind; 6] {
+        [
+            FormatKind::Csr,
+            FormatKind::Ell,
+            FormatKind::Dia,
+            FormatKind::Jad,
+            FormatKind::Bsr,
+            FormatKind::CsrDu,
+        ]
+    }
+
+    /// Stable identifier (`csr` | `ell` | `dia` | `jad` | `bsr` |
+    /// `csrdu` | `auto`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FormatKind::Csr => "csr",
+            FormatKind::Ell => "ell",
+            FormatKind::Dia => "dia",
+            FormatKind::Jad => "jad",
+            FormatKind::Bsr => "bsr",
+            FormatKind::CsrDu => "csrdu",
+            FormatKind::Auto => "auto",
+        }
+    }
+
+    /// Parse a kind name (case-insensitive; `csr-du`/`du` alias
+    /// `csrdu`).
+    pub fn parse(s: &str) -> Option<FormatKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "csr" => Some(FormatKind::Csr),
+            "ell" | "ellpack" => Some(FormatKind::Ell),
+            "dia" | "diag" => Some(FormatKind::Dia),
+            "jad" | "jds" => Some(FormatKind::Jad),
+            "bsr" | "block" => Some(FormatKind::Bsr),
+            "csrdu" | "csr-du" | "du" => Some(FormatKind::CsrDu),
+            "auto" => Some(FormatKind::Auto),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for FormatKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------- ELL (f64)
+
+/// ELLPACK slab in f64 — the distributed kernel's ELL variant (the
+/// [`super::Ell`] in [`super::ell`] is the f32 TPU-shaped slab with the
+/// AOT bucket ladder; this one pads only to the fragment's own max row
+/// length and keeps full double precision so it can serve solvers at
+/// 1e-12).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EllStore {
+    /// Row count.
+    pub n_rows: usize,
+    /// Column count.
+    pub n_cols: usize,
+    /// Slab width — the fragment's max nonzeros per row.
+    pub width: usize,
+    /// Column indices, `n_rows × width`, `-1` marks (trailing) padding.
+    pub cols: Vec<i32>,
+    /// Values, `n_rows × width`.
+    pub data: Vec<f64>,
+}
+
+impl EllStore {
+    /// Convert from CSR; width = max row nonzero count.
+    pub fn from_csr(a: &Csr) -> EllStore {
+        let width = (0..a.n_rows).map(|i| a.row_nnz(i)).max().unwrap_or(0);
+        let mut cols = vec![-1i32; a.n_rows * width];
+        let mut data = vec![0f64; a.n_rows * width];
+        for i in 0..a.n_rows {
+            for (k, (c, v)) in a.row(i).enumerate() {
+                cols[i * width + k] = c as i32;
+                data[i * width + k] = v;
+            }
+        }
+        EllStore { n_rows: a.n_rows, n_cols: a.n_cols, width, cols, data }
+    }
+
+    /// `y = A·x` into caller-owned scratch. Fallible and
+    /// allocation-free, matching the [`crate::solver::MatVecOp`]
+    /// contract.
+    pub fn mv_into(&self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
+        anyhow::ensure!(
+            x.len() == self.n_cols,
+            "x length {} != matrix columns {}",
+            x.len(),
+            self.n_cols
+        );
+        anyhow::ensure!(
+            y.len() == self.n_rows,
+            "y length {} != matrix rows {}",
+            y.len(),
+            self.n_rows
+        );
+        for i in 0..self.n_rows {
+            let mut acc = 0.0;
+            for k in 0..self.width {
+                let c = self.cols[i * self.width + k];
+                if c < 0 {
+                    break; // padding is trailing within a row
+                }
+                acc += self.data[i * self.width + k] * x[c as usize];
+            }
+            y[i] = acc;
+        }
+        Ok(())
+    }
+
+    /// Round-trip back to CSR — exact (padding slots carry `-1`).
+    pub fn to_csr(&self) -> Csr {
+        let mut coo = Coo::new(self.n_rows, self.n_cols);
+        for i in 0..self.n_rows {
+            for k in 0..self.width {
+                let c = self.cols[i * self.width + k];
+                if c < 0 {
+                    break;
+                }
+                coo.push(i as u32, c as u32, self.data[i * self.width + k]);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Stored bytes: values (8) + column indices (4), padding included.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 8 + self.cols.len() * 4
+    }
+
+    /// Padding overhead ratio: stored slots / real nonzeros.
+    pub fn fill_ratio(&self, nnz: usize) -> f64 {
+        if nnz == 0 {
+            return f64::INFINITY;
+        }
+        (self.n_rows * self.width) as f64 / nnz as f64
+    }
+}
+
+// ---------------------------------------------------- fragment storage
+
+/// The storage one core fragment computes with.
+///
+/// [`FormatKind::Csr`] is the zero-overhead default: the kernel reads
+/// the fragment's construction CSR in place, so the default pipeline is
+/// byte-for-byte the pre-existing one. Every other variant owns its
+/// converted payload; all kernels take the construction CSR as context
+/// (row structure, dimensions) so they stay allocation-free.
+#[derive(Clone, Debug, Default)]
+pub enum FragmentStorage {
+    /// Run the kernel on the fragment's construction CSR in place.
+    #[default]
+    Csr,
+    /// f64 ELLPACK slab.
+    Ell(EllStore),
+    /// Diagonal storage.
+    Dia(Dia),
+    /// Jagged diagonals.
+    Jad(Jad),
+    /// 4×4 Block Sparse Row.
+    Bsr(Bsr),
+    /// Delta-encoded CSR.
+    CsrDu(CsrDu),
+}
+
+impl FragmentStorage {
+    /// Which registry kind this storage is.
+    pub fn kind(&self) -> FormatKind {
+        match self {
+            FragmentStorage::Csr => FormatKind::Csr,
+            FragmentStorage::Ell(_) => FormatKind::Ell,
+            FragmentStorage::Dia(_) => FormatKind::Dia,
+            FragmentStorage::Jad(_) => FormatKind::Jad,
+            FragmentStorage::Bsr(_) => FormatKind::Bsr,
+            FragmentStorage::CsrDu(_) => FormatKind::CsrDu,
+        }
+    }
+
+    /// Build the storage of `kind` for one fragment (`a` is the
+    /// fragment's construction CSR and stays alive next to the result).
+    /// `Auto` scores the fragment with [`auto_select`]; an explicit
+    /// kind the fragment's structure cannot carry (DIA over too many
+    /// diagonals, ELL padding blow-up) fails with the typed reason.
+    ///
+    /// ```
+    /// use pmvc::sparse::{Coo, FormatKind, FragmentStorage};
+    ///
+    /// let a = Coo::from_triplets(3, 3, [(0, 0, 2.0), (1, 1, 3.0), (2, 2, 4.0)])
+    ///     .unwrap()
+    ///     .to_csr();
+    /// let s = FragmentStorage::build(&a, FormatKind::Auto).unwrap();
+    /// assert_eq!(s.kind(), FormatKind::Dia); // a pure diagonal
+    /// let mut y = vec![0.0; 3];
+    /// s.mv(&a, &[1.0, 1.0, 1.0], &mut y);
+    /// assert_eq!(y, vec![2.0, 3.0, 4.0]);
+    /// ```
+    pub fn build(a: &Csr, kind: FormatKind) -> crate::Result<FragmentStorage> {
+        Ok(match kind {
+            FormatKind::Csr => FragmentStorage::Csr,
+            FormatKind::Ell => {
+                let e = EllStore::from_csr(a);
+                anyhow::ensure!(
+                    a.nnz() == 0 || e.fill_ratio(a.nnz()) <= ELL_MAX_FILL,
+                    "ELL rejected: padding would store {} slots for {} nonzeros \
+                     (fill {:.1} > {ELL_MAX_FILL})",
+                    a.n_rows * e.width,
+                    a.nnz(),
+                    e.fill_ratio(a.nnz())
+                );
+                FragmentStorage::Ell(e)
+            }
+            FormatKind::Dia => FragmentStorage::Dia(Dia::from_csr(a, explicit_dia_cap(a))?),
+            FormatKind::Jad => FragmentStorage::Jad(Jad::from_csr(a)),
+            FormatKind::Bsr => FragmentStorage::Bsr(Bsr::from_csr(a, BSR_BLOCK)),
+            FormatKind::CsrDu => FragmentStorage::CsrDu(CsrDu::from_csr(a)),
+            FormatKind::Auto => return Self::build(a, auto_select(a).0),
+        })
+    }
+
+    /// One row's dot product, reading X through `read` — the single
+    /// code path behind [`FragmentStorage::mv`] and
+    /// [`FragmentStorage::mv_rows`], so the blocking and overlapped
+    /// schedules accumulate in the same order on every format.
+    #[inline]
+    fn row_dot(&self, csr: &Csr, i: usize, read: &impl Fn(usize) -> f64) -> f64 {
+        match self {
+            FragmentStorage::Csr => {
+                let (s, e) = (csr.ptr[i], csr.ptr[i + 1]);
+                let mut acc = 0.0;
+                for k in s..e {
+                    acc += csr.val[k] * read(csr.col[k] as usize);
+                }
+                acc
+            }
+            FragmentStorage::Ell(el) => {
+                let mut acc = 0.0;
+                for k in 0..el.width {
+                    let c = el.cols[i * el.width + k];
+                    if c < 0 {
+                        break;
+                    }
+                    acc += el.data[i * el.width + k] * read(c as usize);
+                }
+                acc
+            }
+            FragmentStorage::Dia(d) => {
+                let mut acc = 0.0;
+                for (di, &off) in d.offsets.iter().enumerate() {
+                    let j = i as i64 + off;
+                    if j < 0 || j >= d.n_cols as i64 {
+                        continue;
+                    }
+                    acc += d.data[di * d.n_rows + i] * read(j as usize);
+                }
+                acc
+            }
+            FragmentStorage::Jad(j) => {
+                let pr = j.pos[i] as usize;
+                let mut acc = 0.0;
+                for k in 0..csr.row_nnz(i) {
+                    let idx = j.jag_ptr[k] + pr;
+                    acc += j.val[idx] * read(j.col[idx] as usize);
+                }
+                acc
+            }
+            FragmentStorage::Bsr(bm) => {
+                let b = bm.b;
+                let br = i / b;
+                let li = i - br * b;
+                let mut acc = 0.0;
+                for s in bm.ptr[br]..bm.ptr[br + 1] {
+                    let col_lo = bm.bcol[s] as usize * b;
+                    let base = s * b * b + li * b;
+                    for lj in 0..b.min(bm.n_cols.saturating_sub(col_lo)) {
+                        acc += bm.blocks[base + lj] * read(col_lo + lj);
+                    }
+                }
+                acc
+            }
+            FragmentStorage::CsrDu(du) => {
+                let mut pos = du.row_offsets[i];
+                let end = du.row_offsets[i + 1];
+                let mut c: i64 = -1;
+                let mut k = du.ptr[i];
+                let mut acc = 0.0;
+                while pos < end {
+                    let (delta, next) = decode_varint(&du.stream, pos);
+                    pos = next;
+                    c += delta as i64;
+                    acc += du.val[k] * read(c as usize);
+                    k += 1;
+                }
+                acc
+            }
+        }
+    }
+
+    /// `y = A·x` over all rows, reading `x` directly. `csr` is the
+    /// fragment's construction CSR; `y.len()` must equal its row count.
+    /// Allocation-free; each row is assigned exactly once.
+    pub fn mv(&self, csr: &Csr, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(y.len(), csr.n_rows);
+        for i in 0..csr.n_rows {
+            y[i] = self.row_dot(csr, i, &|c| x[c]);
+        }
+    }
+
+    /// Compute a subset of rows, reading X *indirectly* through the
+    /// node-footprint buffer (`x_node[x_map[local col]]`) — the
+    /// overlapped schedule's kernel: interior rows run against the
+    /// locally-owned X while the halo is in flight, boundary rows once
+    /// it lands. Rows outside `rows` are left untouched; each listed
+    /// row is assigned exactly once in the same accumulation order as
+    /// [`FragmentStorage::mv`], so the two-pass product is bitwise
+    /// identical to the one-pass product.
+    pub fn mv_rows(&self, csr: &Csr, rows: &[u32], x_map: &[u32], x_node: &[f64], y: &mut [f64]) {
+        let read = |c: usize| x_node[x_map[c] as usize];
+        for &r in rows {
+            y[r as usize] = self.row_dot(csr, r as usize, &read);
+        }
+    }
+
+    /// One row's product against a direct X — what the dynamic
+    /// (self-scheduling) baseline uses to stay format-generic.
+    pub(crate) fn row_product(&self, csr: &Csr, i: usize, x: &[f64]) -> f64 {
+        self.row_dot(csr, i, &|c| x[c])
+    }
+
+    /// Bytes of the A-side streams (values + index structures, padding
+    /// included) this storage pulls per apply — the format's share of
+    /// the memory-bound roofline the simulator prices compute from
+    /// (plain CSR: `12·nnz`).
+    pub fn kernel_bytes(&self, csr: &Csr) -> usize {
+        match self {
+            FragmentStorage::Csr => csr.nnz() * 12,
+            FragmentStorage::Ell(e) => e.data.len() * 12,
+            FragmentStorage::Dia(d) => d.data.len() * 8 + d.offsets.len() * 8,
+            FragmentStorage::Jad(j) => j.val.len() * 12 + j.perm.len() * 4,
+            FragmentStorage::Bsr(b) => b.blocks.len() * 8 + b.bcol.len() * 4,
+            FragmentStorage::CsrDu(du) => du.val.len() * 8 + du.stream.len(),
+        }
+    }
+
+    /// Total resident bytes of this fragment's kernel storage (the CSV
+    /// `stored_bytes` column; for `Csr` this is the construction CSR
+    /// itself, which doubles as the kernel input).
+    pub fn stored_bytes(&self, csr: &Csr) -> usize {
+        match self {
+            FragmentStorage::Csr => csr.nnz() * 12 + (csr.n_rows + 1) * 8,
+            FragmentStorage::Ell(e) => e.bytes(),
+            FragmentStorage::Dia(d) => d.bytes(),
+            FragmentStorage::Jad(j) => j.bytes(),
+            FragmentStorage::Bsr(b) => b.bytes(),
+            FragmentStorage::CsrDu(du) => du.bytes(),
+        }
+    }
+}
+
+// ---------------------------------------------------- auto selection
+
+/// DIA fill budget: stored diagonal slots may be at most this multiple
+/// of the nonzero count before `Auto` considers the band too sparse.
+const DIA_MAX_FILL: usize = 3;
+/// ELL fill budget for `Auto` (padding ≤ 25%).
+const ELL_AUTO_FILL: f64 = 1.25;
+/// ELL fill cap for an *explicitly requested* ELL build.
+const ELL_MAX_FILL: f64 = 8.0;
+/// BSR fill budget (slots per nonzero) for `Auto`.
+const BSR_AUTO_FILL: f64 = 2.0;
+
+/// Diagonal budget for an explicitly requested DIA build: generous, but
+/// still bounded so a scattered matrix cannot silently allocate
+/// `diags × n_rows` slots without bound.
+fn explicit_dia_cap(a: &Csr) -> usize {
+    if a.n_rows == 0 {
+        return 1;
+    }
+    (8 * a.nnz() / a.n_rows).clamp(512, 8192)
+}
+
+/// Count the distinct `BSR_BLOCK × BSR_BLOCK` blocks `a` touches.
+fn count_blocks(a: &Csr, b: usize) -> usize {
+    let mut keys: Vec<u64> = Vec::with_capacity(a.nnz());
+    for i in 0..a.n_rows {
+        let br = (i / b) as u64;
+        for (c, _) in a.row(i) {
+            keys.push((br << 32) | (c as usize / b) as u64);
+        }
+    }
+    keys.sort_unstable();
+    keys.dedup();
+    keys.len()
+}
+
+/// Score one fragment's structure and pick the concrete format its
+/// kernel should run on, via [`MatrixStats`]: diagonal occupancy → DIA,
+/// near-uniform row lengths → ELL, dense 4×4 register blocks → BSR,
+/// skewed row lengths → JAD, a compressible index stream → CSR-DU,
+/// else CSR. The second component lists, for each format that was
+/// considered and rejected, the (typed) reason — so callers can log
+/// why a fragment did not get the format one might expect.
+pub fn auto_select(a: &Csr) -> (FormatKind, Vec<String>) {
+    let mut notes = Vec::new();
+    let nnz = a.nnz();
+    if nnz == 0 || a.n_rows == 0 {
+        return (FormatKind::Csr, notes);
+    }
+    let s = MatrixStats::from_csr(a);
+
+    // DIA: the nonzeros concentrate on few diagonals (band occupancy
+    // ≥ 1/DIA_MAX_FILL of the stored slots)
+    let dia_cap = (DIA_MAX_FILL * nnz / a.n_rows).clamp(1, 4096);
+    match Dia::count_diagonals(a, dia_cap) {
+        Ok(d) => {
+            if d.max(1) * a.n_rows <= DIA_MAX_FILL * nnz {
+                return (FormatKind::Dia, notes);
+            }
+            notes.push(format!(
+                "dia rejected: {d} diagonals × {} rows store {:.1}× the nonzeros",
+                a.n_rows,
+                (d * a.n_rows) as f64 / nnz as f64
+            ));
+        }
+        Err(e) => notes.push(format!("dia rejected: {e}")),
+    }
+
+    // ELL: near-uniform row lengths (padding ≤ 25%)
+    let mean = s.row_nnz_mean.max(1.0);
+    let ell_fill = (s.row_nnz_max * a.n_rows) as f64 / nnz as f64;
+    if (s.row_nnz_max as f64) <= ELL_AUTO_FILL * mean {
+        return (FormatKind::Ell, notes);
+    }
+    notes.push(format!(
+        "ell rejected: max row {} vs mean {:.1} pads {:.2}×",
+        s.row_nnz_max, s.row_nnz_mean, ell_fill
+    ));
+
+    // BSR: dense 4×4 register blocks
+    let blocks = count_blocks(a, BSR_BLOCK);
+    let bsr_fill = (blocks * BSR_BLOCK * BSR_BLOCK) as f64 / nnz as f64;
+    if bsr_fill <= BSR_AUTO_FILL {
+        return (FormatKind::Bsr, notes);
+    }
+    notes.push(format!("bsr rejected: fill {bsr_fill:.2} > {BSR_AUTO_FILL:.1}"));
+
+    // JAD: skewed row-length distribution — the jag layout absorbs the
+    // skew without padding
+    if s.row_nnz_stddev > 0.5 * mean {
+        return (FormatKind::Jad, notes);
+    }
+    notes.push(format!(
+        "jad rejected: row-length stddev {:.2} ≤ half the mean {:.2}",
+        s.row_nnz_stddev, s.row_nnz_mean
+    ));
+
+    // CSR-DU: the delta stream at least halves the index traffic
+    let stream = CsrDu::encoded_bytes(a);
+    if 2 * stream <= 4 * nnz {
+        return (FormatKind::CsrDu, notes);
+    }
+    notes.push(format!("csrdu rejected: stream {stream} B ≥ half of {} B", 4 * nnz));
+
+    (FormatKind::Csr, notes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::sparse::gen::{generate, MatrixSpec};
+
+    fn mat(name: &str) -> Csr {
+        generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr()
+    }
+
+    fn x_for(n: usize) -> Vec<f64> {
+        let mut rng = SplitMix64::new(17);
+        (0..n).map(|_| rng.next_f64_range(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn kind_roundtrips_through_parse() {
+        for kind in FormatKind::all() {
+            assert_eq!(FormatKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(FormatKind::parse("csr-du"), Some(FormatKind::CsrDu));
+        assert_eq!(FormatKind::parse("carrier-pigeon"), None);
+        assert_eq!(FormatKind::default(), FormatKind::Csr);
+        assert_eq!(FormatKind::concrete().len(), 6);
+    }
+
+    #[test]
+    fn every_concrete_format_matches_csr_mv() {
+        for name in ["bcsstm09", "t2dal", "spmsrtls"] {
+            let a = mat(name);
+            let x = x_for(a.n_cols);
+            let y_ref = a.matvec(&x);
+            for kind in FormatKind::concrete() {
+                let s = FragmentStorage::build(&a, kind)
+                    .unwrap_or_else(|e| panic!("{name}/{kind}: {e}"));
+                assert_eq!(s.kind(), kind);
+                let mut y = vec![f64::NAN; a.n_rows];
+                s.mv(&a, &x, &mut y);
+                for i in 0..a.n_rows {
+                    assert!(
+                        (y[i] - y_ref[i]).abs() < 1e-12 * (1.0 + y_ref[i].abs()),
+                        "{name}/{kind} row {i}: {} vs {}",
+                        y[i],
+                        y_ref[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mv_rows_assigns_exactly_the_requested_rows() {
+        let a = mat("t2dal");
+        let x = x_for(a.n_cols);
+        let y_ref = a.matvec(&x);
+        // identity map: x_node == x
+        let x_map: Vec<u32> = (0..a.n_cols as u32).collect();
+        let evens: Vec<u32> = (0..a.n_rows as u32).step_by(2).collect();
+        let odds: Vec<u32> = (1..a.n_rows as u32).step_by(2).collect();
+        for kind in FormatKind::concrete() {
+            let s = FragmentStorage::build(&a, kind).unwrap();
+            let mut y = vec![f64::NAN; a.n_rows];
+            s.mv_rows(&a, &evens, &x_map, &x, &mut y);
+            for (i, &v) in y.iter().enumerate() {
+                if i % 2 == 0 {
+                    assert!((v - y_ref[i]).abs() < 1e-12 * (1.0 + y_ref[i].abs()), "{kind}");
+                } else {
+                    assert!(v.is_nan(), "{kind}: row {i} must stay untouched");
+                }
+            }
+            s.mv_rows(&a, &odds, &x_map, &x, &mut y);
+            // two-pass now equals one-pass bitwise
+            let mut y_one = vec![0.0; a.n_rows];
+            s.mv(&a, &x, &mut y_one);
+            assert_eq!(y, y_one, "{kind}: two-pass must be bitwise equal");
+        }
+    }
+
+    #[test]
+    fn auto_picks_dia_for_dense_bands() {
+        // pure diagonal: occupancy 1.0
+        assert_eq!(auto_select(&mat("bcsstm09")).0, FormatKind::Dia);
+        // fully occupied tridiagonal band
+        let mut tri = Coo::new(100, 100);
+        for i in 0..100u32 {
+            tri.push(i, i, 2.0);
+            if i > 0 {
+                tri.push(i, i - 1, -1.0);
+            }
+            if i < 99 {
+                tri.push(i, i + 1, -1.0);
+            }
+        }
+        assert_eq!(auto_select(&tri.to_csr()).0, FormatKind::Dia);
+        // a sparse band (t2dal stores ~5 nnz/row over a ±12 band) is
+        // NOT worth dense diagonals — auto must route it elsewhere
+        assert_ne!(auto_select(&mat("t2dal")).0, FormatKind::Dia);
+    }
+
+    #[test]
+    fn auto_rejections_carry_readable_reasons() {
+        // zhao1 scatters over far too many diagonals for DIA
+        let a = mat("zhao1");
+        let (kind, notes) = auto_select(&a);
+        assert_ne!(kind, FormatKind::Dia);
+        assert!(
+            notes.iter().any(|n| n.starts_with("dia rejected")),
+            "DIA rejection must be logged: {notes:?}"
+        );
+    }
+
+    #[test]
+    fn auto_on_empty_fragment_is_csr() {
+        let empty = Coo::new(5, 5).to_csr();
+        assert_eq!(auto_select(&empty).0, FormatKind::Csr);
+        // and every concrete format still builds + computes on it
+        for kind in FormatKind::concrete() {
+            let s = FragmentStorage::build(&empty, kind).unwrap();
+            let mut y = vec![1.0; 5];
+            s.mv(&empty, &[0.0; 5], &mut y);
+            assert_eq!(y, vec![0.0; 5], "{kind}");
+        }
+    }
+
+    #[test]
+    fn explicit_dia_on_scattered_matrix_fails_with_reason() {
+        let a = mat("zhao1");
+        let err = FragmentStorage::build(&a, FormatKind::Dia).unwrap_err();
+        assert!(err.to_string().contains("diagonals"), "{err:#}");
+    }
+
+    #[test]
+    fn ell_store_roundtrips_and_caps_padding() {
+        let a = mat("t2dal");
+        let e = EllStore::from_csr(&a);
+        assert_eq!(e.to_csr(), a);
+        assert!(e.fill_ratio(a.nnz()) >= 1.0);
+        // one dense row over many empty ones blows the fill cap
+        let mut skew = Coo::new(64, 64);
+        for j in 0..64u32 {
+            skew.push(0, j, 1.0);
+        }
+        let skew = skew.to_csr();
+        assert!(FragmentStorage::build(&skew, FormatKind::Ell).is_err());
+        // but auto still finds it a home
+        let (kind, _) = auto_select(&skew);
+        assert_ne!(kind, FormatKind::Ell);
+        FragmentStorage::build(&skew, kind).unwrap();
+    }
+
+    #[test]
+    fn stored_and_kernel_bytes_are_plausible() {
+        let a = mat("t2dal");
+        for kind in FormatKind::concrete() {
+            let s = FragmentStorage::build(&a, kind).unwrap();
+            assert!(s.kernel_bytes(&a) > 0, "{kind}");
+            assert!(s.stored_bytes(&a) > 0, "{kind}");
+        }
+        // CSR kernel traffic is the classic 12 bytes per nonzero
+        assert_eq!(FragmentStorage::Csr.kernel_bytes(&a), 12 * a.nnz());
+        // CSR-DU's whole point: a smaller kernel stream than CSR
+        let du = FragmentStorage::build(&a, FormatKind::CsrDu).unwrap();
+        assert!(du.kernel_bytes(&a) < FragmentStorage::Csr.kernel_bytes(&a));
+    }
+}

@@ -154,8 +154,10 @@ fn alternate_formats_agree_with_distributed_pipeline() {
     let x = x_for(a.n_cols, 6);
     let d = decompose(&a, Combination::NlHl, 2, 4, &DecomposeConfig::default()).unwrap();
     let r = execute_threads(&d, &x).unwrap();
-    let jad = Jad::from_csr(&a).matvec(&x);
-    let du = CsrDu::from_csr(&a).matvec(&x);
+    let mut jad = vec![0.0; a.n_rows];
+    Jad::from_csr(&a).mv_into(&x, &mut jad).unwrap();
+    let mut du = vec![0.0; a.n_rows];
+    CsrDu::from_csr(&a).mv_into(&x, &mut du).unwrap();
     for i in 0..a.n_rows {
         assert!((r.y[i] - jad[i]).abs() < 1e-9, "JAD row {i}");
         assert!((r.y[i] - du[i]).abs() < 1e-9, "CSR-DU row {i}");

@@ -41,7 +41,8 @@ fn pfvc_artifact_matches_native_ell() {
     .to_csr();
     let (ell, _) = Ell::from_csr_auto(&a).unwrap();
     let x: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
-    let y_native = ell.matvec(&x);
+    let mut y_native = vec![0f32; ell.rows];
+    ell.mv_into(&x, &mut y_native).unwrap();
     let y_xla = rt.pfvc_ell(&ell, &x).unwrap();
     assert_eq!(y_xla.len(), 4);
     for i in 0..4 {

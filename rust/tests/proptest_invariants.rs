@@ -268,11 +268,59 @@ fn prop_ell_roundtrip_matches_csr() {
         let (ell, bucket) = Ell::from_csr_auto(&frag).unwrap();
         assert!(bucket.rows >= frag.n_rows && bucket.width >= max_w);
         let x: Vec<f32> = (0..frag.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0) as f32).collect();
-        let y_ell = ell.matvec(&x);
+        let mut y_ell = vec![0f32; ell.rows];
+        ell.mv_into(&x, &mut y_ell).unwrap();
         let y_csr = frag.matvec(&x.iter().map(|&v| v as f64).collect::<Vec<_>>());
         for i in 0..frag.n_rows {
             let err = (y_ell[i] as f64 - y_csr[i]).abs();
             assert!(err < 1e-3 * (1.0 + y_csr[i].abs()), "trial {trial} row {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_formats_roundtrip_csr_and_agree() {
+    // CSR ↔ {ELL, DIA, JAD, BSR, CSR-DU} over random structures: the
+    // conversion must be lossless (exact CSR equality — the generators
+    // never store explicit zeros) and the mv_into kernels must agree
+    // with the CSR product at 1e-12
+    use pmvc::sparse::formats_ext::{Bsr, CsrDu, Dia, Jad};
+    use pmvc::sparse::EllStore;
+    let mut rng = SplitMix64::new(0xF0F0);
+    for trial in 0..20 {
+        let a = random_matrix(&mut rng).to_csr();
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-2.0, 2.0)).collect();
+        let y_ref = a.matvec(&x);
+        let mut y = vec![0.0; a.n_rows];
+        let check = |label: &str, y: &[f64]| {
+            for i in 0..a.n_rows {
+                assert!(
+                    (y[i] - y_ref[i]).abs() < 1e-12 * (1.0 + y_ref[i].abs()),
+                    "trial {trial} {label} row {i}"
+                );
+            }
+        };
+        let e = EllStore::from_csr(&a);
+        assert_eq!(e.to_csr(), a, "trial {trial}: ELL round-trip");
+        e.mv_into(&x, &mut y).unwrap();
+        check("ell", &y);
+        let jad = Jad::from_csr(&a);
+        assert_eq!(jad.to_csr(), a, "trial {trial}: JAD round-trip");
+        jad.mv_into(&x, &mut y).unwrap();
+        check("jad", &y);
+        let du = CsrDu::from_csr(&a);
+        assert_eq!(du.to_csr(), a, "trial {trial}: CSR-DU round-trip");
+        du.mv_into(&x, &mut y).unwrap();
+        check("csrdu", &y);
+        let b = 1 + rng.next_below(4);
+        let bsr = Bsr::from_csr(&a, b);
+        assert_eq!(bsr.to_csr(), a, "trial {trial}: BSR b={b} round-trip");
+        bsr.mv_into(&x, &mut y).unwrap();
+        check("bsr", &y);
+        if let Ok(dia) = Dia::from_csr(&a, 4096) {
+            assert_eq!(dia.to_csr(), a, "trial {trial}: DIA round-trip");
+            dia.mv_into(&x, &mut y).unwrap();
+            check("dia", &y);
         }
     }
 }
