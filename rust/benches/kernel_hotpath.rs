@@ -4,12 +4,16 @@
 //! execution, allocating `apply` vs allocation-free `apply_into`, and
 //! the storage-format × schedule grid over the distributed engine
 //! (which also emits the machine-readable `BENCH_pr5.json` perf
-//! trajectory point). This is the §Perf instrument for L1/L3.
+//! trajectory point), and the SpMM panel grid (format × k ∈ {1, 4, 16,
+//! 64}) that prices the batched `mv_multi` kernels and emits
+//! `BENCH_pr6.json` at the repo root. This is the §Perf instrument for
+//! L1/L3.
 //!
 //! ```bash
 //! cargo bench --bench kernel_hotpath            # full measurement run;
 //!                                               # writes BENCH_pr5.json
-//!                                               # (in rust/, the crate dir)
+//!                                               # (in rust/) and
+//!                                               # ../BENCH_pr6.json
 //! cargo bench --bench kernel_hotpath -- --test  # CI smoke: tiny sizes,
 //!                                               # asserts the hot path
 //! ```
@@ -302,6 +306,89 @@ fn main() {
                 .map(|d| d.join("BENCH_pr5.json").display().to_string())
                 .unwrap_or_else(|_| "BENCH_pr5.json".into())
         );
+    }
+
+    // SpMM panel grid: the batched mv_multi kernels, format × k. Each
+    // matrix entry is loaded once per panel apply and reused k times, so
+    // µs/iter/vector (= wall time / k) should fall toward the flop
+    // roofline as k grows — that amortization curve is the PR 6 perf
+    // trajectory point, emitted as BENCH_pr6.json at the repo root. In
+    // --test mode every (format, k) cell is a bitwise gate: each panel
+    // column must equal the single-vector mv of that column exactly.
+    {
+        use pmvc::sparse::FragmentStorage;
+        let mats: &[&str] = if test_mode { &["t2dal"] } else { &["t2dal", "epb1"] };
+        let ks = [1usize, 4, 16, 64];
+        let mut json_rows: Vec<String> = Vec::new();
+        println!("\nSpMM panel kernels (µs/iter/vector = wall time / k):");
+        println!(
+            "{:<10} {:>8} {:>10} {:>10} {:>10} {:>10} {:>8}",
+            "matrix", "format", "k=1", "k=4", "k=16", "k=64", "amort"
+        );
+        for &mat in mats {
+            let a = generate(&MatrixSpec::paper(mat).unwrap(), 1).to_csr();
+            let iters = if test_mode {
+                2
+            } else {
+                (10_000_000 / a.nnz().max(1)).clamp(3, 200)
+            };
+            for kind in FormatKind::concrete() {
+                let storage = match FragmentStorage::build(&a, kind) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        println!("{:<10} {:>8} skipped: {e}", mat, kind.name());
+                        continue;
+                    }
+                };
+                let mut per_vec = [0f64; 4];
+                for (ki, &k) in ks.iter().enumerate() {
+                    let x: Vec<f64> = (0..a.n_cols * k)
+                        .map(|i| ((i % 23) as f64) * 0.17 - 1.5)
+                        .collect();
+                    let mut y = vec![0.0; a.n_rows * k];
+                    let dt = time_it(
+                        || {
+                            storage.mv_multi(&a, &x, &mut y, k);
+                            std::hint::black_box(&y);
+                        },
+                        iters,
+                    );
+                    per_vec[ki] = dt / k as f64;
+                    // bitwise gate: every panel column reproduces the
+                    // single-vector kernel exactly (the --test smoke)
+                    if test_mode {
+                        let mut y1 = vec![0.0; a.n_rows];
+                        for j in 0..k {
+                            storage.mv(&a, &x[j * a.n_cols..(j + 1) * a.n_cols], &mut y1);
+                            assert_eq!(
+                                &y[j * a.n_rows..(j + 1) * a.n_rows],
+                                &y1[..],
+                                "{mat}/{}/k={k}: panel column {j} is not bitwise equal",
+                                kind.name()
+                            );
+                        }
+                    }
+                    json_rows.push(format!(
+                        "  {{\"matrix\": \"{mat}\", \"format\": \"{}\", \"k\": {k}, \"us_per_iter_per_vector\": {:.3}}}",
+                        kind.name(),
+                        per_vec[ki] * 1e6
+                    ));
+                }
+                println!(
+                    "{:<10} {:>8} {:>8.2}µs {:>8.2}µs {:>8.2}µs {:>8.2}µs {:>7.2}x",
+                    mat,
+                    kind.name(),
+                    per_vec[0] * 1e6,
+                    per_vec[1] * 1e6,
+                    per_vec[2] * 1e6,
+                    per_vec[3] * 1e6,
+                    per_vec[0] / per_vec[3]
+                );
+            }
+        }
+        let json = format!("[\n{}\n]\n", json_rows.join(",\n"));
+        std::fs::write("../BENCH_pr6.json", &json).expect("write BENCH_pr6.json");
+        println!("wrote {} SpMM panel points to ../BENCH_pr6.json", json_rows.len());
     }
 
     // XLA artifact path (if built)

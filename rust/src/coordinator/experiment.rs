@@ -50,6 +50,12 @@ pub struct ExperimentConfig {
     pub solver_tol: f64,
     /// Solver iteration cap (solver cells only).
     pub solver_max_iters: usize,
+    /// Right-hand sides per cell (default 1). With `nrhs > 1` a probe
+    /// cell applies one k-wide panel PMVC and a solver cell drives the
+    /// batched analog of the selected solver (`cg` → block CG,
+    /// `jacobi` → batched Jacobi), one packed panel exchange per
+    /// iteration.
+    pub nrhs: usize,
     /// Matrix generation seed.
     pub seed: u64,
     /// Decomposition tunables.
@@ -69,6 +75,7 @@ impl Default for ExperimentConfig {
             solver: None,
             solver_tol: 1e-10,
             solver_max_iters: 1000,
+            nrhs: 1,
             seed: 1,
             decompose: DecomposeConfig::default(),
         }
@@ -113,6 +120,13 @@ pub struct SweepRow {
     /// Resident bytes of the per-fragment kernel storage summed over
     /// the cell — the format study's memory axis.
     pub stored_bytes: usize,
+    /// Right-hand sides the cell carried per apply (panel width).
+    pub nrhs: usize,
+    /// Per-column iteration counts (`nrhs` entries; all 1 for probes).
+    pub col_iterations: Vec<usize>,
+    /// Per-column convergence flags (`nrhs` entries; all true for
+    /// probes).
+    pub col_converged: Vec<bool>,
 }
 
 /// A paravance-class cluster of `f` nodes resized to `cores_per_node`
@@ -168,6 +182,7 @@ fn mean_times(acc: &PhaseTimes, applies: usize) -> PhaseTimes {
 /// a full [`crate::solver::IterativeSolver`] run through the backend
 /// and reports mean per-iteration phase times plus convergence.
 pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
+    anyhow::ensure!(cfg.nrhs >= 1, "nrhs must be at least 1");
     let net = cfg.network.model();
     let mut rows = Vec::new();
     for name in &cfg.matrices {
@@ -176,12 +191,17 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
         // times are value-independent; the measured backends are not)
         let mut rng = crate::rng::SplitMix64::new(cfg.seed ^ 0xA5A5_5A5A);
         let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
-        // manufactured right-hand side for solver cells (eigen solvers
-        // use it as their starting vector)
+        // manufactured right-hand sides for solver cells, one distinct
+        // column per nrhs (eigen solvers use column 0 as their starting
+        // vector; column 0 is the pre-batching single rhs)
         let b = if cfg.solver.is_some() {
-            let x_true: Vec<f64> =
-                (0..a.n_rows).map(|i| ((i % 13) as f64) * 0.25 - 1.5).collect();
-            a.matvec(&x_true)
+            let mut panel = Vec::with_capacity(a.n_rows * cfg.nrhs);
+            for j in 0..cfg.nrhs {
+                let x_true: Vec<f64> =
+                    (0..a.n_rows).map(|i| ((i * (j + 1) % 13) as f64) * 0.25 - 1.5).collect();
+                panel.extend(a.matvec(&x_true));
+            }
+            panel
         } else {
             Vec::new()
         };
@@ -202,7 +222,19 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
                         // reports (the sim backend's times are cached,
                         // so the extra apply is inert there)
                         backend.apply(&x)?;
-                        let times = backend.apply(&x)?.times;
+                        let times = if cfg.nrhs > 1 {
+                            // one k-wide panel probe: every column is
+                            // the probe vector, the transport is the
+                            // packed k-slice exchange
+                            let mut xp = Vec::with_capacity(x.len() * cfg.nrhs);
+                            for _ in 0..cfg.nrhs {
+                                xp.extend_from_slice(&x);
+                            }
+                            let mut yp = vec![0.0; a.n_rows * cfg.nrhs];
+                            backend.apply_multi_into(&xp, &mut yp, cfg.nrhs)?
+                        } else {
+                            backend.apply(&x)?.times
+                        };
                         SweepRow {
                             matrix: name.clone(),
                             combo,
@@ -218,6 +250,50 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
                             comm_bytes: quality.comm_bytes,
                             format: cfg.decompose.format.name(),
                             stored_bytes,
+                            nrhs: cfg.nrhs,
+                            col_iterations: vec![1; cfg.nrhs],
+                            col_converged: vec![true; cfg.nrhs],
+                        }
+                    }
+                    Some(kind) if cfg.nrhs > 1 => {
+                        // batched solve: one shared panel PMVC per
+                        // iteration, per-column convergence
+                        backend.apply(&x)?;
+                        let mut op = DistributedOp::with_backend(backend);
+                        let report = match kind {
+                            SolverKind::Cg => crate::solver::BlockCg::new()
+                                .tol(cfg.solver_tol)
+                                .max_iters(cfg.solver_max_iters)
+                                .record_history(false)
+                                .solve_multi(&mut op, &b, cfg.nrhs)?,
+                            SolverKind::Jacobi => crate::solver::BatchedJacobi::from_matrix(&a)?
+                                .tol(cfg.solver_tol)
+                                .max_iters(cfg.solver_max_iters)
+                                .record_history(false)
+                                .solve_multi(&mut op, &b, cfg.nrhs)?,
+                            other => anyhow::bail!(
+                                "--nrhs {} needs a batched solver (cg|jacobi), got {other}",
+                                cfg.nrhs
+                            ),
+                        };
+                        SweepRow {
+                            matrix: name.clone(),
+                            combo,
+                            f,
+                            times: mean_times(&op.accumulated, op.applications),
+                            backend: cfg.backend.name(),
+                            overlap: cfg.overlap.name(),
+                            solver: report.solver,
+                            iterations: report.max_iterations(),
+                            converged: report.all_converged(),
+                            partitioner: quality.label(),
+                            cut: quality.cut,
+                            comm_bytes: quality.comm_bytes,
+                            format: cfg.decompose.format.name(),
+                            stored_bytes,
+                            nrhs: cfg.nrhs,
+                            col_iterations: report.columns.iter().map(|c| c.iterations).collect(),
+                            col_converged: report.columns.iter().map(|c| c.converged).collect(),
                         }
                     }
                     Some(kind) => {
@@ -246,6 +322,9 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
                             comm_bytes: quality.comm_bytes,
                             format: cfg.decompose.format.name(),
                             stored_bytes,
+                            nrhs: 1,
+                            col_iterations: vec![report.iterations],
+                            col_converged: vec![report.converged],
                         }
                     }
                 };
@@ -465,6 +544,72 @@ mod tests {
             assert_eq!(rows[0].solver, kind.name());
             assert!(rows[0].iterations > 0, "{kind}");
         }
+    }
+
+    #[test]
+    fn batched_sweep_reports_per_column_convergence() {
+        let cfg = ExperimentConfig {
+            matrices: vec!["spd".into()],
+            node_counts: vec![2],
+            combos: vec![Combination::NlHl],
+            cores_per_node: 2,
+            solver: Some(SolverKind::Cg),
+            nrhs: 3,
+            ..Default::default()
+        };
+        let rows = run_sweep(&cfg).unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.solver, "block-cg");
+        assert_eq!(r.nrhs, 3);
+        assert_eq!(r.col_iterations.len(), 3);
+        assert_eq!(r.col_converged.len(), 3);
+        assert!(r.converged, "every column must converge on the SPD system");
+        assert!(r.col_converged.iter().all(|&c| c));
+        assert_eq!(r.iterations, r.col_iterations.iter().copied().max().unwrap());
+        assert!(r.times.t_total() > 0.0);
+    }
+
+    #[test]
+    fn batched_probe_prices_the_panel() {
+        let cfg = ExperimentConfig {
+            matrices: vec!["t2dal".into()],
+            node_counts: vec![2],
+            combos: vec![Combination::NlHl],
+            cores_per_node: 2,
+            nrhs: 8,
+            ..Default::default()
+        };
+        let rows = run_sweep(&cfg).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].solver, "probe");
+        assert_eq!(rows[0].nrhs, 8);
+        assert_eq!(rows[0].col_iterations, vec![1; 8]);
+        assert!(rows[0].times.t_total() > 0.0);
+
+        // the packed panel must price cheaper than 8 independent probes
+        let single = ExperimentConfig { nrhs: 1, ..cfg };
+        let srows = run_sweep(&single).unwrap();
+        assert!(
+            rows[0].times.t_total() < 8.0 * srows[0].times.t_total(),
+            "panel {} vs 8 x single {}",
+            rows[0].times.t_total(),
+            srows[0].times.t_total()
+        );
+    }
+
+    #[test]
+    fn batched_sweep_rejects_unbatched_solvers() {
+        let cfg = ExperimentConfig {
+            matrices: vec!["spd".into()],
+            node_counts: vec![2],
+            combos: vec![Combination::NlHl],
+            cores_per_node: 2,
+            solver: Some(SolverKind::Power),
+            nrhs: 2,
+            ..Default::default()
+        };
+        assert!(run_sweep(&cfg).is_err());
     }
 
     #[test]

@@ -71,16 +71,23 @@ pub fn recap_table(rows: &[SweepRow], combos: &[Combination]) -> String {
 /// format axis: `format` is the cell's kernel storage
 /// ([`crate::sparse::FormatKind`]; `auto` selects per fragment) and
 /// `stored_bytes` the resident bytes of that storage summed over the
-/// cell's fragments.
+/// cell's fragments. The batched tail records the panel axis: `nrhs`
+/// is the cell's right-hand-side count and `col_iterations` /
+/// `col_converged` the per-column iteration counts and convergence
+/// flags, `;`-joined (single-column cells read `1,<iters>,<conv>`).
 pub fn to_csv(rows: &[SweepRow]) -> String {
     let mut out = String::from(
-        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,format,stored_bytes\n",
+        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,format,stored_bytes,nrhs,col_iterations,col_converged\n",
     );
     for r in rows {
         let t = &r.times;
+        let col_iters =
+            r.col_iterations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(";");
+        let col_conv =
+            r.col_converged.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(";");
         let _ = writeln!(
             out,
-            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{},{},{},{},{},{},{},{},{:.9},{},{}",
+            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{},{},{},{},{},{},{},{},{:.9},{},{},{},{},{}",
             r.matrix,
             r.combo.name(),
             r.f,
@@ -102,7 +109,10 @@ pub fn to_csv(rows: &[SweepRow]) -> String {
             r.overlap,
             t.t_overlap_saved,
             r.format,
-            r.stored_bytes
+            r.stored_bytes,
+            r.nrhs,
+            col_iters,
+            col_conv
         );
     }
     out
@@ -234,12 +244,13 @@ mod tests {
         let csv = to_csv(&rows());
         assert!(csv.starts_with("matrix,combo"));
         assert!(csv.lines().next().unwrap().ends_with(
-            ",backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,format,stored_bytes"
+            ",backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,format,stored_bytes,nrhs,col_iterations,col_converged"
         ));
         assert_eq!(csv.lines().count(), 1 + 2 * 4 * 1);
         for line in csv.lines().skip(1) {
             assert!(line.contains(",sim,probe,1,true,nezgt+hypergraph,"), "probe row: {line}");
             assert!(line.contains(",blocking,0.000000000,csr,"), "schedule+format: {line}");
+            assert!(line.ends_with(",1,1,true"), "single-rhs panel tail: {line}");
         }
     }
 
@@ -258,9 +269,36 @@ mod tests {
         let csv = to_csv(&rows);
         for line in csv.lines().skip(1) {
             assert!(line.contains(",auto,"), "format column: {line}");
-            let stored: usize = line.rsplit(',').next().unwrap().parse().unwrap();
+            // stored_bytes sits 3 fields before the end of the batched
+            // tail (nrhs,col_iterations,col_converged)
+            let stored: usize = line.rsplit(',').nth(3).unwrap().parse().unwrap();
             assert!(stored > 0, "stored_bytes column: {line}");
         }
+    }
+
+    #[test]
+    fn csv_carries_batched_columns() {
+        use crate::solver::SolverKind;
+        let cfg = ExperimentConfig {
+            matrices: vec!["spd".into()],
+            node_counts: vec![2],
+            combos: vec![Combination::NlHl],
+            cores_per_node: 2,
+            solver: Some(SolverKind::Cg),
+            nrhs: 3,
+            ..Default::default()
+        };
+        let rows = run_sweep(&cfg).unwrap();
+        let csv = to_csv(&rows);
+        let line = csv.lines().nth(1).unwrap();
+        assert!(line.contains(",block-cg,"), "batched solver column: {line}");
+        let mut tail = line.rsplit(',');
+        let col_conv = tail.next().unwrap();
+        let col_iters = tail.next().unwrap();
+        let nrhs: usize = tail.next().unwrap().parse().unwrap();
+        assert_eq!(nrhs, 3, "nrhs column: {line}");
+        assert_eq!(col_iters.split(';').count(), 3, "col_iterations: {line}");
+        assert!(col_conv.split(';').all(|c| c == "true"), "col_converged: {line}");
     }
 
     #[test]

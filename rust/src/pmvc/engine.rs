@@ -54,6 +54,14 @@ enum ToWorker {
     ApplyInterior { seq: u64, owned: Arc<Vec<f64>> },
     /// Overlapped phase 2: the halo values — finish the boundary rows.
     ApplyBoundary { seq: u64, halo: Arc<Vec<f64>> },
+    /// Blocking panel schedule: ONE message carrying `k` column-major
+    /// slices of the node's packed X (`x_len · k` values) — the packed
+    /// k-slice exchange, one envelope for the whole panel.
+    ApplyMulti { seq: u64, k: usize, node_x: Arc<Vec<f64>> },
+    /// Overlapped panel phase 1: `k` slices of the locally-owned X.
+    ApplyInteriorMulti { seq: u64, k: usize, owned: Arc<Vec<f64>> },
+    /// Overlapped panel phase 2: `k` slices of the halo.
+    ApplyBoundaryMulti { seq: u64, k: usize, halo: Arc<Vec<f64>> },
     Shutdown,
 }
 
@@ -418,6 +426,219 @@ impl PmvcEngine {
         })
     }
 
+    /// Execute the panel product `Y = A·X` over `k` column-major
+    /// right-hand sides (column `j` of `x` is `x[j·n .. (j+1)·n]`) in
+    /// ONE pass through the pool: each node receives a single packed
+    /// message carrying its `k` X slices (one envelope instead of `k`),
+    /// every core streams its fragment once for all columns, and each
+    /// column of the result is bitwise-identical to a separate
+    /// [`PmvcEngine::apply_into`] on that column — on both schedules.
+    pub fn apply_multi_into(
+        &mut self,
+        x: &[f64],
+        y: &mut [f64],
+        k: usize,
+    ) -> crate::Result<PhaseTimes> {
+        anyhow::ensure!(k > 0, "panel width k must be positive");
+        let n = self.d.n;
+        anyhow::ensure!(
+            x.len() == n * k,
+            "x panel length {} != order {n} × k {k}",
+            x.len()
+        );
+        anyhow::ensure!(
+            y.len() == n * k,
+            "y panel length {} != order {n} × k {k}",
+            y.len()
+        );
+        self.seq += 1;
+        let seq = self.seq;
+
+        // ---------- phase 1: packed k-slice scatter — per node ONE
+        // message whose payload is k column-major slices of the node's
+        // footprint (the α-amortization this path exists for).
+        let (t_pack, t_halo) = match self.mode {
+            OverlapMode::Blocking => {
+                let t0 = Instant::now();
+                let node_x: Vec<Arc<Vec<f64>>> = self
+                    .plan
+                    .nodes
+                    .iter()
+                    .map(|np| {
+                        let mut panel = Vec::with_capacity(np.x_cols.len() * k);
+                        for j in 0..k {
+                            panel.extend(np.x_cols.iter().map(|&g| x[j * n + g as usize]));
+                        }
+                        Arc::new(panel)
+                    })
+                    .collect();
+                for (idx, tx) in self.to_workers.iter().enumerate() {
+                    let node = idx / self.d.c;
+                    tx.send(ToWorker::ApplyMulti { seq, k, node_x: Arc::clone(&node_x[node]) })
+                        .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
+                }
+                (t0.elapsed().as_secs_f64(), 0.0)
+            }
+            OverlapMode::Overlapped => {
+                let t0 = Instant::now();
+                let owned: Vec<Arc<Vec<f64>>> = self
+                    .plan
+                    .nodes
+                    .iter()
+                    .map(|np| {
+                        let mut panel = Vec::with_capacity(np.owned_x.len() * k);
+                        for j in 0..k {
+                            panel.extend(
+                                np.owned_x
+                                    .iter()
+                                    .map(|&p| x[j * n + np.x_cols[p as usize] as usize]),
+                            );
+                        }
+                        Arc::new(panel)
+                    })
+                    .collect();
+                for (idx, tx) in self.to_workers.iter().enumerate() {
+                    let node = idx / self.d.c;
+                    tx.send(ToWorker::ApplyInteriorMulti {
+                        seq,
+                        k,
+                        owned: Arc::clone(&owned[node]),
+                    })
+                    .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
+                }
+                let t_owned = t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                let halo: Vec<Arc<Vec<f64>>> = self
+                    .plan
+                    .nodes
+                    .iter()
+                    .map(|np| {
+                        let mut panel = Vec::with_capacity(np.halo_x.len() * k);
+                        for j in 0..k {
+                            panel.extend(
+                                np.halo_x
+                                    .iter()
+                                    .map(|&p| x[j * n + np.x_cols[p as usize] as usize]),
+                            );
+                        }
+                        Arc::new(panel)
+                    })
+                    .collect();
+                for (idx, tx) in self.to_workers.iter().enumerate() {
+                    let node = idx / self.d.c;
+                    tx.send(ToWorker::ApplyBoundaryMulti {
+                        seq,
+                        k,
+                        halo: Arc::clone(&halo[node]),
+                    })
+                    .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
+                }
+                let t_halo = t1.elapsed().as_secs_f64();
+                (t_owned, t_halo)
+            }
+        };
+
+        // ---------- phase 2: drain completions (same protocol as the
+        // single-vector apply)
+        let (first_start, last_interior_end, first_boundary_start, last_end) =
+            self.drain_completions(seq)?;
+        let t_compute = match self.mode {
+            OverlapMode::Blocking => (last_end - first_start).max(0.0),
+            OverlapMode::Overlapped => {
+                (last_interior_end - first_start).max(0.0)
+                    + (last_end - first_boundary_start).max(0.0)
+            }
+        };
+        let (t_scatter, t_overlap_saved) = match self.mode {
+            OverlapMode::Blocking => (t_pack, 0.0),
+            OverlapMode::Overlapped => {
+                let interior_span = (last_interior_end - first_start).max(0.0);
+                let saved = t_halo.min(interior_span);
+                (t_pack + t_halo - saved, saved)
+            }
+        };
+
+        // ---------- phase 3: per-node Y panel construction
+        let mut t_construct: f64 = 0.0;
+        for node in 0..self.d.f {
+            let tn = Instant::now();
+            let np = &self.plan.nodes[node];
+            let y_len = np.y_rows.len();
+            let yk = &mut self.node_y[node];
+            yk.clear();
+            yk.resize(y_len * k, 0.0);
+            for core in 0..self.d.c {
+                let slot = lock_slot(&self.y_slots[node * self.d.c + core]);
+                let rows = np.core_y_maps[core].len();
+                for j in 0..k {
+                    for (lr, &p) in np.core_y_maps[core].iter().enumerate() {
+                        yk[j * y_len + p as usize] += slot[j * rows + lr];
+                    }
+                }
+            }
+            t_construct = t_construct.max(tn.elapsed().as_secs_f64());
+        }
+
+        // ---------- phases 4+5: gather + final panel assembly
+        let t4 = Instant::now();
+        y.fill(0.0);
+        for (node, np) in self.plan.nodes.iter().enumerate() {
+            let y_len = np.y_rows.len();
+            let yk = &self.node_y[node];
+            for j in 0..k {
+                for (i, &g) in np.y_rows.iter().enumerate() {
+                    y[j * n + g as usize] += yk[j * y_len + i];
+                }
+            }
+        }
+        let t_gather = t4.elapsed().as_secs_f64();
+
+        self.applies += 1;
+        Ok(PhaseTimes {
+            lb_nodes: self.plan.lb_nodes,
+            lb_cores: self.plan.lb_cores,
+            t_compute,
+            t_scatter,
+            t_gather,
+            t_construct,
+            t_overlap_saved,
+        })
+    }
+
+    /// Receive one completion notice per worker for sequence `seq`,
+    /// skipping stale notices from aborted applies. Returns
+    /// `(first_start, last_interior_end, first_boundary_start,
+    /// last_end)` over the reported spans.
+    fn drain_completions(&self, seq: u64) -> crate::Result<(f64, f64, f64, f64)> {
+        let mut first_start = f64::INFINITY;
+        let mut last_interior_end = 0f64;
+        let mut first_boundary_start = f64::INFINITY;
+        let mut last_end = 0f64;
+        let mut remaining = self.to_workers.len();
+        while remaining > 0 {
+            let done = self
+                .done_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("engine worker died mid-apply"))?;
+            if done.seq < seq {
+                continue;
+            }
+            anyhow::ensure!(
+                done.seq == seq,
+                "worker {} answered future sequence {} (expected {seq})",
+                done.idx,
+                done.seq
+            );
+            anyhow::ensure!(done.ok, "engine worker {} panicked during its PFVC", done.idx);
+            first_start = first_start.min(done.start);
+            last_interior_end = last_interior_end.max(done.interior_end);
+            first_boundary_start = first_boundary_start.min(done.boundary_start);
+            last_end = last_end.max(done.end);
+            remaining -= 1;
+        }
+        Ok((first_start, last_interior_end, first_boundary_start, last_end))
+    }
+
     /// The frozen communication plan this engine executes against.
     pub fn plan(&self) -> &Arc<CommPlan> {
         &self.plan
@@ -517,6 +738,122 @@ fn worker_loop(ctx: WorkerCtx) {
                 let failed = !notice.ok;
                 if ctx.done.send(notice).is_err() || failed {
                     return; // engine dropped mid-apply, or this worker is unsound
+                }
+            }
+            ToWorker::ApplyMulti { seq, k, node_x } => {
+                let x_len = ctx.x_len;
+                let span = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let start = ctx.epoch.elapsed().as_secs_f64();
+                    // fragment-local X panel, column-major: slice j of
+                    // the node panel gathered through the core's map
+                    x_local.clear();
+                    for j in 0..k {
+                        x_local
+                            .extend(ctx.x_map.iter().map(|&p| node_x[j * x_len + p as usize]));
+                    }
+                    {
+                        let mut y = lock_slot(&ctx.y_slot);
+                        spmv::pfvc_multi(frag, &x_local, &mut y, k);
+                    }
+                    (start, ctx.epoch.elapsed().as_secs_f64())
+                }));
+                let notice = match span {
+                    Ok((start, end)) => WorkerDone {
+                        idx: ctx.idx,
+                        seq,
+                        start,
+                        interior_end: end,
+                        boundary_start: start,
+                        end,
+                        ok: true,
+                    },
+                    Err(_) => WorkerDone::failure(ctx.idx, seq),
+                };
+                let failed = !notice.ok;
+                if ctx.done.send(notice).is_err() || failed {
+                    return;
+                }
+            }
+            ToWorker::ApplyInteriorMulti { seq, k, owned } => {
+                let x_len = ctx.x_len;
+                let owned_len = ctx.owned_x.len();
+                let span = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let start = ctx.epoch.elapsed().as_secs_f64();
+                    if x_node.len() != x_len * k {
+                        x_node.resize(x_len * k, 0.0);
+                    }
+                    for j in 0..k {
+                        for (i, &p) in ctx.owned_x.iter().enumerate() {
+                            x_node[j * x_len + p as usize] = owned[j * owned_len + i];
+                        }
+                    }
+                    {
+                        let mut y = lock_slot(&ctx.y_slot);
+                        y.resize(frag.csr.n_rows * k, 0.0);
+                        spmv::pfvc_rows_multi(
+                            frag,
+                            &ctx.interior_rows,
+                            &ctx.x_map,
+                            &x_node,
+                            &mut y,
+                            k,
+                        );
+                    }
+                    (start, ctx.epoch.elapsed().as_secs_f64())
+                }));
+                match span {
+                    Ok((start, interior_end)) => pending = Some((seq, start, interior_end)),
+                    Err(_) => {
+                        let _ = ctx.done.send(WorkerDone::failure(ctx.idx, seq));
+                        return;
+                    }
+                }
+            }
+            ToWorker::ApplyBoundaryMulti { seq, k, halo } => {
+                let (started, interior_end) = match pending.take() {
+                    Some((s, start, interior_end)) if s == seq => (start, interior_end),
+                    _ => {
+                        let _ = ctx.done.send(WorkerDone::failure(ctx.idx, seq));
+                        continue;
+                    }
+                };
+                let x_len = ctx.x_len;
+                let halo_len = ctx.halo_x.len();
+                let span = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let boundary_start = ctx.epoch.elapsed().as_secs_f64();
+                    for j in 0..k {
+                        for (i, &p) in ctx.halo_x.iter().enumerate() {
+                            x_node[j * x_len + p as usize] = halo[j * halo_len + i];
+                        }
+                    }
+                    {
+                        let mut y = lock_slot(&ctx.y_slot);
+                        spmv::pfvc_rows_multi(
+                            frag,
+                            &ctx.boundary_rows,
+                            &ctx.x_map,
+                            &x_node,
+                            &mut y,
+                            k,
+                        );
+                    }
+                    (boundary_start, ctx.epoch.elapsed().as_secs_f64())
+                }));
+                let notice = match span {
+                    Ok((boundary_start, end)) => WorkerDone {
+                        idx: ctx.idx,
+                        seq,
+                        start: started,
+                        interior_end,
+                        boundary_start,
+                        end,
+                        ok: true,
+                    },
+                    Err(_) => WorkerDone::failure(ctx.idx, seq),
+                };
+                let failed = !notice.ok;
+                if ctx.done.send(notice).is_err() || failed {
+                    return;
                 }
             }
             ToWorker::ApplyInterior { seq, owned } => {
@@ -667,6 +1004,57 @@ mod tests {
             engine.set_overlap_mode(OverlapMode::Overlapped);
             let yo = engine.apply(&x).unwrap().y;
             assert_eq!(yb, yo, "{kind}: schedules must agree bitwise");
+        }
+    }
+
+    #[test]
+    fn panel_apply_columns_are_bitwise_single_vector_applies() {
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 23).to_csr();
+        let n = a.n_cols;
+        let mut rng = crate::rng::SplitMix64::new(31);
+        for combo in [Combination::NlHl, Combination::NcHc] {
+            let d = decompose(&a, combo, 2, 3, &DecomposeConfig::default()).unwrap();
+            let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+            for k in [1usize, 3, 8] {
+                let x: Vec<f64> =
+                    (0..n * k).map(|_| rng.next_f64_range(-2.0, 2.0)).collect();
+                for mode in [OverlapMode::Blocking, OverlapMode::Overlapped] {
+                    engine.set_overlap_mode(mode);
+                    let mut y = vec![f64::NAN; n * k];
+                    let t = engine.apply_multi_into(&x, &mut y, k).unwrap();
+                    assert!(t.t_total() >= 0.0);
+                    for j in 0..k {
+                        let mut y_one = vec![0.0; n];
+                        engine.apply_into(&x[j * n..(j + 1) * n], &mut y_one).unwrap();
+                        assert_eq!(
+                            &y[j * n..(j + 1) * n],
+                            &y_one[..],
+                            "{combo} {mode:?} k={k} column {j}: must be bitwise"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_apply_rejects_bad_lengths_and_recovers() {
+        let a = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1).to_csr();
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
+        let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+        let n = a.n_cols;
+        let x = vec![1.0; n * 4];
+        let mut y = vec![0.0; n * 4];
+        assert!(engine.apply_multi_into(&x, &mut y, 0).is_err());
+        assert!(engine.apply_multi_into(&x[..n], &mut y, 4).is_err());
+        assert!(engine.apply_multi_into(&x, &mut y[..n], 4).is_err());
+        // the pool survives rejected calls
+        assert!(engine.apply_multi_into(&x, &mut y, 4).is_ok());
+        let y_ref = a.matvec(&vec![1.0; n]);
+        for j in 0..4 {
+            for i in 0..n {
+                assert!((y[j * n + i] - y_ref[i]).abs() < 1e-12, "col {j} row {i}");
+            }
         }
     }
 

@@ -42,6 +42,17 @@ enum ToNode {
     /// Overlapped phase 2: the halo values — finish the boundary rows
     /// and reply.
     XHalo { iter: usize, values: Vec<f64> },
+    /// Blocking panel schedule: ONE packed message carrying `k`
+    /// column-major X_k slices (slice `j` at `values[j·x_len..]`) — the
+    /// k-slice halo-exchange format: one envelope, `x_bytes × k`
+    /// payload.
+    XMulti { iter: usize, k: usize, values: Vec<f64> },
+    /// Overlapped panel phase 1: `k` packed slices of the locally-owned
+    /// X values — start the interior rows on the whole panel.
+    XOwnedMulti { iter: usize, k: usize, values: Vec<f64> },
+    /// Overlapped panel phase 2: `k` packed halo slices — finish the
+    /// boundary rows and reply with the Y panel.
+    XHaloMulti { iter: usize, k: usize, values: Vec<f64> },
     Shutdown,
 }
 
@@ -51,7 +62,9 @@ struct FromNode {
     iter: usize,
     /// Global row ids of the node's Y footprint.
     rows: Vec<u32>,
-    /// Partial Y values aligned with `rows`.
+    /// Partial Y values aligned with `rows` — `rows.len()` entries for a
+    /// single-vector reply, `rows.len() × k` packed slices (slice `j` at
+    /// `values[j·rows.len()..]`) for a panel reply.
     values: Vec<f64>,
     /// Node-measured compute duration (PFVC makespan over its cores;
     /// interior + boundary under the overlapped schedule).
@@ -310,6 +323,119 @@ impl MpiCluster {
         Ok((y, times))
     }
 
+    /// One distributed panel product `Y = A·X` over `k` column-major
+    /// right-hand sides (`x[j·n..(j+1)·n]` is column `j`), through ONE
+    /// packed k-slice message per node per wave — the α-amortized
+    /// transport the analytic model prices. Column `j` of the result is
+    /// bitwise identical to `matvec` on column `j` alone: the ranks run
+    /// the same per-row accumulation order per slice and the leader
+    /// folds replies in the same node order.
+    pub fn matvec_multi(&mut self, x: &[f64], k: usize) -> crate::Result<(Vec<f64>, MpiIterTimes)> {
+        anyhow::ensure!(k > 0, "panel width k must be positive");
+        anyhow::ensure!(
+            x.len() == self.n * k,
+            "x panel length {} != matrix order {} × k {k}",
+            x.len(),
+            self.n
+        );
+        self.iter += 1;
+        let iter = self.iter;
+        let n = self.n;
+        let t0 = Instant::now();
+        let mut times = MpiIterTimes::default();
+        let mut t_halo_wave = 0.0f64;
+        match self.mode {
+            OverlapMode::Blocking => {
+                // fan-out: ONE message per node carrying k packed slices
+                for (node, tx) in self.senders.iter().enumerate() {
+                    let cols = &self.node_x_cols[node];
+                    let mut values = Vec::with_capacity(cols.len() * k);
+                    for j in 0..k {
+                        values.extend(cols.iter().map(|&g| x[j * n + g as usize]));
+                    }
+                    tx.send(ToNode::XMulti { iter, k, values })
+                        .map_err(|_| anyhow::anyhow!("node rank {node} is down"))?;
+                }
+            }
+            OverlapMode::Overlapped => {
+                // wave 1: k owned slices in one message — interior rows
+                // of the whole panel start on arrival
+                for (node, tx) in self.senders.iter().enumerate() {
+                    let cols = &self.node_x_cols[node];
+                    let owned = &self.node_owned[node];
+                    let mut values = Vec::with_capacity(owned.len() * k);
+                    for j in 0..k {
+                        values.extend(owned.iter().map(|&p| x[j * n + cols[p as usize] as usize]));
+                    }
+                    tx.send(ToNode::XOwnedMulti { iter, k, values })
+                        .map_err(|_| anyhow::anyhow!("node rank {node} is down"))?;
+                }
+                // wave 2: k halo slices in one message, packed and
+                // posted while the interior panel computes
+                let t1 = Instant::now();
+                for (node, tx) in self.senders.iter().enumerate() {
+                    let cols = &self.node_x_cols[node];
+                    let halo = &self.node_halo[node];
+                    let mut values = Vec::with_capacity(halo.len() * k);
+                    for j in 0..k {
+                        values.extend(halo.iter().map(|&p| x[j * n + cols[p as usize] as usize]));
+                    }
+                    tx.send(ToNode::XHaloMulti { iter, k, values })
+                        .map_err(|_| anyhow::anyhow!("node rank {node} is down"))?;
+                }
+                t_halo_wave = t1.elapsed().as_secs_f64();
+            }
+        }
+        // fan-in: same stale-tolerant drain as `matvec`, folded in node
+        // order per slice for deterministic assembly
+        let mut received: Vec<Option<FromNode>> = (0..self.f).map(|_| None).collect();
+        let mut remaining = self.f;
+        while remaining > 0 {
+            let r = self
+                .replies
+                .recv()
+                .map_err(|_| anyhow::anyhow!("reply channel closed: all node ranks are down"))?;
+            if r.iter < iter {
+                continue; // stale reply from an aborted iteration
+            }
+            anyhow::ensure!(
+                r.iter == iter,
+                "future iteration {} from node {} (expected {iter})",
+                r.iter,
+                r.node
+            );
+            anyhow::ensure!(r.ok, "node rank {} failed mid-iteration", r.node);
+            anyhow::ensure!(
+                received[r.node].replace(r).is_none(),
+                "duplicate reply for iteration {iter}"
+            );
+            remaining -= 1;
+        }
+        let mut y = vec![0.0; n * k];
+        let mut interior_max = 0.0f64;
+        for r in received.iter().flatten() {
+            let rows_len = r.rows.len();
+            anyhow::ensure!(
+                r.values.len() == rows_len * k,
+                "node {} panel reply carries {} values, expected {} rows × k {k}",
+                r.node,
+                r.values.len(),
+                rows_len
+            );
+            for j in 0..k {
+                for (i, &g) in r.rows.iter().enumerate() {
+                    y[j * n + g as usize] += r.values[j * rows_len + i];
+                }
+            }
+            times.t_compute_max = times.t_compute_max.max(r.compute_s);
+            times.t_construct_max = times.t_construct_max.max(r.construct_s);
+            interior_max = interior_max.max(r.interior_s);
+        }
+        times.t_overlap_saved = t_halo_wave.min(interior_max);
+        times.t_wall = t0.elapsed().as_secs_f64();
+        Ok((y, times))
+    }
+
     /// Fault injection for tests and chaos drills: shut one rank down
     /// and join it, so the next [`MpiCluster::matvec`] deterministically
     /// observes the dead rank and reports `Err`.
@@ -444,6 +570,128 @@ fn node_rank(ctx: NodeCtx, rx: Receiver<ToNode>, reply: Sender<FromNode>) {
                     return; // leader gone
                 }
             }
+            ToNode::XMulti { iter, k, values } => {
+                let tc = Instant::now();
+                let x_len = ctx.x_len;
+                let scope_ok = crossbeam_utils::thread::scope(|scope| {
+                    for ((frag, map), slot) in
+                        ctx.fragments.iter().zip(&ctx.core_maps).zip(y_locals.iter_mut())
+                    {
+                        let x_k = &values;
+                        scope.spawn(move |_| {
+                            let mut x_local: Vec<f64> = Vec::with_capacity(map.len() * k);
+                            for j in 0..k {
+                                x_local.extend(map.iter().map(|&p| x_k[j * x_len + p as usize]));
+                            }
+                            let mut y_local = std::mem::take(slot);
+                            spmv::pfvc_multi(frag, &x_local, &mut y_local, k);
+                            *slot = y_local;
+                        });
+                    }
+                })
+                .is_ok();
+                if !scope_ok {
+                    let _ = reply.send(FromNode::failure(ctx.node, iter));
+                    return;
+                }
+                let compute_s = tc.elapsed().as_secs_f64();
+                if construct_and_reply_multi(&ctx, &y_locals, iter, k, compute_s, 0.0, &reply)
+                    .is_err()
+                {
+                    return; // leader gone
+                }
+            }
+            ToNode::XOwnedMulti { iter, k, values } => {
+                let tc = Instant::now();
+                let x_len = ctx.x_len;
+                if x_node.len() != x_len * k {
+                    x_node.resize(x_len * k, 0.0);
+                }
+                let owned_len = ctx.owned.len();
+                if owned_len > 0 {
+                    for (j, slice) in values.chunks(owned_len).take(k).enumerate() {
+                        for (&p, &v) in ctx.owned.iter().zip(slice) {
+                            x_node[j * x_len + p as usize] = v;
+                        }
+                    }
+                }
+                let scope_ok = crossbeam_utils::thread::scope(|scope| {
+                    for (((frag, map), rows), slot) in ctx
+                        .fragments
+                        .iter()
+                        .zip(&ctx.core_maps)
+                        .zip(&ctx.core_interior)
+                        .zip(y_locals.iter_mut())
+                    {
+                        let xn = &x_node;
+                        scope.spawn(move |_| {
+                            // size-only resize, as in the single-vector
+                            // arm: interior ∪ boundary assign every
+                            // panel element each iteration
+                            slot.resize(frag.csr.n_rows * k, 0.0);
+                            spmv::pfvc_rows_multi(frag, rows, map, xn, slot, k);
+                        });
+                    }
+                })
+                .is_ok();
+                if !scope_ok {
+                    let _ = reply.send(FromNode::failure(ctx.node, iter));
+                    return;
+                }
+                pending = Some((iter, tc.elapsed().as_secs_f64()));
+            }
+            ToNode::XHaloMulti { iter, k, values } => {
+                let interior_s = match pending.take() {
+                    Some((i, s)) if i == iter => s,
+                    _ => {
+                        let _ = reply.send(FromNode::failure(ctx.node, iter));
+                        continue;
+                    }
+                };
+                let tc = Instant::now();
+                let x_len = ctx.x_len;
+                if x_node.len() != x_len * k {
+                    // unreachable from a well-behaved leader (the owned
+                    // wave sized it); guard so a malformed wave cannot
+                    // panic the rank and wedge the leader
+                    x_node.resize(x_len * k, 0.0);
+                }
+                let halo_len = ctx.halo.len();
+                if halo_len > 0 {
+                    for (j, slice) in values.chunks(halo_len).take(k).enumerate() {
+                        for (&p, &v) in ctx.halo.iter().zip(slice) {
+                            x_node[j * x_len + p as usize] = v;
+                        }
+                    }
+                }
+                let scope_ok = crossbeam_utils::thread::scope(|scope| {
+                    for (((frag, map), rows), slot) in ctx
+                        .fragments
+                        .iter()
+                        .zip(&ctx.core_maps)
+                        .zip(&ctx.core_boundary)
+                        .zip(y_locals.iter_mut())
+                    {
+                        let xn = &x_node;
+                        scope.spawn(move |_| {
+                            slot.resize(frag.csr.n_rows * k, 0.0);
+                            spmv::pfvc_rows_multi(frag, rows, map, xn, slot, k);
+                        });
+                    }
+                })
+                .is_ok();
+                if !scope_ok {
+                    let _ = reply.send(FromNode::failure(ctx.node, iter));
+                    return;
+                }
+                let compute_s = interior_s + tc.elapsed().as_secs_f64();
+                let sent = construct_and_reply_multi(
+                    &ctx, &y_locals, iter, k, compute_s, interior_s, &reply,
+                );
+                if sent.is_err() {
+                    return; // leader gone
+                }
+            }
         }
     }
 }
@@ -463,6 +711,46 @@ fn construct_and_reply(
     for (ymap, y_local) in ctx.core_ymaps.iter().zip(y_locals) {
         for (i, &p) in ymap.iter().enumerate() {
             yk[p as usize] += y_local[i];
+        }
+    }
+    let construct_s = tk.elapsed().as_secs_f64();
+    reply
+        .send(FromNode {
+            node: ctx.node,
+            iter,
+            rows: ctx.yrows.clone(),
+            values: yk,
+            compute_s,
+            interior_s,
+            construct_s,
+            ok: true,
+        })
+        .map_err(|_| ())
+}
+
+/// Rank-side tail of one panel iteration: accumulate the per-core Y
+/// panels slice by slice (same per-slice order as the single-vector
+/// construction, so each column stays bitwise) and send the packed
+/// reply. `Err` means the leader dropped the channel.
+fn construct_and_reply_multi(
+    ctx: &NodeCtx,
+    y_locals: &[Vec<f64>],
+    iter: usize,
+    k: usize,
+    compute_s: f64,
+    interior_s: f64,
+    reply: &Sender<FromNode>,
+) -> Result<(), ()> {
+    let tk = Instant::now();
+    let rows_len = ctx.yrows.len();
+    let mut yk = vec![0.0; rows_len * k];
+    for (ymap, y_local) in ctx.core_ymaps.iter().zip(y_locals) {
+        // the core's panel is column-major with stride = its row count
+        let nr = ymap.len();
+        for j in 0..k {
+            for (i, &p) in ymap.iter().enumerate() {
+                yk[j * rows_len + p as usize] += y_local[j * nr + i];
+            }
         }
     }
     let construct_s = tk.elapsed().as_secs_f64();
@@ -562,6 +850,38 @@ mod tests {
             let (y2, t2) = cluster.matvec(&x).unwrap();
             assert_eq!(y, y2, "{combo}: schedules must agree bitwise");
             assert!(t2.t_overlap_saved >= 0.0);
+            cluster.shutdown();
+        }
+    }
+
+    #[test]
+    fn mpi_panel_columns_are_bitwise_single_vector_matvecs() {
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 6).to_csr();
+        let n = a.n_cols;
+        let k = 3usize;
+        let mut rng = SplitMix64::new(11);
+        let x: Vec<f64> = (0..n * k).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        for combo in Combination::all() {
+            let d = decompose(&a, combo, 3, 2, &DecomposeConfig::default()).unwrap();
+            let mut cluster = MpiCluster::launch(&d).unwrap();
+            let singles: Vec<Vec<f64>> =
+                (0..k).map(|j| cluster.matvec(&x[j * n..(j + 1) * n]).unwrap().0).collect();
+            for mode in [OverlapMode::Blocking, OverlapMode::Overlapped] {
+                cluster.set_overlap_mode(mode);
+                let (y, times) = cluster.matvec_multi(&x, k).unwrap();
+                assert_eq!(y.len(), n * k);
+                for (j, single) in singles.iter().enumerate() {
+                    assert_eq!(
+                        &y[j * n..(j + 1) * n],
+                        &single[..],
+                        "{combo} {mode:?} column {j}"
+                    );
+                }
+                assert!(times.t_wall > 0.0 && times.t_compute_max > 0.0);
+            }
+            // bad panel shapes are rejected before any send
+            assert!(cluster.matvec_multi(&x, 0).is_err());
+            assert!(cluster.matvec_multi(&x[..n], k).is_err());
             cluster.shutdown();
         }
     }

@@ -79,6 +79,29 @@ impl NodePlan {
     pub fn owned_bytes(&self) -> usize {
         self.owned_x.len() * BYTES_PER_ELEM
     }
+
+    /// Fan-out payload of the packed k-slice message: one message per
+    /// node carrying `k` column-major X slices, so the bytes scale ×k
+    /// while the envelope (α latency) is paid once.
+    pub fn x_bytes_multi(&self, k: usize) -> usize {
+        self.x_bytes() * k
+    }
+
+    /// Fan-in payload of the packed k-slice Y reply, in bytes.
+    pub fn y_bytes_multi(&self, k: usize) -> usize {
+        self.y_bytes() * k
+    }
+
+    /// Halo share of the packed k-slice fan-out (`halo_bytes × k`) —
+    /// the single message the overlapped schedule waits on per node.
+    pub fn halo_bytes_multi(&self, k: usize) -> usize {
+        self.halo_bytes() * k
+    }
+
+    /// Locally-owned share of the packed k-slice fan-out, in bytes.
+    pub fn owned_bytes_multi(&self, k: usize) -> usize {
+        self.owned_bytes() * k
+    }
 }
 
 /// The full communication plan: everything about `y = A·x` under a fixed
@@ -263,6 +286,23 @@ impl CommPlan {
         self.nodes.iter().map(|np| np.halo_bytes()).sum()
     }
 
+    /// Packed k-slice X fan-out volume over all nodes: each node gets
+    /// ONE message carrying `k` slices of its footprint, so the volume
+    /// is `scatter_x_bytes × k` while only `f` envelopes are paid.
+    pub fn scatter_x_bytes_multi(&self, k: usize) -> usize {
+        self.nodes.iter().map(|np| np.x_bytes_multi(k)).sum()
+    }
+
+    /// Packed k-slice Y fan-in volume over all nodes, in bytes.
+    pub fn gather_y_bytes_multi(&self, k: usize) -> usize {
+        self.nodes.iter().map(|np| np.y_bytes_multi(k)).sum()
+    }
+
+    /// Packed k-slice halo volume over all nodes, in bytes.
+    pub fn halo_x_bytes_multi(&self, k: usize) -> usize {
+        self.nodes.iter().map(|np| np.halo_bytes_multi(k)).sum()
+    }
+
     /// X footprint size of a node (`C_Xk`).
     pub fn node_x_footprint(&self, node: usize) -> usize {
         self.nodes[node].x_cols.len()
@@ -358,6 +398,24 @@ mod tests {
         assert_eq!(plan.scatter_a_bytes(), expect_a);
         assert!(plan.scatter_x_bytes() > 0 && plan.gather_y_bytes() > 0);
         assert_eq!(plan.stored_bytes(), d.stored_bytes());
+    }
+
+    #[test]
+    fn k_slice_accounting_scales_single_slice_volumes() {
+        let (plan, _) = plan_for(Combination::NlHc, 2, 3);
+        for k in [1usize, 4, 16] {
+            assert_eq!(plan.scatter_x_bytes_multi(k), plan.scatter_x_bytes() * k);
+            assert_eq!(plan.gather_y_bytes_multi(k), plan.gather_y_bytes() * k);
+            assert_eq!(plan.halo_x_bytes_multi(k), plan.halo_x_bytes() * k);
+            for np in &plan.nodes {
+                assert_eq!(np.x_bytes_multi(k), np.x_cols.len() * BYTES_PER_ELEM * k);
+                assert_eq!(np.halo_bytes_multi(k), np.halo_x.len() * BYTES_PER_ELEM * k);
+                assert_eq!(np.owned_bytes_multi(k), np.owned_x.len() * BYTES_PER_ELEM * k);
+                assert_eq!(np.y_bytes_multi(k), np.y_rows.len() * BYTES_PER_ELEM * k);
+                // the packed message is owned + halo slices exactly
+                assert_eq!(np.owned_bytes_multi(k) + np.halo_bytes_multi(k), np.x_bytes_multi(k));
+            }
+        }
     }
 
     #[test]

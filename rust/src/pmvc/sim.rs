@@ -222,9 +222,168 @@ pub fn simulate_with(
 /// `core_spmv_time` model, so CSR-format sweeps price identically to
 /// the pre-format-generic simulator.
 fn frag_compute_time(frag: &CoreFragment, topo: &ClusterTopology) -> f64 {
-    let bytes =
-        frag.storage.kernel_bytes(&frag.csr) + frag.csr.n_rows * 12 + frag.global_cols.len() * 8;
-    topo.core_stream_time(bytes as f64, frag.nnz())
+    frag_compute_time_multi(frag, topo, 1)
+}
+
+/// Panel roofline: the A-side stream is pulled ONCE for all `k` panel
+/// columns (the SpMM amortization), while the X/Y vector traffic and
+/// the flop count scale ×k. At `k = 1` this is exactly
+/// [`frag_compute_time`].
+fn frag_compute_time_multi(frag: &CoreFragment, topo: &ClusterTopology, k: usize) -> f64 {
+    let bytes = frag.storage.kernel_bytes(&frag.csr)
+        + (frag.csr.n_rows * 12 + frag.global_cols.len() * 8) * k;
+    topo.core_stream_time(bytes as f64, frag.nnz() * k)
+}
+
+/// Price one packed k-slice panel PMVC (`Y = A·X` over `k` column-major
+/// right-hand sides) under the selected schedule.
+///
+/// The transport model is the tentpole's α-amortization argument made
+/// priceable: per wave each node receives **one** packed message whose
+/// payload carries all `k` slices, so the wave is billed a single α
+/// (plus one per-message envelope per node) while the payload bytes
+/// scale ×k — `α + k·β·bytes` instead of `k·(α + β·bytes)`. Message
+/// sizes come from the frozen [`CommPlan`]'s k-slice accounting
+/// ([`super::plan::NodePlan::x_bytes_multi`] and friends), so the
+/// priced bytes can never drift from the plan's bookkeeping (asserted
+/// in this module's tests). A itself is shipped once regardless of `k`,
+/// and compute streams A once per apply
+/// ([`frag_compute_time_multi`]). At `k = 1` every phase prices
+/// identically to [`simulate_with`].
+pub fn simulate_multi_with(
+    d: &TwoLevelDecomposition,
+    topo: &ClusterTopology,
+    net: &NetworkModel,
+    mode: OverlapMode,
+    k: usize,
+) -> PhaseTimes {
+    assert!(k > 0, "panel width must be positive");
+    assert_eq!(d.c, topo.cores_per_node(), "decomposition cores != topology cores");
+
+    let pack_penalty = match (d.combo.inter_axis(), d.combo.intra_axis()) {
+        (Axis::Row, Axis::Row) => 1.0,
+        (Axis::Row, Axis::Col) => 1.6,
+        (Axis::Col, Axis::Row) => 4.0,
+        (Axis::Col, Axis::Col) => 6.0,
+    };
+
+    // ---------- compute: slowest core over the panel kernel (A
+    // streamed once, vectors ×k)
+    let mut t_compute = 0f64;
+    for frag in &d.fragments {
+        t_compute = t_compute.max(frag_compute_time_multi(frag, topo, k));
+    }
+
+    // the plan provides the packed per-message byte accounting for both
+    // schedules; an invalid decomposition falls back to footprint
+    // arithmetic on the blocking schedule (mirroring simulate_with)
+    let plan = CommPlan::build(d).ok();
+
+    // ---------- scatter: ONE packed message per node per wave
+    let scatter_bytes: Vec<usize> = (0..d.f)
+        .map(|node| {
+            let nnz_k: usize = (0..d.c).map(|c| d.fragment(node, c).nnz()).sum();
+            let x_slices = match &plan {
+                Some(p) => p.nodes[node].x_bytes_multi(k),
+                None => d.node_x_footprint(node) * super::plan::BYTES_PER_ELEM * k,
+            };
+            (nnz_k as f64 * BYTES_PER_NNZ) as usize + x_slices
+        })
+        .collect();
+    let total_scatter_bytes: usize = scatter_bytes.iter().sum();
+    let t_pack = total_scatter_bytes as f64 * pack_penalty / topo.core_bw;
+    let t_scatter_blocking = net.scatter(&scatter_bytes) + t_pack;
+
+    let (t_scatter, t_overlap_saved, t_compute) = match (mode, &plan) {
+        (OverlapMode::Blocking, _) | (OverlapMode::Overlapped, None) => {
+            (t_scatter_blocking, 0.0, t_compute)
+        }
+        (OverlapMode::Overlapped, Some(plan)) => {
+            let mut pre_bytes = Vec::with_capacity(d.f);
+            let mut halo_bytes = Vec::with_capacity(d.f);
+            let mut t_interior = 0f64;
+            let mut t_compute_ov = 0f64;
+            for (node, np) in plan.nodes.iter().enumerate() {
+                let nnz_k: usize = (0..d.c).map(|c| d.fragment(node, c).nnz()).sum();
+                // packed pre-wave: A (once) + k owned-X slices in one
+                // message; packed halo wave: k halo slices in one message
+                pre_bytes.push((nnz_k as f64 * BYTES_PER_NNZ) as usize + np.owned_bytes_multi(k));
+                halo_bytes.push(np.halo_bytes_multi(k));
+                let mut node_int = 0f64;
+                let mut node_bnd = 0f64;
+                for c in 0..d.c {
+                    let frag = d.fragment(node, c);
+                    let int_nnz: usize = np.core_interior_rows[c]
+                        .iter()
+                        .map(|&r| frag.csr.ptr[r as usize + 1] - frag.csr.ptr[r as usize])
+                        .sum();
+                    let int_rows = np.core_interior_rows[c].len();
+                    let bnd_nnz = frag.nnz() - int_nnz;
+                    let bnd_rows = frag.csr.n_rows - int_rows;
+                    let kb = frag.storage.kernel_bytes(&frag.csr);
+                    let x_elems = frag.global_cols.len();
+                    let (kb_int, x_int) = if frag.nnz() == 0 {
+                        (0, 0)
+                    } else {
+                        (kb * int_nnz / frag.nnz(), x_elems * int_nnz / frag.nnz())
+                    };
+                    let (kb_bnd, x_bnd) = (kb - kb_int, x_elems - x_int);
+                    node_int = node_int.max(topo.core_stream_time(
+                        (kb_int + (int_rows * 12 + x_int * 8) * k) as f64,
+                        int_nnz * k,
+                    ));
+                    node_bnd = node_bnd.max(topo.core_stream_time(
+                        (kb_bnd + (bnd_rows * 12 + x_bnd * 8) * k) as f64,
+                        bnd_nnz * k,
+                    ));
+                }
+                t_interior = t_interior.max(node_int);
+                t_compute_ov = t_compute_ov.max(node_int + node_bnd);
+            }
+            let pre_total: usize = pre_bytes.iter().sum();
+            let halo_total: usize = halo_bytes.iter().sum();
+            let t_pre = net.scatter(&pre_bytes) + pre_total as f64 * pack_penalty / topo.core_bw;
+            // the packed halo message rides the open channels: bandwidth
+            // + packing for k slices, still no fresh α — ONE billed
+            // transfer per node regardless of k
+            let t_halo = halo_total as f64 * net.inv_bandwidth
+                + halo_total as f64 * pack_penalty / topo.core_bw;
+            let saved = t_halo.min(t_interior);
+            (t_pre + (t_halo - saved), saved, t_compute_ov)
+        }
+    };
+
+    // ---------- node-local construction of the Y_k panel (×k work)
+    let mut t_construct = 0f64;
+    for node in 0..d.f {
+        let y_k = d.node_y_footprint(node);
+        let t = match d.combo.intra_axis() {
+            Axis::Row => (y_k * k) as f64 * 8.0 / topo.core_bw,
+            Axis::Col => topo.node_reduce_time(y_k * k, d.c),
+        };
+        t_construct = t_construct.max(t);
+    }
+
+    // ---------- gather: one packed k-slice reply per node
+    let gather_bytes: Vec<usize> = (0..d.f)
+        .map(|node| match &plan {
+            Some(p) => p.nodes[node].y_bytes_multi(k),
+            None => d.node_y_footprint(node) * super::plan::BYTES_PER_ELEM * k,
+        })
+        .collect();
+    let mut t_gather = net.gather(&gather_bytes);
+    let total_y: usize = (0..d.f).map(|node| d.node_y_footprint(node)).sum();
+    t_gather += (total_y * k) as f64 * 16.0 / topo.core_bw;
+
+    PhaseTimes {
+        lb_nodes: d.lb_nodes(),
+        lb_cores: d.lb_cores(),
+        t_compute,
+        t_scatter,
+        t_gather,
+        t_construct,
+        t_overlap_saved,
+    }
 }
 
 #[cfg(test)]
@@ -354,6 +513,95 @@ mod tests {
         // collection phases are schedule-independent
         assert_eq!(overlapped.t_gather, blocking.t_gather);
         assert_eq!(overlapped.t_construct, blocking.t_construct);
+    }
+
+    #[test]
+    fn panel_pricing_at_k1_is_the_single_vector_pricing() {
+        // the packed k-slice model must degenerate exactly — every
+        // phase, both schedules, all combinations
+        let a = generate(&MatrixSpec::paper("epb1").unwrap(), 1).to_csr();
+        let topo = ClusterTopology::paravance(4);
+        let net = NetworkPreset::TenGigabitEthernet.model();
+        for combo in Combination::all() {
+            let d =
+                decompose(&a, combo, 4, topo.cores_per_node(), &DecomposeConfig::default())
+                    .unwrap();
+            for mode in [OverlapMode::Blocking, OverlapMode::Overlapped] {
+                let single = simulate_with(&d, &topo, &net, mode);
+                let panel = simulate_multi_with(&d, &topo, &net, mode, 1);
+                assert_eq!(panel.t_compute, single.t_compute, "{combo} {mode:?}");
+                assert_eq!(panel.t_scatter, single.t_scatter, "{combo} {mode:?}");
+                assert_eq!(panel.t_gather, single.t_gather, "{combo} {mode:?}");
+                assert_eq!(panel.t_construct, single.t_construct, "{combo} {mode:?}");
+                assert_eq!(panel.t_overlap_saved, single.t_overlap_saved, "{combo} {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_message_bytes_agree_with_plan_accounting() {
+        // the satellite's no-drift guarantee: rebuild the per-node packed
+        // message sizes from the frozen plan's k-slice accounting and
+        // check the simulator prices exactly those bytes
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 1).to_csr();
+        let topo = ClusterTopology::paravance(4);
+        let net = NetworkPreset::TenGigabitEthernet.model();
+        let cfg = DecomposeConfig::default();
+        let d = decompose(&a, Combination::NlHl, 4, topo.cores_per_node(), &cfg).unwrap();
+        let plan = CommPlan::build(&d).unwrap();
+        for k in [1usize, 4, 16] {
+            // ONE packed message per node: A (once) + k X-slices
+            let scatter_bytes: Vec<usize> = (0..d.f)
+                .map(|node| {
+                    let nnz_k: usize = (0..d.c).map(|c| d.fragment(node, c).nnz()).sum();
+                    (nnz_k as f64 * BYTES_PER_NNZ) as usize + plan.nodes[node].x_bytes_multi(k)
+                })
+                .collect();
+            let total: usize = scatter_bytes.iter().sum();
+            let expect_scatter = net.scatter(&scatter_bytes) + total as f64 / topo.core_bw;
+            let t = simulate_multi_with(&d, &topo, &net, OverlapMode::Blocking, k);
+            assert_eq!(t.t_scatter, expect_scatter, "k={k}");
+            // ONE packed reply per node: k Y-slices
+            let gather_bytes: Vec<usize> =
+                (0..d.f).map(|node| plan.nodes[node].y_bytes_multi(k)).collect();
+            let total_y: usize = (0..d.f).map(|node| d.node_y_footprint(node)).sum();
+            let expect_gather =
+                net.gather(&gather_bytes) + (total_y * k) as f64 * 16.0 / topo.core_bw;
+            assert_eq!(t.t_gather, expect_gather, "k={k}");
+        }
+    }
+
+    #[test]
+    fn packed_panel_amortizes_latency_and_matrix_stream() {
+        // the tentpole's economics: k applies as one packed panel must be
+        // strictly cheaper than k single applies on BOTH the wire (one α
+        // per node, A shipped once) and the core (A streamed once)
+        let a = generate(&MatrixSpec::paper("epb1").unwrap(), 1).to_csr();
+        let topo = ClusterTopology::paravance(4);
+        let net = NetworkPreset::TenGigabitEthernet.model();
+        let cfg = DecomposeConfig::default();
+        let d = decompose(&a, Combination::NlHl, 4, topo.cores_per_node(), &cfg).unwrap();
+        let k = 16usize;
+        let single = simulate_with(&d, &topo, &net, OverlapMode::Blocking);
+        let panel = simulate_multi_with(&d, &topo, &net, OverlapMode::Blocking, k);
+        assert!(
+            panel.t_scatter < single.t_scatter * k as f64,
+            "{} !< {}",
+            panel.t_scatter,
+            single.t_scatter * k as f64
+        );
+        assert!(
+            panel.t_compute < single.t_compute * k as f64,
+            "{} !< {}",
+            panel.t_compute,
+            single.t_compute * k as f64
+        );
+        // per-slice compute cost must fall monotonically with k
+        let per_slice = |k: usize| {
+            simulate_multi_with(&d, &topo, &net, OverlapMode::Blocking, k).t_compute / k as f64
+        };
+        assert!(per_slice(4) < per_slice(1));
+        assert!(per_slice(16) < per_slice(4));
     }
 
     #[test]

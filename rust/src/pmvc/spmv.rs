@@ -88,6 +88,34 @@ pub fn pfvc_rows(
     frag.storage.mv_rows(&frag.csr, rows, x_map, x_node, y_local);
 }
 
+/// Panel PFVC: `Y_local = A_local · X_local` over a column-major panel
+/// of `k` local right-hand sides (column `j` of `x_local` is
+/// `x_local[j·n_cols .. (j+1)·n_cols]`). `y_local` is resized to
+/// `n_rows · k`. A is streamed once for all `k` columns; each column is
+/// bitwise-identical to a separate [`pfvc`] on that column.
+#[inline]
+pub fn pfvc_multi(frag: &CoreFragment, x_local: &[f64], y_local: &mut Vec<f64>, k: usize) {
+    y_local.resize(frag.csr.n_rows * k, 0.0);
+    frag.storage.mv_multi(&frag.csr, x_local, y_local, k);
+}
+
+/// Panel analogue of [`pfvc_rows`]: compute a subset of rows for all
+/// `k` columns, reading X indirectly through the node-footprint panel
+/// (`x_node` holds `k` column-major slices of the node's X footprint).
+/// `y_local` must already be sized to `n_rows · k`; rows outside `rows`
+/// stay untouched in every column.
+#[inline]
+pub fn pfvc_rows_multi(
+    frag: &CoreFragment,
+    rows: &[u32],
+    x_map: &[u32],
+    x_node: &[f64],
+    y_local: &mut [f64],
+    k: usize,
+) {
+    frag.storage.mv_rows_multi(&frag.csr, rows, x_map, x_node, y_local, k);
+}
+
 /// Scatter-accumulate a core's partial Y into a node/global vector:
 /// `y[global_rows[lr]] += y_local[lr]`.
 #[inline]
@@ -209,6 +237,78 @@ mod tests {
                     pfvc_rows(frag, &np.core_interior_rows[core], map, &x_node, &mut y_two);
                     pfvc_rows(frag, &np.core_boundary_rows[core], map, &x_node, &mut y_two);
                     assert_eq!(y_one, y_two, "{kind} node {node} core {core}: bitwise");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_pfvc_columns_are_bitwise_single_vector_pfvc() {
+        use crate::sparse::FormatKind;
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 9).to_csr();
+        let mut rng = crate::rng::SplitMix64::new(21);
+        let k = 4;
+        for kind in FormatKind::all() {
+            let cfg = DecomposeConfig::default().with_format(kind);
+            let d = decompose(&a, Combination::NlHl, 2, 2, &cfg).unwrap();
+            let plan = crate::pmvc::CommPlan::build(&d).unwrap();
+            let x: Vec<f64> =
+                (0..a.n_cols * k).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+            for node in 0..2 {
+                let np = &plan.nodes[node];
+                // node X panel: k column-major slices of the footprint
+                let mut x_node = Vec::with_capacity(np.x_cols.len() * k);
+                for j in 0..k {
+                    x_node.extend(np.x_cols.iter().map(|&g| x[j * a.n_cols + g as usize]));
+                }
+                for core in 0..2 {
+                    let frag = d.fragment(node, core);
+                    let nr = frag.csr.n_rows;
+                    // one-pass panel via local gather per column
+                    let mut x_local = Vec::with_capacity(frag.csr.n_cols * k);
+                    for j in 0..k {
+                        x_local.extend(
+                            frag.global_cols.iter().map(|&g| x[j * a.n_cols + g as usize]),
+                        );
+                    }
+                    let mut y_panel = Vec::new();
+                    pfvc_multi(frag, &x_local, &mut y_panel, k);
+                    // each column bitwise equals the single-vector pfvc
+                    for j in 0..k {
+                        let mut xl = Vec::new();
+                        let mut y_one = Vec::new();
+                        gather_x(
+                            frag,
+                            &x[j * a.n_cols..(j + 1) * a.n_cols],
+                            &mut xl,
+                        );
+                        pfvc(frag, &xl, &mut y_one);
+                        assert_eq!(
+                            &y_panel[j * nr..(j + 1) * nr],
+                            &y_one[..],
+                            "{kind} node {node} core {core} col {j}"
+                        );
+                    }
+                    // two-pass panel (interior then boundary) bitwise one-pass
+                    let map = &np.core_x_maps[core];
+                    let mut y_two = vec![0.0; nr * k];
+                    pfvc_rows_multi(
+                        frag,
+                        &np.core_interior_rows[core],
+                        map,
+                        &x_node,
+                        &mut y_two,
+                        k,
+                    );
+                    pfvc_rows_multi(
+                        frag,
+                        &np.core_boundary_rows[core],
+                        map,
+                        &x_node,
+                        &mut y_two,
+                        k,
+                    );
+                    assert_eq!(y_panel, y_two, "{kind} node {node} core {core}: bitwise");
                 }
             }
         }

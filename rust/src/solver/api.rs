@@ -224,6 +224,93 @@ pub trait IterativeSolver {
     fn solve(&mut self, a: &mut dyn MatVecOp, b: &[f64]) -> Result<SolveReport, SolverError>;
 }
 
+/// Anything that can apply `Y = A·X` over a **column-major panel** of
+/// `k` vectors in one pass (block iterative methods repeat the same
+/// kernel over several right-hand sides; batching them lets the matrix
+/// be streamed once per iteration instead of once per vector).
+///
+/// Column `j` of a panel is the slice `v[j*n .. (j+1)*n]`. The contract
+/// extends [`MatVecOp`]: every implementor must keep each panel column
+/// bitwise identical to a single-vector [`MatVecOp::apply_into`] of
+/// that column, so `k = 1` batched solves reproduce the single-vector
+/// solves exactly.
+pub trait MultiVecOp: MatVecOp {
+    /// `Y = A·X` over column-major panels `x`, `y` of `k` columns each
+    /// (`x.len() == y.len() == order() * k`).
+    ///
+    /// The default implementation loops columns through
+    /// [`MatVecOp::apply_into`]; panel-aware operators (the distributed
+    /// op) override it to drive one packed k-slice exchange per
+    /// neighbor instead of `k` single-vector rounds.
+    fn apply_multi_into(&mut self, x: &[f64], y: &mut [f64], k: usize) -> crate::Result<()> {
+        let n = self.order();
+        anyhow::ensure!(k > 0, "panel width k must be positive");
+        anyhow::ensure!(x.len() == n * k, "panel x length {} != n*k = {}", x.len(), n * k);
+        anyhow::ensure!(y.len() == n * k, "panel y length {} != n*k = {}", y.len(), n * k);
+        for j in 0..k {
+            self.apply_into(&x[j * n..(j + 1) * n], &mut y[j * n..(j + 1) * n])?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-column outcome of a batched multi-RHS solve (one entry per panel
+/// column of a [`MultiSolveReport`]).
+#[derive(Clone, Debug)]
+pub struct ColumnReport {
+    /// Iterations this column ran before converging (or freezing).
+    pub iterations: usize,
+    /// Final residual norm of this column.
+    pub residual_norm: f64,
+    /// Whether this column met the stopping criterion.
+    pub converged: bool,
+    /// Residual after every iteration of this column (empty unless
+    /// [`SolveOptions::record_history`]).
+    pub history: Vec<f64>,
+}
+
+/// The result of a batched solve over a column-major panel of `k`
+/// right-hand sides: one shared panel trajectory, per-column
+/// convergence.
+#[derive(Clone, Debug)]
+pub struct MultiSolveReport {
+    /// Which solver produced this report (`block-cg` |
+    /// `batched-jacobi`).
+    pub solver: &'static str,
+    /// Panel width (number of right-hand sides).
+    pub k: usize,
+    /// Solution panel, column-major: column `j` is `x[j*n..(j+1)*n]`.
+    pub x: Vec<f64>,
+    /// Per-column convergence outcomes (`k` entries).
+    pub columns: Vec<ColumnReport>,
+    /// Wall time of the whole batched solve, seconds.
+    pub wall_time: f64,
+    /// Panel applications (shared PMVC rounds) driven by the solve.
+    pub panel_applies: usize,
+    /// The operator's accumulated phase breakdown over this solve —
+    /// `Some` whenever the operator self-reports.
+    pub phases: Option<PhaseTimes>,
+}
+
+impl MultiSolveReport {
+    /// Column `j` of the solution panel.
+    pub fn column_x(&self, j: usize) -> &[f64] {
+        let n = self.x.len() / self.k;
+        &self.x[j * n..(j + 1) * n]
+    }
+
+    /// Whether every column met the stopping criterion.
+    pub fn all_converged(&self) -> bool {
+        self.columns.iter().all(|c| c.converged)
+    }
+
+    /// The slowest column's iteration count — the number of shared
+    /// panel iterations the batch actually paid for.
+    pub fn max_iterations(&self) -> usize {
+        self.columns.iter().map(|c| c.iterations).max().unwrap_or(0)
+    }
+}
+
 /// Generate the shared builder methods on a solver struct holding its
 /// [`SolveOptions`] in a field named `opts`.
 macro_rules! impl_solver_builder {

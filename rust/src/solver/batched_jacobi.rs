@@ -1,0 +1,286 @@
+//! Batched Jacobi iteration: `k` independent diagonal-relaxation
+//! recurrences sharing one panel PMVC per iteration.
+//!
+//! Jacobi's update for column `j` touches only column `j`
+//! (`x' = x + D⁻¹ (b − A x)`), so batching is exact: the shared panel
+//! apply streams A once for all `k` columns and each column's update is
+//! performed in the single-vector order. Columns that converge freeze —
+//! their iterate stops changing — while the panel keeps iterating the
+//! rest, so per-column iterates, residual histories and iteration
+//! counts are bitwise identical to standalone [`super::Jacobi`] solves.
+
+use super::api::{
+    impl_solver_builder, phase_delta, ColumnReport, MultiSolveReport, MultiVecOp, SolveOptions,
+    SolverError,
+};
+use super::norm2;
+use crate::sparse::Csr;
+use std::time::Instant;
+
+/// Jacobi iteration over a column-major panel of right-hand sides,
+/// behind the shared [`SolveOptions`] builder. Like [`super::Jacobi`],
+/// the method needs the diagonal of A up front — extracted from a CSR
+/// matrix ([`BatchedJacobi::from_matrix`]) or supplied directly
+/// ([`BatchedJacobi::with_diagonal`]) — and validates it as a typed
+/// error.
+#[derive(Debug)]
+pub struct BatchedJacobi {
+    opts: SolveOptions,
+    diag: Vec<f64>,
+}
+
+impl BatchedJacobi {
+    /// Build from an explicit diagonal (all entries must be nonzero).
+    pub fn with_diagonal(diag: Vec<f64>) -> Result<BatchedJacobi, SolverError> {
+        if let Some(row) = diag.iter().position(|&d| d == 0.0) {
+            return Err(SolverError::ZeroDiagonal { row });
+        }
+        Ok(BatchedJacobi { opts: SolveOptions::default(), diag })
+    }
+
+    /// Build by extracting the diagonal of `a` (see [`Csr::diagonal`]).
+    pub fn from_matrix(a: &Csr) -> Result<BatchedJacobi, SolverError> {
+        BatchedJacobi::with_diagonal(a.diagonal())
+    }
+}
+
+impl_solver_builder!(BatchedJacobi);
+
+impl BatchedJacobi {
+    /// Solve `A·X = B` over a column-major panel of `k` right-hand
+    /// sides (`b.len() == order() * k`), one shared panel apply per
+    /// iteration. The observer, when set, is called once per panel
+    /// iteration with the worst residual among the columns still
+    /// iterating.
+    pub fn solve_multi(
+        &mut self,
+        a: &mut dyn MultiVecOp,
+        b: &[f64],
+        k: usize,
+    ) -> Result<MultiSolveReport, SolverError> {
+        let n = a.order();
+        if k == 0 {
+            return Err(SolverError::DimensionMismatch {
+                what: "panel width k",
+                expected: 1,
+                got: 0,
+            });
+        }
+        if b.len() != n * k {
+            return Err(SolverError::DimensionMismatch {
+                what: "rhs panel b",
+                expected: n * k,
+                got: b.len(),
+            });
+        }
+        if self.diag.len() != n {
+            return Err(SolverError::DimensionMismatch {
+                what: "diagonal",
+                expected: n,
+                got: self.diag.len(),
+            });
+        }
+        let t0 = Instant::now();
+        let phases0 = a.phase_times();
+
+        let mut x = vec![0.0; n * k];
+        let mut ax = vec![0.0; n * k]; // panel scratch, reused every iteration
+        let mut threshold = vec![0.0; k];
+        let mut residual = vec![f64::INFINITY; k];
+        let mut converged = vec![false; k];
+        let mut active = vec![true; k];
+        let mut iterations = vec![0usize; k];
+        let mut histories: Vec<Vec<f64>> = vec![Vec::new(); k];
+        let mut panel_applies = 0usize;
+
+        for j in 0..k {
+            threshold[j] = self.opts.threshold(norm2(&b[j * n..(j + 1) * n]));
+        }
+
+        for it in 0..self.opts.max_iters {
+            if !active.iter().any(|&live| live) {
+                break;
+            }
+            a.apply_multi_into(&x, &mut ax, k).map_err(SolverError::Backend)?;
+            panel_applies += 1;
+            let mut worst = 0.0f64;
+            for j in 0..k {
+                if !active[j] {
+                    continue;
+                }
+                let lo = j * n;
+                // residual r = b - A x ; x' = x + D⁻¹ r
+                let mut r2 = 0.0;
+                for i in 0..n {
+                    let r = b[lo + i] - ax[lo + i];
+                    r2 += r * r;
+                    x[lo + i] += r / self.diag[i];
+                }
+                residual[j] = r2.sqrt();
+                iterations[j] = it + 1;
+                if self.opts.record_history {
+                    histories[j].push(residual[j]);
+                }
+                worst = worst.max(residual[j]);
+                if residual[j] <= threshold[j] {
+                    converged[j] = true;
+                    active[j] = false;
+                }
+            }
+            if let Some(obs) = self.opts.observer.as_mut() {
+                obs(it + 1, worst);
+            }
+        }
+        if (0..k).any(|j| !converged[j] && iterations[j] > 0) {
+            // the loop's last residual for a non-converged column
+            // predates its final update — recompute it so
+            // residual_norm describes the returned column
+            a.apply_multi_into(&x, &mut ax, k).map_err(SolverError::Backend)?;
+            panel_applies += 1;
+            for j in 0..k {
+                if converged[j] || iterations[j] == 0 {
+                    continue;
+                }
+                let lo = j * n;
+                let mut r2 = 0.0;
+                for i in 0..n {
+                    let r = b[lo + i] - ax[lo + i];
+                    r2 += r * r;
+                }
+                residual[j] = r2.sqrt();
+            }
+        }
+
+        let columns = (0..k)
+            .map(|j| ColumnReport {
+                iterations: iterations[j],
+                residual_norm: residual[j],
+                converged: converged[j],
+                history: std::mem::take(&mut histories[j]),
+            })
+            .collect();
+        Ok(MultiSolveReport {
+            solver: "batched-jacobi",
+            k,
+            x,
+            columns,
+            wall_time: t0.elapsed().as_secs_f64(),
+            panel_applies,
+            phases: phase_delta(phases0, a.phase_times()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::combined::{decompose, Combination, DecomposeConfig};
+    use crate::solver::{DistributedOp, Jacobi};
+    use crate::sparse::gen;
+
+    fn panel_rhs(a: &Csr, k: usize) -> Vec<f64> {
+        let n = a.n_rows;
+        let mut b = Vec::with_capacity(n * k);
+        for j in 0..k {
+            let xj: Vec<f64> = (0..n).map(|i| ((i * (j + 3) % 9) as f64) * 0.3 - 1.0).collect();
+            b.extend(a.matvec(&xj));
+        }
+        b
+    }
+
+    #[test]
+    fn batched_columns_are_bitwise_per_column_jacobi() {
+        let a = gen::generate_spd(220, 3, 1100, 5).to_csr();
+        let (n, k) = (220, 3);
+        let b = panel_rhs(&a, k);
+        let mut op = a.clone();
+        let r = BatchedJacobi::from_matrix(&a)
+            .unwrap()
+            .tol(1e-10)
+            .max_iters(5000)
+            .solve_multi(&mut op, &b, k)
+            .unwrap();
+        assert!(r.all_converged(), "batched Jacobi must converge on the SPD band system");
+        assert_eq!(r.solver, "batched-jacobi");
+        for j in 0..k {
+            let mut single = a.clone();
+            let rj = Jacobi::from_matrix(&a)
+                .unwrap()
+                .tol(1e-10)
+                .max_iters(5000)
+                .solve(&mut single, &b[j * n..(j + 1) * n])
+                .unwrap();
+            assert_eq!(r.columns[j].iterations, rj.iterations, "column {j} iterations");
+            assert_eq!(r.columns[j].residual_norm, rj.residual_norm, "column {j} residual");
+            assert_eq!(r.columns[j].history, rj.history, "column {j} history");
+            assert_eq!(r.column_x(j), &rj.x[..], "column {j} iterate must be bitwise Jacobi");
+        }
+    }
+
+    #[test]
+    fn batched_jacobi_runs_distributed() {
+        let a = gen::generate_spd(150, 3, 800, 8).to_csr();
+        let (n, k) = (150, 2);
+        let b = panel_rhs(&a, k);
+        let cfg = DecomposeConfig::default();
+        let d = decompose(&a, Combination::NlHl, 2, 2, &cfg).unwrap();
+        let mut dist = DistributedOp::new(d).unwrap();
+        let r = BatchedJacobi::from_matrix(&a)
+            .unwrap()
+            .tol(1e-8)
+            .max_iters(5000)
+            .solve_multi(&mut dist, &b, k)
+            .unwrap();
+        let res: Vec<f64> = r.columns.iter().map(|c| c.residual_norm).collect();
+        assert!(r.all_converged(), "residuals {res:?}");
+        assert_eq!(dist.applications, r.panel_applies, "one cluster round per panel iteration");
+        for j in 0..k {
+            let mut serial = a.clone();
+            let rj = Jacobi::from_matrix(&a)
+                .unwrap()
+                .tol(1e-8)
+                .max_iters(5000)
+                .solve(&mut serial, &b[j * n..(j + 1) * n])
+                .unwrap();
+            for i in 0..n {
+                assert!((r.column_x(j)[i] - rj.x[i]).abs() < 1e-7, "column {j} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_converged_columns_get_a_final_residual() {
+        let a = gen::generate_spd(100, 3, 500, 6).to_csr();
+        let b = panel_rhs(&a, 2);
+        let mut op = a.clone();
+        // 2 iterations: nothing converges, the final recompute runs
+        let r = BatchedJacobi::from_matrix(&a)
+            .unwrap()
+            .tol(1e-14)
+            .max_iters(2)
+            .solve_multi(&mut op, &b, 2)
+            .unwrap();
+        assert!(!r.all_converged());
+        assert_eq!(r.panel_applies, 3, "2 iteration applies + 1 final recompute");
+        for c in &r.columns {
+            assert_eq!(c.iterations, 2);
+            assert!(c.residual_norm.is_finite());
+        }
+    }
+
+    #[test]
+    fn batched_jacobi_typed_errors() {
+        let err = BatchedJacobi::with_diagonal(vec![1.0, 0.0, 3.0]).unwrap_err();
+        assert!(matches!(err, SolverError::ZeroDiagonal { row: 1 }));
+        let a = gen::generate_spd(50, 2, 200, 2).to_csr();
+        let mut op = a.clone();
+        let err = BatchedJacobi::with_diagonal(vec![1.0; 10])
+            .unwrap()
+            .solve_multi(&mut op, &[1.0; 100], 2)
+            .unwrap_err();
+        assert!(matches!(err, SolverError::DimensionMismatch { expected: 50, got: 10, .. }));
+        let err =
+            BatchedJacobi::from_matrix(&a).unwrap().solve_multi(&mut op, &[1.0; 60], 2).unwrap_err();
+        assert!(matches!(err, SolverError::DimensionMismatch { expected: 100, got: 60, .. }));
+    }
+}

@@ -15,6 +15,8 @@
 //! [`MatVecOp::apply_into`].
 
 pub mod api;
+pub mod batched_jacobi;
+pub mod block_cg;
 pub mod cg;
 pub mod gauss_seidel;
 pub mod jacobi;
@@ -22,9 +24,11 @@ pub mod lanczos;
 pub mod power;
 
 pub use api::{
-    make_solver, IterativeSolver, Observer, SolveOptions, SolveReport, SolverError, SolverKind,
-    StoppingCriterion,
+    make_solver, ColumnReport, IterativeSolver, MultiSolveReport, MultiVecOp, Observer,
+    SolveOptions, SolveReport, SolverError, SolverKind, StoppingCriterion,
 };
+pub use batched_jacobi::BatchedJacobi;
+pub use block_cg::BlockCg;
 pub use cg::Cg;
 pub use gauss_seidel::Sor;
 pub use jacobi::Jacobi;
@@ -90,6 +94,11 @@ impl MatVecOp for Csr {
     }
 }
 
+/// Serial CSR applies panels column by column (the default), which is
+/// exactly the single-vector product per column — the bitwise baseline
+/// the batched solvers are tested against.
+impl MultiVecOp for Csr {}
+
 /// The ch. 1 §2.3 compression formats are operators too: their
 /// fallible, allocation-free `mv_into` *is* the [`MatVecOp`] contract,
 /// so every iterative solver runs serially on every storage format —
@@ -105,6 +114,8 @@ macro_rules! format_matvec_op {
                 self.mv_into(x, y)
             }
         }
+
+        impl MultiVecOp for $ty {}
     )*};
 }
 
@@ -147,6 +158,8 @@ impl MatVecOp for crate::sparse::Ell {
         Ok(())
     }
 }
+
+impl MultiVecOp for crate::sparse::Ell {}
 
 /// Distributed PMVC operator: plans once, then drives every apply
 /// through a persistent [`ExecBackend`] and accumulates per-phase
@@ -272,6 +285,25 @@ impl MatVecOp for DistributedOp {
 
     fn phase_times(&self) -> Option<PhaseTimes> {
         Some(self.accumulated)
+    }
+}
+
+/// The distributed operator drives the whole panel through one backend
+/// round: one packed k-slice exchange per neighbor instead of `k`
+/// single-vector rounds. A panel apply counts as one application — one
+/// PMVC round on the cluster.
+impl MultiVecOp for DistributedOp {
+    fn apply_multi_into(&mut self, x: &[f64], y: &mut [f64], k: usize) -> crate::Result<()> {
+        let times = self.backend.apply_multi_into(x, y, k)?;
+        self.accumulated.lb_nodes = times.lb_nodes;
+        self.accumulated.lb_cores = times.lb_cores;
+        self.accumulated.t_compute += times.t_compute;
+        self.accumulated.t_scatter += times.t_scatter;
+        self.accumulated.t_gather += times.t_gather;
+        self.accumulated.t_construct += times.t_construct;
+        self.accumulated.t_overlap_saved += times.t_overlap_saved;
+        self.applications += 1;
+        Ok(())
     }
 }
 
@@ -406,6 +438,37 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn panel_operator_columns_match_single_applies() {
+        let a = gen::generate_spd(180, 4, 1000, 3).to_csr();
+        let (n, k) = (180, 3);
+        let x: Vec<f64> = (0..n * k).map(|i| ((i as f64) * 0.013).sin()).collect();
+
+        let mut serial = a.clone();
+        let mut yp = vec![0.0; n * k];
+        serial.apply_multi_into(&x, &mut yp, k).unwrap();
+        for j in 0..k {
+            let mut y1 = vec![0.0; n];
+            serial.apply_into(&x[j * n..(j + 1) * n], &mut y1).unwrap();
+            assert_eq!(&yp[j * n..(j + 1) * n], &y1[..], "serial column {j}");
+        }
+
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
+        let mut dist = DistributedOp::new(d).unwrap();
+        let mut ydp = vec![0.0; n * k];
+        dist.apply_multi_into(&x, &mut ydp, k).unwrap();
+        assert_eq!(dist.applications, 1, "a panel apply is one cluster round");
+        for j in 0..k {
+            let mut y1 = vec![0.0; n];
+            dist.apply_into(&x[j * n..(j + 1) * n], &mut y1).unwrap();
+            assert_eq!(&ydp[j * n..(j + 1) * n], &y1[..], "distributed column {j}");
+        }
+
+        // shape violations are typed errors, not panics
+        assert!(serial.apply_multi_into(&x, &mut yp, 0).is_err());
+        assert!(serial.apply_multi_into(&x[..n], &mut yp, k).is_err());
     }
 
     #[test]

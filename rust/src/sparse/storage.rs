@@ -37,6 +37,12 @@ use super::{Coo, Csr};
 /// Block edge used by the BSR format (register blocking, ch. 1 §2.3).
 pub const BSR_BLOCK: usize = 4;
 
+/// Accumulator-block width of the multi-vector (SpMM) kernels: panel
+/// columns are processed [`PANEL_CHUNK`] at a time so the per-row
+/// accumulators stay register-resident while each matrix entry is
+/// loaded once and reused across the block.
+const PANEL_CHUNK: usize = 8;
+
 /// Registry of per-fragment kernel formats — the fourth parallel
 /// registry row next to `PartitionerKind`, `BackendKind` and
 /// `SolverKind`.
@@ -414,6 +420,151 @@ impl FragmentStorage {
         self.row_dot(csr, i, &|c| x[c])
     }
 
+    /// Visit one row's stored entries `(column, value)` in exactly the
+    /// order [`FragmentStorage::row_dot`] accumulates them — the shared
+    /// walk behind the multi-vector kernels, so each panel column sees
+    /// the same addition sequence as the single-vector product and
+    /// `k = 1` stays bitwise-identical to [`FragmentStorage::mv`].
+    #[inline]
+    fn row_entries(&self, csr: &Csr, i: usize, visit: &mut impl FnMut(usize, f64)) {
+        match self {
+            FragmentStorage::Csr => {
+                let (s, e) = (csr.ptr[i], csr.ptr[i + 1]);
+                for k in s..e {
+                    visit(csr.col[k] as usize, csr.val[k]);
+                }
+            }
+            FragmentStorage::Ell(el) => {
+                for k in 0..el.width {
+                    let c = el.cols[i * el.width + k];
+                    if c < 0 {
+                        break;
+                    }
+                    visit(c as usize, el.data[i * el.width + k]);
+                }
+            }
+            FragmentStorage::Dia(d) => {
+                for (di, &off) in d.offsets.iter().enumerate() {
+                    let j = i as i64 + off;
+                    if j < 0 || j >= d.n_cols as i64 {
+                        continue;
+                    }
+                    visit(j as usize, d.data[di * d.n_rows + i]);
+                }
+            }
+            FragmentStorage::Jad(j) => {
+                let pr = j.pos[i] as usize;
+                for k in 0..csr.row_nnz(i) {
+                    let idx = j.jag_ptr[k] + pr;
+                    visit(j.col[idx] as usize, j.val[idx]);
+                }
+            }
+            FragmentStorage::Bsr(bm) => {
+                let b = bm.b;
+                let br = i / b;
+                let li = i - br * b;
+                for s in bm.ptr[br]..bm.ptr[br + 1] {
+                    let col_lo = bm.bcol[s] as usize * b;
+                    let base = s * b * b + li * b;
+                    for lj in 0..b.min(bm.n_cols.saturating_sub(col_lo)) {
+                        visit(col_lo + lj, bm.blocks[base + lj]);
+                    }
+                }
+            }
+            FragmentStorage::CsrDu(du) => {
+                let mut pos = du.row_offsets[i];
+                let end = du.row_offsets[i + 1];
+                let mut c: i64 = -1;
+                let mut k = du.ptr[i];
+                while pos < end {
+                    let (delta, next) = decode_varint(&du.stream, pos);
+                    pos = next;
+                    c += delta as i64;
+                    visit(c as usize, du.val[k]);
+                    k += 1;
+                }
+            }
+        }
+    }
+
+    /// One row's dot product against every column of a column-major
+    /// panel: the inner loop runs over the RHS index, so each stored
+    /// matrix entry is loaded once and reused `k` times — the SpMM
+    /// amortization this module exists for. `k` is chunked into
+    /// [`PANEL_CHUNK`]-wide register-resident accumulator blocks; per
+    /// column the additions happen in [`FragmentStorage::row_dot`]'s
+    /// order, keeping every column bitwise-identical to the
+    /// single-vector product.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn row_dot_multi(
+        &self,
+        csr: &Csr,
+        i: usize,
+        k: usize,
+        pos: &impl Fn(usize) -> usize,
+        x: &[f64],
+        x_stride: usize,
+        y: &mut [f64],
+        y_stride: usize,
+    ) {
+        let mut j0 = 0;
+        while j0 < k {
+            let kc = (k - j0).min(PANEL_CHUNK);
+            let mut acc = [0.0f64; PANEL_CHUNK];
+            self.row_entries(csr, i, &mut |c, v| {
+                let p = pos(c);
+                for (jj, a) in acc[..kc].iter_mut().enumerate() {
+                    *a += v * x[(j0 + jj) * x_stride + p];
+                }
+            });
+            for (jj, &a) in acc[..kc].iter().enumerate() {
+                y[(j0 + jj) * y_stride + i] = a;
+            }
+            j0 += kc;
+        }
+    }
+
+    /// `Y = A·X` over a column-major panel of `k` right-hand sides:
+    /// column `j` of X is `x[j·n_cols .. (j+1)·n_cols]`, column `j` of Y
+    /// is `y[j·n_rows .. (j+1)·n_rows]`. A is streamed once for all `k`
+    /// columns; each column's result is bitwise-identical to a separate
+    /// [`FragmentStorage::mv`] call on that column.
+    pub fn mv_multi(&self, csr: &Csr, x: &[f64], y: &mut [f64], k: usize) {
+        debug_assert!(k > 0, "panel width must be positive");
+        debug_assert_eq!(x.len(), csr.n_cols * k);
+        debug_assert_eq!(y.len(), csr.n_rows * k);
+        for i in 0..csr.n_rows {
+            self.row_dot_multi(csr, i, k, &|c| c, x, csr.n_cols, y, csr.n_rows);
+        }
+    }
+
+    /// Panel analogue of [`FragmentStorage::mv_rows`]: compute a subset
+    /// of rows for all `k` columns, reading X indirectly through the
+    /// node-footprint panel (`x_node` holds `k` slices of the node's X
+    /// footprint, column-major). Rows outside `rows` are untouched in
+    /// every column; listed rows accumulate per column in
+    /// [`FragmentStorage::mv`]'s order, so the overlapped two-pass panel
+    /// product stays bitwise-identical to the one-pass panel product.
+    pub fn mv_rows_multi(
+        &self,
+        csr: &Csr,
+        rows: &[u32],
+        x_map: &[u32],
+        x_node: &[f64],
+        y: &mut [f64],
+        k: usize,
+    ) {
+        debug_assert!(k > 0, "panel width must be positive");
+        debug_assert_eq!(x_node.len() % k, 0);
+        debug_assert_eq!(y.len(), csr.n_rows * k);
+        let x_stride = x_node.len() / k;
+        let pos = |c: usize| x_map[c] as usize;
+        for &r in rows {
+            self.row_dot_multi(csr, r as usize, k, &pos, x_node, x_stride, y, csr.n_rows);
+        }
+    }
+
     /// Bytes of the A-side streams (values + index structures, padding
     /// included) this storage pulls per apply — the format's share of
     /// the memory-bound roofline the simulator prices compute from
@@ -626,6 +777,55 @@ mod tests {
             let mut y_one = vec![0.0; a.n_rows];
             s.mv(&a, &x, &mut y_one);
             assert_eq!(y, y_one, "{kind}: two-pass must be bitwise equal");
+        }
+    }
+
+    #[test]
+    fn mv_multi_is_bitwise_k_independent_mv_calls() {
+        let a = mat("t2dal");
+        let mut rng = SplitMix64::new(41);
+        for k in [1usize, 3, 8, 13] {
+            let x: Vec<f64> =
+                (0..a.n_cols * k).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+            for kind in FormatKind::concrete() {
+                let s = FragmentStorage::build(&a, kind).unwrap();
+                let mut y = vec![f64::NAN; a.n_rows * k];
+                s.mv_multi(&a, &x, &mut y, k);
+                for j in 0..k {
+                    let mut y_one = vec![0.0; a.n_rows];
+                    s.mv(&a, &x[j * a.n_cols..(j + 1) * a.n_cols], &mut y_one);
+                    assert_eq!(
+                        &y[j * a.n_rows..(j + 1) * a.n_rows],
+                        &y_one[..],
+                        "{kind} k={k} column {j}: panel column must be bitwise mv"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mv_rows_multi_two_pass_is_bitwise_one_pass() {
+        let a = mat("t2dal");
+        let k = 5;
+        let mut rng = SplitMix64::new(42);
+        let x: Vec<f64> = (0..a.n_cols * k).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        let x_map: Vec<u32> = (0..a.n_cols as u32).collect();
+        let evens: Vec<u32> = (0..a.n_rows as u32).step_by(2).collect();
+        let odds: Vec<u32> = (1..a.n_rows as u32).step_by(2).collect();
+        for kind in FormatKind::concrete() {
+            let s = FragmentStorage::build(&a, kind).unwrap();
+            let mut y = vec![f64::NAN; a.n_rows * k];
+            s.mv_rows_multi(&a, &evens, &x_map, &x, &mut y, k);
+            for j in 0..k {
+                for i in (1..a.n_rows).step_by(2) {
+                    assert!(y[j * a.n_rows + i].is_nan(), "{kind}: col {j} row {i} untouched");
+                }
+            }
+            s.mv_rows_multi(&a, &odds, &x_map, &x, &mut y, k);
+            let mut y_one = vec![0.0; a.n_rows * k];
+            s.mv_multi(&a, &x, &mut y_one, k);
+            assert_eq!(y, y_one, "{kind}: two-pass panel must be bitwise one-pass");
         }
     }
 
