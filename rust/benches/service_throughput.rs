@@ -1,0 +1,102 @@
+//! Service-throughput grid: requests/sec through the persistent
+//! coordinator with the plan cache + engine pool on vs off, at panel
+//! widths nrhs ∈ {1, 8} — the measurement that justifies the serving
+//! posture over per-request rebuilds. Emits `BENCH_pr7.json` at the
+//! repo root.
+//!
+//! ```bash
+//! cargo bench --bench service_throughput            # full grid,
+//!                                                   # writes ../BENCH_pr7.json
+//! cargo bench --bench service_throughput -- --test  # CI smoke: short
+//!                                                   # workload, asserts
+//! ```
+
+use pmvc::service::{run_service, workload, RequestDefaults, ServeConfig, ServiceReport};
+
+struct Cell {
+    cache: bool,
+    nrhs: usize,
+    requests: usize,
+    report: ServiceReport,
+}
+
+fn run_cell(cache: bool, nrhs: usize, count: usize, max_iters: usize) -> Cell {
+    let matrices: Vec<String> =
+        ["t2dal", "bcsstm09", "spd"].iter().map(|s| s.to_string()).collect();
+    let defaults = RequestDefaults { nrhs, tol: 1e-8, max_iters, ..Default::default() };
+    let requests = workload(&matrices, count, &defaults);
+    let cfg = ServeConfig {
+        cache_enabled: cache,
+        engines: 3,
+        workers: 3,
+        clients: 4,
+        ..ServeConfig::default()
+    };
+    let report = run_service(requests, &cfg).expect("service session");
+    Cell { cache, nrhs, requests: count, report }
+}
+
+fn main() {
+    // --test: the CI smoke — a short mixed workload per cell, with the
+    // invariants asserted instead of timed.
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let (count, max_iters) = if test_mode { (9, 20) } else { (48, 100) };
+
+    println!(
+        "{:<6} {:>5} {:>9} {:>10} {:>9} {:>10} {:>10}",
+        "cache", "nrhs", "requests", "req/s", "hit rate", "p50 ms", "p95 ms"
+    );
+    let mut cells = Vec::new();
+    for cache in [true, false] {
+        for nrhs in [1usize, 8] {
+            let cell = run_cell(cache, nrhs, count, max_iters);
+            let r = &cell.report;
+            println!(
+                "{:<6} {:>5} {:>9} {:>10.2} {:>8.0}% {:>10.2} {:>10.2}",
+                if cell.cache { "on" } else { "off" },
+                cell.nrhs,
+                cell.requests,
+                r.solves_per_sec,
+                100.0 * r.hit_rate(),
+                r.latency_p50_ms,
+                r.latency_p95_ms
+            );
+            if test_mode {
+                assert_eq!(r.completed, count, "cache={cache} nrhs={nrhs}: all must complete");
+                assert_eq!(r.failed, 0, "cache={cache} nrhs={nrhs}: no failures");
+                if cache {
+                    assert!(r.cache_hits > 0, "warm session must hit the plan cache");
+                } else {
+                    assert_eq!(r.cache_hits, 0, "cold session bypasses the cache");
+                    assert_eq!(r.engines_created, 0, "cold session bypasses the pool");
+                }
+            }
+            cells.push(cell);
+        }
+    }
+
+    if !test_mode {
+        let json_rows: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                format!(
+                    "{{\"cache\": {}, \"nrhs\": {}, \"requests\": {}, \"wall_s\": {:.4}, \
+                     \"req_per_sec\": {:.3}, \"hit_rate\": {:.4}, \"latency_p50_ms\": {:.3}, \
+                     \"latency_p95_ms\": {:.3}}}",
+                    c.cache,
+                    c.nrhs,
+                    c.requests,
+                    c.report.wall_s,
+                    c.report.solves_per_sec,
+                    c.report.hit_rate(),
+                    c.report.latency_p50_ms,
+                    c.report.latency_p95_ms
+                )
+            })
+            .collect();
+        let json = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
+        // bench cwd is rust/; the trajectory file lives at the repo root
+        std::fs::write("../BENCH_pr7.json", &json).expect("write BENCH_pr7.json");
+        println!("wrote {} service grid points to ../BENCH_pr7.json", json_rows.len());
+    }
+}

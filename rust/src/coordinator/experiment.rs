@@ -16,11 +16,13 @@
 //! every scenario from one harness.
 
 use crate::cluster::{ClusterTopology, NetworkPreset};
-use crate::partition::combined::{decompose, Combination, DecomposeConfig};
+use crate::partition::combined::{decompose, Combination, DecomposeConfig, TwoLevelDecomposition};
 use crate::pmvc::{make_backend, BackendKind, ExecBackend, OverlapMode, PhaseTimes};
 use crate::solver::{make_solver, DistributedOp, IterativeSolver, SolverKind};
 use crate::sparse::gen::{generate, MatrixSpec};
-use crate::sparse::Csr;
+use crate::sparse::{Csr, FormatKind};
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Sweep configuration (defaults reproduce the paper's setting).
 #[derive(Clone, Debug)]
@@ -158,6 +160,60 @@ pub fn load_matrix(name: &str, seed: u64) -> crate::Result<Csr> {
     Ok(generate(&spec, seed).to_csr())
 }
 
+/// A sweep cell's decomposition identity: matrix name × combination ×
+/// (f, c) shape × partitioner pair × kernel format.
+pub type DecompKey = (String, Combination, usize, usize, String, FormatKind);
+
+/// Memoises [`decompose`] results across sweep cells sharing the same
+/// [`DecompKey`] — duplicated matrices or repeated node counts in a
+/// grid pay partitioning once instead of once per cell. Decomposition
+/// is deterministic, so a cached cell's rows are identical to a
+/// recomputed cell's.
+#[derive(Default)]
+pub struct DecompCache {
+    map: HashMap<DecompKey, Arc<TwoLevelDecomposition>>,
+    /// Cells that ran the partitioners.
+    pub builds: usize,
+    /// Cells served from the cache.
+    pub hits: usize,
+}
+
+impl DecompCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The cell's decomposition, partitioning `a` only on first sight
+    /// of the key.
+    pub fn get_or_build(
+        &mut self,
+        name: &str,
+        a: &Csr,
+        combo: Combination,
+        f: usize,
+        c: usize,
+        dcfg: &DecomposeConfig,
+    ) -> crate::Result<Arc<TwoLevelDecomposition>> {
+        let key: DecompKey = (
+            name.to_string(),
+            combo,
+            f,
+            c,
+            format!("{}+{}", dcfg.inter.name(), dcfg.intra.name()),
+            dcfg.format,
+        );
+        if let Some(d) = self.map.get(&key) {
+            self.hits += 1;
+            return Ok(Arc::clone(d));
+        }
+        let d = Arc::new(decompose(a, combo, f, c, dcfg)?);
+        self.builds += 1;
+        self.map.insert(key, Arc::clone(&d));
+        Ok(d)
+    }
+}
+
 /// Mean per-apply phase times of an accumulated breakdown (load
 /// balances are level quantities and pass through unchanged).
 fn mean_times(acc: &PhaseTimes, applies: usize) -> PhaseTimes {
@@ -176,12 +232,23 @@ fn mean_times(acc: &PhaseTimes, applies: usize) -> PhaseTimes {
     }
 }
 
-/// Run the full sweep. Each cell decomposes once and constructs the
-/// configured backend once (plan/launch = the one-time A distribution);
-/// a probe cell then applies one measurement PMVC, a solver cell drives
-/// a full [`crate::solver::IterativeSolver`] run through the backend
-/// and reports mean per-iteration phase times plus convergence.
+/// Run the full sweep. Cells sharing a [`DecompKey`] (duplicated
+/// matrices, repeated node counts) share one decomposition through a
+/// [`DecompCache`]; each cell still constructs its backend once
+/// (plan/launch = the one-time A distribution). A probe cell then
+/// applies one measurement PMVC, a solver cell drives a full
+/// [`crate::solver::IterativeSolver`] run through the backend and
+/// reports mean per-iteration phase times plus convergence.
 pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
+    run_sweep_cached(cfg, &mut DecompCache::new())
+}
+
+/// [`run_sweep`] with a caller-supplied [`DecompCache`], so repeated
+/// sweeps (and the tests) can observe and share the memoisation.
+pub fn run_sweep_cached(
+    cfg: &ExperimentConfig,
+    dcache: &mut DecompCache,
+) -> crate::Result<Vec<SweepRow>> {
     anyhow::ensure!(cfg.nrhs >= 1, "nrhs must be at least 1");
     let net = cfg.network.model();
     let mut rows = Vec::new();
@@ -208,10 +275,11 @@ pub fn run_sweep(cfg: &ExperimentConfig) -> crate::Result<Vec<SweepRow>> {
         for &combo in &cfg.combos {
             for &f in &cfg.node_counts {
                 let topo = topology_for(f, cfg.cores_per_node);
-                let d = decompose(&a, combo, f, cfg.cores_per_node, &cfg.decompose)?;
+                let d =
+                    dcache.get_or_build(name, &a, combo, f, cfg.cores_per_node, &cfg.decompose)?;
                 let quality = d.quality.clone();
                 let stored_bytes = d.stored_bytes();
-                let mut backend = make_backend(cfg.backend, d, &topo, &net)?;
+                let mut backend = make_backend(cfg.backend, (*d).clone(), &topo, &net)?;
                 backend.set_overlap_mode(cfg.overlap)?;
                 let row = match cfg.solver {
                     None => {
@@ -350,7 +418,6 @@ pub const METRICS: &[(&str, fn(&PhaseTimes) -> f64)] = &[
 /// — the recap Table 4.7. Returns `wins[metric][combo] = percent`.
 pub fn win_table(rows: &[SweepRow], combos: &[Combination]) -> Vec<Vec<f64>> {
     // group rows by (matrix, f)
-    use std::collections::HashMap;
     let mut groups: HashMap<(String, usize), Vec<&SweepRow>> = HashMap::new();
     for r in rows {
         groups.entry((r.matrix.clone(), r.f)).or_default().push(r);
@@ -644,6 +711,47 @@ mod tests {
             let sum: f64 = per_metric.iter().sum();
             assert!((sum - 100.0).abs() < 1e-9, "sum = {sum}");
         }
+    }
+
+    #[test]
+    fn duplicated_cells_share_decompositions_and_agree_on_csv() {
+        // The same grid twice over: every cell of the second half
+        // shares a DecompKey with the first half.
+        let cfg = ExperimentConfig {
+            matrices: vec!["bcsstm09".into(), "t2dal".into(), "bcsstm09".into(), "t2dal".into()],
+            node_counts: vec![2, 4],
+            combos: vec![Combination::NlHl, Combination::NcHc],
+            cores_per_node: 2,
+            ..Default::default()
+        };
+        let mut dcache = DecompCache::new();
+        let rows = run_sweep_cached(&cfg, &mut dcache).unwrap();
+        assert_eq!(rows.len(), 4 * 2 * 2);
+        assert_eq!(dcache.builds, 2 * 2 * 2, "distinct cells partition once each");
+        assert_eq!(dcache.hits, 2 * 2 * 2, "duplicated cells are served from the cache");
+        // Cached decompositions must not change results: the duplicated
+        // half renders to the exact same CSV lines as the first half.
+        let csv = crate::coordinator::report::to_csv(&rows);
+        let lines: Vec<&str> = csv.lines().skip(1).collect();
+        let (first, second) = lines.split_at(lines.len() / 2);
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn decomp_cache_memoises_by_key() {
+        let a = load_matrix("bcsstm09", 1).unwrap();
+        let dcfg = DecomposeConfig::default();
+        let mut cache = DecompCache::new();
+        let d1 = cache.get_or_build("bcsstm09", &a, Combination::NlHl, 2, 2, &dcfg).unwrap();
+        let d2 = cache.get_or_build("bcsstm09", &a, Combination::NlHl, 2, 2, &dcfg).unwrap();
+        assert!(Arc::ptr_eq(&d1, &d2));
+        assert_eq!((cache.builds, cache.hits), (1, 1));
+        // Any key component changing forces a rebuild.
+        cache.get_or_build("bcsstm09", &a, Combination::NcHc, 2, 2, &dcfg).unwrap();
+        cache.get_or_build("bcsstm09", &a, Combination::NlHl, 4, 2, &dcfg).unwrap();
+        let ell = DecomposeConfig::default().with_format(crate::sparse::FormatKind::Ell);
+        cache.get_or_build("bcsstm09", &a, Combination::NlHl, 2, 2, &ell).unwrap();
+        assert_eq!((cache.builds, cache.hits), (4, 1));
     }
 
     #[test]

@@ -5,4 +5,4 @@ pub mod cli;
 pub mod experiment;
 pub mod report;
 
-pub use experiment::{run_sweep, ExperimentConfig, SweepRow};
+pub use experiment::{run_sweep, run_sweep_cached, DecompCache, ExperimentConfig, SweepRow};

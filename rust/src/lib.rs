@@ -55,6 +55,11 @@
 //!   iteration into reusable scratch).
 //! * [`coordinator`] — experiment driver (backend-, solver- and
 //!   partitioner-selectable sweeps), reporting, CLI.
+//! * [`service`] — solve-as-a-service: a persistent coordinator with a
+//!   bounded admission queue, a fingerprint-keyed plan cache
+//!   (decomposition + frozen `CommPlan`, LRU under a byte budget) and a
+//!   multiplexed pool of warm engines ([`service::run_service`],
+//!   `coordinator serve`).
 
 // Every public item carries documentation; the CI doc gate
 // (`RUSTDOCFLAGS="-D warnings" cargo doc --no-deps`) promotes any
@@ -67,6 +72,7 @@ pub mod partition;
 pub mod pmvc;
 pub mod rng;
 pub mod runtime;
+pub mod service;
 pub mod solver;
 pub mod sparse;
 

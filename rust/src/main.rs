@@ -5,6 +5,7 @@
 //! pmvc figures --series <s>               regenerate a figure series
 //! pmvc sweep [--out results/sweep.csv]    full sweep -> CSV
 //! pmvc run --matrix t2dal --combo NL-HL   one threaded PMVC run
+//! pmvc serve --trace reqs.jsonl           solve-as-a-service session
 //! pmvc gen --matrix epb1 --out epb1.mtx   write a synthetic matrix
 //! pmvc info                               artifacts + runtime status
 //! ```
@@ -102,6 +103,7 @@ fn dispatch(args: &Args) -> pmvc::Result<()> {
         "figures" => cmd_figures(args),
         "sweep" => cmd_sweep(args),
         "run" => cmd_run(args),
+        "serve" => cmd_serve(args),
         "gen" => cmd_gen(args),
         "info" => cmd_info(args),
         "" | "help" | "--help" => {
@@ -121,6 +123,14 @@ COMMANDS:
   figures --series <lb|scatter|compute|construct|gather|total>
   sweep [--out FILE.csv]            full simulated sweep
   run --matrix NAME --combo NL-HL --nodes F --cores C [--nrhs K] [--xla]
+  serve [--trace FILE.jsonl]        solve-as-a-service: one persistent
+                                    coordinator multiplexes a request
+                                    stream over a bounded admission
+                                    queue, a fingerprint-keyed plan
+                                    cache (LRU under --cache-bytes) and
+                                    a pool of warm engines, then prints
+                                    the service report (hit rate,
+                                    latency percentiles, solves/sec)
   gen --matrix NAME --out FILE.mtx  write a synthetic Table-4.2 matrix
   info                              artifacts + PJRT runtime status
 
@@ -165,7 +175,32 @@ COMMON OPTIONS:
                      ;-joined col_iterations/col_converged columns.
                      `run` applies a K-wide panel and checks every
                      column against the serial product.
-  --seed N           generator seed";
+  --seed N           generator seed
+
+SERVE OPTIONS (request fields fall back to the COMMON flags above;
+`serve` reads --nodes/--cores as single values):
+  --trace FILE       JSONL request trace, one object per line:
+                     {\"matrix\": \"t2dal\", \"nrhs\": 8, \"solver\": \"cg\", ...}
+                     (fields: matrix, combo, partitioner, intra, format,
+                     solver, tol, iters, nrhs, nodes, cores, seed).
+                     Without --trace, a closed-loop workload over
+                     --matrices (default t2dal,bcsstm09,spd) is
+                     synthesised round-robin.
+  --requests N       workload length without --trace (default 16)
+  --max-requests N   truncate the request stream after N entries
+  --queue-depth N    admission queue capacity (default 32)
+  --reject-full      reject on a full queue (typed outcome) instead of
+                     blocking the submitting client
+  --engines N        engine-pool capacity (default 3)
+  --workers N        worker threads (default 3)
+  --clients N        closed-loop client threads (default 4)
+  --cache-bytes N    plan-cache byte budget (default 256 MiB); LRU
+                     eviction keeps at least the newest plan
+  --no-cache         rebuild decomposition+plan+engine per request
+                     (the baseline the cache is measured against)
+  --report-json F    also dump the service report as JSON to F
+  --min-hits N       fail unless the cache served >= N hits (CI gate)
+  --min-evictions N  fail unless >= N evictions happened (CI gate)";
 
 fn cmd_table(args: &Args) -> pmvc::Result<()> {
     let which = args
@@ -437,6 +472,101 @@ fn run_2d(
     );
     println!("max |y - y_ref| = {max_err:.3e}");
     anyhow::ensure!(max_err < 1e-8, "2-D distributed result diverges from serial");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> pmvc::Result<()> {
+    use pmvc::service::{parse_trace, run_service, workload, RequestDefaults, ServeConfig};
+
+    let mut defaults = RequestDefaults::default();
+    if let Some(c) = args.opt("combo") {
+        defaults.combo =
+            Combination::parse(c).ok_or_else(|| anyhow::anyhow!("unknown combination '{c}'"))?;
+    }
+    if let Some(p) = args.opt("partitioner") {
+        defaults.partitioner = parse_partitioner(p)?;
+    }
+    if let Some(p) = args.opt("intra") {
+        defaults.intra = parse_partitioner(p)?;
+    }
+    if let Some(s) = args.opt("format") {
+        defaults.format = parse_format(s)?;
+    }
+    if let Some(s) = args.opt("solver") {
+        defaults.solver = SolverKind::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown solver '{s}' (cg|jacobi|sor|power|lanczos)")
+        })?;
+    }
+    if let Some(t) = args.opt("tol") {
+        defaults.tol = t.parse().map_err(|e| anyhow::anyhow!("--tol: {e}"))?;
+    }
+    defaults.max_iters = args.opt_usize("iters", defaults.max_iters)?;
+    defaults.nrhs = args.opt_usize("nrhs", defaults.nrhs)?;
+    defaults.nodes = args.opt_usize("nodes", defaults.nodes)?;
+    defaults.cores = args.opt_usize("cores", defaults.cores)?;
+    defaults.seed = args.opt_u64("seed", defaults.seed)?;
+
+    let mut requests = match args.opt("trace") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("read trace {path}: {e}"))?;
+            parse_trace(&text, &defaults)?
+        }
+        None => {
+            let matrices = args.opt_list("matrices").unwrap_or_else(|| {
+                vec!["t2dal".to_string(), "bcsstm09".to_string(), "spd".to_string()]
+            });
+            workload(&matrices, args.opt_usize("requests", 16)?, &defaults)
+        }
+    };
+    let max_requests = args.opt_usize("max-requests", requests.len())?;
+    requests.truncate(max_requests);
+    anyhow::ensure!(!requests.is_empty(), "nothing to serve: the request stream is empty");
+
+    let base = ServeConfig::default();
+    let cfg = ServeConfig {
+        queue_depth: args.opt_usize("queue-depth", base.queue_depth)?,
+        engines: args.opt_usize("engines", base.engines)?,
+        workers: args.opt_usize("workers", base.workers)?,
+        clients: args.opt_usize("clients", base.clients)?,
+        cache_bytes: args.opt_usize("cache-bytes", base.cache_bytes)?,
+        cache_enabled: !args.has("no-cache"),
+        reject_when_full: args.has("reject-full"),
+        keep_solutions: false,
+    };
+    let n = requests.len();
+    eprintln!(
+        "serving {n} requests: {} clients -> queue({}) -> {} workers, {} engines, cache {}",
+        cfg.clients,
+        cfg.queue_depth,
+        cfg.workers,
+        cfg.engines,
+        if cfg.cache_enabled { "on" } else { "off" },
+    );
+    let report = run_service(requests, &cfg)?;
+    print!("{}", report.table());
+    if let Some(path) = args.opt("report-json") {
+        std::fs::write(path, report.to_json())?;
+        eprintln!("wrote service report to {path}");
+    }
+    anyhow::ensure!(
+        report.accounted() == n,
+        "{} of {n} requests unaccounted for",
+        n - report.accounted()
+    );
+    anyhow::ensure!(report.failed == 0, "{} requests failed", report.failed);
+    let min_hits = args.opt_usize("min-hits", 0)?;
+    anyhow::ensure!(
+        report.cache_hits >= min_hits,
+        "cache hits {} below the --min-hits {min_hits} gate",
+        report.cache_hits
+    );
+    let min_evictions = args.opt_usize("min-evictions", 0)?;
+    anyhow::ensure!(
+        report.cache_evictions >= min_evictions,
+        "cache evictions {} below the --min-evictions {min_evictions} gate",
+        report.cache_evictions
+    );
     Ok(())
 }
 

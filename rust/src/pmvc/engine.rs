@@ -153,6 +153,38 @@ impl PmvcEngine {
     pub fn new(d: Arc<TwoLevelDecomposition>) -> crate::Result<PmvcEngine> {
         let t0 = Instant::now();
         let plan = Arc::new(CommPlan::build(&d)?);
+        let mut engine = Self::spawn(d, plan, t0);
+        engine.plan_builds = 1;
+        Ok(engine)
+    }
+
+    /// Spawn a pool over an already-frozen plan — the solve-service hot
+    /// path. The coordinator's plan cache builds (and validates) the plan
+    /// once per (matrix, combination, partitioner, format) key; every
+    /// engine checked out for that key shares it, so
+    /// [`PmvcEngine::plan_builds`] reports 0 for engines built this way.
+    /// The plan must have been built from `d` (same f × c shape and
+    /// order, checked here).
+    pub fn with_plan(
+        d: Arc<TwoLevelDecomposition>,
+        plan: Arc<CommPlan>,
+    ) -> crate::Result<PmvcEngine> {
+        anyhow::ensure!(
+            plan.f == d.f && plan.c == d.c && plan.n == d.n,
+            "plan shape f={} c={} n={} does not match decomposition f={} c={} n={}",
+            plan.f,
+            plan.c,
+            plan.n,
+            d.f,
+            d.c,
+            d.n
+        );
+        Ok(Self::spawn(d, plan, Instant::now()))
+    }
+
+    /// Shared tail of [`PmvcEngine::new`] / [`PmvcEngine::with_plan`]:
+    /// spawn the workers and ship each its share of the frozen plan.
+    fn spawn(d: Arc<TwoLevelDecomposition>, plan: Arc<CommPlan>, t0: Instant) -> PmvcEngine {
         // shared time origin for the worker-reported compute spans
         let epoch = Instant::now();
         let n_workers = d.f * d.c;
@@ -192,7 +224,7 @@ impl PmvcEngine {
             handles.push(std::thread::spawn(move || worker_loop(ctx)));
         }
         let node_y = vec![Vec::new(); d.f];
-        Ok(PmvcEngine {
+        PmvcEngine {
             plan,
             to_workers,
             done_rx,
@@ -203,9 +235,9 @@ impl PmvcEngine {
             seq: 0,
             setup_s: t0.elapsed().as_secs_f64(),
             applies: 0,
-            plan_builds: 1,
+            plan_builds: 0,
             d,
-        })
+        }
     }
 
     /// The active schedule ([`OverlapMode::Blocking`] by default).

@@ -1,0 +1,276 @@
+//! Plan cache: decomposition + frozen `CommPlan`, LRU under a byte budget.
+//!
+//! The expensive half of a served solve is everything *before* the first
+//! iteration: two-level decomposition and `CommPlan` freezing. The
+//! [`PlanCache`] memoises that pair per [`PlanKey`] so repeat requests
+//! for the same (matrix, combination, partitioner, format, shape) pay it
+//! once. Entries are charged an estimated resident size and evicted
+//! least-recently-used when the configured byte budget overflows — the
+//! newest entry is always spared, so a budget smaller than one plan
+//! degrades to "cache of one" rather than thrashing to zero. Eviction
+//! only drops the cache's own `Arc` references; requests still solving
+//! against an evicted plan keep it alive until they finish.
+
+use super::fingerprint::PlanKey;
+use crate::partition::combined::TwoLevelDecomposition;
+use crate::pmvc::CommPlan;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Per-key hit/miss/eviction counters for the service report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KeyStats {
+    /// Requests served from the cache.
+    pub hits: usize,
+    /// Requests that built the entry.
+    pub misses: usize,
+    /// Times the entry was evicted under the byte budget.
+    pub evictions: usize,
+}
+
+struct Entry {
+    d: Arc<TwoLevelDecomposition>,
+    plan: Arc<CommPlan>,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// LRU cache of decomposition + plan pairs under a byte budget.
+pub struct PlanCache {
+    budget: usize,
+    entries: HashMap<PlanKey, Entry>,
+    clock: u64,
+    hits: usize,
+    misses: usize,
+    evictions: usize,
+    per_key: HashMap<String, KeyStats>,
+}
+
+/// Estimated resident bytes of one cached entry: the fragments' CSR
+/// arrays, their kernel storage when it is not CSR-in-place, the
+/// global row/column maps, and the plan's footprint/assembly maps.
+pub fn entry_bytes(d: &TwoLevelDecomposition, plan: &CommPlan) -> usize {
+    let frag_bytes: usize = d
+        .fragments
+        .iter()
+        .map(|fr| {
+            let csr = 8 * (fr.csr.n_rows + 1) + 12 * fr.csr.nnz();
+            let maps = 4 * (fr.global_rows.len() + fr.global_cols.len());
+            let kernel = match fr.storage.kind() {
+                crate::sparse::FormatKind::Csr => 0, // runs on `csr` in place
+                _ => fr.stored_bytes(),
+            };
+            csr + maps + kernel
+        })
+        .sum();
+    let plan_bytes: usize = plan
+        .nodes
+        .iter()
+        .map(|np| {
+            let per_core: usize = np
+                .core_x_maps
+                .iter()
+                .chain(&np.core_y_maps)
+                .chain(&np.core_interior_rows)
+                .chain(&np.core_boundary_rows)
+                .map(Vec::len)
+                .sum();
+            4 * (np.x_cols.len()
+                + np.y_rows.len()
+                + np.owned_x.len()
+                + np.halo_x.len()
+                + per_core)
+        })
+        .sum();
+    frag_bytes + plan_bytes
+}
+
+impl PlanCache {
+    /// Cache with room for roughly `budget` bytes of plans.
+    pub fn new(budget: usize) -> Self {
+        PlanCache {
+            budget,
+            entries: HashMap::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            per_key: HashMap::new(),
+        }
+    }
+
+    /// Look up `key`, building (and inserting) on a miss via `build`.
+    /// Returns the pair plus `true` on a hit. Holding the shared `Arc`s
+    /// means an entry evicted later stays valid for in-flight solves.
+    pub fn get_or_build(
+        &mut self,
+        key: &PlanKey,
+        build: impl FnOnce() -> crate::Result<(Arc<TwoLevelDecomposition>, Arc<CommPlan>)>,
+    ) -> crate::Result<(Arc<TwoLevelDecomposition>, Arc<CommPlan>, bool)> {
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(key) {
+            e.last_used = self.clock;
+            self.hits += 1;
+            self.per_key.entry(key.label()).or_default().hits += 1;
+            return Ok((Arc::clone(&e.d), Arc::clone(&e.plan), true));
+        }
+        self.misses += 1;
+        self.per_key.entry(key.label()).or_default().misses += 1;
+        let (d, plan) = build()?;
+        let bytes = entry_bytes(&d, &plan);
+        let entry =
+            Entry { d: Arc::clone(&d), plan: Arc::clone(&plan), bytes, last_used: self.clock };
+        self.entries.insert(key.clone(), entry);
+        self.evict_to_budget(key);
+        Ok((d, plan, false))
+    }
+
+    /// Evict LRU entries (never `keep`) until the budget holds or only
+    /// `keep` remains.
+    fn evict_to_budget(&mut self, keep: &PlanKey) {
+        while self.total_bytes() > self.budget && self.entries.len() > 1 {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(k, _)| *k != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            let Some(k) = victim else { break };
+            self.entries.remove(&k);
+            self.evictions += 1;
+            self.per_key.entry(k.label()).or_default().evictions += 1;
+        }
+    }
+
+    /// Estimated resident bytes of all entries.
+    pub fn total_bytes(&self) -> usize {
+        self.entries.values().map(|e| e.bytes).sum()
+    }
+
+    /// Number of cached entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total cache hits.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Total cache misses (entry builds).
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Total evictions under the byte budget.
+    pub fn evictions(&self) -> usize {
+        self.evictions
+    }
+
+    /// Per-key counters, labelled by [`PlanKey::label`].
+    pub fn per_key(&self) -> &HashMap<String, KeyStats> {
+        &self.per_key
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::combined::{decompose, Combination, DecomposeConfig};
+    use crate::partition::PartitionerKind;
+    use crate::sparse::{fingerprint_csr, FormatKind};
+
+    fn build_pair(
+        n: usize,
+        seed: u64,
+    ) -> (PlanKey, Arc<TwoLevelDecomposition>, Arc<CommPlan>) {
+        let a = crate::sparse::gen::generate_spd(n, 3, n * 5, seed).to_csr();
+        let key = PlanKey {
+            fingerprint: fingerprint_csr(&a),
+            combo: Combination::NlHl,
+            inter: PartitionerKind::Nezgt,
+            intra: PartitionerKind::Hypergraph,
+            format: FormatKind::Csr,
+            f: 2,
+            c: 2,
+        };
+        let cfg = DecomposeConfig::default();
+        let d = Arc::new(decompose(&a, key.combo, key.f, key.c, &cfg).unwrap());
+        let plan = Arc::new(CommPlan::build(&d).unwrap());
+        (key, d, plan)
+    }
+
+    #[test]
+    fn hit_returns_the_same_arcs_without_rebuilding() {
+        let (key, d, plan) = build_pair(120, 1);
+        let mut cache = PlanCache::new(usize::MAX);
+        let (d1, _, hit1) =
+            cache.get_or_build(&key, || Ok((Arc::clone(&d), Arc::clone(&plan)))).unwrap();
+        assert!(!hit1);
+        let (d2, p2, hit2) = cache
+            .get_or_build(&key, || panic!("hit must not rebuild"))
+            .unwrap();
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&d1, &d2));
+        assert!(Arc::ptr_eq(&plan, &p2));
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.evictions(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_spares_the_newest_entry() {
+        let (k1, d1, p1) = build_pair(100, 1);
+        let (k2, d2, p2) = build_pair(100, 2);
+        let (k3, d3, p3) = build_pair(100, 3);
+        assert_ne!(k1, k2);
+        let one = entry_bytes(&d1, &p1);
+        // Budget fits ~two entries.
+        let mut cache = PlanCache::new(2 * one + one / 2);
+        cache.get_or_build(&k1, || Ok((d1, p1))).unwrap();
+        cache.get_or_build(&k2, || Ok((d2, p2))).unwrap();
+        assert_eq!(cache.len(), 2);
+        // Touch k1 so k2 is the LRU victim when k3 arrives.
+        cache.get_or_build(&k1, || panic!("cached")).unwrap();
+        cache.get_or_build(&k3, || Ok((d3, p3))).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.per_key()[&k2.label()].evictions, 1);
+        // k1 and k3 survive.
+        cache.get_or_build(&k1, || panic!("k1 evicted")).unwrap();
+        cache.get_or_build(&k3, || panic!("k3 evicted")).unwrap();
+    }
+
+    #[test]
+    fn tiny_budget_keeps_exactly_the_newest_entry() {
+        let (k1, d1, p1) = build_pair(100, 1);
+        let (k2, d2, p2) = build_pair(100, 2);
+        let mut cache = PlanCache::new(1); // smaller than any plan
+        cache.get_or_build(&k1, || Ok((d1, p1))).unwrap();
+        assert_eq!(cache.len(), 1, "newest entry is spared");
+        cache.get_or_build(&k2, || Ok((d2, p2))).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.evictions(), 1);
+        // k2 is resident, k1 must rebuild.
+        cache.get_or_build(&k2, || panic!("cached")).unwrap();
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn build_errors_do_not_poison_the_cache() {
+        let (key, d, plan) = build_pair(100, 1);
+        let mut cache = PlanCache::new(usize::MAX);
+        let err = cache.get_or_build(&key, || anyhow::bail!("mtx file vanished"));
+        assert!(err.is_err());
+        assert_eq!(cache.len(), 0);
+        // The next attempt can still succeed.
+        let (_, _, hit) = cache.get_or_build(&key, || Ok((d, plan))).unwrap();
+        assert!(!hit);
+        assert_eq!(cache.misses(), 2);
+    }
+}

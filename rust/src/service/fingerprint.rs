@@ -1,0 +1,81 @@
+//! Cache keys: matrix content × decomposition recipe.
+//!
+//! A [`PlanKey`] identifies everything that determines a
+//! `TwoLevelDecomposition` + `CommPlan` pair: the structural
+//! [`MatrixFingerprint`] of the operator (so the same matrix reached by
+//! name or by MatrixMarket ingest shares an entry), the inter/intra
+//! [`Combination`], the concrete partitioner pair, the storage
+//! [`FormatKind`], and the cluster shape (f nodes × c cores). Two
+//! requests with equal keys can share a cached plan and a warm engine;
+//! anything differing forces a rebuild.
+
+use crate::partition::combined::Combination;
+use crate::partition::PartitionerKind;
+use crate::sparse::{FormatKind, MatrixFingerprint};
+
+/// Identity of one cacheable decomposition + plan.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Structural fingerprint of the operator.
+    pub fingerprint: MatrixFingerprint,
+    /// Inter/intra axis combination.
+    pub combo: Combination,
+    /// Inter-node partitioner.
+    pub inter: PartitionerKind,
+    /// Intra-node partitioner.
+    pub intra: PartitionerKind,
+    /// Per-fragment storage selection.
+    pub format: FormatKind,
+    /// Nodes.
+    pub f: usize,
+    /// Cores per node.
+    pub c: usize,
+}
+
+impl PlanKey {
+    /// Compact human-readable tag for report tables, e.g.
+    /// `862ade9f/NL-HL/nezgt+hypergraph/csr/2x2`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}+{}/{}/{}x{}",
+            self.fingerprint.short(),
+            self.combo.name(),
+            self.inter.name(),
+            self.intra.name(),
+            self.format.name(),
+            self.f,
+            self.c
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{fingerprint_coo, Coo};
+
+    fn key(format: FormatKind) -> PlanKey {
+        let m = Coo::from_triplets(2, 2, [(0, 0, 1.0), (0, 1, 2.0), (1, 1, 3.0)]).unwrap();
+        PlanKey {
+            fingerprint: fingerprint_coo(&m),
+            combo: Combination::NlHl,
+            inter: PartitionerKind::Nezgt,
+            intra: PartitionerKind::Hypergraph,
+            format,
+            f: 2,
+            c: 2,
+        }
+    }
+
+    #[test]
+    fn label_names_every_dimension() {
+        let label = key(FormatKind::Csr).label();
+        assert_eq!(label, "862ade9f/NL-HL/nezgt+hypergraph/csr/2x2");
+    }
+
+    #[test]
+    fn format_is_part_of_the_key() {
+        assert_ne!(key(FormatKind::Csr), key(FormatKind::Ell));
+        assert_eq!(key(FormatKind::Csr), key(FormatKind::Csr));
+    }
+}

@@ -1,0 +1,356 @@
+//! `ServiceReport`: the serving-side companion of `PhaseTimes`.
+//!
+//! Where `PhaseTimes` decomposes one matvec into scatter / compute /
+//! gather, the [`ServiceReport`] decomposes a whole served session:
+//! admission outcomes, plan-cache effectiveness, engine-pool reuse,
+//! queue-wait and end-to-end latency percentiles, and throughput in
+//! solves/sec and matvecs/sec. It renders as a fixed-width table for the
+//! terminal and as a flat JSON object for dashboards; the raw per-request
+//! [`RequestOutcome`]s ride along for tests and offline analysis.
+
+/// Terminal state of one request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RequestStatus {
+    /// Admitted, solved, reported.
+    Completed,
+    /// Admitted but the solve errored (reason attached).
+    Failed(String),
+    /// Rejected at admission: queue at capacity (open-loop mode).
+    RejectedFull,
+    /// Rejected at admission: invalid combination (reason attached).
+    RejectedInvalid(String),
+}
+
+/// What happened to one request, echoed with its trace id.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    /// Request id from the trace / workload.
+    pub id: usize,
+    /// Matrix source of the request.
+    pub matrix: String,
+    /// Terminal state.
+    pub status: RequestStatus,
+    /// Whether the plan came from the cache.
+    pub cache_hit: bool,
+    /// Whether the engine was a warm pool reuse.
+    pub engine_reused: bool,
+    /// Seconds between admission and a worker picking the request up.
+    pub queue_wait_s: f64,
+    /// Seconds between admission and the outcome (end-to-end).
+    pub latency_s: f64,
+    /// Solver iterations (max over panel columns for `nrhs > 1`).
+    pub iterations: usize,
+    /// Solver convergence flag (all columns for `nrhs > 1`).
+    pub converged: bool,
+    /// Distributed matvec applications performed (panel column count ×
+    /// panel applies for batched solves).
+    pub matvecs: usize,
+    /// The plan-cache key label this request resolved to (empty for
+    /// rejections).
+    pub key_label: String,
+    /// The solution panel, kept only when the service runs with
+    /// `keep_solutions` (tests); `None` otherwise.
+    pub x: Option<Vec<f64>>,
+}
+
+impl RequestOutcome {
+    /// True when the request was admitted and solved.
+    pub fn is_completed(&self) -> bool {
+        self.status == RequestStatus::Completed
+    }
+}
+
+/// Per-cache-key counters surfaced in the report.
+#[derive(Clone, Debug)]
+pub struct KeyReport {
+    /// [`super::fingerprint::PlanKey::label`] of the entry.
+    pub key: String,
+    /// Cache hits on this key.
+    pub hits: usize,
+    /// Cache misses (builds) on this key.
+    pub misses: usize,
+    /// Times this key was evicted under the byte budget.
+    pub evictions: usize,
+}
+
+/// Aggregated serving metrics for one service session.
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    /// Requests solved.
+    pub completed: usize,
+    /// Requests admitted whose solve errored.
+    pub failed: usize,
+    /// Typed queue-full rejections.
+    pub rejected_full: usize,
+    /// Typed invalid-combination rejections.
+    pub rejected_invalid: usize,
+    /// Plan-cache hits.
+    pub cache_hits: usize,
+    /// Plan-cache misses (decompose + plan builds).
+    pub cache_misses: usize,
+    /// Plan-cache evictions under the byte budget.
+    pub cache_evictions: usize,
+    /// Estimated resident bytes of the cache at shutdown.
+    pub cache_bytes: usize,
+    /// Engines built by the pool.
+    pub engines_created: usize,
+    /// Checkouts served warm.
+    pub engines_reused: usize,
+    /// Idle engines retired to make room.
+    pub engines_evicted: usize,
+    /// High-water mark of live engines.
+    pub engine_peak: usize,
+    /// Median queue wait, milliseconds.
+    pub queue_wait_p50_ms: f64,
+    /// 95th-percentile queue wait, milliseconds.
+    pub queue_wait_p95_ms: f64,
+    /// Median end-to-end latency, milliseconds.
+    pub latency_p50_ms: f64,
+    /// 95th-percentile end-to-end latency, milliseconds.
+    pub latency_p95_ms: f64,
+    /// Wall-clock seconds of the whole session.
+    pub wall_s: f64,
+    /// Completed solves per second of wall clock.
+    pub solves_per_sec: f64,
+    /// Distributed matvec applications per second of wall clock.
+    pub matvecs_per_sec: f64,
+    /// Per-key cache counters, most-used first.
+    pub per_key: Vec<KeyReport>,
+    /// Raw per-request outcomes (trace order not guaranteed).
+    pub outcomes: Vec<RequestOutcome>,
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (0 when empty).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = (p / 100.0) * (sorted.len() - 1) as f64;
+    let idx = (pos.round() as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl ServiceReport {
+    /// Fraction of plan lookups served from the cache (0 when none).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Requests that reached a terminal state (completed + failed +
+    /// rejected) — the accounting identity the tests pin against the
+    /// submitted count: nothing dropped, nothing wedged.
+    pub fn accounted(&self) -> usize {
+        self.completed + self.failed + self.rejected_full + self.rejected_invalid
+    }
+
+    /// Fixed-width terminal table.
+    pub fn table(&self) -> String {
+        let mut t = String::new();
+        t.push_str("service report\n");
+        t.push_str(
+            "--------------------------------------------------------------------------\n",
+        );
+        t.push_str(&format!(
+            "requests     completed={} failed={} rejected(queue-full)={} rejected(invalid)={}\n",
+            self.completed, self.failed, self.rejected_full, self.rejected_invalid
+        ));
+        t.push_str(&format!(
+            "plan cache   hits={} misses={} hit-rate={:.1}% evictions={} resident={} B\n",
+            self.cache_hits,
+            self.cache_misses,
+            100.0 * self.hit_rate(),
+            self.cache_evictions,
+            self.cache_bytes
+        ));
+        t.push_str(&format!(
+            "engine pool  created={} reused={} evicted={} peak-live={}\n",
+            self.engines_created, self.engines_reused, self.engines_evicted, self.engine_peak
+        ));
+        t.push_str(&format!(
+            "queue wait   p50={:.3} ms  p95={:.3} ms\n",
+            self.queue_wait_p50_ms, self.queue_wait_p95_ms
+        ));
+        t.push_str(&format!(
+            "latency      p50={:.3} ms  p95={:.3} ms (admission -> solution)\n",
+            self.latency_p50_ms, self.latency_p95_ms
+        ));
+        t.push_str(&format!(
+            "throughput   {:.2} solves/s  {:.1} matvecs/s  over {:.3} s wall\n",
+            self.solves_per_sec, self.matvecs_per_sec, self.wall_s
+        ));
+        if !self.per_key.is_empty() {
+            t.push_str("per-key      hits  misses  evict  key\n");
+            for k in &self.per_key {
+                t.push_str(&format!(
+                    "             {:>4}  {:>6}  {:>5}  {}\n",
+                    k.hits, k.misses, k.evictions, k.key
+                ));
+            }
+        }
+        t
+    }
+
+    /// Flat JSON object with the aggregate metrics and the per-key
+    /// counter list (per-request outcomes are not serialised).
+    pub fn to_json(&self) -> String {
+        let mut keys = String::new();
+        for (i, k) in self.per_key.iter().enumerate() {
+            if i > 0 {
+                keys.push_str(",\n");
+            }
+            keys.push_str(&format!(
+                "    {{\"key\": \"{}\", \"hits\": {}, \"misses\": {}, \"evictions\": {}}}",
+                json_escape(&k.key),
+                k.hits,
+                k.misses,
+                k.evictions
+            ));
+        }
+        format!(
+            "{{\n  \"completed\": {},\n  \"failed\": {},\n  \"rejected_full\": {},\n  \
+             \"rejected_invalid\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \
+             \"cache_evictions\": {},\n  \"cache_bytes\": {},\n  \"hit_rate\": {:.6},\n  \
+             \"engines_created\": {},\n  \"engines_reused\": {},\n  \"engines_evicted\": {},\n  \
+             \"engine_peak\": {},\n  \"queue_wait_p50_ms\": {:.6},\n  \
+             \"queue_wait_p95_ms\": {:.6},\n  \"latency_p50_ms\": {:.6},\n  \
+             \"latency_p95_ms\": {:.6},\n  \"wall_s\": {:.6},\n  \"solves_per_sec\": {:.3},\n  \
+             \"matvecs_per_sec\": {:.3},\n  \"per_key\": [\n{}\n  ]\n}}\n",
+            self.completed,
+            self.failed,
+            self.rejected_full,
+            self.rejected_invalid,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_evictions,
+            self.cache_bytes,
+            self.hit_rate(),
+            self.engines_created,
+            self.engines_reused,
+            self.engines_evicted,
+            self.engine_peak,
+            self.queue_wait_p50_ms,
+            self.queue_wait_p95_ms,
+            self.latency_p50_ms,
+            self.latency_p95_ms,
+            self.wall_s,
+            self.solves_per_sec,
+            self.matvecs_per_sec,
+            keys
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ServiceReport {
+        ServiceReport {
+            completed: 18,
+            failed: 0,
+            rejected_full: 1,
+            rejected_invalid: 2,
+            cache_hits: 15,
+            cache_misses: 3,
+            cache_evictions: 1,
+            cache_bytes: 123_456,
+            engines_created: 3,
+            engines_reused: 15,
+            engines_evicted: 0,
+            engine_peak: 3,
+            queue_wait_p50_ms: 0.4,
+            queue_wait_p95_ms: 1.9,
+            latency_p50_ms: 11.5,
+            latency_p95_ms: 30.25,
+            wall_s: 0.5,
+            solves_per_sec: 36.0,
+            matvecs_per_sec: 7200.0,
+            per_key: vec![KeyReport {
+                key: "862ade9f/NL-HL/nezgt+hypergraph/csr/2x2".into(),
+                hits: 15,
+                misses: 3,
+                evictions: 1,
+            }],
+            outcomes: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[3.0], 95.0), 3.0);
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 6.0); // round(4.5) = 5 -> v[5]
+        assert_eq!(percentile(&v, 95.0), 10.0);
+        assert_eq!(percentile(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn hit_rate_and_accounting() {
+        let r = sample();
+        assert!((r.hit_rate() - 15.0 / 18.0).abs() < 1e-12);
+        assert_eq!(r.accounted(), 21);
+        let empty = ServiceReport { cache_hits: 0, cache_misses: 0, ..sample() };
+        assert_eq!(empty.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn json_contains_the_acceptance_keys() {
+        let json = sample().to_json();
+        for key in [
+            "\"hit_rate\"",
+            "\"latency_p50_ms\"",
+            "\"latency_p95_ms\"",
+            "\"solves_per_sec\"",
+            "\"queue_wait_p95_ms\"",
+            "\"matvecs_per_sec\"",
+            "\"per_key\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(json.contains("\"hit_rate\": 0.833333"));
+        assert!(json.contains("862ade9f/NL-HL"));
+    }
+
+    #[test]
+    fn json_escapes_path_keys() {
+        let mut r = sample();
+        r.per_key[0].key = "dir\\weird\"name.mtx".into();
+        let json = r.to_json();
+        assert!(json.contains("dir\\\\weird\\\"name.mtx"));
+    }
+
+    #[test]
+    fn table_lists_every_section() {
+        let t = sample().table();
+        for needle in
+            ["requests", "plan cache", "engine pool", "queue wait", "latency", "throughput"]
+        {
+            assert!(t.contains(needle), "missing {needle}");
+        }
+        assert!(t.contains("hit-rate=83.3%"));
+        assert!(t.contains("per-key"));
+    }
+}

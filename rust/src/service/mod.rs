@@ -1,0 +1,41 @@
+//! Solve-as-a-service: a persistent coordinator serving solve requests.
+//!
+//! The sweep driver amortises nothing: every cell pays partitioning,
+//! plan freezing and engine spawn from scratch. This module is the
+//! serving posture instead — one long-lived coordinator multiplexing a
+//! stream of solve requests over shared infrastructure:
+//!
+//! - [`trace`] — the request model: a [`SolveRequest`] names a matrix
+//!   source, a partitioner/format/solver combination and an `nrhs`-wide
+//!   RHS panel; parsed from a JSONL trace file or synthesised by the
+//!   built-in closed-loop workload generator;
+//! - [`queue`] — bounded admission with typed rejection
+//!   ([`AdmitError`]): full queue and invalid combination are first-class
+//!   outcomes, not panics;
+//! - [`fingerprint`] — the cache identity: a structural
+//!   [`crate::sparse::MatrixFingerprint`] × combination × partitioners ×
+//!   format × (f, c) shape, as a hashable [`PlanKey`];
+//! - [`cache`] — the [`PlanCache`]: decomposition + frozen `CommPlan`
+//!   pairs, LRU-evicted under a byte budget;
+//! - [`pool`] — the [`EnginePool`]: persistent `PmvcEngine`s checked
+//!   out per request and returned warm, bounding live worker threads;
+//! - [`server`] — [`run_service`]: clients → queue → workers → report;
+//! - [`metrics`] — the [`ServiceReport`]: hit rates, queue-wait and
+//!   end-to-end latency percentiles, solves/sec and matvecs/sec,
+//!   per-key counters; rendered as a table or JSON.
+
+pub mod cache;
+pub mod fingerprint;
+pub mod metrics;
+pub mod pool;
+pub mod queue;
+pub mod server;
+pub mod trace;
+
+pub use cache::{entry_bytes, KeyStats, PlanCache};
+pub use fingerprint::PlanKey;
+pub use metrics::{KeyReport, RequestOutcome, RequestStatus, ServiceReport};
+pub use pool::{EnginePool, PoolStats};
+pub use queue::{AdmissionQueue, AdmitError};
+pub use server::{one_shot_solution, rhs_panel, run_service, ServeConfig};
+pub use trace::{parse_trace, workload, RequestDefaults, SolveRequest};

@@ -1,0 +1,258 @@
+//! Multiplexed pool of persistent `PmvcEngine`s.
+//!
+//! Spawning an engine means spawning f × c worker threads and shipping
+//! them the frozen plan — worth amortising at least as much as the plan
+//! itself. The [`EnginePool`] keeps up to `capacity` engines alive
+//! (busy + idle combined, so the thread bill is bounded); a checkout for
+//! a [`PlanKey`] reuses an idle engine warm on that key, builds a fresh
+//! one if the pool has headroom, retires the least-recently-used idle
+//! engine of another key to make room, or blocks until a slot frees.
+//! Engines return to the idle set warm on
+//! [`EnginePool::checkin`] — their scratch buffers and parked workers
+//! survive to the next request.
+
+use super::fingerprint::PlanKey;
+use crate::pmvc::PmvcEngine;
+use std::sync::{Condvar, Mutex};
+
+/// Pool counters for the service report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Engines built (worker pools spawned).
+    pub created: usize,
+    /// Checkouts served by a warm idle engine.
+    pub reused: usize,
+    /// Idle engines retired to make room for another key.
+    pub evicted: usize,
+    /// High-water mark of live engines (never exceeds the capacity).
+    pub peak_live: usize,
+}
+
+struct IdleEngine {
+    key: PlanKey,
+    engine: PmvcEngine,
+    last_used: u64,
+}
+
+struct PoolInner {
+    idle: Vec<IdleEngine>,
+    /// Engines alive right now: checked out + idle.
+    live: usize,
+    clock: u64,
+    stats: PoolStats,
+}
+
+enum Checkout {
+    Reuse(PmvcEngine),
+    /// Slot reserved; carries an evicted idle engine to drop outside
+    /// the lock (dropping joins its worker threads).
+    Build(Option<PmvcEngine>),
+}
+
+/// Bounded pool of warm engines, keyed by the plan they were built for.
+pub struct EnginePool {
+    capacity: usize,
+    inner: Mutex<PoolInner>,
+    available: Condvar,
+}
+
+impl EnginePool {
+    /// Pool bounded at `capacity` live engines (floored at 1).
+    pub fn new(capacity: usize) -> Self {
+        EnginePool {
+            capacity: capacity.max(1),
+            inner: Mutex::new(PoolInner {
+                idle: Vec::new(),
+                live: 0,
+                clock: 0,
+                stats: PoolStats::default(),
+            }),
+            available: Condvar::new(),
+        }
+    }
+
+    /// The configured bound on live engines.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Snapshot of the pool counters.
+    pub fn stats(&self) -> PoolStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Engines alive right now (checked out + idle).
+    pub fn live(&self) -> usize {
+        self.inner.lock().unwrap().live
+    }
+
+    /// Check out an engine for `key`: a warm idle engine when one
+    /// matches (returns `(engine, true)`), otherwise a fresh one from
+    /// `build` (`(engine, false)`), evicting the LRU idle engine of
+    /// another key or blocking for a slot when the pool is at capacity.
+    /// `build` runs outside the pool lock; on error the reserved slot is
+    /// released, so a failed build never wedges other requests.
+    pub fn checkout(
+        &self,
+        key: &PlanKey,
+        build: impl FnOnce() -> crate::Result<PmvcEngine>,
+    ) -> crate::Result<(PmvcEngine, bool)> {
+        let action = {
+            let mut inner = self.inner.lock().unwrap();
+            loop {
+                if let Some(pos) = inner.idle.iter().position(|e| e.key == *key) {
+                    let idle = inner.idle.swap_remove(pos);
+                    inner.stats.reused += 1;
+                    break Checkout::Reuse(idle.engine);
+                }
+                if inner.live < self.capacity {
+                    inner.live += 1;
+                    inner.stats.created += 1;
+                    inner.stats.peak_live = inner.stats.peak_live.max(inner.live);
+                    break Checkout::Build(None);
+                }
+                if !inner.idle.is_empty() {
+                    let pos = inner
+                        .idle
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, e)| e.last_used)
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    let victim = inner.idle.swap_remove(pos);
+                    inner.stats.evicted += 1;
+                    // The victim's slot transfers straight to this
+                    // request: live count is unchanged (one retired, one
+                    // being built), and stays <= capacity throughout.
+                    inner.stats.created += 1;
+                    break Checkout::Build(Some(victim.engine));
+                }
+                // Every engine is checked out; wait for a checkin.
+                inner = self.available.wait(inner).unwrap();
+            }
+        };
+        match action {
+            Checkout::Reuse(engine) => Ok((engine, true)),
+            Checkout::Build(victim) => {
+                // Joining the evicted engine's workers happens here,
+                // outside the lock.
+                drop(victim);
+                match build() {
+                    Ok(engine) => Ok((engine, false)),
+                    Err(err) => {
+                        let mut inner = self.inner.lock().unwrap();
+                        inner.live -= 1;
+                        drop(inner);
+                        self.available.notify_one();
+                        Err(err)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Return an engine to the idle set, warm for the next checkout of
+    /// the same key.
+    pub fn checkin(&self, key: PlanKey, engine: PmvcEngine) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let last_used = inner.clock;
+        inner.idle.push(IdleEngine { key, engine, last_used });
+        drop(inner);
+        self.available.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::combined::{decompose, Combination, DecomposeConfig};
+    use crate::partition::PartitionerKind;
+    use crate::pmvc::CommPlan;
+    use crate::sparse::{fingerprint_csr, FormatKind};
+    use std::sync::Arc;
+
+    fn key_and_engine(seed: u64) -> (PlanKey, impl Fn() -> crate::Result<PmvcEngine>) {
+        let a = crate::sparse::gen::generate_spd(80, 3, 400, seed).to_csr();
+        let key = PlanKey {
+            fingerprint: fingerprint_csr(&a),
+            combo: Combination::NlHl,
+            inter: PartitionerKind::Nezgt,
+            intra: PartitionerKind::Hypergraph,
+            format: FormatKind::Csr,
+            f: 2,
+            c: 2,
+        };
+        let d = Arc::new(decompose(&a, key.combo, 2, 2, &DecomposeConfig::default()).unwrap());
+        let plan = Arc::new(CommPlan::build(&d).unwrap());
+        (key, move || PmvcEngine::with_plan(Arc::clone(&d), Arc::clone(&plan)))
+    }
+
+    #[test]
+    fn checkin_then_checkout_reuses_the_warm_engine() {
+        let (key, build) = key_and_engine(1);
+        let pool = EnginePool::new(2);
+        let (engine, reused) = pool.checkout(&key, &build).unwrap();
+        assert!(!reused);
+        assert_eq!(engine.plan_builds(), 0, "with_plan engines never rebuild the plan");
+        pool.checkin(key.clone(), engine);
+        let (engine, reused) = pool.checkout(&key, || panic!("must reuse")).unwrap();
+        assert!(reused);
+        pool.checkin(key, engine);
+        let s = pool.stats();
+        assert_eq!((s.created, s.reused, s.evicted, s.peak_live), (1, 1, 0, 1));
+    }
+
+    #[test]
+    fn full_pool_evicts_the_lru_idle_engine_of_another_key() {
+        let (k1, b1) = key_and_engine(1);
+        let (k2, b2) = key_and_engine(2);
+        let (k3, b3) = key_and_engine(3);
+        let pool = EnginePool::new(2);
+        let e1 = pool.checkout(&k1, &b1).unwrap().0;
+        let e2 = pool.checkout(&k2, &b2).unwrap().0;
+        pool.checkin(k1.clone(), e1); // k1 idles first -> LRU
+        pool.checkin(k2.clone(), e2);
+        let (e3, reused) = pool.checkout(&k3, &b3).unwrap();
+        assert!(!reused);
+        let s = pool.stats();
+        assert_eq!(s.evicted, 1);
+        assert_eq!(s.peak_live, 2);
+        assert_eq!(pool.live(), 2);
+        // k2 survived, k1 was the victim.
+        let (e2, reused) = pool.checkout(&k2, || panic!("k2 was evicted")).unwrap();
+        assert!(reused);
+        pool.checkin(k2, e2);
+        pool.checkin(k3, e3);
+    }
+
+    #[test]
+    fn failed_build_releases_the_reserved_slot() {
+        let (k1, b1) = key_and_engine(1);
+        let pool = EnginePool::new(1);
+        let err = pool.checkout(&k1, || anyhow::bail!("no such plan"));
+        assert!(err.is_err());
+        assert_eq!(pool.live(), 0);
+        // The slot is free again.
+        let (engine, _) = pool.checkout(&k1, &b1).unwrap();
+        pool.checkin(k1, engine);
+    }
+
+    #[test]
+    fn checkout_blocks_until_a_busy_engine_returns() {
+        let (key, build) = key_and_engine(1);
+        let pool = Arc::new(EnginePool::new(1));
+        let (engine, _) = pool.checkout(&key, &build).unwrap();
+        let pool2 = Arc::clone(&pool);
+        let key2 = key.clone();
+        let waiter = std::thread::spawn(move || {
+            let (engine, reused) = pool2.checkout(&key2, || panic!("capacity 1")).unwrap();
+            pool2.checkin(key2, engine);
+            reused
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        pool.checkin(key, engine);
+        assert!(waiter.join().unwrap(), "the returned engine is reused warm");
+        assert_eq!(pool.stats().peak_live, 1);
+    }
+}

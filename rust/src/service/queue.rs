@@ -1,0 +1,214 @@
+//! Bounded admission queue with typed rejection.
+//!
+//! Requests enter the service through an [`AdmissionQueue`]: a fixed-depth
+//! MPMC queue guarded by a mutex and two condition variables. Producers
+//! either block until a slot frees ([`AdmissionQueue::push`], the
+//! closed-loop client posture) or take a typed
+//! [`AdmitError::QueueFull`] rejection immediately
+//! ([`AdmissionQueue::try_push`], the open-loop posture). Consumers
+//! ([`AdmissionQueue::pop`]) block until an item or shutdown arrives;
+//! after [`AdmissionQueue::close`] they drain the backlog and then see
+//! `None`, so no admitted request is ever dropped on shutdown.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Typed admission outcome for a request that was not accepted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The queue was at capacity (open-loop submission only).
+    QueueFull {
+        /// The configured queue depth that was exhausted.
+        capacity: usize,
+    },
+    /// The request described an invalid combination (bad solver/format
+    /// pairing, unknown matrix, zero-sized panel, ...). Raised by request
+    /// validation before the queue is involved.
+    Invalid {
+        /// Human-readable reason, surfaced in the service report.
+        reason: String,
+    },
+    /// The queue was closed; the service is shutting down.
+    Closed,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull { capacity } => {
+                write!(f, "admission queue full (depth {capacity})")
+            }
+            AdmitError::Invalid { reason } => write!(f, "invalid request: {reason}"),
+            AdmitError::Closed => write!(f, "admission queue closed"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer queue in front of the workers.
+pub struct AdmissionQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// Queue with room for `capacity` pending items (floored at 1).
+    pub fn new(capacity: usize) -> Self {
+        AdmissionQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The configured depth.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Items currently waiting.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    /// True when no items are waiting.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit `item`, blocking while the queue is full (closed-loop
+    /// backpressure). Fails only with [`AdmitError::Closed`].
+    pub fn push(&self, item: T) -> Result<(), AdmitError> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return Err(AdmitError::Closed);
+            }
+            if inner.q.len() < self.capacity {
+                inner.q.push_back(item);
+                drop(inner);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            inner = self.not_full.wait(inner).unwrap();
+        }
+    }
+
+    /// Admit `item` without blocking. A full queue yields the typed
+    /// [`AdmitError::QueueFull`] rejection (and drops the item — callers
+    /// record the rejection from fields captured beforehand).
+    pub fn try_push(&self, item: T) -> Result<(), AdmitError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(AdmitError::Closed);
+        }
+        if inner.q.len() >= self.capacity {
+            return Err(AdmitError::QueueFull { capacity: self.capacity });
+        }
+        inner.q.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Take the oldest item, blocking while the queue is empty and open.
+    /// Returns `None` once the queue is closed *and* drained — admitted
+    /// work is never dropped.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.q.pop_front() {
+                drop(inner);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Close admission: pending producers fail with
+    /// [`AdmitError::Closed`]; consumers drain the backlog then stop.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        drop(inner);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn try_push_rejects_when_full_with_typed_error() {
+        let q = AdmissionQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(AdmitError::QueueFull { capacity: 2 }));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        q.try_push(3).unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn close_drains_backlog_then_stops_consumers() {
+        let q = AdmissionQueue::new(4);
+        q.push(10).unwrap();
+        q.push(11).unwrap();
+        q.close();
+        assert_eq!(q.push(12), Err(AdmitError::Closed));
+        assert_eq!(q.try_push(12), Err(AdmitError::Closed));
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(11));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn blocking_push_waits_for_a_slot() {
+        let q = Arc::new(AdmissionQueue::new(1));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || q2.push(2));
+        // Let the producer reach the wait, then free a slot.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(1));
+        producer.join().unwrap().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn pop_blocks_until_an_item_arrives() {
+        let q = Arc::new(AdmissionQueue::new(2));
+        let q2 = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push(7).unwrap();
+        assert_eq!(consumer.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn errors_render_their_reason() {
+        let e = AdmitError::QueueFull { capacity: 8 };
+        assert!(e.to_string().contains("depth 8"));
+        let e = AdmitError::Invalid { reason: "nrhs 0".into() };
+        assert!(e.to_string().contains("nrhs 0"));
+        assert!(AdmitError::Closed.to_string().contains("closed"));
+    }
+}

@@ -1,0 +1,606 @@
+//! The service loop: clients → admission queue → workers → report.
+//!
+//! [`run_service`] wires the subsystem together for one session:
+//!
+//! - **client threads** drain the request list closed-loop (submit one,
+//!   wait for its outcome, submit the next — the paper's "many
+//!   concurrent users" shape). Invalid requests are rejected typed
+//!   before touching the queue; with
+//!   [`ServeConfig::reject_when_full`] a full queue rejects typed
+//!   instead of exerting backpressure;
+//! - **worker threads** pop requests, resolve the matrix (memoised per
+//!   source × seed, fingerprinted once), take the decomposition + frozen
+//!   plan from the [`PlanCache`], check a warm [`PmvcEngine`] out of the
+//!   [`EnginePool`], run the request's solver over its `nrhs`-wide RHS
+//!   panel in one batched solve, and return the engine warm;
+//! - the main thread joins everything, drains the outcomes and folds
+//!   them into a [`ServiceReport`].
+//!
+//! Every path is panic-free: a request that fails (missing `.mtx` file,
+//! singular diagonal, ...) reports `Failed` and the session keeps
+//! serving. [`one_shot_solution`] is the reference path — the same
+//! solve without queue, cache or pool — used by the tests to pin
+//! served answers at 1e-9.
+
+use super::cache::PlanCache;
+use super::fingerprint::PlanKey;
+use super::metrics::{percentile, KeyReport, RequestOutcome, RequestStatus, ServiceReport};
+use super::pool::EnginePool;
+use super::queue::{AdmissionQueue, AdmitError};
+use super::trace::SolveRequest;
+use crate::coordinator::experiment::load_matrix;
+use crate::partition::combined::{decompose, DecomposeConfig, TwoLevelDecomposition};
+use crate::pmvc::{CommPlan, PmvcEngine};
+use crate::solver::{make_solver, BatchedJacobi, BlockCg, MatVecOp, MultiVecOp, SolverKind};
+use crate::sparse::{fingerprint_csr, Csr, MatrixFingerprint};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Service-session knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Admission queue depth.
+    pub queue_depth: usize,
+    /// Engine-pool capacity (live engines, busy + idle).
+    pub engines: usize,
+    /// Worker threads consuming the queue.
+    pub workers: usize,
+    /// Client threads submitting requests.
+    pub clients: usize,
+    /// Plan-cache byte budget.
+    pub cache_bytes: usize,
+    /// Disable to rebuild decomposition + plan + engine per request
+    /// (the bench baseline; the pool is bypassed too).
+    pub cache_enabled: bool,
+    /// Submit with `try_push`: a full queue yields a typed
+    /// `RejectedFull` outcome instead of blocking the client.
+    pub reject_when_full: bool,
+    /// Keep each solution panel in its [`RequestOutcome`] (tests only —
+    /// a real session would stream them out).
+    pub keep_solutions: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_depth: 32,
+            engines: 3,
+            workers: 3,
+            clients: 4,
+            cache_bytes: 256 << 20,
+            cache_enabled: true,
+            reject_when_full: false,
+            keep_solutions: false,
+        }
+    }
+}
+
+/// A matrix resolved once per (source, seed): canonical CSR +
+/// fingerprint.
+struct LoadedMatrix {
+    csr: Csr,
+    fp: MatrixFingerprint,
+}
+
+/// One admitted request in flight.
+struct Envelope {
+    spec: SolveRequest,
+    enqueued: Instant,
+    done: mpsc::Sender<RequestOutcome>,
+}
+
+/// Shared state of one service session.
+struct ServiceState {
+    cfg: ServeConfig,
+    queue: AdmissionQueue<Envelope>,
+    cache: Mutex<PlanCache>,
+    pool: EnginePool,
+    matrices: Mutex<HashMap<(String, u64), Arc<LoadedMatrix>>>,
+}
+
+/// What a successful solve hands back to the outcome builder.
+struct Solved {
+    x: Vec<f64>,
+    iterations: usize,
+    converged: bool,
+    matvecs: usize,
+    cache_hit: bool,
+    engine_reused: bool,
+    key_label: String,
+}
+
+/// `MatVecOp`/`MultiVecOp` adapter over a checked-out engine, counting
+/// distributed applications for the throughput metrics.
+struct EngineOp<'a> {
+    engine: &'a mut PmvcEngine,
+    matvecs: usize,
+}
+
+impl MatVecOp for EngineOp<'_> {
+    fn order(&self) -> usize {
+        self.engine.order()
+    }
+
+    fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
+        self.engine.apply_into(x, y)?;
+        self.matvecs += 1;
+        Ok(())
+    }
+}
+
+impl MultiVecOp for EngineOp<'_> {
+    fn apply_multi_into(&mut self, x: &[f64], y: &mut [f64], k: usize) -> crate::Result<()> {
+        self.engine.apply_multi_into(x, y, k)?;
+        self.matvecs += k;
+        Ok(())
+    }
+}
+
+/// The deterministic RHS panel of a request: column `j` is
+/// `A·x_true_j` with `x_true_j[i]` a small seeded affine pattern — the
+/// sweep driver's recipe, so served solves are comparable to `run`.
+pub fn rhs_panel(a: &Csr, k: usize, seed: u64) -> Vec<f64> {
+    let n = a.n_rows;
+    let mut b = Vec::with_capacity(n * k);
+    for j in 0..k {
+        let x_true: Vec<f64> = (0..n)
+            .map(|i| {
+                let mix = (i as u64).wrapping_mul(j as u64 + 1).wrapping_add(seed) % 13;
+                (mix as f64) * 0.25 - 1.5
+            })
+            .collect();
+        b.extend(a.matvec(&x_true));
+    }
+    b
+}
+
+/// Run the request's solver against a checked-out engine. `nrhs > 1`
+/// dispatches to the batched solvers (one shared panel apply per
+/// iteration); `nrhs == 1` goes through the classic registry.
+fn run_solver(a: &Csr, spec: &SolveRequest, engine: &mut PmvcEngine) -> crate::Result<Solved> {
+    let b = rhs_panel(a, spec.nrhs, spec.seed);
+    let mut op = EngineOp { engine, matvecs: 0 };
+    if spec.nrhs > 1 {
+        let report = match spec.solver {
+            SolverKind::Cg => BlockCg::new()
+                .tol(spec.tol)
+                .max_iters(spec.max_iters)
+                .record_history(false)
+                .solve_multi(&mut op, &b, spec.nrhs)?,
+            SolverKind::Jacobi => BatchedJacobi::from_matrix(a)?
+                .tol(spec.tol)
+                .max_iters(spec.max_iters)
+                .record_history(false)
+                .solve_multi(&mut op, &b, spec.nrhs)?,
+            other => anyhow::bail!(
+                "nrhs {} needs a batched solver (cg|jacobi), got {other}",
+                spec.nrhs
+            ),
+        };
+        Ok(Solved {
+            x: report.x,
+            iterations: report.max_iterations(),
+            converged: report.all_converged(),
+            matvecs: op.matvecs,
+            cache_hit: false,
+            engine_reused: false,
+            key_label: String::new(),
+        })
+    } else {
+        let mut solver = make_solver(spec.solver, a)?;
+        solver.options_mut().tol = spec.tol;
+        solver.options_mut().max_iters = spec.max_iters;
+        solver.options_mut().record_history = false;
+        let report = solver.solve(&mut op, &b)?;
+        Ok(Solved {
+            x: report.x,
+            iterations: report.iterations,
+            converged: report.converged,
+            matvecs: op.matvecs,
+            cache_hit: false,
+            engine_reused: false,
+            key_label: String::new(),
+        })
+    }
+}
+
+/// Resolve (and memoise) the request's matrix: load/generate once per
+/// (source, seed), fingerprint once.
+fn load_cached_matrix(
+    state: &ServiceState,
+    matrix: &str,
+    seed: u64,
+) -> crate::Result<Arc<LoadedMatrix>> {
+    let mut matrices = state.matrices.lock().unwrap();
+    if let Some(m) = matrices.get(&(matrix.to_string(), seed)) {
+        return Ok(Arc::clone(m));
+    }
+    let csr = load_matrix(matrix, seed)?;
+    let fp = fingerprint_csr(&csr);
+    let m = Arc::new(LoadedMatrix { csr, fp });
+    matrices.insert((matrix.to_string(), seed), Arc::clone(&m));
+    Ok(m)
+}
+
+/// Build decomposition + frozen plan for `spec` over matrix `a`.
+fn build_plan_pair(
+    a: &Csr,
+    spec: &SolveRequest,
+) -> crate::Result<(Arc<TwoLevelDecomposition>, Arc<CommPlan>)> {
+    let dcfg =
+        DecomposeConfig::with_kinds(spec.partitioner, spec.intra)?.with_format(spec.format);
+    let d = Arc::new(decompose(a, spec.combo, spec.nodes, spec.cores, &dcfg)?);
+    let plan = Arc::new(CommPlan::build(&d)?);
+    Ok((d, plan))
+}
+
+/// Serve one admitted request: matrix → plan cache → engine pool →
+/// batched solve. Every error is caught and reported, never panicked.
+fn solve_one(state: &ServiceState, spec: &SolveRequest) -> crate::Result<Solved> {
+    let m = load_cached_matrix(state, &spec.matrix, spec.seed)?;
+    let key = PlanKey {
+        fingerprint: m.fp,
+        combo: spec.combo,
+        inter: spec.partitioner,
+        intra: spec.intra,
+        format: spec.format,
+        f: spec.nodes,
+        c: spec.cores,
+    };
+    if state.cfg.cache_enabled {
+        let (d, plan, hit) = {
+            let mut cache = state.cache.lock().unwrap();
+            cache.get_or_build(&key, || build_plan_pair(&m.csr, spec))?
+        };
+        let (mut engine, reused) = state
+            .pool
+            .checkout(&key, || PmvcEngine::with_plan(Arc::clone(&d), Arc::clone(&plan)))?;
+        let solved = run_solver(&m.csr, spec, &mut engine);
+        // The engine goes back warm even when the solve failed — the
+        // engine itself is still healthy (solver errors are math/shape
+        // errors, not worker deaths).
+        state.pool.checkin(key.clone(), engine);
+        let s = solved?;
+        Ok(Solved { cache_hit: hit, engine_reused: reused, key_label: key.label(), ..s })
+    } else {
+        // Baseline posture: everything rebuilt per request.
+        let (d, plan) = build_plan_pair(&m.csr, spec)?;
+        let mut engine = PmvcEngine::with_plan(d, plan)?;
+        let s = run_solver(&m.csr, spec, &mut engine)?;
+        Ok(Solved { key_label: key.label(), ..s })
+    }
+}
+
+/// Worker side of one envelope: solve, stamp timings, send the outcome.
+fn handle_request(state: &ServiceState, env: Envelope) {
+    let picked_up = Instant::now();
+    let queue_wait_s = picked_up.saturating_duration_since(env.enqueued).as_secs_f64();
+    let result = solve_one(state, &env.spec);
+    let latency_s = env.enqueued.elapsed().as_secs_f64();
+    let outcome = match result {
+        Ok(s) => RequestOutcome {
+            id: env.spec.id,
+            matrix: env.spec.matrix.clone(),
+            status: RequestStatus::Completed,
+            cache_hit: s.cache_hit,
+            engine_reused: s.engine_reused,
+            queue_wait_s,
+            latency_s,
+            iterations: s.iterations,
+            converged: s.converged,
+            matvecs: s.matvecs,
+            key_label: s.key_label,
+            x: if state.cfg.keep_solutions { Some(s.x) } else { None },
+        },
+        Err(e) => RequestOutcome {
+            id: env.spec.id,
+            matrix: env.spec.matrix.clone(),
+            status: RequestStatus::Failed(format!("{e:#}")),
+            cache_hit: false,
+            engine_reused: false,
+            queue_wait_s,
+            latency_s,
+            iterations: 0,
+            converged: false,
+            matvecs: 0,
+            key_label: String::new(),
+            x: None,
+        },
+    };
+    // A dead receiver means the client went away; nothing to do.
+    let _ = env.done.send(outcome);
+}
+
+/// A rejection outcome (never queued, zero wait).
+fn rejected(spec_id: usize, matrix: String, status: RequestStatus) -> RequestOutcome {
+    RequestOutcome {
+        id: spec_id,
+        matrix,
+        status,
+        cache_hit: false,
+        engine_reused: false,
+        queue_wait_s: 0.0,
+        latency_s: 0.0,
+        iterations: 0,
+        converged: false,
+        matvecs: 0,
+        key_label: String::new(),
+        x: None,
+    }
+}
+
+/// Client side: pull the next request off the shared feed, validate,
+/// submit, wait for its outcome (closed loop), forward it.
+fn client_loop(
+    state: &ServiceState,
+    feed: &Mutex<std::vec::IntoIter<SolveRequest>>,
+    out: &mpsc::Sender<RequestOutcome>,
+) {
+    loop {
+        let spec = {
+            let mut it = feed.lock().unwrap();
+            it.next()
+        };
+        let Some(spec) = spec else { return };
+        if let Err(reason) = spec.validate() {
+            let id = spec.id;
+            let _ =
+                out.send(rejected(id, spec.matrix, RequestStatus::RejectedInvalid(reason)));
+            continue;
+        }
+        let id = spec.id;
+        let matrix = spec.matrix.clone();
+        let (done_tx, done_rx) = mpsc::channel();
+        let env = Envelope { spec, enqueued: Instant::now(), done: done_tx };
+        let pushed = if state.cfg.reject_when_full {
+            state.queue.try_push(env)
+        } else {
+            state.queue.push(env)
+        };
+        match pushed {
+            Ok(()) => {
+                if let Ok(outcome) = done_rx.recv() {
+                    let _ = out.send(outcome);
+                }
+            }
+            Err(AdmitError::QueueFull { .. }) => {
+                let _ = out.send(rejected(id, matrix, RequestStatus::RejectedFull));
+            }
+            Err(_) => return, // closed: session shutting down
+        }
+    }
+}
+
+/// Fold the session into a [`ServiceReport`].
+fn build_report(state: &ServiceState, outcomes: Vec<RequestOutcome>, wall_s: f64) -> ServiceReport {
+    let mut completed = 0;
+    let mut failed = 0;
+    let mut rejected_full = 0;
+    let mut rejected_invalid = 0;
+    let mut matvecs_total = 0usize;
+    let mut waits: Vec<f64> = Vec::new();
+    let mut latencies: Vec<f64> = Vec::new();
+    for o in &outcomes {
+        match &o.status {
+            RequestStatus::Completed => {
+                completed += 1;
+                matvecs_total += o.matvecs;
+                waits.push(o.queue_wait_s);
+                latencies.push(o.latency_s);
+            }
+            RequestStatus::Failed(_) => failed += 1,
+            RequestStatus::RejectedFull => rejected_full += 1,
+            RequestStatus::RejectedInvalid(_) => rejected_invalid += 1,
+        }
+    }
+    waits.sort_by(f64::total_cmp);
+    latencies.sort_by(f64::total_cmp);
+    let cache = state.cache.lock().unwrap();
+    let mut per_key: Vec<KeyReport> = cache
+        .per_key()
+        .iter()
+        .map(|(key, s)| KeyReport {
+            key: key.clone(),
+            hits: s.hits,
+            misses: s.misses,
+            evictions: s.evictions,
+        })
+        .collect();
+    per_key.sort_by(|a, b| (b.hits + b.misses).cmp(&(a.hits + a.misses)).then(a.key.cmp(&b.key)));
+    let pool = state.pool.stats();
+    ServiceReport {
+        completed,
+        failed,
+        rejected_full,
+        rejected_invalid,
+        cache_hits: cache.hits(),
+        cache_misses: cache.misses(),
+        cache_evictions: cache.evictions(),
+        cache_bytes: cache.total_bytes(),
+        engines_created: pool.created,
+        engines_reused: pool.reused,
+        engines_evicted: pool.evicted,
+        engine_peak: pool.peak_live,
+        queue_wait_p50_ms: 1e3 * percentile(&waits, 50.0),
+        queue_wait_p95_ms: 1e3 * percentile(&waits, 95.0),
+        latency_p50_ms: 1e3 * percentile(&latencies, 50.0),
+        latency_p95_ms: 1e3 * percentile(&latencies, 95.0),
+        wall_s,
+        solves_per_sec: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+        matvecs_per_sec: if wall_s > 0.0 { matvecs_total as f64 / wall_s } else { 0.0 },
+        per_key,
+        outcomes,
+    }
+}
+
+/// Serve `requests` through one session and report.
+///
+/// Spawns [`ServeConfig::clients`] submitters and
+/// [`ServeConfig::workers`] solvers, runs the whole list to a terminal
+/// state (completed, failed, or rejected — nothing dropped, nothing
+/// wedged), then joins every thread and aggregates the
+/// [`ServiceReport`].
+pub fn run_service(requests: Vec<SolveRequest>, cfg: &ServeConfig) -> crate::Result<ServiceReport> {
+    anyhow::ensure!(cfg.workers >= 1, "need at least one worker thread");
+    anyhow::ensure!(cfg.clients >= 1, "need at least one client thread");
+    let state = Arc::new(ServiceState {
+        cfg: cfg.clone(),
+        queue: AdmissionQueue::new(cfg.queue_depth),
+        cache: Mutex::new(PlanCache::new(cfg.cache_bytes)),
+        pool: EnginePool::new(cfg.engines),
+        matrices: Mutex::new(HashMap::new()),
+    });
+    let t0 = Instant::now();
+    let mut workers = Vec::with_capacity(cfg.workers);
+    for _ in 0..cfg.workers {
+        let st = Arc::clone(&state);
+        workers.push(std::thread::spawn(move || {
+            while let Some(env) = st.queue.pop() {
+                handle_request(&st, env);
+            }
+        }));
+    }
+    let feed = Arc::new(Mutex::new(requests.into_iter()));
+    let (out_tx, out_rx) = mpsc::channel::<RequestOutcome>();
+    let mut clients = Vec::with_capacity(cfg.clients);
+    for _ in 0..cfg.clients {
+        let st = Arc::clone(&state);
+        let feed = Arc::clone(&feed);
+        let tx = out_tx.clone();
+        clients.push(std::thread::spawn(move || client_loop(&st, &feed, &tx)));
+    }
+    drop(out_tx);
+    // Ends when every client dropped its sender (feed exhausted).
+    let outcomes: Vec<RequestOutcome> = out_rx.iter().collect();
+    for c in clients {
+        let _ = c.join();
+    }
+    state.queue.close();
+    for w in workers {
+        let _ = w.join();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(build_report(&state, outcomes, wall_s))
+}
+
+/// The reference path: the same request solved without queue, cache or
+/// pool — a fresh decomposition, plan and engine, torn down after. The
+/// integration tests pin every served solution against this at 1e-9.
+pub fn one_shot_solution(spec: &SolveRequest) -> crate::Result<(Vec<f64>, bool)> {
+    let a = load_matrix(&spec.matrix, spec.seed)?;
+    let (d, plan) = build_plan_pair(&a, spec)?;
+    let mut engine = PmvcEngine::with_plan(d, plan)?;
+    let s = run_solver(&a, spec, &mut engine)?;
+    Ok((s.x, s.converged))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::trace::RequestDefaults;
+
+    fn small_defaults() -> RequestDefaults {
+        RequestDefaults { max_iters: 30, tol: 1e-10, ..Default::default() }
+    }
+
+    #[test]
+    fn rhs_panel_matches_the_sweep_recipe() {
+        let a = crate::sparse::gen::generate_spd(50, 3, 240, 1).to_csr();
+        let b = rhs_panel(&a, 2, 0);
+        assert_eq!(b.len(), 100);
+        // Column 0 with seed 0: x_true[i] = ((i % 13) as f64)*0.25 - 1.5.
+        let x0: Vec<f64> = (0..50).map(|i| ((i % 13) as f64) * 0.25 - 1.5).collect();
+        assert_eq!(&b[..50], a.matvec(&x0).as_slice());
+    }
+
+    #[test]
+    fn single_request_session_completes_and_accounts() {
+        let d = small_defaults();
+        let reqs =
+            vec![SolveRequest::new(0, "spd".into(), &d), SolveRequest::new(1, "spd".into(), &d)];
+        let cfg = ServeConfig {
+            workers: 2,
+            clients: 2,
+            keep_solutions: true,
+            ..ServeConfig::default()
+        };
+        let report = run_service(reqs.clone(), &cfg).unwrap();
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.accounted(), 2);
+        assert_eq!(report.cache_misses, 1, "second request hits the plan cache");
+        assert_eq!(report.cache_hits, 1);
+        // Served solutions match the one-shot reference bitwise (same
+        // deterministic kernel, same plan).
+        let (x_ref, converged) = one_shot_solution(&reqs[0]).unwrap();
+        assert!(converged);
+        for o in &report.outcomes {
+            assert!(o.is_completed());
+            assert_eq!(o.x.as_deref().unwrap(), x_ref.as_slice());
+        }
+    }
+
+    #[test]
+    fn cache_disabled_rebuilds_per_request() {
+        let d = small_defaults();
+        let reqs: Vec<SolveRequest> =
+            (0..3).map(|i| SolveRequest::new(i, "spd".into(), &d)).collect();
+        let cfg = ServeConfig {
+            cache_enabled: false,
+            workers: 2,
+            clients: 2,
+            ..ServeConfig::default()
+        };
+        let report = run_service(reqs, &cfg).unwrap();
+        assert_eq!(report.completed, 3);
+        assert_eq!(report.cache_hits, 0);
+        assert_eq!(report.cache_misses, 0, "cache bypassed entirely");
+        assert_eq!(report.engines_created, 0, "pool bypassed entirely");
+        assert!(report.hit_rate() == 0.0);
+    }
+
+    #[test]
+    fn failed_requests_are_reported_not_wedged() {
+        let d = small_defaults();
+        // Valid at admission (a .mtx path) but missing on disk.
+        let reqs = vec![
+            SolveRequest::new(0, "definitely/missing/file.mtx".into(), &d),
+            SolveRequest::new(1, "spd".into(), &d),
+        ];
+        let report = run_service(reqs, &ServeConfig::default()).unwrap();
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.accounted(), 2);
+        let failed =
+            report.outcomes.iter().find(|o| !o.is_completed()).expect("one failed outcome");
+        match &failed.status {
+            RequestStatus::Failed(msg) => assert!(msg.contains("mtx") || msg.contains("file")),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn invalid_requests_reject_before_the_queue() {
+        let d = small_defaults();
+        let mut bad = SolveRequest::new(0, "spd".into(), &d);
+        bad.nrhs = 4;
+        bad.solver = SolverKind::Sor;
+        let reqs = vec![bad, SolveRequest::new(1, "spd".into(), &d)];
+        let report = run_service(reqs, &ServeConfig::default()).unwrap();
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.rejected_invalid, 1);
+        let rej = report
+            .outcomes
+            .iter()
+            .find(|o| matches!(o.status, RequestStatus::RejectedInvalid(_)))
+            .unwrap();
+        assert_eq!(rej.id, 0);
+        match &rej.status {
+            RequestStatus::RejectedInvalid(reason) => {
+                assert!(reason.contains("batched solver"));
+            }
+            _ => unreachable!(),
+        }
+    }
+}

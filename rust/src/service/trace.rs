@@ -1,0 +1,510 @@
+//! Request schema, JSONL trace ingestion, and the built-in workload
+//! driver.
+//!
+//! A served solve is described by a [`SolveRequest`]: the matrix source
+//! (a Table 4.2 name, `spd`, or a MatrixMarket `.mtx` path), the
+//! decomposition recipe (combination, inter/intra partitioners, storage
+//! format, f × c shape) and the solve itself (solver, tolerance,
+//! iteration cap, `nrhs`-wide RHS panel). Requests arrive two ways:
+//!
+//! - **trace replay** — [`parse_trace`] reads one flat JSON object per
+//!   line (`#` comments and blank lines skipped); absent fields fall
+//!   back to [`RequestDefaults`]. The parser is a deliberately tiny
+//!   hand-rolled reader for flat objects of strings / numbers / bools —
+//!   the crate takes no serde dependency for one trace format;
+//! - **the closed-loop driver** — [`workload`] synthesises a
+//!   deterministic round-robin stream over a matrix list, the shape used
+//!   by the benches and CI smokes.
+
+use crate::partition::combined::Combination;
+use crate::partition::PartitionerKind;
+use crate::solver::SolverKind;
+use crate::sparse::gen::MatrixSpec;
+use crate::sparse::FormatKind;
+
+/// One solve request, as admitted to the service.
+#[derive(Clone, Debug)]
+pub struct SolveRequest {
+    /// Request id (position in the trace / workload, echoed in the
+    /// outcome).
+    pub id: usize,
+    /// Matrix source: Table 4.2 name, `spd`, or a `.mtx` path.
+    pub matrix: String,
+    /// Inter/intra axis combination.
+    pub combo: Combination,
+    /// Inter-node partitioner.
+    pub partitioner: PartitionerKind,
+    /// Intra-node partitioner.
+    pub intra: PartitionerKind,
+    /// Per-fragment storage format.
+    pub format: FormatKind,
+    /// Iterative method.
+    pub solver: SolverKind,
+    /// Convergence tolerance.
+    pub tol: f64,
+    /// Iteration cap.
+    pub max_iters: usize,
+    /// Right-hand-side panel width (1 = classic single solve).
+    pub nrhs: usize,
+    /// Nodes.
+    pub nodes: usize,
+    /// Cores per node.
+    pub cores: usize,
+    /// Generator seed (synthetic sources) and RHS recipe seed.
+    pub seed: u64,
+}
+
+/// Fallbacks for fields a trace line (or the workload driver) leaves
+/// unset.
+#[derive(Clone, Debug)]
+pub struct RequestDefaults {
+    /// Inter/intra axis combination.
+    pub combo: Combination,
+    /// Inter-node partitioner.
+    pub partitioner: PartitionerKind,
+    /// Intra-node partitioner.
+    pub intra: PartitionerKind,
+    /// Per-fragment storage format.
+    pub format: FormatKind,
+    /// Iterative method.
+    pub solver: SolverKind,
+    /// Convergence tolerance.
+    pub tol: f64,
+    /// Iteration cap.
+    pub max_iters: usize,
+    /// Right-hand-side panel width.
+    pub nrhs: usize,
+    /// Nodes.
+    pub nodes: usize,
+    /// Cores per node.
+    pub cores: usize,
+    /// Generator / RHS seed.
+    pub seed: u64,
+}
+
+impl Default for RequestDefaults {
+    fn default() -> Self {
+        RequestDefaults {
+            combo: Combination::NlHl,
+            partitioner: PartitionerKind::Nezgt,
+            intra: PartitionerKind::Hypergraph,
+            format: FormatKind::Csr,
+            solver: SolverKind::Cg,
+            tol: 1e-8,
+            max_iters: 200,
+            nrhs: 1,
+            nodes: 2,
+            cores: 2,
+            seed: 1,
+        }
+    }
+}
+
+impl SolveRequest {
+    /// Request `id` for `matrix` with every other field from `defaults`.
+    pub fn new(id: usize, matrix: String, defaults: &RequestDefaults) -> Self {
+        SolveRequest {
+            id,
+            matrix,
+            combo: defaults.combo,
+            partitioner: defaults.partitioner,
+            intra: defaults.intra,
+            format: defaults.format,
+            solver: defaults.solver,
+            tol: defaults.tol,
+            max_iters: defaults.max_iters,
+            nrhs: defaults.nrhs,
+            nodes: defaults.nodes,
+            cores: defaults.cores,
+            seed: defaults.seed,
+        }
+    }
+
+    /// Admission validation: reject combinations the engine pipeline
+    /// cannot serve *before* they occupy a queue slot. The returned
+    /// string becomes the typed `Invalid` rejection reason.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.matrix.is_empty() {
+            return Err("empty matrix source".into());
+        }
+        if !self.matrix.ends_with(".mtx")
+            && self.matrix != "spd"
+            && MatrixSpec::paper(&self.matrix).is_none()
+        {
+            return Err(format!(
+                "unknown matrix '{}' (not in Table 4.2, not 'spd', not a .mtx path)",
+                self.matrix
+            ));
+        }
+        if self.partitioner.is_2d() || self.intra.is_2d() {
+            return Err(format!(
+                "2-D partitioner '{}' cannot drive the plan/engine pipeline",
+                if self.partitioner.is_2d() { self.partitioner } else { self.intra }
+            ));
+        }
+        if self.nodes == 0 || self.cores == 0 {
+            return Err(format!("degenerate cluster shape {}x{}", self.nodes, self.cores));
+        }
+        if self.nrhs == 0 {
+            return Err("nrhs 0: an empty panel solves nothing".into());
+        }
+        if self.nrhs > 1 && !matches!(self.solver, SolverKind::Cg | SolverKind::Jacobi) {
+            return Err(format!(
+                "nrhs {} needs a batched solver (cg or jacobi), got '{}'",
+                self.nrhs, self.solver
+            ));
+        }
+        if self.max_iters == 0 {
+            return Err("max_iters 0".into());
+        }
+        if self.tol <= 0.0 || self.tol.is_nan() {
+            return Err(format!("non-positive tolerance {}", self.tol));
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic closed-loop workload: `count` requests round-robin over
+/// `matrices`, every other field from `defaults`.
+pub fn workload(matrices: &[String], count: usize, defaults: &RequestDefaults) -> Vec<SolveRequest> {
+    if matrices.is_empty() {
+        return Vec::new();
+    }
+    (0..count)
+        .map(|i| SolveRequest::new(i, matrices[i % matrices.len()].clone(), defaults))
+        .collect()
+}
+
+/// A value in a flat JSON trace line.
+enum JsonValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+impl JsonValue {
+    fn as_str(&self, key: &str) -> Result<&str, String> {
+        match self {
+            JsonValue::Str(s) => Ok(s),
+            _ => Err(format!("field '{key}' must be a string")),
+        }
+    }
+
+    fn as_f64(&self, key: &str) -> Result<f64, String> {
+        match self {
+            JsonValue::Num(v) => Ok(*v),
+            _ => Err(format!("field '{key}' must be a number")),
+        }
+    }
+
+    fn as_usize(&self, key: &str) -> Result<usize, String> {
+        let v = self.as_f64(key)?;
+        if v < 0.0 || v.fract() != 0.0 {
+            return Err(format!("field '{key}' must be a non-negative integer, got {v}"));
+        }
+        Ok(v as usize)
+    }
+}
+
+/// Character-cursor parser for one flat JSON object (no nesting).
+struct Parser<'a> {
+    c: &'a [char],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<char> {
+        self.c.get(self.i).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let ch = self.peek();
+        if ch.is_some() {
+            self.i += 1;
+        }
+        ch
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(' ' | '\t')) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, want: char) -> Result<(), String> {
+        match self.bump() {
+            Some(ch) if ch == want => Ok(()),
+            other => Err(format!("expected '{want}', found {other:?}")),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect('"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => return Err("unterminated string".into()),
+                Some('"') => return Ok(out),
+                Some('\\') => match self.bump() {
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    Some('/') => out.push('/'),
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('r') => out.push('\r'),
+                    Some('b') => out.push('\u{0008}'),
+                    Some('f') => out.push('\u{000c}'),
+                    Some('u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = self
+                                .bump()
+                                .and_then(|ch| ch.to_digit(16))
+                                .ok_or("bad \\u escape")?;
+                            code = code * 16 + d;
+                        }
+                        out.push(char::from_u32(code).ok_or("bad \\u code point")?);
+                    }
+                    other => return Err(format!("bad escape {other:?}")),
+                },
+                Some(ch) => out.push(ch),
+            }
+        }
+    }
+
+    fn literal(&mut self, word: &str) -> Result<(), String> {
+        for want in word.chars() {
+            if self.bump() != Some(want) {
+                return Err(format!("bad literal (expected '{word}')"));
+            }
+        }
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<JsonValue, String> {
+        match self.peek() {
+            Some('"') => Ok(JsonValue::Str(self.string()?)),
+            Some('t') => {
+                self.literal("true")?;
+                Ok(JsonValue::Bool(true))
+            }
+            Some('f') => {
+                self.literal("false")?;
+                Ok(JsonValue::Bool(false))
+            }
+            Some('n') => {
+                self.literal("null")?;
+                Ok(JsonValue::Null)
+            }
+            Some(ch) if ch == '-' || ch == '+' || ch.is_ascii_digit() => {
+                let start = self.i;
+                while matches!(
+                    self.peek(),
+                    Some('-' | '+' | '.' | 'e' | 'E' | '0'..='9')
+                ) {
+                    self.i += 1;
+                }
+                let text: String = self.c[start..self.i].iter().collect();
+                text.parse::<f64>().map(JsonValue::Num).map_err(|e| format!("bad number: {e}"))
+            }
+            other => Err(format!("expected a value, found {other:?}")),
+        }
+    }
+}
+
+/// Parse one trace line into (key, value) pairs.
+fn parse_object(line: &str) -> Result<Vec<(String, JsonValue)>, String> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut p = Parser { c: &chars, i: 0 };
+    p.skip_ws();
+    p.expect('{')?;
+    let mut out = Vec::new();
+    p.skip_ws();
+    if p.peek() == Some('}') {
+        p.i += 1;
+    } else {
+        loop {
+            p.skip_ws();
+            let key = p.string()?;
+            p.skip_ws();
+            p.expect(':')?;
+            p.skip_ws();
+            let val = p.value()?;
+            out.push((key, val));
+            p.skip_ws();
+            match p.bump() {
+                Some(',') => continue,
+                Some('}') => break,
+                other => return Err(format!("expected ',' or '}}', found {other:?}")),
+            }
+        }
+    }
+    p.skip_ws();
+    if p.i != chars.len() {
+        return Err("trailing characters after the object".into());
+    }
+    Ok(out)
+}
+
+/// Parse a JSONL trace into requests. Each non-empty, non-`#` line is a
+/// flat JSON object; recognised fields are `matrix` (required),
+/// `combo`, `partitioner`, `intra`, `format`, `solver`, `tol`, `iters`,
+/// `nrhs`, `nodes`, `cores`, `seed`; anything else is an error (typos
+/// must not silently fall back to defaults).
+pub fn parse_trace(text: &str, defaults: &RequestDefaults) -> crate::Result<Vec<SolveRequest>> {
+    let mut out: Vec<SolveRequest> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields = parse_object(line)
+            .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?;
+        let mut req = SolveRequest::new(out.len(), String::new(), defaults);
+        for (key, val) in &fields {
+            let applied: Result<(), String> = match key.as_str() {
+                "matrix" => val.as_str(key).map(|s| req.matrix = s.to_string()),
+                "combo" => val.as_str(key).and_then(|s| {
+                    Combination::parse(s)
+                        .map(|c| req.combo = c)
+                        .ok_or_else(|| format!("unknown combination '{s}'"))
+                }),
+                "partitioner" => val.as_str(key).and_then(|s| {
+                    PartitionerKind::parse(s)
+                        .map(|p| req.partitioner = p)
+                        .ok_or_else(|| {
+                            format!("unknown partitioner '{s}' ({})", PartitionerKind::usage())
+                        })
+                }),
+                "intra" => val.as_str(key).and_then(|s| {
+                    PartitionerKind::parse(s)
+                        .map(|p| req.intra = p)
+                        .ok_or_else(|| {
+                            format!("unknown partitioner '{s}' ({})", PartitionerKind::usage())
+                        })
+                }),
+                "format" => val.as_str(key).and_then(|s| {
+                    FormatKind::parse(s)
+                        .map(|f| req.format = f)
+                        .ok_or_else(|| format!("unknown format '{s}'"))
+                }),
+                "solver" => val.as_str(key).and_then(|s| {
+                    SolverKind::parse(s)
+                        .map(|k| req.solver = k)
+                        .ok_or_else(|| format!("unknown solver '{s}'"))
+                }),
+                "tol" => val.as_f64(key).map(|v| req.tol = v),
+                "iters" => val.as_usize(key).map(|v| req.max_iters = v),
+                "nrhs" => val.as_usize(key).map(|v| req.nrhs = v),
+                "nodes" => val.as_usize(key).map(|v| req.nodes = v),
+                "cores" => val.as_usize(key).map(|v| req.cores = v),
+                "seed" => val.as_usize(key).map(|v| req.seed = v as u64),
+                other => Err(format!("unknown field '{other}'")),
+            };
+            applied.map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?;
+        }
+        anyhow::ensure!(!req.matrix.is_empty(), "trace line {}: missing 'matrix'", lineno + 1);
+        out.push(req);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_mixed_trace_with_defaults_and_overrides() {
+        let text = r#"
+# service smoke corpus
+{"matrix": "t2dal"}
+{"matrix": "traces/bcsstm09.mtx", "solver": "jacobi", "nrhs": 4, "tol": 1e-6}
+
+{"matrix": "spd", "combo": "nc-hl", "partitioner": "contig", "format": "ell", "iters": 50}
+"#;
+        let reqs = parse_trace(text, &RequestDefaults::default()).unwrap();
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs[0].matrix, "t2dal");
+        assert_eq!(reqs[0].solver, SolverKind::Cg);
+        assert_eq!(reqs[0].id, 0);
+        assert_eq!(reqs[1].matrix, "traces/bcsstm09.mtx");
+        assert_eq!(reqs[1].solver, SolverKind::Jacobi);
+        assert_eq!(reqs[1].nrhs, 4);
+        assert!((reqs[1].tol - 1e-6).abs() < 1e-18);
+        assert_eq!(reqs[2].combo, Combination::NcHl);
+        assert_eq!(reqs[2].partitioner, PartitionerKind::Contig);
+        assert_eq!(reqs[2].format, FormatKind::Ell);
+        assert_eq!(reqs[2].max_iters, 50);
+        assert_eq!(reqs[2].id, 2);
+    }
+
+    #[test]
+    fn rejects_typos_instead_of_defaulting() {
+        let d = RequestDefaults::default();
+        assert!(parse_trace(r#"{"matrix": "spd", "solvr": "cg"}"#, &d).is_err());
+        assert!(parse_trace(r#"{"matrix": "spd", "solver": "cgg"}"#, &d).is_err());
+        assert!(parse_trace(r#"{"solver": "cg"}"#, &d).is_err(), "matrix is required");
+        assert!(parse_trace(r#"{"matrix": "spd" "#, &d).is_err(), "unclosed object");
+        assert!(parse_trace(r#"{"matrix": "spd"} x"#, &d).is_err(), "trailing junk");
+        assert!(parse_trace(r#"{"matrix": "spd", "nrhs": 1.5}"#, &d).is_err(), "non-integer");
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let d = RequestDefaults::default();
+        let reqs = parse_trace(r#"{"matrix": "dir\/aA b\t.mtx"}"#, &d).unwrap();
+        assert_eq!(reqs[0].matrix, "dir/aA b\t.mtx");
+    }
+
+    #[test]
+    fn workload_round_robins_deterministically() {
+        let d = RequestDefaults::default();
+        let ms = vec!["a".to_string(), "b".to_string(), "c".to_string()];
+        let reqs = workload(&ms, 7, &d);
+        assert_eq!(reqs.len(), 7);
+        assert_eq!(reqs[0].matrix, "a");
+        assert_eq!(reqs[3].matrix, "a");
+        assert_eq!(reqs[5].matrix, "c");
+        assert_eq!(reqs[6].id, 6);
+        assert!(workload(&[], 5, &d).is_empty());
+    }
+
+    #[test]
+    fn validation_rejects_unservable_combinations() {
+        let d = RequestDefaults::default();
+        let ok = SolveRequest::new(0, "t2dal".into(), &d);
+        assert!(ok.validate().is_ok());
+
+        let mut r = ok.clone();
+        r.matrix = "no-such-matrix".into();
+        assert!(r.validate().unwrap_err().contains("unknown matrix"));
+
+        let mut r = ok.clone();
+        r.partitioner = PartitionerKind::Fine2d;
+        assert!(r.validate().unwrap_err().contains("2-D"));
+
+        let mut r = ok.clone();
+        r.nrhs = 4;
+        r.solver = SolverKind::Power;
+        assert!(r.validate().unwrap_err().contains("batched solver"));
+        r.solver = SolverKind::Jacobi;
+        assert!(r.validate().is_ok());
+
+        let mut r = ok.clone();
+        r.nrhs = 0;
+        assert!(r.validate().is_err());
+
+        let mut r = ok.clone();
+        r.cores = 0;
+        assert!(r.validate().is_err());
+
+        let mut r = ok.clone();
+        r.tol = 0.0;
+        assert!(r.validate().is_err());
+
+        let mut r = ok;
+        r.max_iters = 0;
+        assert!(r.validate().is_err());
+    }
+}

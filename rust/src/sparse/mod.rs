@@ -15,6 +15,7 @@ pub mod coo;
 pub mod csc;
 pub mod csr;
 pub mod ell;
+pub mod fingerprint;
 pub mod formats_ext;
 pub mod gen;
 pub mod mm;
@@ -25,6 +26,7 @@ pub use coo::Coo;
 pub use csc::Csc;
 pub use csr::Csr;
 pub use ell::Ell;
+pub use fingerprint::{fingerprint_coo, fingerprint_csr, MatrixFingerprint};
 pub use storage::{auto_select, EllStore, FormatKind, FragmentStorage};
 
 /// A dense vector of f64 — X and Y in the PMVC `y = A·x`.

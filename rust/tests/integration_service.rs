@@ -1,0 +1,250 @@
+//! End-to-end tests of the solve-as-a-service layer: concurrent clients
+//! through the admission queue, plan cache and engine pool, with every
+//! served solution pinned against the one-shot reference path.
+
+use pmvc::coordinator::experiment::load_matrix;
+use pmvc::service::{
+    one_shot_solution, run_service, RequestDefaults, RequestStatus, ServeConfig, SolveRequest,
+};
+use pmvc::solver::SolverKind;
+use pmvc::sparse::fingerprint_csr;
+use pmvc::sparse::gen::{generate, MatrixSpec};
+use pmvc::sparse::mm::write_matrix_market;
+use std::collections::HashMap;
+
+/// Write the synthetic bcsstm09 (seed 1) as a MatrixMarket file and
+/// return its path — the ingest source for the mixed-matrix sessions.
+fn write_bcsstm09_mtx(tag: &str) -> String {
+    let dir = std::env::temp_dir().join("pmvc_service_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("bcsstm09_{tag}_{}.mtx", std::process::id()));
+    let m = generate(&MatrixSpec::paper("bcsstm09").unwrap(), 1);
+    write_matrix_market(&path, &m).unwrap();
+    path.to_str().unwrap().to_string()
+}
+
+fn small_defaults() -> RequestDefaults {
+    RequestDefaults { tol: 1e-8, max_iters: 60, ..Default::default() }
+}
+
+/// Served and reference panels must agree at 1e-9 (bit-identical values
+/// also pass, which covers non-finite columns of non-converged solves).
+fn assert_panel_agrees(matrix: &str, served: &[f64], reference: &[f64]) {
+    assert_eq!(served.len(), reference.len(), "{matrix}: panel shape");
+    for (i, (&a, &b)) in served.iter().zip(reference).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-9 || a.to_bits() == b.to_bits(),
+            "{matrix}: solution diverges from one-shot at {i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn acceptance_concurrent_mixed_matrix_session() {
+    // >= 16 concurrent requests over three distinct matrices, one of
+    // them ingested from a MatrixMarket file.
+    let mtx = write_bcsstm09_mtx("acceptance");
+    let defaults = small_defaults();
+    let sources = ["t2dal", "spd", mtx.as_str()];
+    let mut requests = Vec::new();
+    for id in 0..18 {
+        let mut r = SolveRequest::new(id, sources[id % 3].to_string(), &defaults);
+        if id % 3 == 1 {
+            r.nrhs = 4; // spd requests carry a 4-wide panel through block CG
+        }
+        requests.push(r);
+    }
+    let cfg = ServeConfig {
+        queue_depth: 8,
+        engines: 3,
+        workers: 4,
+        clients: 6,
+        keep_solutions: true,
+        ..ServeConfig::default()
+    };
+    let report = run_service(requests.clone(), &cfg).unwrap();
+
+    // Nothing dropped, nothing wedged, nothing failed.
+    assert_eq!(report.accounted(), 18);
+    assert_eq!(report.completed, 18);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.rejected_full + report.rejected_invalid, 0);
+
+    // Three distinct plan keys -> 3 misses, 15 hits: rate well past 50%.
+    assert_eq!(report.cache_misses, 3);
+    assert_eq!(report.cache_hits, 15);
+    assert!(report.hit_rate() > 0.5, "hit rate {}", report.hit_rate());
+    assert!(report.engine_peak <= cfg.engines);
+    assert!(report.wall_s > 0.0);
+    assert!(report.solves_per_sec > 0.0);
+
+    // Every served solution agrees with the equivalent one-shot run.
+    let mut reference: HashMap<(String, usize), Vec<f64>> = HashMap::new();
+    for o in &report.outcomes {
+        let spec = requests.iter().find(|r| r.id == o.id).unwrap();
+        let x_ref = reference
+            .entry((spec.matrix.clone(), spec.nrhs))
+            .or_insert_with(|| one_shot_solution(spec).unwrap().0);
+        assert_panel_agrees(&spec.matrix, o.x.as_deref().unwrap(), x_ref);
+    }
+
+    // The JSON report carries the acceptance metrics.
+    let json = report.to_json();
+    for key in ["\"hit_rate\"", "\"latency_p50_ms\"", "\"latency_p95_ms\"", "\"solves_per_sec\""] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+}
+
+#[test]
+fn concurrent_engine_reuse_stays_within_the_pool_bound() {
+    // Two distinct cached plans, a pool smaller than the worker count,
+    // and a t2dal-heavy prefix that guarantees warm reuse.
+    let defaults = small_defaults();
+    let mut requests = Vec::new();
+    for id in 0..8 {
+        requests.push(SolveRequest::new(id, "t2dal".to_string(), &defaults));
+    }
+    for id in 8..16 {
+        let mut r = SolveRequest::new(id, "spd".to_string(), &defaults);
+        if id % 2 == 0 {
+            r.nrhs = 2;
+        }
+        requests.push(r);
+    }
+    let cfg = ServeConfig {
+        engines: 2,
+        workers: 4,
+        clients: 4,
+        keep_solutions: true,
+        ..ServeConfig::default()
+    };
+    let report = run_service(requests.clone(), &cfg).unwrap();
+    assert_eq!(report.completed, 16);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.cache_misses, 2, "one plan build per distinct key");
+    assert!(
+        report.engine_peak <= 2,
+        "pool exceeded its bound: peak {} > 2",
+        report.engine_peak
+    );
+    // The t2dal-only prefix admits at most 2 engine builds, so at least
+    // 6 of its 8 requests reuse a warm engine.
+    assert!(report.engines_reused >= 6, "only {} warm reuses", report.engines_reused);
+    let mut reference: HashMap<(String, usize), Vec<f64>> = HashMap::new();
+    for o in &report.outcomes {
+        let spec = requests.iter().find(|r| r.id == o.id).unwrap();
+        let x_ref = reference
+            .entry((spec.matrix.clone(), spec.nrhs))
+            .or_insert_with(|| one_shot_solution(spec).unwrap().0);
+        assert_panel_agrees(&spec.matrix, o.x.as_deref().unwrap(), x_ref);
+    }
+}
+
+#[test]
+fn tiny_cache_budget_evicts_and_keeps_serving() {
+    let defaults = small_defaults();
+    let sources = ["bcsstm09", "t2dal", "spd"];
+    let requests: Vec<SolveRequest> = (0..12)
+        .map(|id| SolveRequest::new(id, sources[id % 3].to_string(), &defaults))
+        .collect();
+    let cfg = ServeConfig {
+        // Far below the footprint of the two large plans together: the
+        // session must evict to keep admitting new keys.
+        cache_bytes: 400_000,
+        workers: 2,
+        clients: 2,
+        ..ServeConfig::default()
+    };
+    let report = run_service(requests, &cfg).unwrap();
+    assert_eq!(report.completed, 12);
+    assert_eq!(report.failed, 0);
+    assert!(report.cache_evictions > 0, "tiny budget must evict");
+    assert!(report.cache_bytes <= 2 * 400_000, "budget respected up to the spared newest entry");
+    // Per-key counters reconcile with the totals.
+    let hits: usize = report.per_key.iter().map(|k| k.hits).sum();
+    let misses: usize = report.per_key.iter().map(|k| k.misses).sum();
+    let evictions: usize = report.per_key.iter().map(|k| k.evictions).sum();
+    assert_eq!(hits, report.cache_hits);
+    assert_eq!(misses, report.cache_misses);
+    assert_eq!(evictions, report.cache_evictions);
+}
+
+#[test]
+fn invalid_requests_reject_typed_and_the_rest_complete() {
+    let defaults = small_defaults();
+    let mut unknown = SolveRequest::new(0, "nosuchmatrix".to_string(), &defaults);
+    unknown.max_iters = 10;
+    let mut zero_panel = SolveRequest::new(1, "spd".to_string(), &defaults);
+    zero_panel.nrhs = 0;
+    let mut unbatchable = SolveRequest::new(2, "spd".to_string(), &defaults);
+    unbatchable.nrhs = 3;
+    unbatchable.solver = SolverKind::Power;
+    let requests = vec![
+        unknown,
+        zero_panel,
+        unbatchable,
+        SolveRequest::new(3, "spd".to_string(), &defaults),
+        SolveRequest::new(4, "spd".to_string(), &defaults),
+    ];
+    let report = run_service(requests, &ServeConfig::default()).unwrap();
+    assert_eq!(report.accounted(), 5);
+    assert_eq!(report.completed, 2);
+    assert_eq!(report.rejected_invalid, 3);
+    assert_eq!(report.failed, 0);
+    for o in &report.outcomes {
+        if o.id < 3 {
+            assert!(
+                matches!(o.status, RequestStatus::RejectedInvalid(_)),
+                "request {} should be rejected, got {:?}",
+                o.id,
+                o.status
+            );
+        }
+    }
+}
+
+#[test]
+fn full_queue_rejections_are_typed_not_dropped() {
+    // A 1-deep queue with more clients than workers: whatever is not
+    // admitted must surface as a typed RejectedFull outcome, and the
+    // books must still balance.
+    let defaults = small_defaults();
+    let requests: Vec<SolveRequest> =
+        (0..12).map(|id| SolveRequest::new(id, "bcsstm09".to_string(), &defaults)).collect();
+    let cfg = ServeConfig {
+        queue_depth: 1,
+        reject_when_full: true,
+        workers: 1,
+        clients: 6,
+        ..ServeConfig::default()
+    };
+    let report = run_service(requests, &cfg).unwrap();
+    assert_eq!(report.accounted(), 12);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.completed + report.rejected_full, 12);
+    assert!(report.completed >= 1, "at least the admitted head completes");
+}
+
+#[test]
+fn mtx_ingest_shares_plans_with_the_named_source() {
+    // The structural fingerprint sees through the source: the same
+    // matrix served from a generator name and from a MatrixMarket file
+    // lands on one PlanKey.
+    let mtx = write_bcsstm09_mtx("sharing");
+    let named = load_matrix("bcsstm09", 1).unwrap();
+    let ingested = load_matrix(&mtx, 1).unwrap();
+    assert_eq!(fingerprint_csr(&named), fingerprint_csr(&ingested));
+
+    let defaults = small_defaults();
+    let requests: Vec<SolveRequest> = ["bcsstm09", mtx.as_str(), "bcsstm09", mtx.as_str()]
+        .iter()
+        .enumerate()
+        .map(|(id, m)| SolveRequest::new(id, m.to_string(), &defaults))
+        .collect();
+    let cfg = ServeConfig { workers: 2, clients: 2, ..ServeConfig::default() };
+    let report = run_service(requests, &cfg).unwrap();
+    assert_eq!(report.completed, 4);
+    assert_eq!(report.cache_misses, 1, "both sources share one plan");
+    assert_eq!(report.cache_hits, 3);
+    assert_eq!(report.per_key.len(), 1);
+}
