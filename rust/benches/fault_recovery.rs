@@ -1,0 +1,152 @@
+//! Fault-recovery cost: what a mid-solve rank death adds on top of the
+//! fault-free solve. For each backend × kill-point cell, times the
+//! clean run and the faulted run (detect → survivor replan → iterate
+//! remap → warm restart), and reports the replan share plus the
+//! restart iteration overhead. Emits `BENCH_pr8.json` at the repo root.
+//!
+//! ```bash
+//! cargo bench --bench fault_recovery            # full grid,
+//!                                               # writes ../BENCH_pr8.json
+//! cargo bench --bench fault_recovery -- --test  # CI smoke: small system,
+//!                                               # asserts recovery invariants
+//! ```
+
+use std::time::Instant;
+
+use pmvc::coordinator::{solve_with_recovery, RecoveryOutcome, RecoverySpec};
+use pmvc::partition::combined::{Combination, DecomposeConfig};
+use pmvc::pmvc::{BackendKind, FaultPlan};
+use pmvc::rng::SplitMix64;
+use pmvc::solver::SolverKind;
+use pmvc::sparse::gen;
+use pmvc::sparse::Csr;
+
+struct Row {
+    backend: BackendKind,
+    kill_at: usize,
+    baseline_s: f64,
+    recovered_s: f64,
+    replan_s: f64,
+    baseline_iters: usize,
+    recovered_iters: usize,
+    restarts: usize,
+}
+
+fn spd_system(n: usize, seed: u64) -> (Csr, Vec<f64>) {
+    let a = gen::generate_spd(n, 3, n * 5, seed).to_csr();
+    let mut rng = SplitMix64::new(seed ^ 0xF00D);
+    let b = (0..n).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+    (a, b)
+}
+
+fn spec<'a>(a: &'a Csr, backend: BackendKind, fault: FaultPlan) -> RecoverySpec<'a> {
+    RecoverySpec {
+        a,
+        combo: Combination::NlHl,
+        cfg: DecomposeConfig::default(),
+        backend,
+        solver: SolverKind::Cg,
+        nrhs: 1,
+        f: 3,
+        c: 2,
+        // tight enough that faulted and clean runs agree well under 1e-9
+        tol: 1e-12,
+        max_iters: 8000,
+        fault,
+    }
+}
+
+fn timed(s: &RecoverySpec<'_>, b: &[f64]) -> (RecoveryOutcome, f64) {
+    let t0 = Instant::now();
+    let out = solve_with_recovery(s, b).expect("recovery solve");
+    (out, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    // --test: the CI smoke — a small system, one kill point per
+    // backend, with the recovery invariants asserted instead of timed.
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let n = if test_mode { 200 } else { 1200 };
+    let backends: &[BackendKind] = if test_mode {
+        &[BackendKind::Threads, BackendKind::Sim]
+    } else {
+        &[BackendKind::Threads, BackendKind::Sim, BackendKind::Mpi]
+    };
+    let (a, b) = spd_system(n, 11);
+
+    println!(
+        "{:<8} {:>8} {:>11} {:>12} {:>9} {:>11} {:>9}",
+        "backend", "kill@", "baseline s", "recovered s", "replan s", "iters +", "restarts"
+    );
+    let mut rows = Vec::new();
+    for &backend in backends {
+        let (clean, baseline_s) = timed(&spec(&a, backend, FaultPlan::new()), &b);
+        assert!(clean.report.converged, "{backend}: clean run must converge");
+        let applies = clean.report.applies;
+
+        let mut kills = if test_mode {
+            vec![(applies / 2).max(1)]
+        } else {
+            vec![1, (applies / 2).max(1), applies]
+        };
+        kills.dedup();
+        for kill_at in kills {
+            let (out, recovered_s) =
+                timed(&spec(&a, backend, FaultPlan::new().kill(1, kill_at)), &b);
+            assert!(out.report.converged, "{backend}/kill@{kill_at}: must converge");
+            assert_eq!(out.report.restarts, 1, "{backend}/kill@{kill_at}: one death, one restart");
+            assert_eq!(out.f_final, 2, "{backend}/kill@{kill_at}");
+            if test_mode {
+                for (i, (x, x_ref)) in out.report.x.iter().zip(&clean.report.x).enumerate() {
+                    assert!(
+                        (x - x_ref).abs() < 1e-9,
+                        "{backend}/kill@{kill_at} row {i}: drifted past the 1e-9 gate"
+                    );
+                }
+            }
+            let replan_s: f64 = out.events.iter().map(|e| e.replan_s).sum();
+            println!(
+                "{:<8} {kill_at:>8} {baseline_s:>11.4} {recovered_s:>12.4} {replan_s:>9.4} \
+                 {:>11} {:>9}",
+                backend.to_string(),
+                out.report.iterations as i64 - clean.report.iterations as i64,
+                out.report.restarts
+            );
+            rows.push(Row {
+                backend,
+                kill_at,
+                baseline_s,
+                recovered_s,
+                replan_s,
+                baseline_iters: clean.report.iterations,
+                recovered_iters: out.report.iterations,
+                restarts: out.report.restarts,
+            });
+        }
+    }
+
+    if !test_mode {
+        let json_rows: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"backend\": \"{}\", \"kill_at\": {}, \"baseline_s\": {:.6}, \
+                     \"recovered_s\": {:.6}, \"replan_s\": {:.6}, \"baseline_iters\": {}, \
+                     \"recovered_iters\": {}, \"restarts\": {}}}",
+                    r.backend,
+                    r.kill_at,
+                    r.baseline_s,
+                    r.recovered_s,
+                    r.replan_s,
+                    r.baseline_iters,
+                    r.recovered_iters,
+                    r.restarts
+                )
+            })
+            .collect();
+        let json = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
+        // bench cwd is rust/; the trajectory file lives at the repo root
+        std::fs::write("../BENCH_pr8.json", &json).expect("write BENCH_pr8.json");
+        println!("wrote {} recovery grid points to ../BENCH_pr8.json", json_rows.len());
+    }
+}

@@ -3,6 +3,11 @@
 
 pub mod cli;
 pub mod experiment;
+pub mod recovery;
 pub mod report;
 
 pub use experiment::{run_sweep, run_sweep_cached, DecompCache, ExperimentConfig, SweepRow};
+pub use recovery::{
+    gather_iterate, scatter_iterate, solve_with_recovery, RecoveryEvent, RecoveryOutcome,
+    RecoverySpec,
+};

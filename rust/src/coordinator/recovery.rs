@@ -1,0 +1,441 @@
+//! Rank-death recovery: checkpointed Krylov restart over a survivor
+//! replan.
+//!
+//! The paper's two-level f×c distribution assumes a healthy cluster for
+//! the whole solve; this driver makes a mid-solve rank death survivable
+//! instead of merely visible. The pieces, end to end:
+//!
+//! 1. **Detection** — the backends turn a dead rank into a typed `Err`,
+//!    which the solvers surface as
+//!    [`SolverError::Interrupted`] carrying the last completed iterate
+//!    (the checkpoint) and the iteration it was taken at.
+//! 2. **Survivor replanning** — [`solve_with_recovery`] rebuilds the
+//!    decomposition over the surviving f−1 nodes. It builds two
+//!    candidates: *continue* (the spec's own partitioners, re-run at the
+//!    smaller f) and *repartition* ([`Partitioner::reseed`]ed copies —
+//!    a full fresh partition), and lets their
+//!    [`QualityReport`](crate::partition::metrics::QualityReport)s
+//!    decide whether the repartition pays for itself (lower per-iteration
+//!    `comm_bytes`, ties broken on node balance).
+//! 3. **Iterate remap** — the checkpoint travels the recovery data
+//!    path: scattered into per-node slices of the *dying* layout
+//!    ([`scatter_iterate`]), gathered back at the master
+//!    ([`gather_iterate`]) — a bitwise round-trip (proptest-verified) —
+//!    and handed to the survivor engine, whose own plan redistributes
+//!    it on the first apply.
+//! 4. **Checkpointed Krylov restart** — the next attempt starts from
+//!    [`SolveOptions::x0`](crate::solver::SolveOptions), so CG resumes
+//!    from the checkpoint instead of from zero; a restart from a
+//!    converged iterate costs a single iteration.
+//!
+//! Determinism: every candidate partition, the reseed salt, and the
+//! rebased [`FaultPlan`] are pure functions of the spec, so the same
+//! spec (seed + schedule) yields an identical [`RecoveryOutcome`].
+
+use crate::cluster::NetworkPreset;
+use crate::coordinator::experiment::topology_for;
+use crate::partition::api::Partitioner;
+use crate::partition::combined::{decompose, Combination, DecomposeConfig, TwoLevelDecomposition};
+use crate::partition::Partition;
+use crate::pmvc::{make_backend, BackendKind, FaultPlan};
+use crate::solver::{
+    BatchedJacobi, BlockCg, Cg, DistributedOp, MultiSolveReport, SolveReport, SolverError,
+    SolverKind,
+};
+use crate::sparse::Csr;
+use std::time::Instant;
+
+/// Everything [`solve_with_recovery`] needs to run (and re-run) one
+/// solve: the system, the decomposition recipe, the execution backend,
+/// the solver, and the fault schedule to survive.
+pub struct RecoverySpec<'a> {
+    /// The system matrix (square, SPD for the Krylov solvers).
+    pub a: &'a Csr,
+    /// Inter/intra axis combination for the decomposition.
+    pub combo: Combination,
+    /// Partitioner + format recipe; cloned and reseeded for the
+    /// repartition candidate after each failure.
+    pub cfg: DecomposeConfig,
+    /// Execution backend each attempt runs on.
+    pub backend: BackendKind,
+    /// Which solver drives the solve: [`SolverKind::Cg`] (CG for one
+    /// right-hand side, block CG for a panel) or [`SolverKind::Jacobi`]
+    /// (batched Jacobi).
+    pub solver: SolverKind,
+    /// Number of right-hand sides (`b.len() == a.n_rows * nrhs`).
+    pub nrhs: usize,
+    /// Initial node count.
+    pub f: usize,
+    /// Cores per node (kept across restarts — the paper's nodes are
+    /// homogeneous; it is whole nodes that die).
+    pub c: usize,
+    /// Relative residual tolerance per attempt.
+    pub tol: f64,
+    /// Iteration budget per attempt.
+    pub max_iters: usize,
+    /// The fault schedule to survive (installed on the backend, rebased
+    /// past already-consumed applies after every restart).
+    pub fault: FaultPlan,
+}
+
+/// One survived rank death: when it hit, what the cluster shrank to,
+/// and what the replanning decided.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryEvent {
+    /// Iterations the interrupted attempt had fully completed when the
+    /// rank died (the checkpoint's age).
+    pub at_iteration: usize,
+    /// Node count before the death.
+    pub f_before: usize,
+    /// Surviving node count the solve resumed on.
+    pub f_after: usize,
+    /// Whether the reseeded full repartition beat continuing with the
+    /// spec's own partitioners (decided by `QualityReport`).
+    pub repartitioned: bool,
+    /// Wall seconds spent rebuilding decomposition + plan + backend for
+    /// the resume.
+    pub replan_s: f64,
+}
+
+/// A recovered solve: the folded report plus the recovery history.
+#[derive(Debug)]
+pub struct RecoveryOutcome {
+    /// The final attempt's report with totals folded in: `iterations`
+    /// and `applies` count all attempts, `restarts` the survived
+    /// deaths, `warm_started` whether any attempt resumed from a
+    /// checkpoint.
+    pub report: SolveReport,
+    /// One entry per survived rank death, in order.
+    pub events: Vec<RecoveryEvent>,
+    /// Node count the final attempt ran on.
+    pub f_final: usize,
+}
+
+/// Scatter a master-resident iterate into per-node slices by the
+/// partition's ownership (`slices[p.assign[i]]` receives `x[i]`, in
+/// row order) — the layout the iterate has on the cluster when a node
+/// dies. Pure moves, no arithmetic: [`gather_iterate`] round-trips
+/// bitwise.
+pub fn scatter_iterate(p: &Partition, x: &[f64]) -> crate::Result<Vec<Vec<f64>>> {
+    anyhow::ensure!(
+        p.assign.len() == x.len(),
+        "iterate length {} != partition length {}",
+        x.len(),
+        p.assign.len()
+    );
+    let mut slices = vec![Vec::new(); p.k];
+    for (i, &v) in x.iter().enumerate() {
+        let node = p.assign[i] as usize;
+        anyhow::ensure!(node < p.k, "row {i} assigned to node {node} >= k {}", p.k);
+        slices[node].push(v);
+    }
+    Ok(slices)
+}
+
+/// Inverse of [`scatter_iterate`]: reassemble the global iterate from
+/// per-node slices of the same partition. Bitwise exact — the slices
+/// are drained in row order, so every value lands back at its row.
+pub fn gather_iterate(p: &Partition, slices: &[Vec<f64>]) -> crate::Result<Vec<f64>> {
+    anyhow::ensure!(
+        slices.len() == p.k,
+        "{} slices for a {}-node partition",
+        slices.len(),
+        p.k
+    );
+    let total: usize = slices.iter().map(Vec::len).sum();
+    anyhow::ensure!(
+        total == p.assign.len(),
+        "slices hold {total} values, partition covers {}",
+        p.assign.len()
+    );
+    let mut cursors = vec![0usize; p.k];
+    let mut x = Vec::with_capacity(total);
+    for (i, &node) in p.assign.iter().enumerate() {
+        let node = node as usize;
+        anyhow::ensure!(node < p.k, "row {i} assigned to node {node} >= k {}", p.k);
+        let at = cursors[node];
+        anyhow::ensure!(at < slices[node].len(), "slice {node} exhausted at row {i}");
+        x.push(slices[node][at]);
+        cursors[node] = at + 1;
+    }
+    Ok(x)
+}
+
+/// Deterministic reseed salt for recovery round `round` (1-based):
+/// fixed odd constant (splitmix64's gamma) times the round, so each
+/// restart decorrelates differently but reproducibly.
+fn reseed_salt(round: usize) -> u64 {
+    0x9E37_79B9_7F4A_7C15u64.wrapping_mul(round as u64)
+}
+
+/// Build the decomposition for one attempt. Round 0 is the initial
+/// build (the spec's recipe, verbatim). Recovery rounds build both the
+/// *continue* candidate (same recipe at the smaller f) and the
+/// *repartition* candidate (reseeded partitioners) and keep whichever
+/// `QualityReport` promises less per-iteration communication, ties
+/// broken on node balance.
+fn plan_round(
+    spec: &RecoverySpec<'_>,
+    f: usize,
+    round: usize,
+) -> crate::Result<(TwoLevelDecomposition, bool)> {
+    let base = decompose(spec.a, spec.combo, f, spec.c, &spec.cfg)?;
+    if round == 0 {
+        return Ok((base, false));
+    }
+    let salt = reseed_salt(round);
+    let mut alt_cfg = spec.cfg.clone();
+    alt_cfg.inter = spec.cfg.inter.reseed(salt);
+    alt_cfg.intra = spec.cfg.intra.reseed(salt);
+    let alt = decompose(spec.a, spec.combo, f, spec.c, &alt_cfg)?;
+    let better = alt.quality.comm_bytes < base.quality.comm_bytes
+        || (alt.quality.comm_bytes == base.quality.comm_bytes
+            && alt.quality.lb_nodes < base.quality.lb_nodes);
+    if better {
+        Ok((alt, true))
+    } else {
+        Ok((base, false))
+    }
+}
+
+/// Fold a panel report into the shared [`SolveReport`] shape: `x` is
+/// the whole column-major panel, `iterations` the slowest column,
+/// `converged` only when every column converged, `residual_norm` the
+/// worst column.
+fn fold_multi(r: MultiSolveReport) -> SolveReport {
+    let iterations = r.max_iterations();
+    let converged = r.all_converged();
+    let residual_norm = r.columns.iter().map(|c| c.residual_norm).fold(0.0f64, f64::max);
+    SolveReport {
+        solver: r.solver,
+        x: r.x,
+        iterations,
+        residual_norm,
+        converged,
+        history: Vec::new(),
+        wall_time: r.wall_time,
+        applies: r.panel_applies,
+        phases: r.phases,
+        lambda: None,
+        lambda_min: None,
+        warm_started: false,
+        restarts: 0,
+    }
+}
+
+/// One solve attempt on an already-built operator, dispatched on the
+/// spec's solver × panel width.
+fn run_attempt(
+    spec: &RecoverySpec<'_>,
+    op: &mut DistributedOp,
+    b: &[f64],
+    k: usize,
+    x0: Option<Vec<f64>>,
+) -> Result<SolveReport, SolverError> {
+    match spec.solver {
+        SolverKind::Cg if k == 1 => {
+            let mut s = Cg::new().tol(spec.tol).max_iters(spec.max_iters);
+            if let Some(x0) = x0 {
+                s = s.x0(x0);
+            }
+            s.solve(op, b)
+        }
+        SolverKind::Cg => {
+            let mut s = BlockCg::new().tol(spec.tol).max_iters(spec.max_iters);
+            if let Some(x0) = x0 {
+                s = s.x0(x0);
+            }
+            s.solve_multi(op, b, k).map(fold_multi)
+        }
+        SolverKind::Jacobi => {
+            let mut s = BatchedJacobi::from_matrix(spec.a)?.tol(spec.tol).max_iters(spec.max_iters);
+            if let Some(x0) = x0 {
+                s = s.x0(x0);
+            }
+            s.solve_multi(op, b, k).map(fold_multi)
+        }
+        other => Err(SolverError::Backend(anyhow::anyhow!(
+            "the recovery driver supports cg and jacobi, not {other}"
+        ))),
+    }
+}
+
+/// Run the solve end to end, surviving every scheduled rank death: on
+/// [`SolverError::Interrupted`] the decomposition is rebuilt over the
+/// surviving f−1 nodes (see [`plan_round`] for the continue-vs-
+/// repartition decision), the checkpoint is remapped through the dying
+/// layout ([`scatter_iterate`] → [`gather_iterate`]), and the solve
+/// resumes warm-started from it with the fault schedule rebased past
+/// the applies already consumed. Fails only when the death leaves no
+/// survivors (f = 1) or the failure is not a recoverable interruption.
+pub fn solve_with_recovery(
+    spec: &RecoverySpec<'_>,
+    b: &[f64],
+) -> crate::Result<RecoveryOutcome> {
+    let n = spec.a.n_rows;
+    let k = spec.nrhs;
+    anyhow::ensure!(k >= 1, "nrhs must be >= 1");
+    anyhow::ensure!(
+        b.len() == n * k,
+        "rhs length {} != order {n} × nrhs {k}",
+        b.len()
+    );
+    anyhow::ensure!(spec.f >= 1, "need at least one node");
+    let net = NetworkPreset::TenGigabitEthernet.model();
+    let t_start = Instant::now();
+
+    let mut f = spec.f;
+    let mut round = 0usize;
+    let mut applies_done = 0usize;
+    let mut iters_done = 0usize;
+    let mut x0: Option<Vec<f64>> = None;
+    let mut events: Vec<RecoveryEvent> = Vec::new();
+
+    loop {
+        let t_plan = Instant::now();
+        let (d, repartitioned) = plan_round(spec, f, round)?;
+        // the inter-node partition is the layout the iterate lives in
+        // on this attempt's cluster — kept for the remap if it dies
+        let inter = d.inter.clone();
+        let topo = topology_for(f, spec.c);
+        let mut backend = make_backend(spec.backend, d, &topo, &net)?;
+        backend.set_fault_plan(spec.fault.rebased(applies_done))?;
+        let replan_s = t_plan.elapsed().as_secs_f64();
+        if let Some(ev) = events.last_mut() {
+            // the event was recorded at the failure; the replan that
+            // resumes from it is only decided here
+            if ev.replan_s == 0.0 {
+                ev.repartitioned = repartitioned;
+                ev.replan_s = replan_s;
+            }
+        }
+        let mut op = DistributedOp::with_backend(backend);
+        match run_attempt(spec, &mut op, b, k, x0.take()) {
+            Ok(mut report) => {
+                report.iterations += iters_done;
+                report.applies += applies_done;
+                report.restarts = events.len();
+                report.warm_started = report.warm_started || !events.is_empty();
+                report.wall_time = t_start.elapsed().as_secs_f64();
+                return Ok(RecoveryOutcome { report, events, f_final: f });
+            }
+            Err(SolverError::Interrupted { at_iteration, x, source }) => {
+                anyhow::ensure!(
+                    f > 1,
+                    "rank died at iteration {at_iteration} with no survivors left: {source:#}"
+                );
+                // the failed apply consumed a schedule slot too
+                applies_done += op.applications + 1;
+                iters_done += at_iteration;
+                // checkpoint relocation: per column, scatter into the
+                // dying layout's node slices and gather them back at
+                // the master (bitwise); the survivor engine's own plan
+                // redistributes it on the first warm-start apply
+                let mut remapped = Vec::with_capacity(n * k);
+                for j in 0..k {
+                    let slices = scatter_iterate(&inter, &x[j * n..(j + 1) * n])?;
+                    remapped.extend(gather_iterate(&inter, &slices)?);
+                }
+                x0 = Some(remapped);
+                events.push(RecoveryEvent {
+                    at_iteration,
+                    f_before: f,
+                    f_after: f - 1,
+                    repartitioned: false,
+                    replan_s: 0.0,
+                });
+                f -= 1;
+                round += 1;
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::sparse::gen;
+
+    fn spd_system(n: usize, seed: u64, k: usize) -> (Csr, Vec<f64>) {
+        let a = gen::generate_spd(n, 3, n * 5, seed).to_csr();
+        let mut rng = SplitMix64::new(seed ^ 0xABCD);
+        let b = (0..n * k).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        (a, b)
+    }
+
+    fn spec<'a>(a: &'a Csr, solver: SolverKind, nrhs: usize, fault: FaultPlan) -> RecoverySpec<'a> {
+        RecoverySpec {
+            a,
+            combo: Combination::NlHl,
+            cfg: DecomposeConfig::default(),
+            backend: BackendKind::Threads,
+            solver,
+            nrhs,
+            f: 3,
+            c: 2,
+            tol: 1e-12,
+            max_iters: 2000,
+            fault,
+        }
+    }
+
+    #[test]
+    fn scatter_gather_round_trips_bitwise() {
+        let mut rng = SplitMix64::new(7);
+        let x: Vec<f64> = (0..257).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+        let assign: Vec<u32> = (0..257).map(|_| (rng.next_u64() % 5) as u32).collect();
+        let p = Partition { k: 5, assign };
+        let slices = scatter_iterate(&p, &x).unwrap();
+        assert_eq!(slices.iter().map(Vec::len).sum::<usize>(), x.len());
+        let back = gather_iterate(&p, &slices).unwrap();
+        assert_eq!(back, x, "remap must be bitwise");
+        // shape violations are typed errors
+        assert!(scatter_iterate(&p, &x[..10]).is_err());
+        assert!(gather_iterate(&p, &slices[..3]).is_err());
+    }
+
+    #[test]
+    fn fault_free_recovery_solve_is_a_plain_solve() {
+        let (a, b) = spd_system(150, 5, 1);
+        let out = solve_with_recovery(&spec(&a, SolverKind::Cg, 1, FaultPlan::new()), &b).unwrap();
+        assert!(out.report.converged);
+        assert!(out.events.is_empty());
+        assert_eq!(out.report.restarts, 0);
+        assert!(!out.report.warm_started);
+        assert_eq!(out.f_final, 3);
+    }
+
+    #[test]
+    fn killed_rank_triggers_one_restart_and_still_converges() {
+        let (a, b) = spd_system(150, 5, 1);
+        let reference =
+            solve_with_recovery(&spec(&a, SolverKind::Cg, 1, FaultPlan::new()), &b).unwrap();
+        let out =
+            solve_with_recovery(&spec(&a, SolverKind::Cg, 1, FaultPlan::new().kill(1, 4)), &b)
+                .unwrap();
+        assert!(out.report.converged);
+        assert_eq!(out.report.restarts, 1);
+        assert!(out.report.warm_started);
+        assert_eq!(out.f_final, 2);
+        assert_eq!(out.events.len(), 1);
+        assert_eq!(out.events[0].f_before, 3);
+        assert_eq!(out.events[0].f_after, 2);
+        assert!(out.events[0].replan_s >= 0.0);
+        for i in 0..a.n_rows {
+            assert!(
+                (out.report.x[i] - reference.report.x[i]).abs() < 1e-9,
+                "row {i}: recovered answer drifted past 1e-9"
+            );
+        }
+    }
+
+    #[test]
+    fn unsupported_solver_is_a_typed_error() {
+        let (a, b) = spd_system(80, 2, 1);
+        let err =
+            solve_with_recovery(&spec(&a, SolverKind::Power, 1, FaultPlan::new()), &b).unwrap_err();
+        assert!(format!("{err:#}").contains("recovery driver"), "{err:#}");
+    }
+}

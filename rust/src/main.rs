@@ -6,6 +6,7 @@
 //! pmvc sweep [--out results/sweep.csv]    full sweep -> CSV
 //! pmvc run --matrix t2dal --combo NL-HL   one threaded PMVC run
 //! pmvc serve --trace reqs.jsonl           solve-as-a-service session
+//! pmvc recover --kill-node 1 --kill-apply 4   solve through a rank death
 //! pmvc gen --matrix epb1 --out epb1.mtx   write a synthetic matrix
 //! pmvc info                               artifacts + runtime status
 //! ```
@@ -104,6 +105,7 @@ fn dispatch(args: &Args) -> pmvc::Result<()> {
         "sweep" => cmd_sweep(args),
         "run" => cmd_run(args),
         "serve" => cmd_serve(args),
+        "recover" => cmd_recover(args),
         "gen" => cmd_gen(args),
         "info" => cmd_info(args),
         "" | "help" | "--help" => {
@@ -131,6 +133,15 @@ COMMANDS:
                                     a pool of warm engines, then prints
                                     the service report (hit rate,
                                     latency percentiles, solves/sec)
+  recover [--kill-node N --kill-apply K]
+                                    one solve driven through the
+                                    fault-tolerant coordinator: kill
+                                    node N at the K-th distributed apply
+                                    (1-based), replan over the
+                                    survivors, warm-restart the solver
+                                    from the checkpoint, and print the
+                                    recovery report (add --csv FILE for
+                                    a machine-readable row)
   gen --matrix NAME --out FILE.mtx  write a synthetic Table-4.2 matrix
   info                              artifacts + PJRT runtime status
 
@@ -182,7 +193,12 @@ SERVE OPTIONS (request fields fall back to the COMMON flags above;
   --trace FILE       JSONL request trace, one object per line:
                      {\"matrix\": \"t2dal\", \"nrhs\": 8, \"solver\": \"cg\", ...}
                      (fields: matrix, combo, partitioner, intra, format,
-                     solver, tol, iters, nrhs, nodes, cores, seed).
+                     solver, tol, iters, nrhs, nodes, cores, seed,
+                     fault_node, fault_apply). A line carrying
+                     fault_node + fault_apply has that node killed at
+                     that 1-based apply mid-solve: the broken engine is
+                     discarded and the request retried on a rebuilt one
+                     (a typed 'recovered' outcome, never a drop).
                      Without --trace, a closed-loop workload over
                      --matrices (default t2dal,bcsstm09,spd) is
                      synthesised round-robin.
@@ -200,7 +216,19 @@ SERVE OPTIONS (request fields fall back to the COMMON flags above;
                      (the baseline the cache is measured against)
   --report-json F    also dump the service report as JSON to F
   --min-hits N       fail unless the cache served >= N hits (CI gate)
-  --min-evictions N  fail unless >= N evictions happened (CI gate)";
+  --min-evictions N  fail unless >= N evictions happened (CI gate)
+  --min-recovered N  fail unless >= N requests were recovered after an
+                     engine death (chaos CI gate)
+
+RECOVER OPTIONS (plus --matrix/--combo/--partitioner/--intra/--format/
+--solver/--tol/--iters/--nrhs/--nodes/--cores/--seed as above;
+defaults: spd, cg, threads, 3x2, tol 1e-10):
+  --kill-node N      node to kill (0-based; both flags together)
+  --kill-apply K     1-based distributed apply at which the kill fires
+  --csv FILE         append the recovery row as CSV (header written when
+                     the file is new): matrix,solver,backend,f,c,
+                     kill_node,kill_apply,restarts,repartitioned,
+                     replan_s,iterations,converged,residual";
 
 fn cmd_table(args: &Args) -> pmvc::Result<()> {
     let which = args
@@ -567,6 +595,135 @@ fn cmd_serve(args: &Args) -> pmvc::Result<()> {
         "cache evictions {} below the --min-evictions {min_evictions} gate",
         report.cache_evictions
     );
+    let min_recovered = args.opt_usize("min-recovered", 0)?;
+    anyhow::ensure!(
+        report.recovered >= min_recovered,
+        "recovered requests {} below the --min-recovered {min_recovered} gate",
+        report.recovered
+    );
+    Ok(())
+}
+
+fn cmd_recover(args: &Args) -> pmvc::Result<()> {
+    use pmvc::coordinator::{solve_with_recovery, RecoverySpec};
+    use pmvc::pmvc::FaultPlan;
+    use pmvc::service::rhs_panel;
+
+    let matrix = args.opt_or("matrix", "spd");
+    let combo = Combination::parse(args.opt_or("combo", "NL-HL"))
+        .ok_or_else(|| anyhow::anyhow!("bad --combo"))?;
+    let f = args.opt_usize("nodes", 3)?;
+    let c = args.opt_usize("cores", 2)?;
+    let seed = args.opt_u64("seed", 1)?;
+    let backend = BackendKind::parse(args.opt_or("backend", "threads"))
+        .ok_or_else(|| anyhow::anyhow!("unknown backend (threads|sim|mpi)"))?;
+    let solver = SolverKind::parse(args.opt_or("solver", "cg"))
+        .ok_or_else(|| anyhow::anyhow!("unknown solver (recovery supports cg|jacobi)"))?;
+    let nrhs = args.opt_usize("nrhs", 1)?;
+    anyhow::ensure!(nrhs >= 1, "--nrhs must be at least 1");
+    let tol: f64 = args
+        .opt_or("tol", "1e-10")
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--tol: {e}"))?;
+    let max_iters = args.opt_usize("iters", 1000)?;
+
+    let mut fault = FaultPlan::new();
+    let (mut kill_node, mut kill_apply) = (0usize, 0usize);
+    match (args.opt("kill-node"), args.opt("kill-apply")) {
+        (None, None) => {}
+        (Some(ns), Some(ks)) => {
+            kill_node = ns.parse().map_err(|e| anyhow::anyhow!("--kill-node: {e}"))?;
+            kill_apply = ks.parse().map_err(|e| anyhow::anyhow!("--kill-apply: {e}"))?;
+            anyhow::ensure!(kill_node < f, "--kill-node {kill_node} out of range for {f} nodes");
+            anyhow::ensure!(kill_apply >= 1, "--kill-apply is 1-based; 0 never fires");
+            fault = fault.kill(kill_node, kill_apply);
+        }
+        _ => anyhow::bail!("--kill-node and --kill-apply must be given together"),
+    }
+
+    let mut dcfg = DecomposeConfig::default();
+    if let Some(p) = args.opt("partitioner") {
+        dcfg.inter = make_partitioner(parse_partitioner(p)?)?;
+    }
+    if let Some(p) = args.opt("intra") {
+        dcfg.intra = make_partitioner(parse_partitioner(p)?)?;
+    }
+    if let Some(s) = args.opt("format") {
+        dcfg.format = parse_format(s)?;
+    }
+
+    let a = pmvc::coordinator::experiment::load_matrix(matrix, seed)?;
+    let b = rhs_panel(&a, nrhs, seed);
+    let spec = RecoverySpec {
+        a: &a,
+        combo,
+        cfg: dcfg,
+        backend,
+        solver,
+        nrhs,
+        f,
+        c,
+        tol,
+        max_iters,
+        fault: fault.clone(),
+    };
+    let out = solve_with_recovery(&spec, &b)?;
+
+    println!(
+        "matrix={matrix} N={} NNZ={} solver={solver} backend={backend} f={f} cores={c} nrhs={nrhs}",
+        a.n_rows,
+        a.nnz()
+    );
+    println!("fault schedule: {fault}");
+    for (i, ev) in out.events.iter().enumerate() {
+        println!(
+            "restart {}: died at iteration {} ({} -> {} nodes), {} replan in {:.6}s",
+            i + 1,
+            ev.at_iteration,
+            ev.f_before,
+            ev.f_after,
+            if ev.repartitioned { "reseeded repartition" } else { "same-recipe" },
+            ev.replan_s
+        );
+    }
+    println!(
+        "result: iterations={} applies={} restarts={} warm_started={} converged={} \
+         residual={:.3e} f_final={} wall={:.6}s",
+        out.report.iterations,
+        out.report.applies,
+        out.report.restarts,
+        out.report.warm_started,
+        out.report.converged,
+        out.report.residual_norm,
+        out.f_final,
+        out.report.wall_time
+    );
+    anyhow::ensure!(out.report.converged, "recovered solve did not converge");
+
+    if let Some(path) = args.opt("csv") {
+        let repartitioned = out.events.iter().any(|e| e.repartitioned);
+        let replan_s: f64 = out.events.iter().map(|e| e.replan_s).sum();
+        let mut csv = String::new();
+        if !std::path::Path::new(path).exists() {
+            csv.push_str(
+                "matrix,solver,backend,f,c,kill_node,kill_apply,restarts,repartitioned,\
+                 replan_s,iterations,converged,residual\n",
+            );
+        }
+        csv.push_str(&format!(
+            "{matrix},{solver},{backend},{f},{c},{kill_node},{kill_apply},{},{},{:.6},{},{},{:.3e}\n",
+            out.report.restarts,
+            repartitioned,
+            replan_s,
+            out.report.iterations,
+            out.report.converged,
+            out.report.residual_norm
+        ));
+        use std::io::Write;
+        let mut file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        file.write_all(csv.as_bytes())?;
+        eprintln!("appended recovery row to {path}");
+    }
     Ok(())
 }
 

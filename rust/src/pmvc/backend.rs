@@ -14,6 +14,7 @@
 use super::engine::PmvcEngine;
 use super::exec::ExecResult;
 use super::exec_mpi::MpiCluster;
+use super::fault::{FaultClock, FaultPlan};
 use super::phases::PhaseTimes;
 use super::sim::{simulate_multi_with, simulate_with};
 use super::spmv;
@@ -174,6 +175,22 @@ pub trait ExecBackend {
         );
         Ok(())
     }
+
+    /// Install a [`FaultPlan`] to rehearse against: scheduled kills and
+    /// delayed joins fire at the start of the matching apply (1-based,
+    /// counting [`ExecBackend::apply_into`] and
+    /// [`ExecBackend::apply_multi_into`] calls alike) and surface as the
+    /// backend's typed "rank down" errors. Installing a plan resets the
+    /// apply counter. The default implementation accepts only the empty
+    /// plan; the three built-in backends honor full schedules.
+    fn set_fault_plan(&mut self, plan: FaultPlan) -> crate::Result<()> {
+        anyhow::ensure!(
+            plan.is_empty(),
+            "backend '{}' does not support fault injection",
+            self.name()
+        );
+        Ok(())
+    }
 }
 
 impl ExecBackend for PmvcEngine {
@@ -210,6 +227,10 @@ impl ExecBackend for PmvcEngine {
         PmvcEngine::set_overlap_mode(self, mode);
         Ok(())
     }
+
+    fn set_fault_plan(&mut self, plan: FaultPlan) -> crate::Result<()> {
+        PmvcEngine::set_fault_plan(self, plan)
+    }
 }
 
 /// Analytic backend: phase times come from the machine model (each
@@ -231,6 +252,12 @@ pub struct SimBackend {
     mode: OverlapMode,
     x_local: Vec<f64>,
     y_local: Vec<f64>,
+    /// Scripted fault schedule (simulated: due kills mark the node dead
+    /// and the apply fails with the same shape of error the real
+    /// backends produce).
+    faults: FaultClock,
+    /// Nodes already killed by the schedule.
+    dead: Vec<usize>,
 }
 
 impl SimBackend {
@@ -251,7 +278,27 @@ impl SimBackend {
             mode: OverlapMode::Blocking,
             x_local: Vec::new(),
             y_local: Vec::new(),
+            faults: FaultClock::default(),
+            dead: Vec::new(),
         }
+    }
+
+    /// Count one apply against the fault schedule; error out exactly as
+    /// the live backends would when a rank is dead or not yet joined.
+    fn check_faults(&mut self) -> crate::Result<()> {
+        let (kills, absent) = self.faults.begin_apply();
+        for node in kills {
+            if !self.dead.contains(&node) {
+                self.dead.push(node);
+            }
+        }
+        if let Some(&node) = self.dead.first() {
+            anyhow::bail!("node rank {node} is down");
+        }
+        if let Some(node) = absent {
+            anyhow::bail!("node rank {node} has not joined yet");
+        }
+        Ok(())
     }
 
     /// The active schedule's pricing, computed on first use.
@@ -289,6 +336,7 @@ impl ExecBackend for SimBackend {
             y.len(),
             self.d.n
         );
+        self.check_faults()?;
         y.fill(0.0);
         for frag in &self.d.fragments {
             spmv::gather_x(frag, x, &mut self.x_local);
@@ -308,6 +356,7 @@ impl ExecBackend for SimBackend {
         let n = self.d.n;
         anyhow::ensure!(x.len() == n * k, "x panel length {} != order {n} × k {k}", x.len());
         anyhow::ensure!(y.len() == n * k, "y panel length {} != order {n} × k {k}", y.len());
+        self.check_faults()?;
         // exact panel product through the fragment pipeline: each
         // fragment streams its A once over all k columns
         y.fill(0.0);
@@ -349,6 +398,19 @@ impl ExecBackend for SimBackend {
         self.mode = mode;
         Ok(())
     }
+
+    fn set_fault_plan(&mut self, plan: FaultPlan) -> crate::Result<()> {
+        if let Some(node) = plan.max_node() {
+            anyhow::ensure!(
+                node < self.d.f,
+                "fault plan names node {node} but the decomposition has {} nodes",
+                self.d.f
+            );
+        }
+        self.faults.set_plan(plan);
+        self.dead.clear();
+        Ok(())
+    }
 }
 
 /// Message-passing backend: wraps the long-lived [`MpiCluster`] ranks.
@@ -358,6 +420,9 @@ pub struct MpiBackend {
     cluster: MpiCluster,
     lb_nodes: f64,
     lb_cores: f64,
+    /// Scripted fault schedule: a due kill really tears the rank down
+    /// through [`MpiCluster::kill_rank`].
+    faults: FaultClock,
 }
 
 impl MpiBackend {
@@ -369,7 +434,22 @@ impl MpiBackend {
             cluster: MpiCluster::launch(d)?,
             lb_nodes: d.lb_nodes(),
             lb_cores: d.lb_cores(),
+            faults: FaultClock::default(),
         })
+    }
+
+    /// Count one apply against the fault schedule: due kills really
+    /// tear their rank down before the fan-out, so the apply (and
+    /// every later one) fails with the cluster's own typed error.
+    fn fire_faults(&mut self) -> crate::Result<()> {
+        let (kills, absent) = self.faults.begin_apply();
+        for node in kills {
+            self.cluster.kill_rank(node);
+        }
+        if let Some(node) = absent {
+            anyhow::bail!("node rank {node} has not joined yet");
+        }
+        Ok(())
     }
 }
 
@@ -395,6 +475,7 @@ impl ExecBackend for MpiBackend {
             y.len(),
             self.cluster.n
         );
+        self.fire_faults()?;
         // the ranks assemble their reply in fresh message buffers (MPI
         // semantics); the leader copies the payload into caller scratch
         let (yv, t) = self.cluster.matvec(x)?;
@@ -422,6 +503,7 @@ impl ExecBackend for MpiBackend {
         let n = self.cluster.n;
         anyhow::ensure!(x.len() == n * k, "x panel length {} != order {n} × k {k}", x.len());
         anyhow::ensure!(y.len() == n * k, "y panel length {} != order {n} × k {k}", y.len());
+        self.fire_faults()?;
         let (yv, t) = self.cluster.matvec_multi(x, k)?;
         y.copy_from_slice(&yv);
         Ok(PhaseTimes {
@@ -445,6 +527,18 @@ impl ExecBackend for MpiBackend {
 
     fn set_overlap_mode(&mut self, mode: OverlapMode) -> crate::Result<()> {
         self.cluster.set_overlap_mode(mode);
+        Ok(())
+    }
+
+    fn set_fault_plan(&mut self, plan: FaultPlan) -> crate::Result<()> {
+        if let Some(node) = plan.max_node() {
+            anyhow::ensure!(
+                node < self.cluster.f,
+                "fault plan names node {node} but the cluster has {} ranks",
+                self.cluster.f
+            );
+        }
+        self.faults.set_plan(plan);
         Ok(())
     }
 }

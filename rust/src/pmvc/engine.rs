@@ -37,6 +37,7 @@
 use super::backend::OverlapMode;
 use super::exec::ExecResult;
 use super::phases::PhaseTimes;
+use super::fault::{FaultClock, FaultPlan};
 use super::plan::CommPlan;
 use super::spmv;
 use crate::partition::combined::TwoLevelDecomposition;
@@ -132,7 +133,9 @@ pub struct PmvcEngine {
     plan: Arc<CommPlan>,
     to_workers: Vec<Sender<ToWorker>>,
     done_rx: Receiver<WorkerDone>,
-    handles: Vec<JoinHandle<()>>,
+    /// One handle per worker; `None` once the worker was joined by a
+    /// scheduled (or explicit) node kill.
+    handles: Vec<Option<JoinHandle<()>>>,
     /// Per-core partial-Y slots; workers write under the lock, the
     /// leader reads after all completion notices arrived. The `Vec`
     /// inside keeps its allocation across applies.
@@ -144,6 +147,10 @@ pub struct PmvcEngine {
     setup_s: f64,
     applies: usize,
     plan_builds: usize,
+    /// Scripted fault schedule (see [`crate::pmvc::fault`]).
+    faults: FaultClock,
+    /// Nodes whose workers were killed, in kill order.
+    dead: Vec<usize>,
 }
 
 impl PmvcEngine {
@@ -221,7 +228,7 @@ impl PmvcEngine {
                 done: done_tx.clone(),
                 epoch,
             };
-            handles.push(std::thread::spawn(move || worker_loop(ctx)));
+            handles.push(Some(std::thread::spawn(move || worker_loop(ctx))));
         }
         let node_y = vec![Vec::new(); d.f];
         PmvcEngine {
@@ -236,8 +243,61 @@ impl PmvcEngine {
             setup_s: t0.elapsed().as_secs_f64(),
             applies: 0,
             plan_builds: 0,
+            faults: FaultClock::default(),
+            dead: Vec::new(),
             d,
         }
+    }
+
+    /// Install a fault schedule (see [`crate::pmvc::fault`]); scheduled
+    /// kills go through [`PmvcEngine::kill_node`]. Resets the apply
+    /// counter; nodes already killed stay dead.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) -> crate::Result<()> {
+        if let Some(node) = plan.max_node() {
+            anyhow::ensure!(
+                node < self.d.f,
+                "fault plan names node {node} but the decomposition has {} nodes",
+                self.d.f
+            );
+        }
+        self.faults.set_plan(plan);
+        Ok(())
+    }
+
+    /// Tear down one node's workers mid-run — the threads realization
+    /// of killing a rank. The workers are shut down and joined, so the
+    /// kill is complete when this returns; the *next* apply (and every
+    /// later one) fails with a typed "node rank is down" error instead
+    /// of wedging. Out-of-range nodes and repeat kills are no-ops.
+    pub fn kill_node(&mut self, node: usize) {
+        if node >= self.d.f || self.dead.contains(&node) {
+            return;
+        }
+        for idx in node * self.d.c..(node + 1) * self.d.c {
+            let _ = self.to_workers[idx].send(ToWorker::Shutdown);
+            if let Some(h) = self.handles[idx].take() {
+                let _ = h.join();
+            }
+        }
+        self.dead.push(node);
+    }
+
+    /// Count one apply against the fault schedule and refuse it when a
+    /// node is dead or has not joined yet. Runs after argument
+    /// validation and before any fan-out, so a failed apply sends
+    /// nothing and leaves no stale replies behind.
+    fn fire_faults(&mut self) -> crate::Result<()> {
+        let (kills, absent) = self.faults.begin_apply();
+        for node in kills {
+            self.kill_node(node);
+        }
+        if let Some(&node) = self.dead.first() {
+            anyhow::bail!("node rank {node} is down");
+        }
+        if let Some(node) = absent {
+            anyhow::bail!("node rank {node} has not joined yet");
+        }
+        Ok(())
     }
 
     /// The active schedule ([`OverlapMode::Blocking`] by default).
@@ -278,6 +338,7 @@ impl PmvcEngine {
             y.len(),
             self.d.n
         );
+        self.fire_faults()?;
         self.seq += 1;
         let seq = self.seq;
 
@@ -483,6 +544,7 @@ impl PmvcEngine {
             "y panel length {} != order {n} × k {k}",
             y.len()
         );
+        self.fire_faults()?;
         self.seq += 1;
         let seq = self.seq;
 
@@ -710,7 +772,7 @@ impl Drop for PmvcEngine {
         for tx in &self.to_workers {
             let _ = tx.send(ToWorker::Shutdown);
         }
-        for h in self.handles.drain(..) {
+        for h in self.handles.drain(..).flatten() {
             let _ = h.join();
         }
     }

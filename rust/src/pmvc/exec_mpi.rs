@@ -237,6 +237,7 @@ impl MpiCluster {
             x.len(),
             self.n
         );
+        self.check_ranks()?;
         self.iter += 1;
         let iter = self.iter;
         let t0 = Instant::now();
@@ -338,6 +339,7 @@ impl MpiCluster {
             x.len(),
             self.n
         );
+        self.check_ranks()?;
         self.iter += 1;
         let iter = self.iter;
         let n = self.n;
@@ -434,6 +436,19 @@ impl MpiCluster {
         times.t_overlap_saved = t_halo_wave.min(interior_max);
         times.t_wall = t0.elapsed().as_secs_f64();
         Ok((y, times))
+    }
+
+    /// Refuse the iteration up front when any rank is already dead — a
+    /// rank killed *between* applies is reported on the very next call,
+    /// before the fan-out sends anything. Without this check the leader
+    /// would deliver partial fan-outs to the live ranks first: their
+    /// replies pile up as stale messages and, on the overlapped
+    /// schedule, their half-received X waves poison the next iteration.
+    fn check_ranks(&self) -> crate::Result<()> {
+        if let Some(node) = self.handles.iter().position(|h| h.is_none()) {
+            anyhow::bail!("node rank {node} is down");
+        }
+        Ok(())
     }
 
     /// Fault injection for tests and chaos drills: shut one rank down

@@ -1,0 +1,278 @@
+//! Scriptable fault injection for the PMVC backends.
+//!
+//! PR 4 gave `exec_mpi` an ad-hoc `kill_rank` hook; this module
+//! generalizes it into a [`FaultPlan`] — an ordered schedule of
+//! [`FaultEvent`]s ("kill node 1 at apply 3", "node 2 joins late at
+//! apply 5") that all three execution backends honor through
+//! [`crate::pmvc::ExecBackend::set_fault_plan`]. The plan lets the test
+//! harness and the recovery driver rehearse rank death
+//! deterministically: the same schedule against the same seed produces
+//! the same typed error at the same apply, so survival-matrix runs are
+//! reproducible.
+//!
+//! # Semantics
+//!
+//! Apply indices are **1-based** and count whole backend applies
+//! (`apply_into` or `apply_multi_into` calls — one panel apply counts
+//! once). An event with `at_apply = k` fires at the *start* of the k-th
+//! apply, before any computation:
+//!
+//! * [`FaultEvent::Kill`] — the node's workers are shut down (threads),
+//!   marked dead (sim), or the rank is killed via
+//!   [`crate::pmvc::MpiCluster::kill_rank`] (mpi). The apply then fails
+//!   with the backend's typed "rank down" error, as do all later
+//!   applies until the coordinator rebuilds over the survivors.
+//! * [`FaultEvent::Join`] — the node is *absent* from the start of the
+//!   solve and only joins at `at_apply`: every apply before it fails
+//!   with a typed "has not joined" error, modeling a replacement node
+//!   that is still booting when work arrives.
+//!
+//! After a recovery the coordinator resumes with fewer applies left on
+//! the clock; [`FaultPlan::rebased`] shifts the schedule so remaining
+//! events keep their absolute position in the solve.
+
+use std::fmt;
+
+/// One scheduled fault, positioned by a 1-based backend apply index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Kill `node` at the start of apply `at_apply` (1-based).
+    Kill {
+        /// Node rank to kill (0-based, `< f`).
+        node: usize,
+        /// 1-based apply index at whose start the kill fires.
+        at_apply: usize,
+    },
+    /// `node` is absent until apply `at_apply` (1-based): earlier
+    /// applies fail with a typed "has not joined" error.
+    Join {
+        /// Node rank that joins late (0-based, `< f`).
+        node: usize,
+        /// 1-based apply index at which the node becomes available.
+        at_apply: usize,
+    },
+}
+
+impl FaultEvent {
+    /// The node rank this event concerns.
+    pub fn node(&self) -> usize {
+        match *self {
+            FaultEvent::Kill { node, .. } | FaultEvent::Join { node, .. } => node,
+        }
+    }
+
+    /// The 1-based apply index at which this event takes effect.
+    pub fn at_apply(&self) -> usize {
+        match *self {
+            FaultEvent::Kill { at_apply, .. } | FaultEvent::Join { at_apply, .. } => at_apply,
+        }
+    }
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            FaultEvent::Kill { node, at_apply } => {
+                write!(f, "kill node {node} at apply {at_apply}")
+            }
+            FaultEvent::Join { node, at_apply } => {
+                write!(f, "node {node} joins at apply {at_apply}")
+            }
+        }
+    }
+}
+
+/// An ordered, deterministic schedule of [`FaultEvent`]s.
+///
+/// Built fluently and handed to a backend before the solve:
+///
+/// ```
+/// use pmvc::pmvc::fault::{FaultEvent, FaultPlan};
+///
+/// let plan = FaultPlan::new().kill(1, 3).join(2, 5);
+/// assert_eq!(plan.events().len(), 2);
+/// assert_eq!(plan.events()[0], FaultEvent::Kill { node: 1, at_apply: 3 });
+/// // after 2 applies have already run, the kill is 1 apply away
+/// assert_eq!(
+///     plan.rebased(2).events()[0],
+///     FaultEvent::Kill { node: 1, at_apply: 1 },
+/// );
+/// ```
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults — every backend accepts it).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Schedule `node` to die at the start of 1-based apply `at_apply`.
+    pub fn kill(mut self, node: usize, at_apply: usize) -> FaultPlan {
+        self.events.push(FaultEvent::Kill { node, at_apply });
+        self
+    }
+
+    /// Schedule `node` as absent until 1-based apply `at_apply`.
+    pub fn join(mut self, node: usize, at_apply: usize) -> FaultPlan {
+        self.events.push(FaultEvent::Join { node, at_apply });
+        self
+    }
+
+    /// The scheduled events, in insertion order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// True when no faults are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Shift the schedule past `applies_done` already-completed applies:
+    /// events that would have fired during those applies are dropped,
+    /// the rest keep their absolute position in the overall solve.
+    /// Used by the recovery driver when it rebuilds a backend mid-solve.
+    pub fn rebased(&self, applies_done: usize) -> FaultPlan {
+        FaultPlan {
+            events: self
+                .events
+                .iter()
+                .filter(|e| e.at_apply() > applies_done)
+                .map(|e| match *e {
+                    FaultEvent::Kill { node, at_apply } => {
+                        FaultEvent::Kill { node, at_apply: at_apply - applies_done }
+                    }
+                    FaultEvent::Join { node, at_apply } => {
+                        FaultEvent::Join { node, at_apply: at_apply - applies_done }
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Kill events due at exactly the given 1-based apply index.
+    pub fn kills_at(&self, apply_index: usize) -> impl Iterator<Item = usize> + '_ {
+        self.events.iter().filter_map(move |e| match *e {
+            FaultEvent::Kill { node, at_apply } if at_apply == apply_index => Some(node),
+            _ => None,
+        })
+    }
+
+    /// The node (if any) still absent at the given 1-based apply index:
+    /// a `Join { at_apply }` node is missing for every apply before
+    /// `at_apply`.
+    pub fn absent_at(&self, apply_index: usize) -> Option<usize> {
+        self.events.iter().find_map(|e| match *e {
+            FaultEvent::Join { node, at_apply } if apply_index < at_apply => Some(node),
+            _ => None,
+        })
+    }
+
+    /// Largest node rank referenced by the plan, if any — used by
+    /// backends to validate the plan against their node count.
+    pub fn max_node(&self) -> Option<usize> {
+        self.events.iter().map(|e| e.node()).max()
+    }
+}
+
+/// Per-backend book-keeping for an installed [`FaultPlan`]: counts
+/// whole applies and surfaces the events due at each one. Backends
+/// call [`FaultClock::begin_apply`] once per apply (after argument
+/// validation, before any communication) and act on the returned
+/// events — killing ranks themselves, since *how* a node dies is
+/// backend-specific.
+#[derive(Debug, Clone, Default)]
+pub struct FaultClock {
+    plan: FaultPlan,
+    applies: usize,
+}
+
+impl FaultClock {
+    /// Install a plan and reset the apply counter.
+    pub fn set_plan(&mut self, plan: FaultPlan) {
+        self.plan = plan;
+        self.applies = 0;
+    }
+
+    /// The installed plan.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Count one apply and report what the schedule demands at its
+    /// start: the nodes whose kill is due now, and the node (if any)
+    /// that has not joined yet.
+    pub fn begin_apply(&mut self) -> (Vec<usize>, Option<usize>) {
+        self.applies += 1;
+        (self.plan.kills_at(self.applies).collect(), self.plan.absent_at(self.applies))
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.events.is_empty() {
+            return write!(f, "(no faults)");
+        }
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                write!(f, "; ")?;
+            }
+            write!(f, "{e}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_orders_and_queries_events() {
+        let plan = FaultPlan::new().kill(1, 3).join(2, 5).kill(0, 3);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.events().len(), 3);
+        assert_eq!(plan.kills_at(3).collect::<Vec<_>>(), vec![1, 0]);
+        assert_eq!(plan.kills_at(1).count(), 0);
+        assert_eq!(plan.max_node(), Some(2));
+        assert_eq!(plan.absent_at(1), Some(2));
+        assert_eq!(plan.absent_at(4), Some(2));
+        assert_eq!(plan.absent_at(5), None, "joined exactly at its at_apply");
+    }
+
+    #[test]
+    fn rebasing_drops_fired_events_and_shifts_the_rest() {
+        let plan = FaultPlan::new().kill(1, 2).kill(0, 6).join(2, 4);
+        let after3 = plan.rebased(3);
+        assert_eq!(
+            after3.events(),
+            &[
+                FaultEvent::Kill { node: 0, at_apply: 3 },
+                FaultEvent::Join { node: 2, at_apply: 1 },
+            ]
+        );
+        assert_eq!(plan.rebased(0), plan, "rebase by zero is the identity");
+        assert!(plan.rebased(10).is_empty());
+    }
+
+    #[test]
+    fn clock_counts_applies_and_fires_due_events() {
+        let mut clock = FaultClock::default();
+        clock.set_plan(FaultPlan::new().kill(1, 2).join(2, 3));
+        assert_eq!(clock.begin_apply(), (vec![], Some(2)), "apply 1: node 2 still absent");
+        assert_eq!(clock.begin_apply(), (vec![1], Some(2)), "apply 2: kill due");
+        assert_eq!(clock.begin_apply(), (vec![], None), "apply 3: node 2 has joined");
+        clock.set_plan(FaultPlan::new().kill(0, 1));
+        assert_eq!(clock.begin_apply(), (vec![0], None), "set_plan resets the counter");
+    }
+
+    #[test]
+    fn plans_render_for_humans() {
+        assert_eq!(FaultPlan::new().to_string(), "(no faults)");
+        let plan = FaultPlan::new().kill(1, 3).join(2, 5);
+        assert_eq!(plan.to_string(), "kill node 1 at apply 3; node 2 joins at apply 5");
+    }
+}

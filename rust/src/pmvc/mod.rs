@@ -43,6 +43,7 @@
 pub mod backend;
 pub mod dynamic;
 pub mod engine;
+pub mod fault;
 pub mod exec;
 pub mod exec_mpi;
 pub mod phases;
@@ -54,6 +55,7 @@ pub use backend::{make_backend, BackendKind, ExecBackend, MpiBackend, OverlapMod
 pub use dynamic::{dynamic_spmv, dynamic_spmv_format, DynamicError, DynamicResult};
 pub use engine::PmvcEngine;
 pub use exec::{execute_threads, ExecResult};
+pub use fault::{FaultEvent, FaultPlan};
 pub use exec_mpi::{MpiCluster, MpiIterTimes, MpiOp};
 pub use phases::PhaseTimes;
 pub use plan::{CommPlan, NodePlan};

@@ -13,6 +13,10 @@
 pub enum RequestStatus {
     /// Admitted, solved, reported.
     Completed,
+    /// Admitted, the first solve died with the engine (injected rank
+    /// death), and the retry on a rebuilt engine solved it — served,
+    /// not dropped.
+    Recovered,
     /// Admitted but the solve errored (reason attached).
     Failed(String),
     /// Rejected at admission: queue at capacity (open-loop mode).
@@ -54,9 +58,15 @@ pub struct RequestOutcome {
 }
 
 impl RequestOutcome {
-    /// True when the request was admitted and solved.
+    /// True when the request was admitted and solved first try.
     pub fn is_completed(&self) -> bool {
         self.status == RequestStatus::Completed
+    }
+
+    /// True when the request was served an answer — first try or after
+    /// an engine-rebuild retry.
+    pub fn is_served(&self) -> bool {
+        matches!(self.status, RequestStatus::Completed | RequestStatus::Recovered)
     }
 }
 
@@ -76,8 +86,10 @@ pub struct KeyReport {
 /// Aggregated serving metrics for one service session.
 #[derive(Clone, Debug)]
 pub struct ServiceReport {
-    /// Requests solved.
+    /// Requests solved first try.
     pub completed: usize,
+    /// Requests served after their engine died and was rebuilt.
+    pub recovered: usize,
     /// Requests admitted whose solve errored.
     pub failed: usize,
     /// Typed queue-full rejections.
@@ -98,6 +110,8 @@ pub struct ServiceReport {
     pub engines_reused: usize,
     /// Idle engines retired to make room.
     pub engines_evicted: usize,
+    /// Broken engines discarded after a rank death.
+    pub engines_discarded: usize,
     /// High-water mark of live engines.
     pub engine_peak: usize,
     /// Median queue wait, milliseconds.
@@ -157,11 +171,11 @@ impl ServiceReport {
         }
     }
 
-    /// Requests that reached a terminal state (completed + failed +
-    /// rejected) — the accounting identity the tests pin against the
-    /// submitted count: nothing dropped, nothing wedged.
+    /// Requests that reached a terminal state (completed + recovered +
+    /// failed + rejected) — the accounting identity the tests pin
+    /// against the submitted count: nothing dropped, nothing wedged.
     pub fn accounted(&self) -> usize {
-        self.completed + self.failed + self.rejected_full + self.rejected_invalid
+        self.completed + self.recovered + self.failed + self.rejected_full + self.rejected_invalid
     }
 
     /// Fixed-width terminal table.
@@ -172,8 +186,8 @@ impl ServiceReport {
             "--------------------------------------------------------------------------\n",
         );
         t.push_str(&format!(
-            "requests     completed={} failed={} rejected(queue-full)={} rejected(invalid)={}\n",
-            self.completed, self.failed, self.rejected_full, self.rejected_invalid
+            "requests     completed={} recovered={} failed={} rejected(queue-full)={} rejected(invalid)={}\n",
+            self.completed, self.recovered, self.failed, self.rejected_full, self.rejected_invalid
         ));
         t.push_str(&format!(
             "plan cache   hits={} misses={} hit-rate={:.1}% evictions={} resident={} B\n",
@@ -184,8 +198,12 @@ impl ServiceReport {
             self.cache_bytes
         ));
         t.push_str(&format!(
-            "engine pool  created={} reused={} evicted={} peak-live={}\n",
-            self.engines_created, self.engines_reused, self.engines_evicted, self.engine_peak
+            "engine pool  created={} reused={} evicted={} discarded={} peak-live={}\n",
+            self.engines_created,
+            self.engines_reused,
+            self.engines_evicted,
+            self.engines_discarded,
+            self.engine_peak
         ));
         t.push_str(&format!(
             "queue wait   p50={:.3} ms  p95={:.3} ms\n",
@@ -228,15 +246,18 @@ impl ServiceReport {
             ));
         }
         format!(
-            "{{\n  \"completed\": {},\n  \"failed\": {},\n  \"rejected_full\": {},\n  \
+            "{{\n  \"completed\": {},\n  \"recovered\": {},\n  \"failed\": {},\n  \
+             \"rejected_full\": {},\n  \
              \"rejected_invalid\": {},\n  \"cache_hits\": {},\n  \"cache_misses\": {},\n  \
              \"cache_evictions\": {},\n  \"cache_bytes\": {},\n  \"hit_rate\": {:.6},\n  \
              \"engines_created\": {},\n  \"engines_reused\": {},\n  \"engines_evicted\": {},\n  \
+             \"engines_discarded\": {},\n  \
              \"engine_peak\": {},\n  \"queue_wait_p50_ms\": {:.6},\n  \
              \"queue_wait_p95_ms\": {:.6},\n  \"latency_p50_ms\": {:.6},\n  \
              \"latency_p95_ms\": {:.6},\n  \"wall_s\": {:.6},\n  \"solves_per_sec\": {:.3},\n  \
              \"matvecs_per_sec\": {:.3},\n  \"per_key\": [\n{}\n  ]\n}}\n",
             self.completed,
+            self.recovered,
             self.failed,
             self.rejected_full,
             self.rejected_invalid,
@@ -248,6 +269,7 @@ impl ServiceReport {
             self.engines_created,
             self.engines_reused,
             self.engines_evicted,
+            self.engines_discarded,
             self.engine_peak,
             self.queue_wait_p50_ms,
             self.queue_wait_p95_ms,
@@ -267,7 +289,8 @@ mod tests {
 
     fn sample() -> ServiceReport {
         ServiceReport {
-            completed: 18,
+            completed: 17,
+            recovered: 1,
             failed: 0,
             rejected_full: 1,
             rejected_invalid: 2,
@@ -278,6 +301,7 @@ mod tests {
             engines_created: 3,
             engines_reused: 15,
             engines_evicted: 0,
+            engines_discarded: 1,
             engine_peak: 3,
             queue_wait_p50_ms: 0.4,
             queue_wait_p95_ms: 1.9,
@@ -327,6 +351,8 @@ mod tests {
             "\"queue_wait_p95_ms\"",
             "\"matvecs_per_sec\"",
             "\"per_key\"",
+            "\"recovered\"",
+            "\"engines_discarded\"",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
@@ -351,6 +377,8 @@ mod tests {
             assert!(t.contains(needle), "missing {needle}");
         }
         assert!(t.contains("hit-rate=83.3%"));
+        assert!(t.contains("recovered=1"));
+        assert!(t.contains("discarded=1"));
         assert!(t.contains("per-key"));
     }
 }

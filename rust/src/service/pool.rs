@@ -24,6 +24,9 @@ pub struct PoolStats {
     pub reused: usize,
     /// Idle engines retired to make room for another key.
     pub evicted: usize,
+    /// Checked-out engines discarded as broken (dead rank) instead of
+    /// returned warm.
+    pub discarded: usize,
     /// High-water mark of live engines (never exceeds the capacity).
     pub peak_live: usize,
 }
@@ -161,6 +164,21 @@ impl EnginePool {
         drop(inner);
         self.available.notify_one();
     }
+
+    /// Drop a checked-out engine that is no longer trustworthy (a rank
+    /// died inside it) instead of returning it warm: its workers are
+    /// joined outside the lock and the slot is released, exactly like a
+    /// failed build, so a replacement can be built immediately.
+    pub fn discard(&self, engine: PmvcEngine) {
+        // joining the broken engine's surviving workers happens here,
+        // outside the lock
+        drop(engine);
+        let mut inner = self.inner.lock().unwrap();
+        inner.live -= 1;
+        inner.stats.discarded += 1;
+        drop(inner);
+        self.available.notify_one();
+    }
 }
 
 #[cfg(test)]
@@ -224,6 +242,20 @@ mod tests {
         assert!(reused);
         pool.checkin(k2, e2);
         pool.checkin(k3, e3);
+    }
+
+    #[test]
+    fn discard_releases_the_slot_and_counts() {
+        let (k1, b1) = key_and_engine(4);
+        let pool = EnginePool::new(1);
+        let (engine, _) = pool.checkout(&k1, &b1).unwrap();
+        pool.discard(engine);
+        assert_eq!(pool.live(), 0, "the discarded engine's slot is free");
+        assert_eq!(pool.stats().discarded, 1);
+        // a replacement builds immediately instead of blocking
+        let (engine, reused) = pool.checkout(&k1, &b1).unwrap();
+        assert!(!reused, "the broken engine must not be reused");
+        pool.checkin(k1, engine);
     }
 
     #[test]

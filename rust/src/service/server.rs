@@ -30,7 +30,7 @@ use super::queue::{AdmissionQueue, AdmitError};
 use super::trace::SolveRequest;
 use crate::coordinator::experiment::load_matrix;
 use crate::partition::combined::{decompose, DecomposeConfig, TwoLevelDecomposition};
-use crate::pmvc::{CommPlan, PmvcEngine};
+use crate::pmvc::{CommPlan, FaultPlan, PmvcEngine};
 use crate::solver::{make_solver, BatchedJacobi, BlockCg, MatVecOp, MultiVecOp, SolverKind};
 use crate::sparse::{fingerprint_csr, Csr, MatrixFingerprint};
 use std::collections::HashMap;
@@ -108,6 +108,9 @@ struct Solved {
     matvecs: usize,
     cache_hit: bool,
     engine_reused: bool,
+    /// The first attempt lost its engine to an injected rank death and
+    /// this answer came from a retry on a rebuilt engine.
+    recovered: bool,
     key_label: String,
 }
 
@@ -186,6 +189,7 @@ fn run_solver(a: &Csr, spec: &SolveRequest, engine: &mut PmvcEngine) -> crate::R
             matvecs: op.matvecs,
             cache_hit: false,
             engine_reused: false,
+            recovered: false,
             key_label: String::new(),
         })
     } else {
@@ -201,6 +205,7 @@ fn run_solver(a: &Csr, spec: &SolveRequest, engine: &mut PmvcEngine) -> crate::R
             matvecs: op.matvecs,
             cache_hit: false,
             engine_reused: false,
+            recovered: false,
             key_label: String::new(),
         })
     }
@@ -236,8 +241,20 @@ fn build_plan_pair(
     Ok((d, plan))
 }
 
+/// The injected fault of a request, when it carries one (both fields
+/// are validated together at admission).
+fn fault_plan_for(spec: &SolveRequest) -> Option<FaultPlan> {
+    match (spec.fault_node, spec.fault_apply) {
+        (Some(node), Some(at)) => Some(FaultPlan::new().kill(node, at)),
+        _ => None,
+    }
+}
+
 /// Serve one admitted request: matrix → plan cache → engine pool →
 /// batched solve. Every error is caught and reported, never panicked.
+/// A request carrying an injected fault that kills its engine mid-solve
+/// is retried once on a rebuilt engine ([`Solved::recovered`]) instead
+/// of dropped.
 fn solve_one(state: &ServiceState, spec: &SolveRequest) -> crate::Result<Solved> {
     let m = load_cached_matrix(state, &spec.matrix, spec.seed)?;
     let key = PlanKey {
@@ -257,19 +274,66 @@ fn solve_one(state: &ServiceState, spec: &SolveRequest) -> crate::Result<Solved>
         let (mut engine, reused) = state
             .pool
             .checkout(&key, || PmvcEngine::with_plan(Arc::clone(&d), Arc::clone(&plan)))?;
-        let solved = run_solver(&m.csr, spec, &mut engine);
-        // The engine goes back warm even when the solve failed — the
-        // engine itself is still healthy (solver errors are math/shape
-        // errors, not worker deaths).
-        state.pool.checkin(key.clone(), engine);
-        let s = solved?;
-        Ok(Solved { cache_hit: hit, engine_reused: reused, key_label: key.label(), ..s })
+        if let Some(fault) = fault_plan_for(spec) {
+            if let Err(e) = engine.set_fault_plan(fault) {
+                // The plan never armed; the engine is untouched.
+                state.pool.checkin(key.clone(), engine);
+                return Err(e);
+            }
+        }
+        match run_solver(&m.csr, spec, &mut engine) {
+            Ok(s) => {
+                // Disarm any un-fired fault before the engine goes back
+                // warm, so a later request cannot inherit the kill.
+                if spec.fault_node.is_some() {
+                    let _ = engine.set_fault_plan(FaultPlan::default());
+                }
+                state.pool.checkin(key.clone(), engine);
+                Ok(Solved { cache_hit: hit, engine_reused: reused, key_label: key.label(), ..s })
+            }
+            Err(_) if spec.fault_node.is_some() => {
+                // The injected kill took the engine down mid-solve:
+                // discard it broken, rebuild from the cached plan, and
+                // retry from scratch — the retry is bitwise the
+                // fault-free solve.
+                state.pool.discard(engine);
+                let mut engine = PmvcEngine::with_plan(Arc::clone(&d), Arc::clone(&plan))?;
+                let s = run_solver(&m.csr, spec, &mut engine)?;
+                state.pool.checkin(key.clone(), engine);
+                Ok(Solved {
+                    recovered: true,
+                    cache_hit: hit,
+                    engine_reused: reused,
+                    key_label: key.label(),
+                    ..s
+                })
+            }
+            Err(e) => {
+                // The engine goes back warm even when the solve failed —
+                // without an injected fault the engine itself is still
+                // healthy (solver errors are math/shape errors, not
+                // worker deaths).
+                state.pool.checkin(key.clone(), engine);
+                Err(e)
+            }
+        }
     } else {
         // Baseline posture: everything rebuilt per request.
         let (d, plan) = build_plan_pair(&m.csr, spec)?;
-        let mut engine = PmvcEngine::with_plan(d, plan)?;
-        let s = run_solver(&m.csr, spec, &mut engine)?;
-        Ok(Solved { key_label: key.label(), ..s })
+        let mut engine = PmvcEngine::with_plan(Arc::clone(&d), Arc::clone(&plan))?;
+        if let Some(fault) = fault_plan_for(spec) {
+            engine.set_fault_plan(fault)?;
+        }
+        match run_solver(&m.csr, spec, &mut engine) {
+            Ok(s) => Ok(Solved { key_label: key.label(), ..s }),
+            Err(_) if spec.fault_node.is_some() => {
+                drop(engine);
+                let mut engine = PmvcEngine::with_plan(d, plan)?;
+                let s = run_solver(&m.csr, spec, &mut engine)?;
+                Ok(Solved { recovered: true, key_label: key.label(), ..s })
+            }
+            Err(e) => Err(e),
+        }
     }
 }
 
@@ -283,7 +347,7 @@ fn handle_request(state: &ServiceState, env: Envelope) {
         Ok(s) => RequestOutcome {
             id: env.spec.id,
             matrix: env.spec.matrix.clone(),
-            status: RequestStatus::Completed,
+            status: if s.recovered { RequestStatus::Recovered } else { RequestStatus::Completed },
             cache_hit: s.cache_hit,
             engine_reused: s.engine_reused,
             queue_wait_s,
@@ -376,6 +440,7 @@ fn client_loop(
 /// Fold the session into a [`ServiceReport`].
 fn build_report(state: &ServiceState, outcomes: Vec<RequestOutcome>, wall_s: f64) -> ServiceReport {
     let mut completed = 0;
+    let mut recovered = 0;
     let mut failed = 0;
     let mut rejected_full = 0;
     let mut rejected_invalid = 0;
@@ -384,8 +449,12 @@ fn build_report(state: &ServiceState, outcomes: Vec<RequestOutcome>, wall_s: f64
     let mut latencies: Vec<f64> = Vec::new();
     for o in &outcomes {
         match &o.status {
-            RequestStatus::Completed => {
-                completed += 1;
+            RequestStatus::Completed | RequestStatus::Recovered => {
+                if o.status == RequestStatus::Recovered {
+                    recovered += 1;
+                } else {
+                    completed += 1;
+                }
                 matvecs_total += o.matvecs;
                 waits.push(o.queue_wait_s);
                 latencies.push(o.latency_s);
@@ -412,6 +481,7 @@ fn build_report(state: &ServiceState, outcomes: Vec<RequestOutcome>, wall_s: f64
     let pool = state.pool.stats();
     ServiceReport {
         completed,
+        recovered,
         failed,
         rejected_full,
         rejected_invalid,
@@ -422,13 +492,14 @@ fn build_report(state: &ServiceState, outcomes: Vec<RequestOutcome>, wall_s: f64
         engines_created: pool.created,
         engines_reused: pool.reused,
         engines_evicted: pool.evicted,
+        engines_discarded: pool.discarded,
         engine_peak: pool.peak_live,
         queue_wait_p50_ms: 1e3 * percentile(&waits, 50.0),
         queue_wait_p95_ms: 1e3 * percentile(&waits, 95.0),
         latency_p50_ms: 1e3 * percentile(&latencies, 50.0),
         latency_p95_ms: 1e3 * percentile(&latencies, 95.0),
         wall_s,
-        solves_per_sec: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+        solves_per_sec: if wall_s > 0.0 { (completed + recovered) as f64 / wall_s } else { 0.0 },
         matvecs_per_sec: if wall_s > 0.0 { matvecs_total as f64 / wall_s } else { 0.0 },
         per_key,
         outcomes,
@@ -578,6 +649,55 @@ mod tests {
             RequestStatus::Failed(msg) => assert!(msg.contains("mtx") || msg.contains("file")),
             other => panic!("expected Failed, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn fault_injected_request_recovers_on_a_rebuilt_engine() {
+        let d = small_defaults();
+        let mut chaos = SolveRequest::new(0, "spd".into(), &d);
+        chaos.fault_node = Some(1);
+        chaos.fault_apply = Some(2);
+        assert!(chaos.validate().is_ok());
+        let reqs = vec![chaos.clone(), SolveRequest::new(1, "spd".into(), &d)];
+        let cfg = ServeConfig { keep_solutions: true, ..ServeConfig::default() };
+        let report = run_service(reqs, &cfg).unwrap();
+        assert_eq!(report.recovered, 1, "the chaos request must be retried, not dropped");
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.accounted(), 2);
+        assert_eq!(report.engines_discarded, 1, "the broken engine leaves through discard");
+        // The retried answer is bitwise the fault-free reference: the
+        // retry restarts from scratch on a rebuilt engine.
+        let (x_ref, converged) = one_shot_solution(&chaos).unwrap();
+        assert!(converged);
+        for o in &report.outcomes {
+            assert!(o.is_served(), "{:?}", o.status);
+            assert_eq!(o.x.as_deref().unwrap(), x_ref.as_slice());
+        }
+        let rec = report
+            .outcomes
+            .iter()
+            .find(|o| o.status == RequestStatus::Recovered)
+            .expect("one recovered outcome");
+        assert_eq!(rec.id, 0);
+        assert!(rec.converged);
+    }
+
+    #[test]
+    fn fault_injected_request_recovers_without_the_cache_too() {
+        let d = small_defaults();
+        let mut chaos = SolveRequest::new(0, "spd".into(), &d);
+        chaos.fault_node = Some(0);
+        chaos.fault_apply = Some(1);
+        let cfg = ServeConfig {
+            cache_enabled: false,
+            keep_solutions: true,
+            ..ServeConfig::default()
+        };
+        let report = run_service(vec![chaos.clone()], &cfg).unwrap();
+        assert_eq!(report.recovered, 1);
+        assert_eq!(report.accounted(), 1);
+        let (x_ref, _) = one_shot_solution(&chaos).unwrap();
+        assert_eq!(report.outcomes[0].x.as_deref().unwrap(), x_ref.as_slice());
     }
 
     #[test]

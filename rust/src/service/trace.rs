@@ -52,6 +52,10 @@ pub struct SolveRequest {
     pub cores: usize,
     /// Generator seed (synthetic sources) and RHS recipe seed.
     pub seed: u64,
+    /// Chaos injection: node to kill mid-solve (with [`Self::fault_apply`]).
+    pub fault_node: Option<usize>,
+    /// Chaos injection: 1-based apply at which the kill fires.
+    pub fault_apply: Option<usize>,
 }
 
 /// Fallbacks for fields a trace line (or the workload driver) leaves
@@ -117,6 +121,8 @@ impl SolveRequest {
             nodes: defaults.nodes,
             cores: defaults.cores,
             seed: defaults.seed,
+            fault_node: None,
+            fault_apply: None,
         }
     }
 
@@ -159,6 +165,23 @@ impl SolveRequest {
         }
         if self.tol <= 0.0 || self.tol.is_nan() {
             return Err(format!("non-positive tolerance {}", self.tol));
+        }
+        match (self.fault_node, self.fault_apply) {
+            (None, None) => {}
+            (Some(node), Some(at)) => {
+                if node >= self.nodes {
+                    return Err(format!(
+                        "fault_node {node} out of range for a {}-node cluster",
+                        self.nodes
+                    ));
+                }
+                if at == 0 {
+                    return Err("fault_apply is 1-based; 0 never fires".into());
+                }
+            }
+            _ => {
+                return Err("fault_node and fault_apply must be given together".into());
+            }
         }
         Ok(())
     }
@@ -350,8 +373,9 @@ fn parse_object(line: &str) -> Result<Vec<(String, JsonValue)>, String> {
 /// Parse a JSONL trace into requests. Each non-empty, non-`#` line is a
 /// flat JSON object; recognised fields are `matrix` (required),
 /// `combo`, `partitioner`, `intra`, `format`, `solver`, `tol`, `iters`,
-/// `nrhs`, `nodes`, `cores`, `seed`; anything else is an error (typos
-/// must not silently fall back to defaults).
+/// `nrhs`, `nodes`, `cores`, `seed`, `fault_node`, `fault_apply`;
+/// anything else is an error (typos must not silently fall back to
+/// defaults).
 pub fn parse_trace(text: &str, defaults: &RequestDefaults) -> crate::Result<Vec<SolveRequest>> {
     let mut out: Vec<SolveRequest> = Vec::new();
     for (lineno, raw) in text.lines().enumerate() {
@@ -400,6 +424,8 @@ pub fn parse_trace(text: &str, defaults: &RequestDefaults) -> crate::Result<Vec<
                 "nodes" => val.as_usize(key).map(|v| req.nodes = v),
                 "cores" => val.as_usize(key).map(|v| req.cores = v),
                 "seed" => val.as_usize(key).map(|v| req.seed = v as u64),
+                "fault_node" => val.as_usize(key).map(|v| req.fault_node = Some(v)),
+                "fault_apply" => val.as_usize(key).map(|v| req.fault_apply = Some(v)),
                 other => Err(format!("unknown field '{other}'")),
             };
             applied.map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 1))?;
@@ -448,6 +474,37 @@ mod tests {
         assert!(parse_trace(r#"{"matrix": "spd" "#, &d).is_err(), "unclosed object");
         assert!(parse_trace(r#"{"matrix": "spd"} x"#, &d).is_err(), "trailing junk");
         assert!(parse_trace(r#"{"matrix": "spd", "nrhs": 1.5}"#, &d).is_err(), "non-integer");
+    }
+
+    #[test]
+    fn fault_fields_parse_and_validate() {
+        let d = RequestDefaults::default();
+        let reqs = parse_trace(
+            r#"{"matrix": "spd", "fault_node": 1, "fault_apply": 2}"#,
+            &d,
+        )
+        .unwrap();
+        assert_eq!(reqs[0].fault_node, Some(1));
+        assert_eq!(reqs[0].fault_apply, Some(2));
+        assert!(reqs[0].validate().is_ok());
+
+        let mut r = reqs[0].clone();
+        r.fault_node = Some(5); // defaults run 2 nodes
+        assert!(r.validate().unwrap_err().contains("out of range"));
+
+        let mut r = reqs[0].clone();
+        r.fault_apply = Some(0);
+        assert!(r.validate().unwrap_err().contains("1-based"));
+
+        let mut r = reqs[0].clone();
+        r.fault_apply = None;
+        assert!(r.validate().unwrap_err().contains("together"));
+
+        assert!(
+            parse_trace(r#"{"matrix": "spd", "fault_node": 1.5, "fault_apply": 2}"#, &d)
+                .is_err(),
+            "non-integer fault_node"
+        );
     }
 
     #[test]

@@ -49,6 +49,21 @@ pub enum SolverError {
     },
     /// The operator's backend failed during an `apply_into`.
     Backend(anyhow::Error),
+    /// The operator failed *mid-solve* (after at least one successful
+    /// apply) — e.g. a rank died under the solver. Carries the last
+    /// completed iterate as a checkpoint so the caller can rebuild the
+    /// operator over the survivors and warm-restart from `x` via
+    /// [`SolveOptions::x0`].
+    Interrupted {
+        /// Iterations fully completed before the failing apply.
+        at_iteration: usize,
+        /// The last completed iterate (column-major panel for the
+        /// batched solvers) — the checkpoint a Krylov restart resumes
+        /// from.
+        x: Vec<f64>,
+        /// The underlying backend failure.
+        source: anyhow::Error,
+    },
 }
 
 impl std::fmt::Display for SolverError {
@@ -64,6 +79,9 @@ impl std::fmt::Display for SolverError {
                 write!(f, "SOR requires 0 < omega < 2, got {omega}")
             }
             SolverError::Backend(e) => write!(f, "operator apply failed: {e:#}"),
+            SolverError::Interrupted { at_iteration, source, .. } => {
+                write!(f, "solve interrupted after iteration {at_iteration}: {source:#}")
+            }
         }
     }
 }
@@ -71,7 +89,7 @@ impl std::fmt::Display for SolverError {
 impl std::error::Error for SolverError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
-            SolverError::Backend(e) => {
+            SolverError::Backend(e) | SolverError::Interrupted { source: e, .. } => {
                 let src: &(dyn std::error::Error + 'static) = e.as_ref();
                 Some(src)
             }
@@ -126,6 +144,13 @@ pub struct SolveOptions {
     pub record_history: bool,
     /// Optional per-iteration callback.
     pub observer: Option<Observer>,
+    /// Warm-start iterate (checkpointed Krylov restart): when set, the
+    /// solver starts from this vector instead of zero, paying one extra
+    /// apply to form the true initial residual `r = b − A·x0`. For the
+    /// batched solvers this is a column-major panel of `n·k` values. A
+    /// restart from an already-converged iterate terminates in at most
+    /// one iteration.
+    pub x0: Option<Vec<f64>>,
 }
 
 impl Default for SolveOptions {
@@ -136,6 +161,7 @@ impl Default for SolveOptions {
             criterion: StoppingCriterion::default(),
             record_history: true,
             observer: None,
+            x0: None,
         }
     }
 }
@@ -148,6 +174,7 @@ impl std::fmt::Debug for SolveOptions {
             .field("criterion", &self.criterion)
             .field("record_history", &self.record_history)
             .field("observer", &self.observer.is_some())
+            .field("x0", &self.x0.as_ref().map(Vec::len))
             .finish()
     }
 }
@@ -204,6 +231,13 @@ pub struct SolveReport {
     pub lambda: Option<f64>,
     /// Smallest Ritz value (Lanczos only).
     pub lambda_min: Option<f64>,
+    /// Whether the solve warm-started from [`SolveOptions::x0`]
+    /// (a checkpointed Krylov restart rather than a zero start).
+    pub warm_started: bool,
+    /// Fault-recovery restarts folded into this report (0 for a direct
+    /// solve; the recovery driver sets it to the number of survivor
+    /// replans the solve survived).
+    pub restarts: usize,
 }
 
 /// One iterative method behind one interface: configure through the
@@ -341,6 +375,13 @@ macro_rules! impl_solver_builder {
                 self.opts.observer = Some(Box::new(f));
                 self
             }
+            /// Warm-start iterate (checkpointed restart): begin from
+            /// this vector — column-major `n·k` panel for the batched
+            /// solvers — instead of zero.
+            pub fn x0(mut self, x0: Vec<f64>) -> Self {
+                self.opts.x0 = Some(x0);
+                self
+            }
         }
     };
 }
@@ -396,6 +437,10 @@ pub(crate) fn finish_report(
         phases: phase_delta(phases_before, a.phase_times()),
         lambda,
         lambda_min,
+        // stamped after assembly: the solver flips `warm_started` when
+        // it consumed an x0, the recovery driver sets `restarts`
+        warm_started: false,
+        restarts: 0,
     }
 }
 
@@ -538,6 +583,14 @@ mod tests {
         let e = SolverError::Backend(anyhow::anyhow!("node 3 died"));
         assert!(e.to_string().contains("node 3 died"));
         use std::error::Error as _;
+        assert!(e.source().is_some());
+        let e = SolverError::Interrupted {
+            at_iteration: 12,
+            x: vec![1.0; 4],
+            source: anyhow::anyhow!("node rank 1 is down"),
+        };
+        assert!(e.to_string().contains("iteration 12"), "{e}");
+        assert!(e.to_string().contains("rank 1"), "{e}");
         assert!(e.source().is_some());
     }
 }

@@ -83,7 +83,21 @@ impl BatchedJacobi {
         let t0 = Instant::now();
         let phases0 = a.phase_times();
 
-        let mut x = vec![0.0; n * k];
+        // Jacobi recomputes the residual from scratch every iteration,
+        // so a warm start is just seeding the iterate panel.
+        let mut x = match self.opts.x0.take() {
+            Some(x0) => {
+                if x0.len() != n * k {
+                    return Err(SolverError::DimensionMismatch {
+                        what: "warm start x0 panel",
+                        expected: n * k,
+                        got: x0.len(),
+                    });
+                }
+                x0
+            }
+            None => vec![0.0; n * k],
+        };
         let mut ax = vec![0.0; n * k]; // panel scratch, reused every iteration
         let mut threshold = vec![0.0; k];
         let mut residual = vec![f64::INFINITY; k];
@@ -101,7 +115,11 @@ impl BatchedJacobi {
             if !active.iter().any(|&live| live) {
                 break;
             }
-            a.apply_multi_into(&x, &mut ax, k).map_err(SolverError::Backend)?;
+            a.apply_multi_into(&x, &mut ax, k).map_err(|e| SolverError::Interrupted {
+                at_iteration: it,
+                x: x.clone(),
+                source: e,
+            })?;
             panel_applies += 1;
             let mut worst = 0.0f64;
             for j in 0..k {
@@ -135,7 +153,12 @@ impl BatchedJacobi {
             // the loop's last residual for a non-converged column
             // predates its final update — recompute it so
             // residual_norm describes the returned column
-            a.apply_multi_into(&x, &mut ax, k).map_err(SolverError::Backend)?;
+            let done = iterations.iter().copied().max().unwrap_or(0);
+            a.apply_multi_into(&x, &mut ax, k).map_err(|e| SolverError::Interrupted {
+                at_iteration: done,
+                x: x.clone(),
+                source: e,
+            })?;
             panel_applies += 1;
             for j in 0..k {
                 if converged[j] || iterations[j] == 0 {
@@ -266,6 +289,35 @@ mod tests {
             assert_eq!(c.iterations, 2);
             assert!(c.residual_norm.is_finite());
         }
+    }
+
+    #[test]
+    fn batched_jacobi_warm_start_from_converged_panel_terminates_in_one_sweep() {
+        let a = gen::generate_spd(120, 3, 600, 9).to_csr();
+        let k = 2;
+        let b = panel_rhs(&a, k);
+        let cold = BatchedJacobi::from_matrix(&a)
+            .unwrap()
+            .tol(1e-10)
+            .max_iters(5000)
+            .solve_multi(&mut a.clone(), &b, k)
+            .unwrap();
+        assert!(cold.all_converged());
+        let warm = BatchedJacobi::from_matrix(&a)
+            .unwrap()
+            .tol(1e-10)
+            .max_iters(5000)
+            .x0(cold.x.clone())
+            .solve_multi(&mut a.clone(), &b, k)
+            .unwrap();
+        assert!(warm.all_converged());
+        assert!(warm.max_iterations() <= 1, "restart swept {} times", warm.max_iterations());
+        let err = BatchedJacobi::from_matrix(&a)
+            .unwrap()
+            .x0(vec![0.0; 5])
+            .solve_multi(&mut a.clone(), &b, k)
+            .unwrap_err();
+        assert!(matches!(err, SolverError::DimensionMismatch { got: 5, .. }));
     }
 
     #[test]

@@ -82,10 +82,31 @@ impl BlockCg {
         let t0 = Instant::now();
         let phases0 = a.phase_times();
 
-        let mut x = vec![0.0; n * k];
-        let mut r = b.to_vec(); // R = B - A·0
-        let mut p = r.clone();
         let mut ap = vec![0.0; n * k]; // panel scratch, reused every iteration
+        let mut panel_applies = 0usize;
+        let (mut x, mut r) = match self.opts.x0.take() {
+            Some(x0) => {
+                if x0.len() != n * k {
+                    return Err(SolverError::DimensionMismatch {
+                        what: "warm start x0 panel",
+                        expected: n * k,
+                        got: x0.len(),
+                    });
+                }
+                // checkpointed restart: one panel apply for the true
+                // initial residual R = B − A·X0
+                a.apply_multi_into(&x0, &mut ap, k).map_err(|e| SolverError::Interrupted {
+                    at_iteration: 0,
+                    x: x0.clone(),
+                    source: e,
+                })?;
+                panel_applies += 1;
+                let r: Vec<f64> = b.iter().zip(&ap).map(|(&bi, &ai)| bi - ai).collect();
+                (x0, r)
+            }
+            None => (vec![0.0; n * k], b.to_vec()), // R = B - A·0
+        };
+        let mut p = r.clone();
         let mut rs_old = vec![0.0; k];
         let mut residual = vec![0.0; k];
         let mut threshold = vec![0.0; k];
@@ -93,14 +114,14 @@ impl BlockCg {
         let mut active = vec![false; k];
         let mut iterations = vec![0usize; k];
         let mut histories: Vec<Vec<f64>> = vec![Vec::new(); k];
-        let mut panel_applies = 0usize;
 
         for j in 0..k {
             let bj = &b[j * n..(j + 1) * n];
+            let rj = &r[j * n..(j + 1) * n];
             threshold[j] = self.opts.threshold(norm2(bj));
-            rs_old[j] = dot(bj, bj);
+            rs_old[j] = dot(rj, rj);
             residual[j] = rs_old[j].sqrt();
-            converged[j] = residual[j] <= threshold[j]; // zero / converged rhs
+            converged[j] = residual[j] <= threshold[j]; // zero / converged rhs / converged x0
             active[j] = !converged[j];
         }
 
@@ -108,7 +129,11 @@ impl BlockCg {
             if !active.iter().any(|&live| live) {
                 break;
             }
-            a.apply_multi_into(&p, &mut ap, k).map_err(SolverError::Backend)?;
+            a.apply_multi_into(&p, &mut ap, k).map_err(|e| SolverError::Interrupted {
+                at_iteration: it,
+                x: x.clone(),
+                source: e,
+            })?;
             panel_applies += 1;
             let mut worst = 0.0f64;
             for j in 0..k {
@@ -257,6 +282,28 @@ mod tests {
         for i in 0..n {
             assert!((r.column_x(0)[i] - x_true[i]).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn block_cg_warm_start_from_converged_panel_terminates_immediately() {
+        let a = gen::generate_spd(160, 3, 900, 5).to_csr();
+        let k = 3;
+        let b = panel_rhs(&a, k);
+        let cold =
+            BlockCg::new().tol(1e-11).max_iters(800).solve_multi(&mut a.clone(), &b, k).unwrap();
+        assert!(cold.all_converged());
+        let warm = BlockCg::new()
+            .tol(1e-11)
+            .max_iters(800)
+            .x0(cold.x.clone())
+            .solve_multi(&mut a.clone(), &b, k)
+            .unwrap();
+        assert!(warm.all_converged());
+        assert!(warm.max_iterations() <= 1, "restart took {} iterations", warm.max_iterations());
+        assert_eq!(warm.x, cold.x);
+        // a mis-sized panel is a typed error
+        let err = BlockCg::new().x0(vec![0.0; 7]).solve_multi(&mut a.clone(), &b, k).unwrap_err();
+        assert!(matches!(err, SolverError::DimensionMismatch { got: 7, .. }));
     }
 
     #[test]

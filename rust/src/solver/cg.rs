@@ -16,6 +16,29 @@ use std::time::Instant;
 /// All solver vectors (x, r, p and the matvec scratch) are allocated
 /// once before the loop; every iteration drives exactly one
 /// [`MatVecOp::apply_into`] into the reused scratch.
+///
+/// CG restarts cheaply from a checkpoint: supply the iterate through
+/// the `.x0(..)` builder ([`SolveOptions::x0`]) and the solver pays one
+/// extra apply to form the true residual `r = b − A·x0`, then proceeds
+/// as usual. A restart from an already-converged iterate terminates in
+/// at most one iteration (zero, in fact — the initial residual already
+/// meets the threshold):
+///
+/// ```
+/// use pmvc::solver::{Cg, IterativeSolver};
+/// use pmvc::sparse::Coo;
+///
+/// let a = Coo::from_triplets(2, 2, [(0, 0, 4.0), (1, 1, 2.0)]).unwrap().to_csr();
+/// let b = [8.0, 6.0];
+/// let first = Cg::new().tol(1e-12).solve(&mut a.clone(), &b).unwrap();
+/// assert!(first.converged && !first.warm_started);
+///
+/// // restart from the converged iterate: ≤ 1 iteration to terminate
+/// let restarted = Cg::new().tol(1e-12).x0(first.x.clone()).solve(&mut a.clone(), &b).unwrap();
+/// assert!(restarted.converged && restarted.warm_started);
+/// assert!(restarted.iterations <= 1);
+/// assert_eq!(restarted.x, first.x);
+/// ```
 #[derive(Debug, Default)]
 pub struct Cg {
     opts: SolveOptions,
@@ -52,20 +75,45 @@ impl IterativeSolver for Cg {
         let phases0 = a.phase_times();
         let threshold = self.opts.threshold(norm2(b));
 
-        let mut x = vec![0.0; n];
-        let mut r = b.to_vec(); // r = b - A·0
-        let mut p = r.clone();
         let mut ap = vec![0.0; n]; // matvec scratch, reused every iteration
+        let mut applies = 0usize;
+        let warm_started = self.opts.x0.is_some();
+        let (mut x, mut r) = match self.opts.x0.take() {
+            Some(x0) => {
+                if x0.len() != n {
+                    return Err(SolverError::DimensionMismatch {
+                        what: "warm start x0",
+                        expected: n,
+                        got: x0.len(),
+                    });
+                }
+                // checkpointed restart: one extra apply for the true
+                // initial residual r = b − A·x0
+                a.apply_into(&x0, &mut ap).map_err(|e| SolverError::Interrupted {
+                    at_iteration: 0,
+                    x: x0.clone(),
+                    source: e,
+                })?;
+                applies += 1;
+                let r: Vec<f64> = b.iter().zip(&ap).map(|(&bi, &ai)| bi - ai).collect();
+                (x0, r)
+            }
+            None => (vec![0.0; n], b.to_vec()), // r = b - A·0
+        };
+        let mut p = r.clone();
         let mut history = Vec::new();
         let mut rs_old = dot(&r, &r);
         let mut residual = rs_old.sqrt();
-        let mut converged = residual <= threshold; // zero / converged rhs
+        let mut converged = residual <= threshold; // zero / converged rhs / converged x0
         let mut iterations = 0usize;
-        let mut applies = 0usize;
 
         if !converged {
             for it in 0..self.opts.max_iters {
-                a.apply_into(&p, &mut ap).map_err(SolverError::Backend)?;
+                a.apply_into(&p, &mut ap).map_err(|e| SolverError::Interrupted {
+                    at_iteration: it,
+                    x: x.clone(),
+                    source: e,
+                })?;
                 applies += 1;
                 let pap = dot(&p, &ap);
                 if pap <= 0.0 {
@@ -90,7 +138,7 @@ impl IterativeSolver for Cg {
                 rs_old = rs_new;
             }
         }
-        Ok(finish_report(
+        let mut report = finish_report(
             "cg",
             x,
             iterations,
@@ -103,7 +151,9 @@ impl IterativeSolver for Cg {
             &*a,
             None,
             None,
-        ))
+        );
+        report.warm_started = warm_started;
+        Ok(report)
     }
 }
 
@@ -212,6 +262,54 @@ mod tests {
         assert!(r.converged);
         assert_eq!(r.iterations, 0);
         assert!(r.x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn cg_warm_start_from_converged_iterate_terminates_immediately() {
+        let a = gen::generate_spd(200, 4, 1200, 3).to_csr();
+        let x_true: Vec<f64> = (0..200).map(|i| ((i * 3 % 7) as f64) * 0.5 - 1.0).collect();
+        let b = a.matvec(&x_true);
+        let cold = Cg::new().tol(1e-11).max_iters(800).solve(&mut a.clone(), &b).unwrap();
+        assert!(cold.converged && !cold.warm_started);
+        assert!(cold.iterations > 1, "system must be non-trivial");
+
+        // restart from the converged iterate: ≤ 1 iteration, 1 apply
+        // (the residual-forming one), bitwise the same answer
+        let warm = Cg::new()
+            .tol(1e-11)
+            .max_iters(800)
+            .x0(cold.x.clone())
+            .solve(&mut a.clone(), &b)
+            .unwrap();
+        assert!(warm.converged && warm.warm_started);
+        assert!(warm.iterations <= 1, "restart took {} iterations", warm.iterations);
+        assert_eq!(warm.applies, 1, "one apply to form r = b − A·x0");
+        assert_eq!(warm.x, cold.x);
+        assert_eq!(warm.restarts, 0, "a direct solve folds no recovery restarts");
+
+        // a mid-trajectory warm start still converges to the answer
+        let mut probe = Cg::new().tol(1e-2).max_iters(800);
+        let part = probe.solve(&mut a.clone(), &b).unwrap();
+        let resumed = Cg::new()
+            .tol(1e-11)
+            .max_iters(800)
+            .x0(part.x.clone())
+            .solve(&mut a.clone(), &b)
+            .unwrap();
+        assert!(resumed.converged && resumed.warm_started);
+        assert!(
+            resumed.iterations < cold.iterations,
+            "resuming from a partial iterate must save iterations ({} vs {})",
+            resumed.iterations,
+            cold.iterations
+        );
+        for i in 0..200 {
+            assert!((resumed.x[i] - x_true[i]).abs() < 1e-6, "x[{i}]");
+        }
+
+        // a mis-sized x0 is a typed error
+        let err = Cg::new().x0(vec![0.0; 3]).solve(&mut a.clone(), &b).unwrap_err();
+        assert!(matches!(err, SolverError::DimensionMismatch { expected: 200, got: 3, .. }));
     }
 
     #[test]

@@ -1,0 +1,159 @@
+//! The PR's survival matrix: every solver × backend × kill-schedule
+//! cell must survive a mid-solve rank death — the recovery driver
+//! replans over the survivors, warm-restarts from the checkpoint, still
+//! converges, agrees with the fault-free run at 1e-9, and records the
+//! restart in the report.
+
+use pmvc::coordinator::{solve_with_recovery, RecoverySpec};
+use pmvc::partition::combined::{Combination, DecomposeConfig};
+use pmvc::pmvc::{BackendKind, FaultPlan};
+use pmvc::rng::SplitMix64;
+use pmvc::solver::SolverKind;
+use pmvc::sparse::gen;
+use pmvc::sparse::Csr;
+
+fn spd_system(n: usize, seed: u64, k: usize) -> (Csr, Vec<f64>) {
+    let a = gen::generate_spd(n, 3, n * 5, seed).to_csr();
+    let mut rng = SplitMix64::new(seed ^ 0xF00D);
+    let b = (0..n * k).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+    (a, b)
+}
+
+fn spec<'a>(
+    a: &'a Csr,
+    solver: SolverKind,
+    nrhs: usize,
+    backend: BackendKind,
+    fault: FaultPlan,
+) -> RecoverySpec<'a> {
+    RecoverySpec {
+        a,
+        combo: Combination::NlHl,
+        cfg: DecomposeConfig::default(),
+        backend,
+        solver,
+        nrhs,
+        f: 3,
+        c: 2,
+        // 1e-12 leaves ~3 decades of margin under the 1e-9 answer gate:
+        // both runs land within tol·||b|| of the true solution, so their
+        // difference is bounded far below 1e-9 (λ_min >= 1 by
+        // construction of generate_spd).
+        tol: 1e-12,
+        max_iters: 8000,
+        fault,
+    }
+}
+
+#[test]
+fn survival_matrix_every_solver_backend_and_kill_schedule() {
+    // (label, solver kind, panel width): "block-cg" is CG over a panel.
+    let solvers = [
+        ("cg", SolverKind::Cg, 1usize),
+        ("jacobi", SolverKind::Jacobi, 1),
+        ("block-cg", SolverKind::Cg, 3),
+    ];
+    let backends = [BackendKind::Threads, BackendKind::Sim, BackendKind::Mpi];
+    for (label, solver, nrhs) in solvers {
+        let (a, b) = spd_system(200, 11, nrhs);
+        for backend in backends {
+            // the fault-free reference for this cell
+            let clean = solve_with_recovery(
+                &spec(&a, solver, nrhs, backend, FaultPlan::new()),
+                &b,
+            )
+            .unwrap();
+            assert!(clean.report.converged, "{label}/{backend}: clean run must converge");
+            assert_eq!(clean.report.restarts, 0, "{label}/{backend}");
+            let applies = clean.report.applies;
+            assert!(
+                applies >= 2,
+                "{label}/{backend}: {applies} applies leave no room to kill mid-solve"
+            );
+            // kill node 1 at the first, a middle, and the last apply
+            for kill_at in [1, (applies / 2).max(1), applies] {
+                let out = solve_with_recovery(
+                    &spec(&a, solver, nrhs, backend, FaultPlan::new().kill(1, kill_at)),
+                    &b,
+                )
+                .unwrap();
+                let tag = format!("{label}/{backend}/kill@{kill_at}");
+                assert!(out.report.converged, "{tag}: must still converge");
+                assert!(out.report.restarts >= 1, "{tag}: the restart must be recorded");
+                assert!(out.report.warm_started, "{tag}: resume must be a warm start");
+                assert_eq!(out.f_final, 2, "{tag}: one node died");
+                assert_eq!(out.events.len(), out.report.restarts, "{tag}");
+                assert_eq!(out.events[0].f_before, 3, "{tag}");
+                assert_eq!(out.events[0].f_after, 2, "{tag}");
+                for (i, (x, x_ref)) in out.report.x.iter().zip(&clean.report.x).enumerate() {
+                    assert!(
+                        (x - x_ref).abs() < 1e-9,
+                        "{tag} row {i}: answer drifted {:.3e} past the 1e-9 gate",
+                        (x - x_ref).abs()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_schedule_execution_is_deterministic() {
+    // Same seed + same schedule ⇒ identical recovery trajectory and a
+    // bitwise-identical answer: every candidate partition, the reseed
+    // salt, and the rebased schedule are pure functions of the spec.
+    let (a, b) = spd_system(180, 3, 1);
+    let plan = FaultPlan::new().kill(1, 5);
+    let s1 = solve_with_recovery(
+        &spec(&a, SolverKind::Cg, 1, BackendKind::Threads, plan.clone()),
+        &b,
+    )
+    .unwrap();
+    let s2 =
+        solve_with_recovery(&spec(&a, SolverKind::Cg, 1, BackendKind::Threads, plan), &b).unwrap();
+    assert_eq!(s1.report.x, s2.report.x, "same seed + schedule must be bitwise identical");
+    assert_eq!(s1.report.iterations, s2.report.iterations);
+    assert_eq!(s1.report.applies, s2.report.applies);
+    assert_eq!(s1.report.restarts, s2.report.restarts);
+    assert_eq!(s1.f_final, s2.f_final);
+    assert_eq!(s1.events.len(), s2.events.len());
+    for (e1, e2) in s1.events.iter().zip(&s2.events) {
+        // replan_s is wall-clock and excluded; everything else is exact
+        assert_eq!(e1.at_iteration, e2.at_iteration);
+        assert_eq!(
+            (e1.f_before, e1.f_after, e1.repartitioned),
+            (e2.f_before, e2.f_after, e2.repartitioned)
+        );
+    }
+}
+
+#[test]
+fn two_scheduled_deaths_are_survived_in_order() {
+    // f = 4 shrinks to 2 across two restarts; the events arrive in
+    // schedule order and the answer still matches the clean run.
+    let (a, b) = spd_system(200, 7, 1);
+    let mut clean_spec = spec(&a, SolverKind::Cg, 1, BackendKind::Threads, FaultPlan::new());
+    clean_spec.f = 4;
+    let clean = solve_with_recovery(&clean_spec, &b).unwrap();
+    assert!(clean.report.converged);
+
+    let mut chaos_spec = spec(
+        &a,
+        SolverKind::Cg,
+        1,
+        BackendKind::Threads,
+        FaultPlan::new().kill(3, 2).kill(1, 9),
+    );
+    chaos_spec.f = 4;
+    let out = solve_with_recovery(&chaos_spec, &b).unwrap();
+    assert!(out.report.converged);
+    assert_eq!(out.report.restarts, 2);
+    assert_eq!(out.f_final, 2);
+    assert_eq!(out.events[0].f_before, 4);
+    assert_eq!(out.events[0].f_after, 3);
+    assert_eq!(out.events[1].f_before, 3);
+    assert_eq!(out.events[1].f_after, 2);
+    for (i, (x, x_ref)) in out.report.x.iter().zip(&clean.report.x).enumerate() {
+        assert!((x - x_ref).abs() < 1e-9, "row {i}");
+    }
+}

@@ -204,6 +204,61 @@ fn invalid_requests_reject_typed_and_the_rest_complete() {
 }
 
 #[test]
+fn chaos_session_recovers_every_faulted_request() {
+    // Engines dying mid-queue: every third request schedules a rank
+    // death inside its own solve. The session must account for every
+    // request (zero dropped), recover each faulted one on a rebuilt
+    // engine, and keep every served answer — recovered or not — pinned
+    // to the one-shot reference at 1e-9.
+    let defaults = small_defaults();
+    let sources = ["spd", "t2dal", "bcsstm09"];
+    let mut requests = Vec::new();
+    for id in 0..12 {
+        let mut r = SolveRequest::new(id, sources[id % 3].to_string(), &defaults);
+        if id % 3 == 0 {
+            r.fault_node = Some(1);
+            r.fault_apply = Some(1 + id / 3); // kills at applies 1..=4
+        }
+        requests.push(r);
+    }
+    let cfg = ServeConfig {
+        workers: 3,
+        clients: 4,
+        keep_solutions: true,
+        ..ServeConfig::default()
+    };
+    let report = run_service(requests.clone(), &cfg).unwrap();
+
+    assert_eq!(report.accounted(), 12, "zero dropped requests");
+    assert_eq!(report.failed, 0);
+    assert!(report.recovered > 0, "chaos must exercise the recovery path");
+    assert_eq!(report.completed + report.recovered, 12);
+    assert_eq!(
+        report.engines_discarded, report.recovered,
+        "each recovery discards exactly one broken engine"
+    );
+
+    let mut reference: HashMap<(String, usize), Vec<f64>> = HashMap::new();
+    for o in &report.outcomes {
+        let spec = requests.iter().find(|r| r.id == o.id).unwrap();
+        assert!(o.is_served(), "request {}: {:?}", o.id, o.status);
+        if spec.fault_node.is_some() {
+            assert_eq!(
+                o.status,
+                RequestStatus::Recovered,
+                "request {} scheduled a death and must recover",
+                o.id
+            );
+            assert!(o.converged, "request {}: recovered solve must converge", o.id);
+        }
+        let x_ref = reference
+            .entry((spec.matrix.clone(), spec.nrhs))
+            .or_insert_with(|| one_shot_solution(spec).unwrap().0);
+        assert_panel_agrees(&spec.matrix, o.x.as_deref().unwrap(), x_ref);
+    }
+}
+
+#[test]
 fn full_queue_rejections_are_typed_not_dropped() {
     // A 1-deep queue with more clients than workers: whatever is not
     // admitted must surface as a typed RejectedFull outcome, and the

@@ -216,7 +216,15 @@ fn corrupted_decomposition_makes_solve_fail() {
     }
     let mut op = DistributedOp::with_backend(Box::new(FailingBackend { n: a.n_rows, calls: 0 }));
     let err = Cg::new().tol(1e-10).max_iters(100).solve(&mut op, &b).unwrap_err();
-    assert!(matches!(err, SolverError::Backend(_)));
+    // the failure is typed and checkpointed: no iteration completed, so
+    // the carried iterate is the zero cold-start vector
+    match &err {
+        SolverError::Interrupted { at_iteration, x, .. } => {
+            assert_eq!(*at_iteration, 0);
+            assert!(x.iter().all(|&v| v == 0.0));
+        }
+        other => panic!("expected Interrupted, got {other:?}"),
+    }
     assert!(err.to_string().contains("simulated node failure"));
 }
 
@@ -236,7 +244,7 @@ fn dying_mpi_rank_makes_solve_fail_instead_of_aborting() {
         // then rank 0 dies; the next solve must surface a typed error
         op.cluster.kill_rank(0);
         let err = Cg::new().tol(1e-10).max_iters(100).solve(&mut op, &b).unwrap_err();
-        assert!(matches!(err, SolverError::Backend(_)), "{mode}");
+        assert!(matches!(err, SolverError::Interrupted { .. }), "{mode}");
         assert!(err.to_string().contains("rank 0"), "{mode}: {err}");
         op.cluster.shutdown();
     }

@@ -326,6 +326,44 @@ fn prop_formats_roundtrip_csr_and_agree() {
 }
 
 #[test]
+fn prop_iterate_remap_round_trips_bitwise_for_arbitrary_partitions() {
+    // the recovery path's checkpoint relocation: scattering an iterate
+    // into per-node slices of ANY partition layout and gathering it
+    // back must be bitwise lossless — pure moves, no arithmetic. Runs
+    // over both unconstrained random assignments and the real inter
+    // partitions produced by decompose().
+    use pmvc::coordinator::{gather_iterate, scatter_iterate};
+    use pmvc::partition::Partition;
+    let mut rng = SplitMix64::new(0xDEAD);
+    for trial in 0..40 {
+        let n = 1 + rng.next_below(500);
+        let k = 1 + rng.next_below(9);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_f64_range(-1e6, 1e6)).collect();
+        let assign: Vec<u32> = (0..n).map(|_| rng.next_below(k) as u32).collect();
+        let p = Partition { k, assign };
+        let slices = scatter_iterate(&p, &x).unwrap();
+        assert_eq!(
+            slices.iter().map(Vec::len).sum::<usize>(),
+            n,
+            "trial {trial}: every value lands in exactly one slice"
+        );
+        let back = gather_iterate(&p, &slices).unwrap();
+        assert_eq!(back, x, "trial {trial} (n={n} k={k}): remap must be bitwise");
+    }
+    // the layouts the recovery driver actually remaps through
+    for trial in 0..10 {
+        let a = random_matrix(&mut rng).to_csr();
+        let combo = Combination::all()[rng.next_below(4)];
+        let f = 1 + rng.next_below(5);
+        let d = decompose(&a, combo, f, 2, &DecomposeConfig::default()).unwrap();
+        let x: Vec<f64> = (0..a.n_rows).map(|_| rng.next_f64_range(-10.0, 10.0)).collect();
+        let slices = scatter_iterate(&d.inter, &x).unwrap();
+        let back = gather_iterate(&d.inter, &slices).unwrap();
+        assert_eq!(back, x, "trial {trial} ({combo} f={f}): decompose layout must round-trip");
+    }
+}
+
+#[test]
 fn prop_2d_matvec_equals_serial() {
     // the ch. 3 §2.4 "version bloc 2D" invariant: any nonzero-level
     // assignment (checkerboard grid or fine-grain hypergraph) must
