@@ -6,7 +6,7 @@
 //!
 //! ```bash
 //! cargo bench --bench fault_recovery            # full grid,
-//!                                               # writes ../BENCH_pr8.json
+//!                                               # writes BENCH_pr8.json
 //! cargo bench --bench fault_recovery -- --test  # CI smoke: small system,
 //!                                               # asserts recovery invariants
 //! ```
@@ -46,6 +46,7 @@ fn spec<'a>(a: &'a Csr, backend: BackendKind, fault: FaultPlan) -> RecoverySpec<
         cfg: DecomposeConfig::default(),
         backend,
         solver: SolverKind::Cg,
+        s_step: 4,
         nrhs: 1,
         f: 3,
         c: 2,
@@ -146,7 +147,9 @@ fn main() {
             .collect();
         let json = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
         // bench cwd is rust/; the trajectory file lives at the repo root
-        std::fs::write("../BENCH_pr8.json", &json).expect("write BENCH_pr8.json");
-        println!("wrote {} recovery grid points to ../BENCH_pr8.json", json_rows.len());
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_pr8.json");
+        std::fs::write(&path, &json).expect("write BENCH_pr8.json");
+        println!("wrote {} recovery grid points to {}", json_rows.len(), path.display());
     }
 }

@@ -12,8 +12,8 @@
 //! ```bash
 //! cargo bench --bench kernel_hotpath            # full measurement run;
 //!                                               # writes BENCH_pr5.json
-//!                                               # (in rust/) and
-//!                                               # ../BENCH_pr6.json
+//!                                               # and BENCH_pr6.json at
+//!                                               # the repo root
 //! cargo bench --bench kernel_hotpath -- --test  # CI smoke: tiny sizes,
 //!                                               # asserts the hot path
 //! ```
@@ -27,6 +27,13 @@ use pmvc::sparse::gen::{generate, MatrixSpec};
 use pmvc::sparse::FormatKind;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Repo-root path for a `BENCH_*.json` artifact — the bench convention:
+/// every bench emits its JSON one level above the crate, so the perf
+/// trajectory files sit together at the repository root.
+fn bench_artifact(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
+}
 
 fn time_it<F: FnMut()>(mut f: F, iters: usize) -> f64 {
     // warmup
@@ -298,14 +305,9 @@ fn main() {
             }
         }
         let json = format!("[\n{}\n]\n", json_rows.join(",\n"));
-        std::fs::write("BENCH_pr5.json", &json).expect("write BENCH_pr5.json");
-        println!(
-            "wrote {} format × schedule points to {}",
-            json_rows.len(),
-            std::env::current_dir()
-                .map(|d| d.join("BENCH_pr5.json").display().to_string())
-                .unwrap_or_else(|_| "BENCH_pr5.json".into())
-        );
+        let path = bench_artifact("BENCH_pr5.json");
+        std::fs::write(&path, &json).expect("write BENCH_pr5.json");
+        println!("wrote {} format × schedule points to {}", json_rows.len(), path.display());
     }
 
     // SpMM panel grid: the batched mv_multi kernels, format × k. Each
@@ -387,8 +389,9 @@ fn main() {
             }
         }
         let json = format!("[\n{}\n]\n", json_rows.join(",\n"));
-        std::fs::write("../BENCH_pr6.json", &json).expect("write BENCH_pr6.json");
-        println!("wrote {} SpMM panel points to ../BENCH_pr6.json", json_rows.len());
+        let path = bench_artifact("BENCH_pr6.json");
+        std::fs::write(&path, &json).expect("write BENCH_pr6.json");
+        println!("wrote {} SpMM panel points to {}", json_rows.len(), path.display());
     }
 
     // XLA artifact path (if built)

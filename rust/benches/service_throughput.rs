@@ -6,7 +6,7 @@
 //!
 //! ```bash
 //! cargo bench --bench service_throughput            # full grid,
-//!                                                   # writes ../BENCH_pr7.json
+//!                                                   # writes BENCH_pr7.json
 //! cargo bench --bench service_throughput -- --test  # CI smoke: short
 //!                                                   # workload, asserts
 //! ```
@@ -96,7 +96,9 @@ fn main() {
             .collect();
         let json = format!("[\n  {}\n]\n", json_rows.join(",\n  "));
         // bench cwd is rust/; the trajectory file lives at the repo root
-        std::fs::write("../BENCH_pr7.json", &json).expect("write BENCH_pr7.json");
-        println!("wrote {} service grid points to ../BENCH_pr7.json", json_rows.len());
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_pr7.json");
+        std::fs::write(&path, &json).expect("write BENCH_pr7.json");
+        println!("wrote {} service grid points to {}", json_rows.len(), path.display());
     }
 }

@@ -1,0 +1,114 @@
+//! Pipelined-solver grid: wall time, iteration count and the reduction
+//! accounting for {cg, pipelined-cg, sstep-cg} × {threads, sim, mpi} ×
+//! s ∈ {1, 2, 4, 8}, all on the overlapped schedule over a
+//! latency-dominated network (gigabit ethernet) — the regime where
+//! hiding the reductions behind the next SpMV pays. Emits
+//! `BENCH_pr9.json` at the repo root.
+//!
+//! ```bash
+//! cargo bench --bench solver_pipeline            # full grid,
+//!                                                # writes BENCH_pr9.json
+//! cargo bench --bench solver_pipeline -- --test  # CI smoke: small system,
+//!                                                # asserts every cell lands
+//!                                                # on the CG answer and the
+//!                                                # sim prices a positive
+//!                                                # t_pipeline_saved
+//! ```
+
+use pmvc::cluster::{ClusterTopology, NetworkPreset};
+use pmvc::partition::combined::{decompose, Combination, DecomposeConfig};
+use pmvc::pmvc::{make_backend, BackendKind, OverlapMode};
+use pmvc::rng::SplitMix64;
+use pmvc::solver::{make_solver_with, Cg, DistributedOp, IterativeSolver, SolverKind};
+use std::time::Instant;
+
+fn main() {
+    // --test: the CI smoke mode — a small system, every cell asserted
+    // against the serial CG answer instead of measured
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let n = if test_mode { 150 } else { 1000 };
+    let (f, c) = (3usize, 2usize);
+
+    let a = pmvc::sparse::gen::generate_spd(n, 4, n * 6, 17).to_csr();
+    let mut rng = SplitMix64::new(0xB9);
+    let b: Vec<f64> = (0..n).map(|_| rng.next_f64_range(-1.0, 1.0)).collect();
+    let reference = Cg::new().tol(1e-10).max_iters(4000).solve(&mut a.clone(), &b).unwrap();
+    assert!(reference.converged, "serial CG reference must converge");
+
+    let topo = ClusterTopology::paravance(f);
+    let net = NetworkPreset::GigabitEthernet.model();
+    let ss: &[usize] = if test_mode { &[1, 2] } else { &[1, 2, 4, 8] };
+
+    let mut json_rows: Vec<String> = Vec::new();
+    println!(
+        "{:<14} {:>8} {:>3} {:>6} {:>10} {:>12} {:>16} {:>6}",
+        "solver", "backend", "s", "iters", "wall", "t_reduce", "t_pipeline_saved", "conv"
+    );
+    println!("{}", "-".repeat(84));
+    for kind in [SolverKind::Cg, SolverKind::PipelinedCg, SolverKind::SStepCg] {
+        for backend_kind in BackendKind::all() {
+            for &s in ss {
+                let d =
+                    decompose(&a, Combination::NlHl, f, c, &DecomposeConfig::default()).unwrap();
+                let mut backend = make_backend(backend_kind, d, &topo, &net).unwrap();
+                backend.set_overlap_mode(OverlapMode::Overlapped).unwrap();
+                let mut op = DistributedOp::with_backend(backend);
+                let mut solver = make_solver_with(kind, &a, s).unwrap();
+                solver.options_mut().tol = 1e-10;
+                solver.options_mut().max_iters = 4000;
+                solver.options_mut().record_history = false;
+                let t0 = Instant::now();
+                let r = solver.solve(&mut op, &b).unwrap();
+                let wall = t0.elapsed().as_secs_f64();
+                let t = r.phases.expect("distributed solves report phases");
+                if test_mode {
+                    // the smoke gate: every cell converges onto the CG
+                    // answer...
+                    assert!(r.converged, "{kind} over {backend_kind} (s={s}) did not converge");
+                    for i in 0..n {
+                        assert!(
+                            (r.x[i] - reference.x[i]).abs() < 1e-6 * (1.0 + reference.x[i].abs()),
+                            "{kind} over {backend_kind} (s={s}): x[{i}] drifted"
+                        );
+                    }
+                    // ...and the analytic model prices a strictly
+                    // positive pipeline saving for the fused solvers on
+                    // this latency-dominated network
+                    if kind != SolverKind::Cg && backend_kind == BackendKind::Sim {
+                        assert!(
+                            t.t_pipeline_saved > 0.0,
+                            "{kind} over sim (s={s}): fused rounds must hide reduction time"
+                        );
+                    }
+                }
+                println!(
+                    "{:<14} {:>8} {:>3} {:>6} {:>9.4}s {:>11.6}s {:>15.6}s {:>6}",
+                    kind.name(),
+                    backend_kind,
+                    s,
+                    r.iterations,
+                    wall,
+                    t.t_reduce,
+                    t.t_pipeline_saved,
+                    r.converged
+                );
+                json_rows.push(format!(
+                    "  {{\"solver\": \"{}\", \"backend\": \"{}\", \"s\": {s}, \
+                     \"iterations\": {}, \"wall_s\": {:.6}, \"t_reduce\": {:.9}, \
+                     \"t_pipeline_saved\": {:.9}, \"converged\": {}}}",
+                    kind.name(),
+                    backend_kind,
+                    r.iterations,
+                    wall,
+                    t.t_reduce,
+                    t.t_pipeline_saved,
+                    r.converged
+                ));
+            }
+        }
+    }
+    let json = format!("[\n{}\n]\n", json_rows.join(",\n"));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_pr9.json");
+    std::fs::write(&path, &json).expect("write BENCH_pr9.json");
+    println!("wrote {} solver grid points to {}", json_rows.len(), path.display());
+}

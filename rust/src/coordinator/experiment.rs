@@ -18,7 +18,7 @@
 use crate::cluster::{ClusterTopology, NetworkPreset};
 use crate::partition::combined::{decompose, Combination, DecomposeConfig, TwoLevelDecomposition};
 use crate::pmvc::{make_backend, BackendKind, ExecBackend, OverlapMode, PhaseTimes};
-use crate::solver::{make_solver, DistributedOp, IterativeSolver, SolverKind};
+use crate::solver::{make_solver_with, DistributedOp, IterativeSolver, SolverKind};
 use crate::sparse::gen::{generate, MatrixSpec};
 use crate::sparse::{Csr, FormatKind};
 use std::collections::HashMap;
@@ -52,6 +52,9 @@ pub struct ExperimentConfig {
     pub solver_tol: f64,
     /// Solver iteration cap (solver cells only).
     pub solver_max_iters: usize,
+    /// Block size for the s-step CG solver (`--s-step`; ignored by the
+    /// other solvers).
+    pub s_step: usize,
     /// Right-hand sides per cell (default 1). With `nrhs > 1` a probe
     /// cell applies one k-wide panel PMVC and a solver cell drives the
     /// batched analog of the selected solver (`cg` → block CG,
@@ -77,6 +80,7 @@ impl Default for ExperimentConfig {
             solver: None,
             solver_tol: 1e-10,
             solver_max_iters: 1000,
+            s_step: 4,
             nrhs: 1,
             seed: 1,
             decompose: DecomposeConfig::default(),
@@ -229,6 +233,8 @@ fn mean_times(acc: &PhaseTimes, applies: usize) -> PhaseTimes {
         t_gather: acc.t_gather / k,
         t_construct: acc.t_construct / k,
         t_overlap_saved: acc.t_overlap_saved / k,
+        t_reduce: acc.t_reduce / k,
+        t_pipeline_saved: acc.t_pipeline_saved / k,
     }
 }
 
@@ -370,7 +376,7 @@ pub fn run_sweep_cached(
                         // pollutes the operator's accumulated stats
                         backend.apply(&x)?;
                         let mut op = DistributedOp::with_backend(backend);
-                        let mut solver = make_solver(kind, &a)?;
+                        let mut solver = make_solver_with(kind, &a, cfg.s_step)?;
                         solver.options_mut().tol = cfg.solver_tol;
                         solver.options_mut().max_iters = cfg.solver_max_iters;
                         solver.options_mut().record_history = false;
@@ -610,6 +616,34 @@ mod tests {
             assert_eq!(rows.len(), 1, "{kind}");
             assert_eq!(rows[0].solver, kind.name());
             assert!(rows[0].iterations > 0, "{kind}");
+        }
+    }
+
+    #[test]
+    fn pipelined_sweep_reports_pipeline_savings_on_slow_network() {
+        // acceptance scenario: a latency-dominated interconnect priced
+        // by the sim backend must show reduction time hidden behind the
+        // SpMV in the new columns
+        for kind in [SolverKind::PipelinedCg, SolverKind::SStepCg] {
+            let cfg = ExperimentConfig {
+                matrices: vec!["spd".into()],
+                node_counts: vec![4],
+                combos: vec![Combination::NlHl],
+                cores_per_node: 4,
+                network: NetworkPreset::GigabitEthernet,
+                solver: Some(kind),
+                ..Default::default()
+            };
+            let rows = run_sweep(&cfg).unwrap();
+            assert_eq!(rows.len(), 1, "{kind}");
+            assert_eq!(rows[0].solver, kind.name());
+            assert!(rows[0].converged, "{kind} must converge on the SPD system");
+            assert!(rows[0].times.t_reduce > 0.0, "{kind}: fused rounds must price reductions");
+            assert!(
+                rows[0].times.t_pipeline_saved > 0.0,
+                "{kind}: latency-dominated network must hide reduction time, got {}",
+                rows[0].times.t_pipeline_saved
+            );
         }
     }
 

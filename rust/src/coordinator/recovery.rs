@@ -39,8 +39,8 @@ use crate::partition::combined::{decompose, Combination, DecomposeConfig, TwoLev
 use crate::partition::Partition;
 use crate::pmvc::{make_backend, BackendKind, FaultPlan};
 use crate::solver::{
-    BatchedJacobi, BlockCg, Cg, DistributedOp, MultiSolveReport, SolveReport, SolverError,
-    SolverKind,
+    BatchedJacobi, BlockCg, Cg, DistributedOp, MultiSolveReport, PipelinedCg, SolveReport,
+    SolverError, SolverKind, SStepCg,
 };
 use crate::sparse::Csr;
 use std::time::Instant;
@@ -59,9 +59,14 @@ pub struct RecoverySpec<'a> {
     /// Execution backend each attempt runs on.
     pub backend: BackendKind,
     /// Which solver drives the solve: [`SolverKind::Cg`] (CG for one
-    /// right-hand side, block CG for a panel) or [`SolverKind::Jacobi`]
-    /// (batched Jacobi).
+    /// right-hand side, block CG for a panel), the pipelined Krylov
+    /// variants [`SolverKind::PipelinedCg`] / [`SolverKind::SStepCg`]
+    /// (single right-hand side), or [`SolverKind::Jacobi`] (batched
+    /// Jacobi).
     pub solver: SolverKind,
+    /// Block size for [`SolverKind::SStepCg`] (ignored by the other
+    /// solvers).
+    pub s_step: usize,
     /// Number of right-hand sides (`b.len() == a.n_rows * nrhs`).
     pub nrhs: usize,
     /// Initial node count.
@@ -247,6 +252,20 @@ fn run_attempt(
             }
             s.solve_multi(op, b, k).map(fold_multi)
         }
+        SolverKind::PipelinedCg if k == 1 => {
+            let mut s = PipelinedCg::new().tol(spec.tol).max_iters(spec.max_iters);
+            if let Some(x0) = x0 {
+                s = s.x0(x0);
+            }
+            s.solve(op, b)
+        }
+        SolverKind::SStepCg if k == 1 => {
+            let mut s = SStepCg::new().s(spec.s_step).tol(spec.tol).max_iters(spec.max_iters);
+            if let Some(x0) = x0 {
+                s = s.x0(x0);
+            }
+            s.solve(op, b)
+        }
         SolverKind::Jacobi => {
             let mut s = BatchedJacobi::from_matrix(spec.a)?.tol(spec.tol).max_iters(spec.max_iters);
             if let Some(x0) = x0 {
@@ -255,7 +274,8 @@ fn run_attempt(
             s.solve_multi(op, b, k).map(fold_multi)
         }
         other => Err(SolverError::Backend(anyhow::anyhow!(
-            "the recovery driver supports cg and jacobi, not {other}"
+            "the recovery driver supports cg, pipelined-cg, sstep-cg and jacobi \
+             (pipelined variants for a single right-hand side), not {other} with nrhs {k}"
         ))),
     }
 }
@@ -372,6 +392,7 @@ mod tests {
             cfg: DecomposeConfig::default(),
             backend: BackendKind::Threads,
             solver,
+            s_step: 2,
             nrhs,
             f: 3,
             c: 2,
@@ -428,6 +449,27 @@ mod tests {
                 (out.report.x[i] - reference.report.x[i]).abs() < 1e-9,
                 "row {i}: recovered answer drifted past 1e-9"
             );
+        }
+    }
+
+    #[test]
+    fn pipelined_solvers_survive_a_killed_rank_too() {
+        let (a, b) = spd_system(150, 5, 1);
+        let reference =
+            solve_with_recovery(&spec(&a, SolverKind::Cg, 1, FaultPlan::new()), &b).unwrap();
+        for kind in [SolverKind::PipelinedCg, SolverKind::SStepCg] {
+            let out =
+                solve_with_recovery(&spec(&a, kind, 1, FaultPlan::new().kill(1, 4)), &b).unwrap();
+            assert!(out.report.converged, "{kind} did not reconverge after the kill");
+            assert_eq!(out.report.restarts, 1, "{kind}");
+            assert!(out.report.warm_started, "{kind}");
+            assert_eq!(out.f_final, 2, "{kind}");
+            for i in 0..a.n_rows {
+                assert!(
+                    (out.report.x[i] - reference.report.x[i]).abs() < 1e-8,
+                    "{kind} row {i}: recovered answer drifted"
+                );
+            }
         }
     }
 

@@ -67,7 +67,10 @@ pub fn recap_table(rows: &[SweepRow], combos: &[Combination]) -> String {
 /// inter-node partition, and the per-iteration wire volume in bytes.
 /// `overlap` is the cell's [`crate::pmvc::OverlapMode`] and
 /// `t_overlap_saved` the exchange time it hid behind interior
-/// computation (0 for blocking cells). The final pair records the
+/// computation (0 for blocking cells); `t_reduce` is the reduction work
+/// of fused solver iterations and `t_pipeline_saved` how much of it the
+/// pipelined schedule hid behind the SpMV (both 0 for probe cells and
+/// unfused solvers). The final pair records the
 /// format axis: `format` is the cell's kernel storage
 /// ([`crate::sparse::FormatKind`]; `auto` selects per fragment) and
 /// `stored_bytes` the resident bytes of that storage summed over the
@@ -77,7 +80,7 @@ pub fn recap_table(rows: &[SweepRow], combos: &[Combination]) -> String {
 /// flags, `;`-joined (single-column cells read `1,<iters>,<conv>`).
 pub fn to_csv(rows: &[SweepRow]) -> String {
     let mut out = String::from(
-        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,format,stored_bytes,nrhs,col_iterations,col_converged\n",
+        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,t_reduce,t_pipeline_saved,format,stored_bytes,nrhs,col_iterations,col_converged\n",
     );
     for r in rows {
         let t = &r.times;
@@ -87,7 +90,7 @@ pub fn to_csv(rows: &[SweepRow]) -> String {
             r.col_converged.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(";");
         let _ = writeln!(
             out,
-            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{},{},{},{},{},{},{},{},{:.9},{},{},{},{},{}",
+            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{},{},{},{},{},{},{},{},{:.9},{:.9},{:.9},{},{},{},{},{}",
             r.matrix,
             r.combo.name(),
             r.f,
@@ -108,6 +111,8 @@ pub fn to_csv(rows: &[SweepRow]) -> String {
             r.comm_bytes,
             r.overlap,
             t.t_overlap_saved,
+            t.t_reduce,
+            t.t_pipeline_saved,
             r.format,
             r.stored_bytes,
             r.nrhs,
@@ -244,12 +249,15 @@ mod tests {
         let csv = to_csv(&rows());
         assert!(csv.starts_with("matrix,combo"));
         assert!(csv.lines().next().unwrap().ends_with(
-            ",backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,format,stored_bytes,nrhs,col_iterations,col_converged"
+            ",backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,t_reduce,t_pipeline_saved,format,stored_bytes,nrhs,col_iterations,col_converged"
         ));
         assert_eq!(csv.lines().count(), 1 + 2 * 4 * 1);
         for line in csv.lines().skip(1) {
             assert!(line.contains(",sim,probe,1,true,nezgt+hypergraph,"), "probe row: {line}");
-            assert!(line.contains(",blocking,0.000000000,csr,"), "schedule+format: {line}");
+            assert!(
+                line.contains(",blocking,0.000000000,0.000000000,0.000000000,csr,"),
+                "schedule+pipeline+format: {line}"
+            );
             assert!(line.ends_with(",1,1,true"), "single-rhs panel tail: {line}");
         }
     }

@@ -58,9 +58,12 @@ fn config_from(args: &Args) -> pmvc::Result<ExperimentConfig> {
     }
     if let Some(s) = args.opt("solver") {
         cfg.solver = Some(SolverKind::parse(s).ok_or_else(|| {
-            anyhow::anyhow!("unknown solver '{s}' (cg|jacobi|sor|power|lanczos)")
+            anyhow::anyhow!(
+                "unknown solver '{s}' (cg|pipelined-cg|sstep-cg|jacobi|sor|power|lanczos)"
+            )
         })?);
     }
+    cfg.s_step = args.opt_usize("s-step", cfg.s_step)?;
     if let Some(t) = args.opt("tol") {
         cfg.solver_tol = t.parse().map_err(|e| anyhow::anyhow!("--tol: {e}"))?;
     }
@@ -124,7 +127,8 @@ COMMANDS:
   table <4.2|4.3|4.4|4.5|4.6|4.7>   regenerate a paper table
   figures --series <lb|scatter|compute|construct|gather|total>
   sweep [--out FILE.csv]            full simulated sweep
-  run --matrix NAME --combo NL-HL --nodes F --cores C [--nrhs K] [--xla]
+  run --matrix NAME --combo NL-HL --nodes F --cores C [--nrhs K]
+      [--solver KIND [--s-step K]] [--xla]
   serve [--trace FILE.jsonl]        solve-as-a-service: one persistent
                                     coordinator multiplexes a request
                                     stream over a bounded admission
@@ -170,11 +174,19 @@ COMMON OPTIONS:
                      -> ell, dense 4x4 blocks -> bsr, skewed rows ->
                      jad, compressible index stream -> csrdu). The CSV
                      records format and stored_bytes columns.
-  --solver KIND      cg|jacobi|sor|power|lanczos: drive a full iterative
-                     solve through every sweep cell (CSV gains solver,
-                     iterations and convergence columns; phase times are
-                     per-iteration means). '--matrices spd' generates an
-                     SPD system the linear solvers converge on.
+  --solver KIND      cg|pipelined-cg|sstep-cg|jacobi|sor|power|lanczos:
+                     drive a full iterative solve through every sweep
+                     cell (CSV gains solver, iterations and convergence
+                     columns; phase times are per-iteration means).
+                     '--matrices spd' generates an SPD system the linear
+                     solvers converge on. The pipelined solvers fuse
+                     their reductions with the next SpMV; the CSV
+                     reports the reduction work and the part of it
+                     hidden behind compute in the t_reduce and
+                     t_pipeline_saved columns. `run` also accepts
+                     --solver and prints the same two numbers.
+  --s-step K         block size for sstep-cg (default 4): one fused
+                     reduction per K iterations, 2K-1 SpMVs per block.
   --tol X            solver tolerance (default 1e-10)
   --iters N          solver iteration cap (default 1000)
   --nrhs K           right-hand sides per apply (default 1). Panels are
@@ -193,8 +205,8 @@ SERVE OPTIONS (request fields fall back to the COMMON flags above;
   --trace FILE       JSONL request trace, one object per line:
                      {\"matrix\": \"t2dal\", \"nrhs\": 8, \"solver\": \"cg\", ...}
                      (fields: matrix, combo, partitioner, intra, format,
-                     solver, tol, iters, nrhs, nodes, cores, seed,
-                     fault_node, fault_apply). A line carrying
+                     solver, s_step, tol, iters, nrhs, nodes, cores,
+                     seed, fault_node, fault_apply). A line carrying
                      fault_node + fault_apply has that node killed at
                      that 1-based apply mid-solve: the broken engine is
                      discarded and the request retried on a rebuilt one
@@ -221,8 +233,9 @@ SERVE OPTIONS (request fields fall back to the COMMON flags above;
                      engine death (chaos CI gate)
 
 RECOVER OPTIONS (plus --matrix/--combo/--partitioner/--intra/--format/
---solver/--tol/--iters/--nrhs/--nodes/--cores/--seed as above;
-defaults: spd, cg, threads, 3x2, tol 1e-10):
+--solver/--s-step/--tol/--iters/--nrhs/--nodes/--cores/--seed as above;
+defaults: spd, cg, threads, 3x2, tol 1e-10; the pipelined solvers
+checkpoint mid-pipeline state and warm-restart like cg):
   --kill-node N      node to kill (0-based; both flags together)
   --kill-apply K     1-based distributed apply at which the kill fires
   --csv FILE         append the recovery row as CSV (header written when
@@ -426,6 +439,34 @@ fn cmd_run(args: &Args) -> pmvc::Result<()> {
         anyhow::ensure!(panel_err < 1e-8, "panel result diverges from serial columns");
     }
 
+    if let Some(s) = args.opt("solver") {
+        use pmvc::solver::{make_solver_with, DistributedOp};
+        let skind = SolverKind::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown solver '{s}' (cg|pipelined-cg|sstep-cg|jacobi|sor|power|lanczos)"
+            )
+        })?;
+        let s_step = args.opt_usize("s-step", 4)?;
+        let tol: f64 =
+            args.opt_or("tol", "1e-10").parse().map_err(|e| anyhow::anyhow!("--tol: {e}"))?;
+        let iters = args.opt_usize("iters", 1000)?;
+        // drive a full solve through the same backend the apply used;
+        // b = A·x_true so the solve has a known answer
+        let b = pmvc::service::rhs_panel(&a, 1, seed);
+        let mut op = DistributedOp::with_backend(backend);
+        let mut solver = make_solver_with(skind, &a, s_step)?;
+        solver.options_mut().tol = tol;
+        solver.options_mut().max_iters = iters;
+        let r = solver.solve(&mut op, &b)?;
+        let t = r.phases.unwrap_or_default();
+        println!(
+            "solver={} iterations={} converged={} residual={:.3e} t_reduce={:.6}s \
+             t_pipeline_saved={:.6}s",
+            r.solver, r.iterations, r.converged, r.residual_norm, t.t_reduce, t.t_pipeline_saved
+        );
+        anyhow::ensure!(r.converged, "solver {} did not converge", r.solver);
+    }
+
     if args.has("xla") {
         let mut rt = pmvc::runtime::Runtime::new()?;
         println!("PJRT platform: {}", rt.platform());
@@ -522,9 +563,12 @@ fn cmd_serve(args: &Args) -> pmvc::Result<()> {
     }
     if let Some(s) = args.opt("solver") {
         defaults.solver = SolverKind::parse(s).ok_or_else(|| {
-            anyhow::anyhow!("unknown solver '{s}' (cg|jacobi|sor|power|lanczos)")
+            anyhow::anyhow!(
+                "unknown solver '{s}' (cg|pipelined-cg|sstep-cg|jacobi|sor|power|lanczos)"
+            )
         })?;
     }
+    defaults.s_step = args.opt_usize("s-step", defaults.s_step)?;
     if let Some(t) = args.opt("tol") {
         defaults.tol = t.parse().map_err(|e| anyhow::anyhow!("--tol: {e}"))?;
     }
@@ -617,8 +661,9 @@ fn cmd_recover(args: &Args) -> pmvc::Result<()> {
     let seed = args.opt_u64("seed", 1)?;
     let backend = BackendKind::parse(args.opt_or("backend", "threads"))
         .ok_or_else(|| anyhow::anyhow!("unknown backend (threads|sim|mpi)"))?;
-    let solver = SolverKind::parse(args.opt_or("solver", "cg"))
-        .ok_or_else(|| anyhow::anyhow!("unknown solver (recovery supports cg|jacobi)"))?;
+    let solver = SolverKind::parse(args.opt_or("solver", "cg")).ok_or_else(|| {
+        anyhow::anyhow!("unknown solver (recovery supports cg|pipelined-cg|sstep-cg|jacobi)")
+    })?;
     let nrhs = args.opt_usize("nrhs", 1)?;
     anyhow::ensure!(nrhs >= 1, "--nrhs must be at least 1");
     let tol: f64 = args
@@ -660,6 +705,7 @@ fn cmd_recover(args: &Args) -> pmvc::Result<()> {
         cfg: dcfg,
         backend,
         solver,
+        s_step: args.opt_usize("s-step", 4)?,
         nrhs,
         f,
         c,

@@ -149,8 +149,48 @@ pub trait ExecBackend {
             acc.t_gather += t.t_gather;
             acc.t_construct += t.t_construct;
             acc.t_overlap_saved += t.t_overlap_saved;
+            acc.t_reduce += t.t_reduce;
+            acc.t_pipeline_saved += t.t_pipeline_saved;
         }
         Ok(acc)
+    }
+
+    /// Execute `y = A·x` while also computing the scalar products
+    /// `dots[i] = pairs[i].0 · pairs[i].1` — the fused kernel of the
+    /// pipelined solvers, where the iteration's dot products and their
+    /// reduction hide behind the concurrently-running SpMV
+    /// ([`super::tasks::fused_spmv`]). The default computes the dots
+    /// serially and then applies, so nothing is hidden (`t_reduce`
+    /// reports the dot time, `t_pipeline_saved` stays 0); the built-in
+    /// backends override it to overlap the dot/reduce tasks with the
+    /// worker compute and report what the pipeline hid.
+    fn apply_dots_into(
+        &mut self,
+        x: &[f64],
+        y: &mut [f64],
+        pairs: &[(&[f64], &[f64])],
+        dots: &mut [f64],
+    ) -> crate::Result<PhaseTimes> {
+        anyhow::ensure!(
+            dots.len() == pairs.len(),
+            "dots length {} != pairs length {}",
+            dots.len(),
+            pairs.len()
+        );
+        let t0 = std::time::Instant::now();
+        for (d, (u, v)) in dots.iter_mut().zip(pairs) {
+            anyhow::ensure!(
+                u.len() == v.len(),
+                "dot operand lengths differ: {} vs {}",
+                u.len(),
+                v.len()
+            );
+            *d = u.iter().zip(v.iter()).map(|(a, b)| a * b).sum();
+        }
+        let t_reduce = t0.elapsed().as_secs_f64();
+        let mut t = self.apply_into(x, y)?;
+        t.t_reduce += t_reduce;
+        Ok(t)
     }
 
     /// One-time distribution cost paid at construction (A scatter /
@@ -215,6 +255,16 @@ impl ExecBackend for PmvcEngine {
         PmvcEngine::apply_multi_into(self, x, y, k)
     }
 
+    fn apply_dots_into(
+        &mut self,
+        x: &[f64],
+        y: &mut [f64],
+        pairs: &[(&[f64], &[f64])],
+        dots: &mut [f64],
+    ) -> crate::Result<PhaseTimes> {
+        PmvcEngine::apply_dots_into(self, x, y, pairs, dots)
+    }
+
     fn setup_time(&self) -> f64 {
         self.setup_seconds()
     }
@@ -249,6 +299,10 @@ pub struct SimBackend {
     /// apply used — iterative multi-vector solvers re-apply the same
     /// shape every iteration, so one pricing serves the whole solve.
     multi_times: Option<(OverlapMode, usize, PhaseTimes)>,
+    /// Cached fused-graph pricing `(t_reduce, t_pipeline_saved)` for the
+    /// last `(mode, n_pairs)` a fused apply used — a pipelined solver
+    /// fuses the same pair count every iteration.
+    fused_times: Option<(OverlapMode, usize, (f64, f64))>,
     mode: OverlapMode,
     x_local: Vec<f64>,
     y_local: Vec<f64>,
@@ -275,6 +329,7 @@ impl SimBackend {
             net: *net,
             times: [Some(blocking), None],
             multi_times: None,
+            fused_times: None,
             mode: OverlapMode::Blocking,
             x_local: Vec::new(),
             y_local: Vec::new(),
@@ -299,6 +354,20 @@ impl SimBackend {
             anyhow::bail!("node rank {node} has not joined yet");
         }
         Ok(())
+    }
+
+    /// The fused-graph pricing for the active schedule and pair count,
+    /// computed (by critical path over the canned task graphs) on first
+    /// use and cached per `(mode, n_pairs)`.
+    fn fused_pricing(&mut self, n_pairs: usize) -> crate::Result<(f64, f64)> {
+        if let Some((mode, np, t)) = self.fused_times {
+            if mode == self.mode && np == n_pairs {
+                return Ok(t);
+            }
+        }
+        let t = super::sim::price_fused(&self.d, &self.topo, &self.net, self.mode, n_pairs)?;
+        self.fused_times = Some((self.mode, n_pairs, t));
+        Ok(t)
     }
 
     /// The active schedule's pricing, computed on first use.
@@ -383,6 +452,41 @@ impl ExecBackend for SimBackend {
                 Ok(t)
             }
         }
+    }
+
+    fn apply_dots_into(
+        &mut self,
+        x: &[f64],
+        y: &mut [f64],
+        pairs: &[(&[f64], &[f64])],
+        dots: &mut [f64],
+    ) -> crate::Result<PhaseTimes> {
+        anyhow::ensure!(
+            dots.len() == pairs.len(),
+            "dots length {} != pairs length {}",
+            dots.len(),
+            pairs.len()
+        );
+        // exact dots through the same deterministic chunked reduction
+        // the live backends run (per-node contiguous chunks summed in
+        // node order)
+        for (d, (u, v)) in dots.iter_mut().zip(pairs) {
+            anyhow::ensure!(
+                u.len() == v.len(),
+                "dot operand lengths differ: {} vs {}",
+                u.len(),
+                v.len()
+            );
+            *d = super::tasks::dot_ranges(u.len(), self.d.f)
+                .into_iter()
+                .map(|(lo, hi)| {
+                    u[lo..hi].iter().zip(v[lo..hi].iter()).map(|(a, b)| a * b).sum::<f64>()
+                })
+                .sum();
+        }
+        let base = self.apply_into(x, y)?;
+        let (t_reduce, t_pipeline_saved) = self.fused_pricing(pairs.len())?;
+        Ok(PhaseTimes { t_reduce, t_pipeline_saved, ..base })
     }
 
     // setup_time stays at the default 0.0: the simulator models the
@@ -490,6 +594,8 @@ impl ExecBackend for MpiBackend {
             t_gather: (t.t_wall - t.t_compute_max - t.t_construct_max).max(0.0),
             t_construct: t.t_construct_max,
             t_overlap_saved: t.t_overlap_saved,
+            t_reduce: 0.0,
+            t_pipeline_saved: 0.0,
         })
     }
 
@@ -514,6 +620,44 @@ impl ExecBackend for MpiBackend {
             t_gather: (t.t_wall - t.t_compute_max - t.t_construct_max).max(0.0),
             t_construct: t.t_construct_max,
             t_overlap_saved: t.t_overlap_saved,
+            t_reduce: 0.0,
+            t_pipeline_saved: 0.0,
+        })
+    }
+
+    fn apply_dots_into(
+        &mut self,
+        x: &[f64],
+        y: &mut [f64],
+        pairs: &[(&[f64], &[f64])],
+        dots: &mut [f64],
+    ) -> crate::Result<PhaseTimes> {
+        let n = self.cluster.n;
+        anyhow::ensure!(x.len() == n, "x length {} != matrix order {n}", x.len());
+        anyhow::ensure!(y.len() == n, "y length {} != matrix order {n}", y.len());
+        anyhow::ensure!(
+            dots.len() == pairs.len(),
+            "dots length {} != pair count {}",
+            dots.len(),
+            pairs.len()
+        );
+        self.fire_faults()?;
+        // operand chunks ride the fan-out, partials ride the fan-in —
+        // the reduction never pays its own synchronization round
+        let (yv, dv, t) = self.cluster.matvec_with_dots(x, pairs)?;
+        y.copy_from_slice(&yv);
+        dots.copy_from_slice(&dv);
+        let t_reduce = t.t_reduce_max;
+        Ok(PhaseTimes {
+            lb_nodes: self.lb_nodes,
+            lb_cores: self.lb_cores,
+            t_compute: t.t_compute_max,
+            t_scatter: 0.0,
+            t_gather: (t.t_wall - t.t_compute_max - t.t_construct_max).max(0.0),
+            t_construct: t.t_construct_max,
+            t_overlap_saved: t.t_overlap_saved,
+            t_reduce,
+            t_pipeline_saved: t_reduce.min(t.t_compute_max),
         })
     }
 

@@ -40,6 +40,7 @@ use super::phases::PhaseTimes;
 use super::fault::{FaultClock, FaultPlan};
 use super::plan::CommPlan;
 use super::spmv;
+use super::tasks::{self, TaskKind};
 use crate::partition::combined::TwoLevelDecomposition;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -143,6 +144,10 @@ pub struct PmvcEngine {
     /// Reusable per-node Y_k accumulation buffers.
     node_y: Vec<Vec<f64>>,
     mode: OverlapMode,
+    /// Compiled task programs (the canned graphs' deterministic
+    /// schedules), cached per (mode, fused) so an iterative solver
+    /// compiles each graph once. Index = `mode_idx · 2 + fused`.
+    programs: [Option<Arc<Vec<TaskKind>>>; 4],
     seq: u64,
     setup_s: f64,
     applies: usize,
@@ -239,6 +244,7 @@ impl PmvcEngine {
             y_slots,
             node_y,
             mode: OverlapMode::Blocking,
+            programs: [None, None, None, None],
             seq: 0,
             setup_s: t0.elapsed().as_secs_f64(),
             applies: 0,
@@ -338,144 +344,316 @@ impl PmvcEngine {
             y.len(),
             self.d.n
         );
+        self.apply_inner(x, y, 1, None)
+    }
+
+    /// Execute `y = A·x` while also computing the scalar products
+    /// `dots[i] = pairs[i].0 · pairs[i].1` through the **fused** task
+    /// graph ([`super::tasks::fused_spmv`]): the leader runs the
+    /// per-node `LocalDot` chunks and the `Reduce` while the workers'
+    /// PFVC is in flight, so the reduction latency a pipelined solver
+    /// pays is whatever the compute span did not cover.
+    /// [`PhaseTimes::t_reduce`] reports the dot + reduction time,
+    /// [`PhaseTimes::t_pipeline_saved`] the part of it that ran under
+    /// the compute. Every dot operand must have length N; `y` is
+    /// bitwise-identical to a plain [`PmvcEngine::apply_into`].
+    pub fn apply_dots_into(
+        &mut self,
+        x: &[f64],
+        y: &mut [f64],
+        pairs: &[(&[f64], &[f64])],
+        dots: &mut [f64],
+    ) -> crate::Result<PhaseTimes> {
+        anyhow::ensure!(
+            x.len() == self.d.n,
+            "x length {} != matrix order {}",
+            x.len(),
+            self.d.n
+        );
+        anyhow::ensure!(
+            y.len() == self.d.n,
+            "y length {} != matrix order {}",
+            y.len(),
+            self.d.n
+        );
+        anyhow::ensure!(
+            dots.len() == pairs.len(),
+            "dots length {} != pairs length {}",
+            dots.len(),
+            pairs.len()
+        );
+        for (i, (u, v)) in pairs.iter().enumerate() {
+            anyhow::ensure!(
+                u.len() == self.d.n && v.len() == self.d.n,
+                "dot pair {i} operand lengths {} / {} != matrix order {}",
+                u.len(),
+                v.len(),
+                self.d.n
+            );
+        }
+        self.apply_inner(x, y, 1, Some((pairs, dots)))
+    }
+
+    /// Compile (once) and cache the task program for the active mode:
+    /// the canned graph's deterministic schedule flattened to the
+    /// leader's issue order.
+    fn program(&mut self, fused: bool) -> crate::Result<Arc<Vec<TaskKind>>> {
+        let mode_idx = match self.mode {
+            OverlapMode::Blocking => 0,
+            OverlapMode::Overlapped => 1,
+        };
+        let slot = mode_idx * 2 + fused as usize;
+        if self.programs[slot].is_none() {
+            let graph = if fused {
+                tasks::fused_spmv(self.d.f, self.d.c, self.mode)
+            } else {
+                match self.mode {
+                    OverlapMode::Blocking => tasks::blocking_spmv(self.d.f, self.d.c),
+                    OverlapMode::Overlapped => tasks::overlapped_spmv(self.d.f, self.d.c),
+                }
+            };
+            let order = graph.schedule()?;
+            let kinds: Vec<TaskKind> =
+                order.into_iter().map(|id| graph.tasks()[id].kind).collect();
+            self.programs[slot] = Some(Arc::new(kinds));
+        }
+        Ok(Arc::clone(self.programs[slot].as_ref().unwrap()))
+    }
+
+    /// Walk one compiled task program, issuing worker messages and
+    /// running the leader-side tasks (packs, sends, fused dots) in the
+    /// deterministic schedule order. Returns
+    /// `(t_pack, t_halo, t_reduce, halo_overlapped)` where
+    /// `halo_overlapped` records whether the program posted the halo as
+    /// a separate wave concurrent with interior compute (the overlapped
+    /// graphs) or walled it before any compute (the blocking graphs —
+    /// both waves then collapse into one combined message per worker).
+    #[allow(clippy::type_complexity)]
+    fn run_schedule(
+        &mut self,
+        x: &[f64],
+        k: usize,
+        seq: u64,
+        program: &[TaskKind],
+        mut dots: Option<(&[(&[f64], &[f64])], &mut [f64])>,
+    ) -> crate::Result<(f64, f64, f64, bool)> {
+        let n = self.d.n;
+        let f = self.d.f;
+        let c = self.d.c;
+        // per-node panels produced by Pack / SendHalo tasks; the
+        // blocking graphs additionally combine both into the node's
+        // full footprint at the first InteriorMv (the wall edge
+        // guarantees the halo landed first)
+        let mut owned_panels: Vec<Option<Arc<Vec<f64>>>> = vec![None; f];
+        let mut halo_panels: Vec<Option<Arc<Vec<f64>>>> = vec![None; f];
+        let mut full_panels: Vec<Option<Arc<Vec<f64>>>> = vec![None; f];
+        let mut combined = vec![false; f];
+        let mut partials: Vec<Vec<f64>> = Vec::new();
+        let mut t_pack = 0.0;
+        let mut t_halo = 0.0;
+        let mut t_reduce = 0.0;
+        let mut halo_overlapped = false;
+        for kind in program {
+            match *kind {
+                TaskKind::Pack { node } => {
+                    let t0 = Instant::now();
+                    let np = &self.plan.nodes[node];
+                    let mut panel = Vec::with_capacity(np.owned_x.len() * k);
+                    for j in 0..k {
+                        panel.extend(
+                            np.owned_x
+                                .iter()
+                                .map(|&p| x[j * n + np.x_cols[p as usize] as usize]),
+                        );
+                    }
+                    owned_panels[node] = Some(Arc::new(panel));
+                    t_pack += t0.elapsed().as_secs_f64();
+                }
+                TaskKind::SendHalo { node } => {
+                    let t0 = Instant::now();
+                    let np = &self.plan.nodes[node];
+                    let mut panel = Vec::with_capacity(np.halo_x.len() * k);
+                    for j in 0..k {
+                        panel.extend(
+                            np.halo_x
+                                .iter()
+                                .map(|&p| x[j * n + np.x_cols[p as usize] as usize]),
+                        );
+                    }
+                    halo_panels[node] = Some(Arc::new(panel));
+                    t_halo += t0.elapsed().as_secs_f64();
+                }
+                TaskKind::InteriorMv { node, core } => {
+                    let t0 = Instant::now();
+                    let idx = node * c + core;
+                    if halo_panels[node].is_some() {
+                        // blocking wall: the halo already landed — send
+                        // ONE combined message carrying the node's full
+                        // footprint (value-for-value what the two waves
+                        // would deliver), and the worker computes all
+                        // rows at once.
+                        if full_panels[node].is_none() {
+                            let np = &self.plan.nodes[node];
+                            let x_len = np.x_cols.len();
+                            let owned = owned_panels[node].as_ref().ok_or_else(|| {
+                                anyhow::anyhow!("task program never packed node {node}")
+                            })?;
+                            let halo = halo_panels[node].as_ref().unwrap();
+                            let owned_len = np.owned_x.len();
+                            let halo_len = np.halo_x.len();
+                            let mut full = vec![0.0; x_len * k];
+                            for j in 0..k {
+                                for (i, &p) in np.owned_x.iter().enumerate() {
+                                    full[j * x_len + p as usize] = owned[j * owned_len + i];
+                                }
+                                for (i, &p) in np.halo_x.iter().enumerate() {
+                                    full[j * x_len + p as usize] = halo[j * halo_len + i];
+                                }
+                            }
+                            full_panels[node] = Some(Arc::new(full));
+                        }
+                        let node_x = Arc::clone(full_panels[node].as_ref().unwrap());
+                        let msg = if k == 1 {
+                            ToWorker::Apply { seq, node_x }
+                        } else {
+                            ToWorker::ApplyMulti { seq, k, node_x }
+                        };
+                        self.to_workers[idx]
+                            .send(msg)
+                            .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
+                        combined[node] = true;
+                    } else {
+                        let owned = Arc::clone(owned_panels[node].as_ref().ok_or_else(|| {
+                            anyhow::anyhow!("task program never packed node {node}")
+                        })?);
+                        let msg = if k == 1 {
+                            ToWorker::ApplyInterior { seq, owned }
+                        } else {
+                            ToWorker::ApplyInteriorMulti { seq, k, owned }
+                        };
+                        self.to_workers[idx]
+                            .send(msg)
+                            .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
+                    }
+                    t_pack += t0.elapsed().as_secs_f64();
+                }
+                TaskKind::BoundaryMv { node, core } => {
+                    if combined[node] {
+                        continue; // the combined message covered all rows
+                    }
+                    let t0 = Instant::now();
+                    let idx = node * c + core;
+                    let halo = Arc::clone(halo_panels[node].as_ref().ok_or_else(|| {
+                        anyhow::anyhow!("task program never sent node {node}'s halo")
+                    })?);
+                    let msg = if k == 1 {
+                        ToWorker::ApplyBoundary { seq, halo }
+                    } else {
+                        ToWorker::ApplyBoundaryMulti { seq, k, halo }
+                    };
+                    self.to_workers[idx]
+                        .send(msg)
+                        .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
+                    t_halo += t0.elapsed().as_secs_f64();
+                    halo_overlapped = true;
+                }
+                TaskKind::LocalDot { node } => {
+                    if let Some((pairs, _)) = dots.as_ref() {
+                        let t0 = Instant::now();
+                        if partials.is_empty() {
+                            partials = vec![vec![0.0; pairs.len()]; f];
+                        }
+                        let (lo, hi) = tasks::dot_ranges(n, f)[node];
+                        for (pi, (u, v)) in pairs.iter().enumerate() {
+                            let mut s = 0.0;
+                            for i in lo..hi {
+                                s += u[i] * v[i];
+                            }
+                            partials[node][pi] = s;
+                        }
+                        t_reduce += t0.elapsed().as_secs_f64();
+                    }
+                }
+                TaskKind::Reduce => {
+                    if let Some((pairs, out)) = dots.as_mut() {
+                        let t0 = Instant::now();
+                        for pi in 0..pairs.len() {
+                            // deterministic: node order, fixed chunking
+                            let mut s = 0.0;
+                            for p in &partials {
+                                s += p.get(pi).copied().unwrap_or(0.0);
+                            }
+                            out[pi] = s;
+                        }
+                        t_reduce += t0.elapsed().as_secs_f64();
+                    }
+                }
+                TaskKind::VecUpdate => {} // the solver's recurrence — a marker here
+            }
+        }
+        Ok((t_pack, t_halo, t_reduce, halo_overlapped))
+    }
+
+    /// Shared body of every apply flavor: fire faults, compile/fetch
+    /// the task program, walk it, drain the completions and assemble
+    /// the result + phase report.
+    fn apply_inner(
+        &mut self,
+        x: &[f64],
+        y: &mut [f64],
+        k: usize,
+        dots: Option<(&[(&[f64], &[f64])], &mut [f64])>,
+    ) -> crate::Result<PhaseTimes> {
         self.fire_faults()?;
         self.seq += 1;
         let seq = self.seq;
+        let fused = dots.is_some();
+        let program = self.program(fused)?;
 
-        // ---------- phase 1: scatter — pack each node's X footprint
-        // values (the per-iteration fan-out payload; A was distributed
-        // once at engine construction). `t_pack` is the first (or only)
-        // wave, `t_halo` the concurrent second wave (0 when blocking).
-        let (t_pack, t_halo) = match self.mode {
-            OverlapMode::Blocking => {
-                let t0 = Instant::now();
-                let node_x: Vec<Arc<Vec<f64>>> = self
-                    .plan
-                    .nodes
-                    .iter()
-                    .map(|np| {
-                        Arc::new(np.x_cols.iter().map(|&g| x[g as usize]).collect::<Vec<f64>>())
-                    })
-                    .collect();
-                for (idx, tx) in self.to_workers.iter().enumerate() {
-                    let node = idx / self.d.c;
-                    tx.send(ToWorker::Apply { seq, node_x: Arc::clone(&node_x[node]) })
-                        .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
-                }
-                // clock stops after the sends, exactly like the
-                // overlapped waves — the schedules' scatter columns
-                // must measure the same work to be comparable
-                (t0.elapsed().as_secs_f64(), 0.0)
-            }
-            OverlapMode::Overlapped => {
-                // 1a: pack + post the locally-owned values; interior
-                // rows start computing as soon as each message lands
-                let t0 = Instant::now();
-                let owned: Vec<Arc<Vec<f64>>> = self
-                    .plan
-                    .nodes
-                    .iter()
-                    .map(|np| {
-                        Arc::new(
-                            np.owned_x
-                                .iter()
-                                .map(|&p| x[np.x_cols[p as usize] as usize])
-                                .collect::<Vec<f64>>(),
-                        )
-                    })
-                    .collect();
-                for (idx, tx) in self.to_workers.iter().enumerate() {
-                    let node = idx / self.d.c;
-                    tx.send(ToWorker::ApplyInterior { seq, owned: Arc::clone(&owned[node]) })
-                        .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
-                }
-                let t_owned = t0.elapsed().as_secs_f64();
-                // 1b: pack + post the halo WHILE the interior rows
-                // compute — the exchange work the pipeline can hide
-                // (priced against the interior spans after the done
-                // notices arrive)
-                let t1 = Instant::now();
-                let halo: Vec<Arc<Vec<f64>>> = self
-                    .plan
-                    .nodes
-                    .iter()
-                    .map(|np| {
-                        Arc::new(
-                            np.halo_x
-                                .iter()
-                                .map(|&p| x[np.x_cols[p as usize] as usize])
-                                .collect::<Vec<f64>>(),
-                        )
-                    })
-                    .collect();
-                for (idx, tx) in self.to_workers.iter().enumerate() {
-                    let node = idx / self.d.c;
-                    tx.send(ToWorker::ApplyBoundary { seq, halo: Arc::clone(&halo[node]) })
-                        .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
-                }
-                let t_halo = t1.elapsed().as_secs_f64();
-                (t_owned, t_halo)
-            }
-        };
+        // ---------- phase 1 (+ fused dots): walk the task program in
+        // its deterministic schedule order — packs and sends issue to
+        // the workers, the leader's LocalDot/Reduce tasks run while the
+        // PFVC messages are in flight.
+        let (t_pack, t_halo, t_reduce, halo_overlapped) =
+            self.run_schedule(x, k, seq, &program, dots)?;
 
         // ---------- phase 2: compute — makespan over the reported
         // spans. Notices from an apply that errored out mid-flight may
         // still sit in the channel; they carry an older seq and are
         // drained silently instead of wedging every later apply.
-        let mut first_start = f64::INFINITY;
-        let mut last_interior_end = 0f64;
-        let mut first_boundary_start = f64::INFINITY;
-        let mut last_end = 0f64;
-        let mut remaining = self.to_workers.len();
-        while remaining > 0 {
-            let done = self
-                .done_rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("engine worker died mid-apply"))?;
-            if done.seq < seq {
-                continue; // leftover notice from an aborted apply
-            }
-            anyhow::ensure!(
-                done.seq == seq,
-                "worker {} answered future sequence {} (expected {seq})",
-                done.idx,
-                done.seq
-            );
-            anyhow::ensure!(done.ok, "engine worker {} panicked during its PFVC", done.idx);
-            first_start = first_start.min(done.start);
-            last_interior_end = last_interior_end.max(done.interior_end);
-            first_boundary_start = first_boundary_start.min(done.boundary_start);
-            last_end = last_end.max(done.end);
-            remaining -= 1;
-        }
-        // compute makespan: the blocking schedule is one busy span; the
-        // overlapped one sums the interior and boundary makespans so a
-        // worker idling on the in-flight halo does not inflate the
-        // reported compute (keeping the paper columns comparable
-        // across schedules)
-        let t_compute = match self.mode {
-            OverlapMode::Blocking => (last_end - first_start).max(0.0),
-            OverlapMode::Overlapped => {
-                (last_interior_end - first_start).max(0.0)
-                    + (last_end - first_boundary_start).max(0.0)
-            }
+        let (first_start, last_interior_end, first_boundary_start, last_end) =
+            self.drain_completions(seq)?;
+        // compute makespan: the walled (blocking) program is one busy
+        // span; the overlapped one sums the interior and boundary
+        // makespans so a worker idling on the in-flight halo does not
+        // inflate the reported compute (keeping the paper columns
+        // comparable across schedules)
+        let t_compute = if halo_overlapped {
+            (last_interior_end - first_start).max(0.0)
+                + (last_end - first_boundary_start).max(0.0)
+        } else {
+            (last_end - first_start).max(0.0)
         };
 
-        // what the overlapped schedule actually hid: the halo exchange
+        // what the overlapped program actually hid: the halo exchange
         // ran concurrently with the interior rows, so the hidden time
         // is bounded by both — min(t_halo, interior makespan), same
         // accounting as the analytic model. The visible scatter is the
         // first wave plus whatever part of the halo the interior work
         // did NOT cover; a boundary-heavy split (interior ≈ 0) hides
         // nothing and degenerates to the blocking report.
-        let (t_scatter, t_overlap_saved) = match self.mode {
-            OverlapMode::Blocking => (t_pack, 0.0),
-            OverlapMode::Overlapped => {
-                let interior_span = (last_interior_end - first_start).max(0.0);
-                let saved = t_halo.min(interior_span);
-                (t_pack + t_halo - saved, saved)
-            }
+        let (t_scatter, t_overlap_saved) = if halo_overlapped {
+            let interior_span = (last_interior_end - first_start).max(0.0);
+            let saved = t_halo.min(interior_span);
+            (t_pack + t_halo - saved, saved)
+        } else {
+            (t_pack + t_halo, 0.0)
         };
+
+        // the fused dots ran on the leader while the workers computed:
+        // the hidden part is bounded by both the reduction time and the
+        // compute span it hid behind
+        let t_pipeline_saved = if fused { t_reduce.min(t_compute) } else { 0.0 };
 
         // ---------- phase 3: node-local Y construction (parallel across
         // nodes in reality -> report the max node duration)
@@ -483,13 +661,17 @@ impl PmvcEngine {
         for node in 0..self.d.f {
             let tn = Instant::now();
             let np = &self.plan.nodes[node];
+            let y_len = np.y_rows.len();
             let yk = &mut self.node_y[node];
             yk.clear();
-            yk.resize(np.y_rows.len(), 0.0);
+            yk.resize(y_len * k, 0.0);
             for core in 0..self.d.c {
                 let slot = lock_slot(&self.y_slots[node * self.d.c + core]);
-                for (lr, &p) in np.core_y_maps[core].iter().enumerate() {
-                    yk[p as usize] += slot[lr];
+                let rows = np.core_y_maps[core].len();
+                for j in 0..k {
+                    for (lr, &p) in np.core_y_maps[core].iter().enumerate() {
+                        yk[j * y_len + p as usize] += slot[j * rows + lr];
+                    }
                 }
             }
             t_construct = t_construct.max(tn.elapsed().as_secs_f64());
@@ -498,11 +680,15 @@ impl PmvcEngine {
         // ---------- phases 4+5: gather at the master + final assembly
         // (into the caller's reusable buffer — no allocation)
         let t4 = Instant::now();
+        let n = self.d.n;
         y.fill(0.0);
         for (node, np) in self.plan.nodes.iter().enumerate() {
+            let y_len = np.y_rows.len();
             let yk = &self.node_y[node];
-            for (i, &g) in np.y_rows.iter().enumerate() {
-                y[g as usize] += yk[i];
+            for j in 0..k {
+                for (i, &g) in np.y_rows.iter().enumerate() {
+                    y[j * n + g as usize] += yk[j * y_len + i];
+                }
             }
         }
         let t_gather = t4.elapsed().as_secs_f64();
@@ -516,6 +702,8 @@ impl PmvcEngine {
             t_gather,
             t_construct,
             t_overlap_saved,
+            t_reduce,
+            t_pipeline_saved,
         })
     }
 
@@ -544,159 +732,7 @@ impl PmvcEngine {
             "y panel length {} != order {n} × k {k}",
             y.len()
         );
-        self.fire_faults()?;
-        self.seq += 1;
-        let seq = self.seq;
-
-        // ---------- phase 1: packed k-slice scatter — per node ONE
-        // message whose payload is k column-major slices of the node's
-        // footprint (the α-amortization this path exists for).
-        let (t_pack, t_halo) = match self.mode {
-            OverlapMode::Blocking => {
-                let t0 = Instant::now();
-                let node_x: Vec<Arc<Vec<f64>>> = self
-                    .plan
-                    .nodes
-                    .iter()
-                    .map(|np| {
-                        let mut panel = Vec::with_capacity(np.x_cols.len() * k);
-                        for j in 0..k {
-                            panel.extend(np.x_cols.iter().map(|&g| x[j * n + g as usize]));
-                        }
-                        Arc::new(panel)
-                    })
-                    .collect();
-                for (idx, tx) in self.to_workers.iter().enumerate() {
-                    let node = idx / self.d.c;
-                    tx.send(ToWorker::ApplyMulti { seq, k, node_x: Arc::clone(&node_x[node]) })
-                        .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
-                }
-                (t0.elapsed().as_secs_f64(), 0.0)
-            }
-            OverlapMode::Overlapped => {
-                let t0 = Instant::now();
-                let owned: Vec<Arc<Vec<f64>>> = self
-                    .plan
-                    .nodes
-                    .iter()
-                    .map(|np| {
-                        let mut panel = Vec::with_capacity(np.owned_x.len() * k);
-                        for j in 0..k {
-                            panel.extend(
-                                np.owned_x
-                                    .iter()
-                                    .map(|&p| x[j * n + np.x_cols[p as usize] as usize]),
-                            );
-                        }
-                        Arc::new(panel)
-                    })
-                    .collect();
-                for (idx, tx) in self.to_workers.iter().enumerate() {
-                    let node = idx / self.d.c;
-                    tx.send(ToWorker::ApplyInteriorMulti {
-                        seq,
-                        k,
-                        owned: Arc::clone(&owned[node]),
-                    })
-                    .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
-                }
-                let t_owned = t0.elapsed().as_secs_f64();
-                let t1 = Instant::now();
-                let halo: Vec<Arc<Vec<f64>>> = self
-                    .plan
-                    .nodes
-                    .iter()
-                    .map(|np| {
-                        let mut panel = Vec::with_capacity(np.halo_x.len() * k);
-                        for j in 0..k {
-                            panel.extend(
-                                np.halo_x
-                                    .iter()
-                                    .map(|&p| x[j * n + np.x_cols[p as usize] as usize]),
-                            );
-                        }
-                        Arc::new(panel)
-                    })
-                    .collect();
-                for (idx, tx) in self.to_workers.iter().enumerate() {
-                    let node = idx / self.d.c;
-                    tx.send(ToWorker::ApplyBoundaryMulti {
-                        seq,
-                        k,
-                        halo: Arc::clone(&halo[node]),
-                    })
-                    .map_err(|_| anyhow::anyhow!("engine worker {idx} has shut down"))?;
-                }
-                let t_halo = t1.elapsed().as_secs_f64();
-                (t_owned, t_halo)
-            }
-        };
-
-        // ---------- phase 2: drain completions (same protocol as the
-        // single-vector apply)
-        let (first_start, last_interior_end, first_boundary_start, last_end) =
-            self.drain_completions(seq)?;
-        let t_compute = match self.mode {
-            OverlapMode::Blocking => (last_end - first_start).max(0.0),
-            OverlapMode::Overlapped => {
-                (last_interior_end - first_start).max(0.0)
-                    + (last_end - first_boundary_start).max(0.0)
-            }
-        };
-        let (t_scatter, t_overlap_saved) = match self.mode {
-            OverlapMode::Blocking => (t_pack, 0.0),
-            OverlapMode::Overlapped => {
-                let interior_span = (last_interior_end - first_start).max(0.0);
-                let saved = t_halo.min(interior_span);
-                (t_pack + t_halo - saved, saved)
-            }
-        };
-
-        // ---------- phase 3: per-node Y panel construction
-        let mut t_construct: f64 = 0.0;
-        for node in 0..self.d.f {
-            let tn = Instant::now();
-            let np = &self.plan.nodes[node];
-            let y_len = np.y_rows.len();
-            let yk = &mut self.node_y[node];
-            yk.clear();
-            yk.resize(y_len * k, 0.0);
-            for core in 0..self.d.c {
-                let slot = lock_slot(&self.y_slots[node * self.d.c + core]);
-                let rows = np.core_y_maps[core].len();
-                for j in 0..k {
-                    for (lr, &p) in np.core_y_maps[core].iter().enumerate() {
-                        yk[j * y_len + p as usize] += slot[j * rows + lr];
-                    }
-                }
-            }
-            t_construct = t_construct.max(tn.elapsed().as_secs_f64());
-        }
-
-        // ---------- phases 4+5: gather + final panel assembly
-        let t4 = Instant::now();
-        y.fill(0.0);
-        for (node, np) in self.plan.nodes.iter().enumerate() {
-            let y_len = np.y_rows.len();
-            let yk = &self.node_y[node];
-            for j in 0..k {
-                for (i, &g) in np.y_rows.iter().enumerate() {
-                    y[j * n + g as usize] += yk[j * y_len + i];
-                }
-            }
-        }
-        let t_gather = t4.elapsed().as_secs_f64();
-
-        self.applies += 1;
-        Ok(PhaseTimes {
-            lb_nodes: self.plan.lb_nodes,
-            lb_cores: self.plan.lb_cores,
-            t_compute,
-            t_scatter,
-            t_gather,
-            t_construct,
-            t_overlap_saved,
-        })
+        self.apply_inner(x, y, k, None)
     }
 
     /// Receive one completion notice per worker for sequence `seq`,

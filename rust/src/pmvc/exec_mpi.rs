@@ -53,6 +53,13 @@ enum ToNode {
     /// Overlapped panel phase 2: `k` packed halo slices — finish the
     /// boundary rows and reply with the Y panel.
     XHaloMulti { iter: usize, k: usize, values: Vec<f64> },
+    /// Fused-iteration prologue: this rank's slices of the dot-product
+    /// operand pairs (already cut to its contiguous
+    /// [`super::tasks::dot_ranges`] chunk). The rank computes its
+    /// partials immediately — concurrently with the leader still packing
+    /// the X fan-out for the other ranks — and attaches them to its next
+    /// matching reply, which is how the reduction hides behind the SpMV.
+    DotOperands { iter: usize, pairs: Vec<(Vec<f64>, Vec<f64>)> },
     Shutdown,
 }
 
@@ -74,6 +81,12 @@ struct FromNode {
     interior_s: f64,
     /// Node-measured local construction duration.
     construct_s: f64,
+    /// Partial dot products over the rank's chunk, one per operand pair
+    /// (empty unless the leader sent [`ToNode::DotOperands`] for this
+    /// iteration).
+    dots: Vec<f64>,
+    /// Rank-measured duration of the partial-dot computation.
+    dot_s: f64,
     /// False when the rank's compute section panicked — the leader
     /// turns this into an error instead of assembling garbage.
     ok: bool,
@@ -91,6 +104,8 @@ impl FromNode {
             compute_s: 0.0,
             interior_s: 0.0,
             construct_s: 0.0,
+            dots: Vec::new(),
+            dot_s: 0.0,
             ok: false,
         }
     }
@@ -110,6 +125,10 @@ pub struct MpiIterTimes {
     /// compute time (0 on the blocking schedule, or when a
     /// boundary-heavy split leaves nothing to hide behind).
     pub t_overlap_saved: f64,
+    /// Max rank-reported partial-dot duration of a fused iteration
+    /// (0 for a plain matvec) — the reduction work that rode the
+    /// fan-out instead of paying its own synchronization round.
+    pub t_reduce_max: f64,
 }
 
 /// One rank's share of the frozen plan, shipped at launch — what MPI
@@ -231,6 +250,48 @@ impl MpiCluster {
     /// compute section surfaces as `Err` — the caller's solve fails,
     /// the process survives.
     pub fn matvec(&mut self, x: &[f64]) -> crate::Result<(Vec<f64>, MpiIterTimes)> {
+        let (y, _, times) = self.matvec_inner(x, None)?;
+        Ok((y, times))
+    }
+
+    /// One **fused** iteration: `y = A·x` plus the scalar products
+    /// `pairs[i].0 · pairs[i].1`, mapped onto the reply protocol. Each
+    /// rank receives its contiguous [`super::tasks::dot_ranges`] chunk
+    /// of every operand pair *before* its X message, computes the
+    /// partials while the leader is still packing the fan-out, and
+    /// piggybacks them on its Y reply; the leader folds the partials in
+    /// node order (a deterministic reduction — no extra message round).
+    /// Returns `(y, dots, times)` with
+    /// [`MpiIterTimes::t_reduce_max`] carrying the slowest rank's
+    /// partial-dot duration. Every operand must have length N; `y` is
+    /// bitwise identical to a plain [`MpiCluster::matvec`].
+    pub fn matvec_with_dots(
+        &mut self,
+        x: &[f64],
+        pairs: &[(&[f64], &[f64])],
+    ) -> crate::Result<(Vec<f64>, Vec<f64>, MpiIterTimes)> {
+        for (i, (u, v)) in pairs.iter().enumerate() {
+            anyhow::ensure!(
+                u.len() == self.n && v.len() == self.n,
+                "dot pair {i} operand lengths {} / {} != matrix order {}",
+                u.len(),
+                v.len(),
+                self.n
+            );
+        }
+        let (y, dots, times) = self.matvec_inner(x, Some(pairs))?;
+        Ok((y, dots, times))
+    }
+
+    /// Shared body of [`MpiCluster::matvec`] /
+    /// [`MpiCluster::matvec_with_dots`]: optional dot prologue, X
+    /// fan-out per the active schedule, stale-tolerant fan-in, node-order
+    /// assembly and partial-dot reduction.
+    fn matvec_inner(
+        &mut self,
+        x: &[f64],
+        dot_pairs: Option<&[(&[f64], &[f64])]>,
+    ) -> crate::Result<(Vec<f64>, Vec<f64>, MpiIterTimes)> {
         anyhow::ensure!(
             x.len() == self.n,
             "x length {} != matrix order {}",
@@ -243,6 +304,22 @@ impl MpiCluster {
         let t0 = Instant::now();
         let mut times = MpiIterTimes::default();
         let mut t_halo_wave = 0.0f64;
+        // fused prologue: ship each rank its operand chunk FIRST, so the
+        // partial dots run on the ranks while the leader still packs the
+        // X fan-out — the reduction hides behind the exchange + SpMV
+        let n_pairs = dot_pairs.map_or(0, |p| p.len());
+        if let Some(pairs) = dot_pairs {
+            let ranges = super::tasks::dot_ranges(self.n, self.f);
+            for (node, tx) in self.senders.iter().enumerate() {
+                let (lo, hi) = ranges[node];
+                let sliced: Vec<(Vec<f64>, Vec<f64>)> = pairs
+                    .iter()
+                    .map(|(u, v)| (u[lo..hi].to_vec(), v[lo..hi].to_vec()))
+                    .collect();
+                tx.send(ToNode::DotOperands { iter, pairs: sliced })
+                    .map_err(|_| anyhow::anyhow!("node rank {node} is down"))?;
+            }
+        }
         match self.mode {
             OverlapMode::Blocking => {
                 // fan-out: pack X_k per node
@@ -307,10 +384,24 @@ impl MpiCluster {
         }
         // assembly, in node order
         let mut y = vec![0.0; self.n];
+        let mut dots = vec![0.0; n_pairs];
         let mut interior_max = 0.0f64;
         for r in received.iter().flatten() {
             for (i, &g) in r.rows.iter().enumerate() {
                 y[g as usize] += r.values[i];
+            }
+            if n_pairs > 0 {
+                anyhow::ensure!(
+                    r.dots.len() == n_pairs,
+                    "node {} reply carries {} partial dots, expected {n_pairs}",
+                    r.node,
+                    r.dots.len()
+                );
+                // deterministic reduction: node order, fixed chunking
+                for (pi, &p) in r.dots.iter().enumerate() {
+                    dots[pi] += p;
+                }
+                times.t_reduce_max = times.t_reduce_max.max(r.dot_s);
             }
             times.t_compute_max = times.t_compute_max.max(r.compute_s);
             times.t_construct_max = times.t_construct_max.max(r.construct_s);
@@ -321,7 +412,7 @@ impl MpiCluster {
         // as the engine and the analytic model)
         times.t_overlap_saved = t_halo_wave.min(interior_max);
         times.t_wall = t0.elapsed().as_secs_f64();
-        Ok((y, times))
+        Ok((y, dots, times))
     }
 
     /// One distributed panel product `Y = A·X` over `k` column-major
@@ -482,9 +573,22 @@ fn node_rank(ctx: NodeCtx, rx: Receiver<ToNode>, reply: Sender<FromNode>) {
     let mut y_locals: Vec<Vec<f64>> = vec![Vec::new(); ctx.fragments.len()];
     // overlapped: iteration id + accumulated interior compute time
     let mut pending: Option<(usize, f64)> = None;
+    // fused: iteration id + partial dots + their duration, attached to
+    // the next matching reply
+    let mut dot_pending: Option<(usize, Vec<f64>, f64)> = None;
     while let Ok(msg) = rx.recv() {
         match msg {
             ToNode::Shutdown => return,
+            ToNode::DotOperands { iter, pairs } => {
+                // runs while the leader is still packing the X fan-out
+                // for the other ranks — the pipelined reduction
+                let td = Instant::now();
+                let partials: Vec<f64> = pairs
+                    .iter()
+                    .map(|(u, v)| u.iter().zip(v.iter()).map(|(a, b)| a * b).sum())
+                    .collect();
+                dot_pending = Some((iter, partials, td.elapsed().as_secs_f64()));
+            }
             ToNode::X { iter, values } => {
                 // ---- compute (the intra-node "OpenMP" level)
                 let tc = Instant::now();
@@ -510,7 +614,10 @@ fn node_rank(ctx: NodeCtx, rx: Receiver<ToNode>, reply: Sender<FromNode>) {
                     return;
                 }
                 let compute_s = tc.elapsed().as_secs_f64();
-                if construct_and_reply(&ctx, &y_locals, iter, compute_s, 0.0, &reply).is_err() {
+                let (dots, dot_s) = take_dots(&mut dot_pending, iter);
+                if construct_and_reply(&ctx, &y_locals, iter, compute_s, 0.0, dots, dot_s, &reply)
+                    .is_err()
+                {
                     return; // leader gone
                 }
             }
@@ -579,8 +686,11 @@ fn node_rank(ctx: NodeCtx, rx: Receiver<ToNode>, reply: Sender<FromNode>) {
                     return;
                 }
                 let compute_s = interior_s + tc.elapsed().as_secs_f64();
-                if construct_and_reply(&ctx, &y_locals, iter, compute_s, interior_s, &reply)
-                    .is_err()
+                let (dots, dot_s) = take_dots(&mut dot_pending, iter);
+                if construct_and_reply(
+                    &ctx, &y_locals, iter, compute_s, interior_s, dots, dot_s, &reply,
+                )
+                .is_err()
                 {
                     return; // leader gone
                 }
@@ -713,12 +823,15 @@ fn node_rank(ctx: NodeCtx, rx: Receiver<ToNode>, reply: Sender<FromNode>) {
 
 /// Rank-side tail of one iteration: accumulate the core partials into
 /// Y_k and send the reply. `Err` means the leader dropped the channel.
+#[allow(clippy::too_many_arguments)]
 fn construct_and_reply(
     ctx: &NodeCtx,
     y_locals: &[Vec<f64>],
     iter: usize,
     compute_s: f64,
     interior_s: f64,
+    dots: Vec<f64>,
+    dot_s: f64,
     reply: &Sender<FromNode>,
 ) -> Result<(), ()> {
     let tk = Instant::now();
@@ -738,9 +851,20 @@ fn construct_and_reply(
             compute_s,
             interior_s,
             construct_s,
+            dots,
+            dot_s,
             ok: true,
         })
         .map_err(|_| ())
+}
+
+/// Detach the pending partial dots when they belong to this iteration;
+/// stale partials from an aborted iteration are discarded.
+fn take_dots(pending: &mut Option<(usize, Vec<f64>, f64)>, iter: usize) -> (Vec<f64>, f64) {
+    match pending.take() {
+        Some((i, d, s)) if i == iter => (d, s),
+        _ => (Vec::new(), 0.0),
+    }
 }
 
 /// Rank-side tail of one panel iteration: accumulate the per-core Y
@@ -778,6 +902,8 @@ fn construct_and_reply_multi(
             compute_s,
             interior_s,
             construct_s,
+            dots: Vec::new(),
+            dot_s: 0.0,
             ok: true,
         })
         .map_err(|_| ())

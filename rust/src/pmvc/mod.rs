@@ -50,6 +50,7 @@ pub mod phases;
 pub mod plan;
 pub mod sim;
 pub mod spmv;
+pub mod tasks;
 
 pub use backend::{make_backend, BackendKind, ExecBackend, MpiBackend, OverlapMode, SimBackend};
 pub use dynamic::{dynamic_spmv, dynamic_spmv_format, DynamicError, DynamicResult};
@@ -60,3 +61,4 @@ pub use exec_mpi::{MpiCluster, MpiIterTimes, MpiOp};
 pub use phases::PhaseTimes;
 pub use plan::{CommPlan, NodePlan};
 pub use sim::{simulate, simulate_with};
+pub use tasks::{Task, TaskGraph, TaskId, TaskKind};

@@ -28,6 +28,13 @@ pub struct PhaseTimes {
     /// overlapped schedule (0 when the schedule is blocking or nothing
     /// could be hidden).
     pub t_overlap_saved: f64,
+    /// Time spent on fused dot products and their reduction (the
+    /// `LocalDot`/`Reduce` tasks of a fused graph; 0 for a plain apply).
+    pub t_reduce: f64,
+    /// Reduction time hidden behind the concurrently-running SpMV by a
+    /// pipelined solver (0 for a plain apply, and bounded by both
+    /// [`PhaseTimes::t_reduce`] and the compute span).
+    pub t_pipeline_saved: f64,
 }
 
 impl PhaseTimes {
@@ -60,7 +67,7 @@ mod tests {
             t_scatter: 0.013487,
             t_gather: 0.000754,
             t_construct: 0.000267,
-            t_overlap_saved: 0.0,
+            ..Default::default()
         };
         assert!((t.t_gather_construct() - 0.001021).abs() < 2e-6);
         assert!((t.t_total() - 0.001315).abs() < 2e-6);
@@ -73,6 +80,8 @@ mod tests {
         let mut t = PhaseTimes { t_compute: 2.0, t_gather: 1.0, t_construct: 0.5, ..Default::default() };
         let before = t.t_total();
         t.t_overlap_saved = 0.75;
+        t.t_reduce = 0.2;
+        t.t_pipeline_saved = 0.15;
         assert_eq!(t.t_total(), before);
     }
 }

@@ -212,6 +212,8 @@ pub fn simulate_with(
         t_gather,
         t_construct,
         t_overlap_saved,
+        t_reduce: 0.0,
+        t_pipeline_saved: 0.0,
     }
 }
 
@@ -383,7 +385,104 @@ pub fn simulate_multi_with(
         t_gather,
         t_construct,
         t_overlap_saved,
+        t_reduce: 0.0,
+        t_pipeline_saved: 0.0,
     }
+}
+
+/// Price a **fused** apply (SpMV + `n_pairs` dot products) by critical
+/// path over the task graph, returning `(t_reduce, t_pipeline_saved)`.
+///
+/// Both quantities come from [`super::tasks::TaskGraph::makespan`] under
+/// one shared cost model: `t_pipeline_saved` is the makespan of the
+/// sequential graph ([`super::tasks::fused_spmv_sequential`], where the
+/// dots wall on every boundary task — the synchronization a plain
+/// Krylov iteration pays) minus the makespan of the pipelined graph
+/// ([`super::tasks::fused_spmv`], where the leader's dot/reduce chain
+/// races the worker compute). `t_reduce` is the reduction chain itself:
+/// the slowest per-node `LocalDot` plus the log₂(f) `Reduce` tree. The
+/// plain-apply pricing ([`simulate_with`]) is untouched — this is the
+/// *additional* accounting a pipelined solver reports on top of it.
+pub fn price_fused(
+    d: &TwoLevelDecomposition,
+    topo: &ClusterTopology,
+    net: &NetworkModel,
+    mode: OverlapMode,
+    n_pairs: usize,
+) -> crate::Result<(f64, f64)> {
+    use super::tasks::{self, Task, TaskKind};
+    let plan = CommPlan::build(d)?;
+    let n = d.n;
+    let pack_penalty = match (d.combo.inter_axis(), d.combo.intra_axis()) {
+        (Axis::Row, Axis::Row) => 1.0,
+        (Axis::Row, Axis::Col) => 1.6,
+        (Axis::Col, Axis::Row) => 4.0,
+        (Axis::Col, Axis::Col) => 6.0,
+    };
+    let ranges = tasks::dot_ranges(n, d.f);
+    let cost = move |t: &Task| -> f64 {
+        match t.kind {
+            TaskKind::Pack { node } => {
+                // fresh message: α + the owned-X payload + master packing
+                let bytes = plan.nodes[node].owned_x.len() as f64 * BYTES_PER_ELEM;
+                net.latency + bytes * net.inv_bandwidth + bytes * pack_penalty / topo.core_bw
+            }
+            TaskKind::SendHalo { node } => {
+                // rides the open channel: bandwidth + packing, no fresh α
+                let bytes = plan.nodes[node].halo_x.len() as f64 * BYTES_PER_ELEM;
+                bytes * (net.inv_bandwidth + pack_penalty / topo.core_bw)
+            }
+            TaskKind::InteriorMv { node, core } | TaskKind::BoundaryMv { node, core } => {
+                // apportion the fragment's bytes-touched roofline by
+                // nonzero share, exactly like the overlapped pricing
+                let frag = d.fragment(node, core);
+                let np = &plan.nodes[node];
+                let int_nnz: usize = np.core_interior_rows[core]
+                    .iter()
+                    .map(|&r| frag.csr.ptr[r as usize + 1] - frag.csr.ptr[r as usize])
+                    .sum();
+                let int_rows = np.core_interior_rows[core].len();
+                let kb = frag.storage.kernel_bytes(&frag.csr);
+                let x_elems = frag.global_cols.len();
+                let (kb_int, x_int) = if frag.nnz() == 0 {
+                    (0, 0)
+                } else {
+                    (kb * int_nnz / frag.nnz(), x_elems * int_nnz / frag.nnz())
+                };
+                if matches!(t.kind, TaskKind::InteriorMv { .. }) {
+                    topo.core_stream_time((kb_int + int_rows * 12 + x_int * 8) as f64, int_nnz)
+                } else {
+                    let (kb_bnd, x_bnd) = (kb - kb_int, x_elems - x_int);
+                    let bnd_rows = frag.csr.n_rows - int_rows;
+                    let bnd_nnz = frag.nnz() - int_nnz;
+                    topo.core_stream_time((kb_bnd + bnd_rows * 12 + x_bnd * 8) as f64, bnd_nnz)
+                }
+            }
+            TaskKind::LocalDot { node } => {
+                // n_pairs streaming dot products over this node's chunk
+                let (lo, hi) = ranges[node];
+                let len = hi - lo;
+                topo.core_stream_time((n_pairs * len * 16) as f64, n_pairs * len)
+            }
+            TaskKind::Reduce => {
+                // log₂(f) tree of tiny α-dominated scalar messages
+                (d.f as f64).log2().ceil() * (net.latency + n_pairs as f64 * 8.0 * net.inv_bandwidth)
+            }
+            TaskKind::VecUpdate => (n as f64 * 24.0) / topo.core_bw,
+        }
+    };
+    let m_pipe = tasks::fused_spmv(d.f, d.c, mode).makespan(&cost)?;
+    let m_seq = tasks::fused_spmv_sequential(d.f, d.c, mode).makespan(&cost)?;
+    let max_dot = (0..d.f)
+        .map(|node| {
+            let (lo, hi) = tasks::dot_ranges(n, d.f)[node];
+            topo.core_stream_time((n_pairs * (hi - lo) * 16) as f64, n_pairs * (hi - lo))
+        })
+        .fold(0.0f64, f64::max);
+    let t_red_tree =
+        (d.f as f64).log2().ceil() * (net.latency + n_pairs as f64 * 8.0 * net.inv_bandwidth);
+    let t_reduce = max_dot + t_red_tree;
+    Ok((t_reduce, (m_seq - m_pipe).max(0.0)))
 }
 
 #[cfg(test)]
@@ -602,6 +701,42 @@ mod tests {
         };
         assert!(per_slice(4) < per_slice(1));
         assert!(per_slice(16) < per_slice(4));
+    }
+
+    #[test]
+    fn fused_pricing_saves_on_a_latency_dominated_network() {
+        // GigabitEthernet's α dwarfs the per-node dot work: the
+        // sequential graph pays the reduce tree after the compute, the
+        // pipelined one hides it behind the in-flight SpMV
+        let a = generate(&MatrixSpec::paper("epb1").unwrap(), 1).to_csr();
+        let topo = ClusterTopology::paravance(4);
+        let net = NetworkPreset::GigabitEthernet.model();
+        let d =
+            decompose(&a, Combination::NlHl, 4, topo.cores_per_node(), &DecomposeConfig::default())
+                .unwrap();
+        for mode in [OverlapMode::Blocking, OverlapMode::Overlapped] {
+            let (t_reduce, saved) = price_fused(&d, &topo, &net, mode, 2).unwrap();
+            assert!(t_reduce > 0.0, "{mode}");
+            assert!(saved > 0.0, "{mode}: pipelining must hide reduction latency");
+            // the saving is the makespan gap — never more than the whole
+            // leader-serialized chain it could possibly hide (f local
+            // dots + the reduce tree + the vector update)
+            let chain = t_reduce * d.f as f64 + (d.n as f64 * 24.0) / topo.core_bw;
+            assert!(saved <= chain + 1e-12, "{mode}: {saved} > {chain}");
+        }
+    }
+
+    #[test]
+    fn fused_pricing_scales_with_pair_count() {
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 1).to_csr();
+        let topo = ClusterTopology::paravance(2);
+        let net = NetworkPreset::TenGigabitEthernet.model();
+        let d =
+            decompose(&a, Combination::NlHl, 2, topo.cores_per_node(), &DecomposeConfig::default())
+                .unwrap();
+        let (r2, _) = price_fused(&d, &topo, &net, OverlapMode::Blocking, 2).unwrap();
+        let (r8, _) = price_fused(&d, &topo, &net, OverlapMode::Blocking, 8).unwrap();
+        assert!(r8 > r2, "{r8} !> {r2}");
     }
 
     #[test]

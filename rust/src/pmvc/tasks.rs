@@ -1,0 +1,548 @@
+//! Dependency-driven task graphs for the PMVC engine (ROADMAP item 2).
+//!
+//! The engine's original worker protocol hard-coded two schedules as
+//! message sequences (`Apply` vs `ApplyInterior`/`ApplyBoundary`). This
+//! module makes the schedule a *value*: one distributed PMVC round is a
+//! [`TaskGraph`] of typed nodes — [`TaskKind::Pack`],
+//! [`TaskKind::SendHalo`], [`TaskKind::InteriorMv`],
+//! [`TaskKind::BoundaryMv`], plus the fused dot-product chain
+//! [`TaskKind::LocalDot`] → [`TaskKind::Reduce`] →
+//! [`TaskKind::VecUpdate`] — with explicit dependency edges. The legacy
+//! schedules become the two canned graphs [`blocking_spmv`] and
+//! [`overlapped_spmv`]; their only structural difference is the
+//! `SendHalo → InteriorMv` edges that force the halo exchange to
+//! complete before any interior row computes (the blocking wall), and
+//! the issue order encoded in the [`TaskId`]s.
+//!
+//! Execution order is **deterministic**: [`TaskGraph::schedule`] runs
+//! Kahn's algorithm with a min-[`TaskId`] tie-break (a binary heap of
+//! ready tasks), so two runs over the same graph replay the exact same
+//! order — the reproducibility contract the engine's bitwise gates rely
+//! on. [`TaskGraph::ready_queues`] splits that order into per-executor
+//! (leader + one queue per worker core) ready queues, and
+//! [`TaskGraph::makespan`] prices a run by list-scheduling the graph
+//! over its executors — the critical-path model the simulator uses to
+//! price what pipelining a reduction behind the next SpMV saves.
+
+use super::backend::OverlapMode;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Dense 0-based identifier of a task within one [`TaskGraph`].
+///
+/// Ids double as the deterministic tie-break: among simultaneously
+/// ready tasks the scheduler always issues the smallest id first, so
+/// the canned builders assign ids in the order the leader should prefer.
+pub type TaskId = usize;
+
+/// The typed work items of one distributed PMVC round (optionally fused
+/// with a dot-product/reduction chain).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// Pack node `node`'s locally-owned X values (leader side).
+    Pack {
+        /// Node whose owned X values are packed.
+        node: usize,
+    },
+    /// Pack and post node `node`'s halo X values — the exchange the
+    /// overlapped schedule hides behind interior rows.
+    SendHalo {
+        /// Node whose halo is packed/posted.
+        node: usize,
+    },
+    /// Compute the interior rows (all columns locally owned) of core
+    /// `core` of node `node`.
+    InteriorMv {
+        /// Owning node.
+        node: usize,
+        /// Core within the node.
+        core: usize,
+    },
+    /// Compute the boundary rows (need halo X) of core `core` of node
+    /// `node`.
+    BoundaryMv {
+        /// Owning node.
+        node: usize,
+        /// Core within the node.
+        core: usize,
+    },
+    /// Partial dot products over node `node`'s contiguous index chunk
+    /// (see [`dot_ranges`]) — the local half of a fused reduction.
+    LocalDot {
+        /// Node whose chunk is dotted.
+        node: usize,
+    },
+    /// Sum the per-node partial dots in node order — one deterministic
+    /// reduction for all fused scalars.
+    Reduce,
+    /// Apply the reduced scalars to the iteration vectors (the solver's
+    /// recurrence update; a marker node the vector work hangs off).
+    VecUpdate,
+}
+
+/// The executor a task runs on: the coordinating leader thread or one
+/// worker core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Executor {
+    /// The leader: packing, sends, local dots, the reduction and the
+    /// vector update.
+    Leader,
+    /// Worker core `core` of node `node`: the PFVC row work.
+    Core {
+        /// Owning node.
+        node: usize,
+        /// Core within the node.
+        core: usize,
+    },
+}
+
+impl TaskKind {
+    /// Which executor runs this task.
+    pub fn executor(&self) -> Executor {
+        match *self {
+            TaskKind::Pack { .. }
+            | TaskKind::SendHalo { .. }
+            | TaskKind::LocalDot { .. }
+            | TaskKind::Reduce
+            | TaskKind::VecUpdate => Executor::Leader,
+            TaskKind::InteriorMv { node, core } | TaskKind::BoundaryMv { node, core } => {
+                Executor::Core { node, core }
+            }
+        }
+    }
+}
+
+/// One node of a [`TaskGraph`]: a typed work item plus the ids of the
+/// tasks that must complete before it may start.
+#[derive(Clone, Debug)]
+pub struct Task {
+    /// This task's id (== its index in [`TaskGraph::tasks`]).
+    pub id: TaskId,
+    /// What the task does and where it runs.
+    pub kind: TaskKind,
+    /// Ids of the tasks this one depends on.
+    pub deps: Vec<TaskId>,
+}
+
+/// A dependency graph of typed PMVC tasks with a deterministic
+/// schedule.
+#[derive(Clone, Debug, Default)]
+pub struct TaskGraph {
+    tasks: Vec<Task>,
+}
+
+impl TaskGraph {
+    /// An empty graph.
+    pub fn new() -> TaskGraph {
+        TaskGraph::default()
+    }
+
+    /// Append a task with the given dependencies; returns its id
+    /// (ids are assigned densely in insertion order).
+    pub fn add(&mut self, kind: TaskKind, deps: &[TaskId]) -> TaskId {
+        let id = self.tasks.len();
+        self.tasks.push(Task { id, kind, deps: deps.to_vec() });
+        id
+    }
+
+    /// Number of tasks.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Whether the graph has no tasks.
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// All tasks, indexed by id.
+    pub fn tasks(&self) -> &[Task] {
+        &self.tasks
+    }
+
+    /// Check structural soundness: every dependency id in range, no
+    /// self-dependency, and the graph acyclic (a schedule exists).
+    pub fn validate(&self) -> crate::Result<()> {
+        for t in &self.tasks {
+            for &d in &t.deps {
+                anyhow::ensure!(
+                    d < self.tasks.len(),
+                    "task {} ({:?}) depends on unknown task {d}",
+                    t.id,
+                    t.kind
+                );
+                anyhow::ensure!(d != t.id, "task {} ({:?}) depends on itself", t.id, t.kind);
+            }
+        }
+        self.schedule().map(|_| ())
+    }
+
+    /// The deterministic execution order: Kahn's algorithm over the
+    /// dependency edges with a min-[`TaskId`] tie-break among ready
+    /// tasks. Errors on a dependency cycle (and on out-of-range deps).
+    pub fn schedule(&self) -> crate::Result<Vec<TaskId>> {
+        let n = self.tasks.len();
+        let mut indegree = vec![0usize; n];
+        let mut successors: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        for t in &self.tasks {
+            for &d in &t.deps {
+                anyhow::ensure!(
+                    d < n,
+                    "task {} ({:?}) depends on unknown task {d}",
+                    t.id,
+                    t.kind
+                );
+                indegree[t.id] += 1;
+                successors[d].push(t.id);
+            }
+        }
+        let mut ready: BinaryHeap<Reverse<TaskId>> = (0..n)
+            .filter(|&id| indegree[id] == 0)
+            .map(Reverse)
+            .collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(Reverse(id)) = ready.pop() {
+            order.push(id);
+            for &s in &successors[id] {
+                indegree[s] -= 1;
+                if indegree[s] == 0 {
+                    ready.push(Reverse(s));
+                }
+            }
+        }
+        anyhow::ensure!(
+            order.len() == n,
+            "task graph has a dependency cycle ({} of {n} tasks schedulable)",
+            order.len()
+        );
+        Ok(order)
+    }
+
+    /// The deterministic schedule split into per-executor ready queues:
+    /// each executor's tasks in the order it will run them. Executors
+    /// are sorted (leader first, then cores in (node, core) order) and
+    /// only executors with at least one task appear.
+    pub fn ready_queues(&self) -> crate::Result<Vec<(Executor, Vec<TaskId>)>> {
+        let order = self.schedule()?;
+        let mut queues: std::collections::BTreeMap<Executor, Vec<TaskId>> =
+            std::collections::BTreeMap::new();
+        for id in order {
+            queues.entry(self.tasks[id].kind.executor()).or_default().push(id);
+        }
+        Ok(queues.into_iter().collect())
+    }
+
+    /// Price one run of the graph by list scheduling: tasks start when
+    /// their dependencies have finished *and* their executor is free
+    /// (executors run their queue in deterministic schedule order), and
+    /// the makespan is the last finish time. `cost` gives each task's
+    /// duration in seconds. This is the critical-path model the
+    /// simulator prices fused graphs with.
+    pub fn makespan(&self, cost: &dyn Fn(&Task) -> f64) -> crate::Result<f64> {
+        let order = self.schedule()?;
+        let mut finish = vec![0.0f64; self.tasks.len()];
+        let mut free: std::collections::BTreeMap<Executor, f64> = std::collections::BTreeMap::new();
+        let mut makespan = 0.0f64;
+        for id in order {
+            let t = &self.tasks[id];
+            let exec = t.kind.executor();
+            let deps_done = t.deps.iter().map(|&d| finish[d]).fold(0.0f64, f64::max);
+            let start = deps_done.max(free.get(&exec).copied().unwrap_or(0.0));
+            let end = start + cost(t).max(0.0);
+            finish[id] = end;
+            free.insert(exec, end);
+            makespan = makespan.max(end);
+        }
+        Ok(makespan)
+    }
+}
+
+/// The blocking (paper) schedule as a canned graph over `f` nodes ×
+/// `c` cores: `SendHalo{k} → InteriorMv{k,·}` edges force the whole X
+/// exchange to land before any row computes — the synchronization the
+/// overlapped graph removes.
+pub fn blocking_spmv(f: usize, c: usize) -> TaskGraph {
+    let mut g = TaskGraph::new();
+    let packs: Vec<TaskId> = (0..f).map(|k| g.add(TaskKind::Pack { node: k }, &[])).collect();
+    let halos: Vec<TaskId> =
+        (0..f).map(|k| g.add(TaskKind::SendHalo { node: k }, &[packs[k]])).collect();
+    let mut interiors = vec![vec![0; c]; f];
+    for (k, row) in interiors.iter_mut().enumerate() {
+        for (core, slot) in row.iter_mut().enumerate() {
+            // the blocking wall: interior rows wait for the halo too
+            *slot = g.add(TaskKind::InteriorMv { node: k, core }, &[packs[k], halos[k]]);
+        }
+    }
+    for (k, row) in interiors.iter().enumerate() {
+        for (core, &int) in row.iter().enumerate() {
+            g.add(TaskKind::BoundaryMv { node: k, core }, &[halos[k], int]);
+        }
+    }
+    g
+}
+
+/// The overlapped (double-buffered) schedule as a canned graph:
+/// identical tasks, but no `SendHalo → InteriorMv` edges — interior
+/// rows start as soon as the owned X lands, the halo rides concurrently
+/// and only the boundary rows wait for it. Ids are assigned in the
+/// leader's issue order (owned wave before the halo wave), so the
+/// deterministic schedule posts every interior start before any halo
+/// pack.
+pub fn overlapped_spmv(f: usize, c: usize) -> TaskGraph {
+    let mut g = TaskGraph::new();
+    let packs: Vec<TaskId> = (0..f).map(|k| g.add(TaskKind::Pack { node: k }, &[])).collect();
+    let mut interiors = vec![vec![0; c]; f];
+    for (k, row) in interiors.iter_mut().enumerate() {
+        for (core, slot) in row.iter_mut().enumerate() {
+            *slot = g.add(TaskKind::InteriorMv { node: k, core }, &[packs[k]]);
+        }
+    }
+    let halos: Vec<TaskId> =
+        (0..f).map(|k| g.add(TaskKind::SendHalo { node: k }, &[packs[k]])).collect();
+    for (k, row) in interiors.iter().enumerate() {
+        for (core, &int) in row.iter().enumerate() {
+            g.add(TaskKind::BoundaryMv { node: k, core }, &[halos[k], int]);
+        }
+    }
+    g
+}
+
+/// A fused round: the selected SpMV schedule plus a
+/// `LocalDot{·} → Reduce → VecUpdate` chain with **no** edges into the
+/// Mv tasks — the leader's dots and reduction run concurrently with the
+/// worker compute, which is exactly the pipelined-CG overlap
+/// ("this iteration's reduction hides behind the next SpMV").
+pub fn fused_spmv(f: usize, c: usize, mode: OverlapMode) -> TaskGraph {
+    let mut g = match mode {
+        OverlapMode::Blocking => blocking_spmv(f, c),
+        OverlapMode::Overlapped => overlapped_spmv(f, c),
+    };
+    let dots: Vec<TaskId> = (0..f).map(|k| g.add(TaskKind::LocalDot { node: k }, &[])).collect();
+    let red = g.add(TaskKind::Reduce, &dots);
+    g.add(TaskKind::VecUpdate, &[red]);
+    g
+}
+
+/// The same fused round with the reduction **not** pipelined: every
+/// `LocalDot` waits for every `BoundaryMv`, so the dots + reduction run
+/// strictly after the SpMV — the synchronization wall a plain Krylov
+/// iteration pays between applies. Pricing this graph against
+/// [`fused_spmv`] with the same costs yields
+/// [`super::PhaseTimes::t_pipeline_saved`].
+pub fn fused_spmv_sequential(f: usize, c: usize, mode: OverlapMode) -> TaskGraph {
+    let mut g = match mode {
+        OverlapMode::Blocking => blocking_spmv(f, c),
+        OverlapMode::Overlapped => overlapped_spmv(f, c),
+    };
+    let walls: Vec<TaskId> = g
+        .tasks()
+        .iter()
+        .filter(|t| matches!(t.kind, TaskKind::BoundaryMv { .. }))
+        .map(|t| t.id)
+        .collect();
+    let dots: Vec<TaskId> =
+        (0..f).map(|k| g.add(TaskKind::LocalDot { node: k }, &walls)).collect();
+    let red = g.add(TaskKind::Reduce, &dots);
+    g.add(TaskKind::VecUpdate, &[red]);
+    g
+}
+
+/// Contiguous per-node index ranges `[lo, hi)` splitting `0..n` into
+/// `f` chunks — the operand slice each node's [`TaskKind::LocalDot`]
+/// covers. Chunks are disjoint and cover every index exactly once, so
+/// summing the partials in node order is a deterministic reduction
+/// (unlike the plan's possibly-overlapping `y_rows` under column
+/// inter-partitions).
+pub fn dot_ranges(n: usize, f: usize) -> Vec<(usize, usize)> {
+    (0..f.max(1)).map(|k| (k * n / f.max(1), (k + 1) * n / f.max(1))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn positions(order: &[TaskId]) -> Vec<usize> {
+        let mut pos = vec![0; order.len()];
+        for (i, &id) in order.iter().enumerate() {
+            pos[id] = i;
+        }
+        pos
+    }
+
+    #[test]
+    fn schedule_is_topological_and_deterministic() {
+        for (f, c) in [(1, 1), (2, 3), (4, 2)] {
+            for g in [blocking_spmv(f, c), overlapped_spmv(f, c)] {
+                g.validate().unwrap();
+                let order = g.schedule().unwrap();
+                assert_eq!(order.len(), g.len());
+                let pos = positions(&order);
+                for t in g.tasks() {
+                    for &d in &t.deps {
+                        assert!(pos[d] < pos[t.id], "dep {d} after task {}", t.id);
+                    }
+                }
+                // replay: byte-for-byte the same order
+                assert_eq!(order, g.schedule().unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn blocking_walls_the_halo_before_any_interior() {
+        let g = blocking_spmv(3, 2);
+        let order = g.schedule().unwrap();
+        let pos = positions(&order);
+        let last_halo = g
+            .tasks()
+            .iter()
+            .filter(|t| matches!(t.kind, TaskKind::SendHalo { .. }))
+            .map(|t| pos[t.id])
+            .max()
+            .unwrap();
+        let first_interior = g
+            .tasks()
+            .iter()
+            .filter(|t| matches!(t.kind, TaskKind::InteriorMv { .. }))
+            .map(|t| pos[t.id])
+            .min()
+            .unwrap();
+        assert!(last_halo < first_interior, "blocking: halo must precede interior");
+    }
+
+    #[test]
+    fn overlapped_posts_interiors_before_any_halo() {
+        let g = overlapped_spmv(3, 2);
+        let order = g.schedule().unwrap();
+        let pos = positions(&order);
+        let first_halo = g
+            .tasks()
+            .iter()
+            .filter(|t| matches!(t.kind, TaskKind::SendHalo { .. }))
+            .map(|t| pos[t.id])
+            .min()
+            .unwrap();
+        let last_interior = g
+            .tasks()
+            .iter()
+            .filter(|t| matches!(t.kind, TaskKind::InteriorMv { .. }))
+            .map(|t| pos[t.id])
+            .max()
+            .unwrap();
+        assert!(last_interior < first_halo, "overlapped: interior sends precede the halo wave");
+    }
+
+    #[test]
+    fn the_two_schedules_differ_only_in_halo_edges() {
+        // same task multiset; the blocking graph has the
+        // SendHalo → InteriorMv wall edges, the overlapped one does not
+        let (f, c) = (2, 2);
+        let b = blocking_spmv(f, c);
+        let o = overlapped_spmv(f, c);
+        assert_eq!(b.len(), o.len());
+        let kinds = |g: &TaskGraph| {
+            let mut v: Vec<TaskKind> = g.tasks().iter().map(|t| t.kind).collect();
+            v.sort_by_key(|k| format!("{k:?}"));
+            v
+        };
+        assert_eq!(kinds(&b), kinds(&o));
+        let wall_edges = |g: &TaskGraph| {
+            g.tasks()
+                .iter()
+                .filter(|t| matches!(t.kind, TaskKind::InteriorMv { .. }))
+                .flat_map(|t| t.deps.iter().map(|&d| g.tasks()[d].kind))
+                .filter(|k| matches!(k, TaskKind::SendHalo { .. }))
+                .count()
+        };
+        assert_eq!(wall_edges(&b), f * c);
+        assert_eq!(wall_edges(&o), 0);
+    }
+
+    #[test]
+    fn cycles_and_bad_deps_are_rejected() {
+        let mut g = TaskGraph::new();
+        let a = g.add(TaskKind::Pack { node: 0 }, &[]);
+        let b = g.add(TaskKind::SendHalo { node: 0 }, &[a]);
+        g.tasks[a].deps.push(b); // a ↔ b cycle
+        assert!(g.schedule().is_err());
+        let mut g = TaskGraph::new();
+        g.add(TaskKind::Pack { node: 0 }, &[7]); // unknown dep
+        assert!(g.validate().is_err());
+        let mut g = TaskGraph::new();
+        g.add(TaskKind::Reduce, &[0]); // self-dep
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn ready_queues_partition_the_schedule_per_executor() {
+        let g = fused_spmv(2, 2, OverlapMode::Overlapped);
+        let queues = g.ready_queues().unwrap();
+        let total: usize = queues.iter().map(|(_, q)| q.len()).sum();
+        assert_eq!(total, g.len());
+        assert_eq!(queues[0].0, Executor::Leader);
+        // each core's queue keeps its interior before its boundary
+        for (exec, q) in &queues {
+            if let Executor::Core { node, core } = *exec {
+                let kinds: Vec<TaskKind> = q.iter().map(|&id| g.tasks()[id].kind).collect();
+                assert_eq!(
+                    kinds,
+                    vec![
+                        TaskKind::InteriorMv { node, core },
+                        TaskKind::BoundaryMv { node, core }
+                    ]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_graph_beats_the_sequential_one_on_makespan() {
+        // dots + reduce cost 5 s on the leader, each Mv 10 s on its own
+        // core: sequential pays compute + reduction, pipelined hides the
+        // reduction behind the compute entirely
+        let cost = |t: &Task| match t.kind {
+            TaskKind::Pack { .. } | TaskKind::SendHalo { .. } => 0.1,
+            TaskKind::InteriorMv { .. } | TaskKind::BoundaryMv { .. } => 10.0,
+            TaskKind::LocalDot { .. } => 1.0,
+            TaskKind::Reduce => 3.0,
+            TaskKind::VecUpdate => 0.0,
+        };
+        for mode in [OverlapMode::Blocking, OverlapMode::Overlapped] {
+            let pipe = fused_spmv(2, 2, mode).makespan(&cost).unwrap();
+            let seq = fused_spmv_sequential(2, 2, mode).makespan(&cost).unwrap();
+            assert!(seq > pipe, "{mode}: {seq} !> {pipe}");
+            // the whole reduction chain is hidden: 2 dots + reduce = 5 s
+            assert!((seq - pipe - 5.0).abs() < 1e-9, "{mode}: saved {}", seq - pipe);
+        }
+    }
+
+    #[test]
+    fn makespan_respects_executor_serialization() {
+        // two independent leader tasks cannot run concurrently
+        let mut g = TaskGraph::new();
+        g.add(TaskKind::Pack { node: 0 }, &[]);
+        g.add(TaskKind::Pack { node: 1 }, &[]);
+        let m = g.makespan(&|_| 1.0).unwrap();
+        assert_eq!(m, 2.0);
+        // two independent core tasks do
+        let mut g = TaskGraph::new();
+        g.add(TaskKind::InteriorMv { node: 0, core: 0 }, &[]);
+        g.add(TaskKind::InteriorMv { node: 1, core: 0 }, &[]);
+        assert_eq!(g.makespan(&|_| 1.0).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn dot_ranges_cover_disjointly() {
+        for (n, f) in [(10, 3), (7, 7), (5, 8), (100, 1), (0, 2)] {
+            let r = dot_ranges(n, f);
+            assert_eq!(r.len(), f.max(1));
+            let mut next = 0;
+            for &(lo, hi) in &r {
+                assert_eq!(lo, next);
+                assert!(hi >= lo);
+                next = hi;
+            }
+            assert_eq!(next, n);
+        }
+    }
+}

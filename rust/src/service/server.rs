@@ -31,7 +31,7 @@ use super::trace::SolveRequest;
 use crate::coordinator::experiment::load_matrix;
 use crate::partition::combined::{decompose, DecomposeConfig, TwoLevelDecomposition};
 use crate::pmvc::{CommPlan, FaultPlan, PmvcEngine};
-use crate::solver::{make_solver, BatchedJacobi, BlockCg, MatVecOp, MultiVecOp, SolverKind};
+use crate::solver::{make_solver_with, BatchedJacobi, BlockCg, MatVecOp, MultiVecOp, SolverKind};
 use crate::sparse::{fingerprint_csr, Csr, MatrixFingerprint};
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -131,6 +131,18 @@ impl MatVecOp for EngineOp<'_> {
         self.matvecs += 1;
         Ok(())
     }
+
+    fn apply_dots_into(
+        &mut self,
+        x: &[f64],
+        y: &mut [f64],
+        pairs: &[(&[f64], &[f64])],
+        dots: &mut [f64],
+    ) -> crate::Result<()> {
+        self.engine.apply_dots_into(x, y, pairs, dots)?;
+        self.matvecs += 1;
+        Ok(())
+    }
 }
 
 impl MultiVecOp for EngineOp<'_> {
@@ -193,7 +205,7 @@ fn run_solver(a: &Csr, spec: &SolveRequest, engine: &mut PmvcEngine) -> crate::R
             key_label: String::new(),
         })
     } else {
-        let mut solver = make_solver(spec.solver, a)?;
+        let mut solver = make_solver_with(spec.solver, a, spec.s_step)?;
         solver.options_mut().tol = spec.tol;
         solver.options_mut().max_iters = spec.max_iters;
         solver.options_mut().record_history = false;
@@ -608,6 +620,27 @@ mod tests {
         assert!(converged);
         for o in &report.outcomes {
             assert!(o.is_completed());
+            assert_eq!(o.x.as_deref().unwrap(), x_ref.as_slice());
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_are_served_and_match_the_one_shot_reference() {
+        let d = RequestDefaults::default();
+        let mut piped = SolveRequest::new(0, "spd".into(), &d);
+        piped.solver = SolverKind::PipelinedCg;
+        let mut sstep = SolveRequest::new(1, "spd".into(), &d);
+        sstep.solver = SolverKind::SStepCg;
+        sstep.s_step = 2;
+        let cfg = ServeConfig { keep_solutions: true, ..ServeConfig::default() };
+        let report = run_service(vec![piped.clone(), sstep.clone()], &cfg).unwrap();
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.accounted(), 2);
+        for o in &report.outcomes {
+            assert!(o.converged, "request {} did not converge", o.id);
+            let spec = if o.id == 0 { &piped } else { &sstep };
+            let (x_ref, converged) = one_shot_solution(spec).unwrap();
+            assert!(converged);
             assert_eq!(o.x.as_deref().unwrap(), x_ref.as_slice());
         }
     }

@@ -40,6 +40,8 @@ pub struct SolveRequest {
     pub format: FormatKind,
     /// Iterative method.
     pub solver: SolverKind,
+    /// Block size for the s-step solver (ignored by the others).
+    pub s_step: usize,
     /// Convergence tolerance.
     pub tol: f64,
     /// Iteration cap.
@@ -72,6 +74,8 @@ pub struct RequestDefaults {
     pub format: FormatKind,
     /// Iterative method.
     pub solver: SolverKind,
+    /// s-step block size.
+    pub s_step: usize,
     /// Convergence tolerance.
     pub tol: f64,
     /// Iteration cap.
@@ -94,6 +98,7 @@ impl Default for RequestDefaults {
             intra: PartitionerKind::Hypergraph,
             format: FormatKind::Csr,
             solver: SolverKind::Cg,
+            s_step: 4,
             tol: 1e-8,
             max_iters: 200,
             nrhs: 1,
@@ -115,6 +120,7 @@ impl SolveRequest {
             intra: defaults.intra,
             format: defaults.format,
             solver: defaults.solver,
+            s_step: defaults.s_step,
             tol: defaults.tol,
             max_iters: defaults.max_iters,
             nrhs: defaults.nrhs,
@@ -162,6 +168,9 @@ impl SolveRequest {
         }
         if self.max_iters == 0 {
             return Err("max_iters 0".into());
+        }
+        if self.s_step == 0 && self.solver == SolverKind::SStepCg {
+            return Err("s_step 0: the s-step solver needs a block of at least 1".into());
         }
         if self.tol <= 0.0 || self.tol.is_nan() {
             return Err(format!("non-positive tolerance {}", self.tol));
@@ -372,10 +381,10 @@ fn parse_object(line: &str) -> Result<Vec<(String, JsonValue)>, String> {
 
 /// Parse a JSONL trace into requests. Each non-empty, non-`#` line is a
 /// flat JSON object; recognised fields are `matrix` (required),
-/// `combo`, `partitioner`, `intra`, `format`, `solver`, `tol`, `iters`,
-/// `nrhs`, `nodes`, `cores`, `seed`, `fault_node`, `fault_apply`;
-/// anything else is an error (typos must not silently fall back to
-/// defaults).
+/// `combo`, `partitioner`, `intra`, `format`, `solver`, `s_step`,
+/// `tol`, `iters`, `nrhs`, `nodes`, `cores`, `seed`, `fault_node`,
+/// `fault_apply`; anything else is an error (typos must not silently
+/// fall back to defaults).
 pub fn parse_trace(text: &str, defaults: &RequestDefaults) -> crate::Result<Vec<SolveRequest>> {
     let mut out: Vec<SolveRequest> = Vec::new();
     for (lineno, raw) in text.lines().enumerate() {
@@ -418,6 +427,7 @@ pub fn parse_trace(text: &str, defaults: &RequestDefaults) -> crate::Result<Vec<
                         .map(|k| req.solver = k)
                         .ok_or_else(|| format!("unknown solver '{s}'"))
                 }),
+                "s_step" => val.as_usize(key).map(|v| req.s_step = v),
                 "tol" => val.as_f64(key).map(|v| req.tol = v),
                 "iters" => val.as_usize(key).map(|v| req.max_iters = v),
                 "nrhs" => val.as_usize(key).map(|v| req.nrhs = v),
@@ -505,6 +515,24 @@ mod tests {
                 .is_err(),
             "non-integer fault_node"
         );
+    }
+
+    #[test]
+    fn pipelined_solver_fields_parse_and_validate() {
+        let d = RequestDefaults::default();
+        let text = r#"
+{"matrix": "spd", "solver": "pipelined-cg"}
+{"matrix": "spd", "solver": "sstep-cg", "s_step": 2}
+"#;
+        let reqs = parse_trace(text, &d).unwrap();
+        assert_eq!(reqs[0].solver, SolverKind::PipelinedCg);
+        assert_eq!(reqs[0].s_step, 4, "default block size");
+        assert_eq!(reqs[1].solver, SolverKind::SStepCg);
+        assert_eq!(reqs[1].s_step, 2);
+        assert!(reqs[1].validate().is_ok());
+        let mut r = reqs[1].clone();
+        r.s_step = 0;
+        assert!(r.validate().unwrap_err().contains("s_step"));
     }
 
     #[test]

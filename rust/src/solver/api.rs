@@ -247,8 +247,8 @@ pub struct SolveReport {
 /// (power, Lanczos) accept an empty slice and otherwise use a nonzero
 /// `b` as the starting vector.
 pub trait IterativeSolver {
-    /// Stable solver identifier (`cg` | `jacobi` | `sor` | `power` |
-    /// `lanczos`).
+    /// Stable solver identifier (`cg` | `pipelined-cg` | `sstep-cg` |
+    /// `jacobi` | `sor` | `power` | `lanczos`).
     fn name(&self) -> &'static str;
     /// The shared configuration.
     fn options(&self) -> &SolveOptions;
@@ -402,6 +402,8 @@ pub(crate) fn phase_delta(
             t_gather: a.t_gather - b.t_gather,
             t_construct: a.t_construct - b.t_construct,
             t_overlap_saved: a.t_overlap_saved - b.t_overlap_saved,
+            t_reduce: a.t_reduce - b.t_reduce,
+            t_pipeline_saved: a.t_pipeline_saved - b.t_pipeline_saved,
         }),
         (None, after) => after,
         (Some(_), None) => None,
@@ -450,6 +452,12 @@ pub(crate) fn finish_report(
 pub enum SolverKind {
     /// Conjugate gradient (SPD systems).
     Cg,
+    /// Pipelined conjugate gradient — CG with its reductions fused into
+    /// the matrix product ([`crate::solver::PipelinedCg`]).
+    PipelinedCg,
+    /// s-step (communication-avoiding) conjugate gradient — one fused
+    /// reduction per `s` iterations ([`crate::solver::SStepCg`]).
+    SStepCg,
     /// Jacobi iteration.
     Jacobi,
     /// Gauss-Seidel / successive over-relaxation.
@@ -462,9 +470,11 @@ pub enum SolverKind {
 
 impl SolverKind {
     /// All solvers, linear systems first.
-    pub fn all() -> [SolverKind; 5] {
+    pub fn all() -> [SolverKind; 7] {
         [
             SolverKind::Cg,
+            SolverKind::PipelinedCg,
+            SolverKind::SStepCg,
             SolverKind::Jacobi,
             SolverKind::Sor,
             SolverKind::Power,
@@ -476,6 +486,8 @@ impl SolverKind {
     pub fn name(&self) -> &'static str {
         match self {
             SolverKind::Cg => "cg",
+            SolverKind::PipelinedCg => "pipelined-cg",
+            SolverKind::SStepCg => "sstep-cg",
             SolverKind::Jacobi => "jacobi",
             SolverKind::Sor => "sor",
             SolverKind::Power => "power",
@@ -483,11 +495,13 @@ impl SolverKind {
         }
     }
 
-    /// Parse `cg` / `jacobi` / `sor` / `power` / `lanczos`
-    /// (case-insensitive, with a few aliases).
+    /// Parse `cg` / `pipelined-cg` / `sstep-cg` / `jacobi` / `sor` /
+    /// `power` / `lanczos` (case-insensitive, with a few aliases).
     pub fn parse(s: &str) -> Option<SolverKind> {
         match s.to_ascii_lowercase().as_str() {
             "cg" | "conjugate-gradient" => Some(SolverKind::Cg),
+            "pipelined-cg" | "pipecg" | "pipelined" => Some(SolverKind::PipelinedCg),
+            "sstep-cg" | "s-step-cg" | "sstep" | "ca-cg" => Some(SolverKind::SStepCg),
             "jacobi" => Some(SolverKind::Jacobi),
             "sor" | "gauss-seidel" | "gs" => Some(SolverKind::Sor),
             "power" | "pagerank" => Some(SolverKind::Power),
@@ -507,8 +521,21 @@ impl std::fmt::Display for SolverKind {
 /// `a` provides the structural data some methods need up front
 /// (Jacobi's diagonal, SOR's row sweep); Cg/Power/Lanczos ignore it.
 pub fn make_solver(kind: SolverKind, a: &Csr) -> Result<Box<dyn IterativeSolver>, SolverError> {
+    make_solver_with(kind, a, 4)
+}
+
+/// [`make_solver`] with an explicit s-step block size for
+/// [`SolverKind::SStepCg`] (the `--s-step` CLI knob); every other kind
+/// ignores `s_step`.
+pub fn make_solver_with(
+    kind: SolverKind,
+    a: &Csr,
+    s_step: usize,
+) -> Result<Box<dyn IterativeSolver>, SolverError> {
     Ok(match kind {
         SolverKind::Cg => Box::new(crate::solver::cg::Cg::new()),
+        SolverKind::PipelinedCg => Box::new(crate::solver::pipelined_cg::PipelinedCg::new()),
+        SolverKind::SStepCg => Box::new(crate::solver::sstep_cg::SStepCg::new().s(s_step)),
         SolverKind::Jacobi => Box::new(crate::solver::jacobi::Jacobi::from_matrix(a)?),
         SolverKind::Sor => Box::new(crate::solver::gauss_seidel::Sor::new(a)?),
         SolverKind::Power => Box::new(crate::solver::power::Power::new()),

@@ -157,51 +157,6 @@ impl IterativeSolver for Cg {
     }
 }
 
-/// CG convergence report (pre-redesign shape).
-#[derive(Clone, Debug)]
-pub struct CgResult {
-    /// Solution estimate.
-    pub x: Vec<f64>,
-    /// Iterations performed.
-    pub iterations: usize,
-    /// Final residual norm.
-    pub residual_norm: f64,
-    /// Whether the tolerance was met.
-    pub converged: bool,
-    /// ‖r‖ after every iteration (for convergence plots).
-    pub history: Vec<f64>,
-}
-
-/// Solve `A·x = b` for SPD `A` with plain conjugate gradient.
-///
-/// Backend failures (which the old signature could not express) are
-/// reported as a non-converged [`CgResult`].
-#[deprecated(note = "use Cg::new().tol(..).max_iters(..).solve(op, b)")]
-pub fn conjugate_gradient(
-    a: &mut dyn MatVecOp,
-    b: &[f64],
-    tol: f64,
-    max_iters: usize,
-) -> CgResult {
-    let n = a.order();
-    match Cg::new().tol(tol).max_iters(max_iters).solve(a, b) {
-        Ok(r) => CgResult {
-            x: r.x,
-            iterations: r.iterations,
-            residual_norm: r.residual_norm,
-            converged: r.converged,
-            history: r.history,
-        },
-        Err(_) => CgResult {
-            x: vec![0.0; n],
-            iterations: 0,
-            residual_norm: f64::INFINITY,
-            converged: false,
-            history: Vec::new(),
-        },
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -342,19 +297,4 @@ mod tests {
         assert_eq!(count.load(Ordering::SeqCst), r.iterations);
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shim_matches_new_api() {
-        let a = gen::generate_spd(100, 3, 600, 6).to_csr();
-        let x_true: Vec<f64> = (0..100).map(|i| ((i % 4) as f64) - 1.5).collect();
-        let b = a.matvec(&x_true);
-        let shim = conjugate_gradient(&mut a.clone(), &b, 1e-10, 500);
-        let mut op = a.clone();
-        let new = Cg::new().tol(1e-10).max_iters(500).solve(&mut op, &b).unwrap();
-        assert!(shim.converged && new.converged);
-        assert_eq!(shim.iterations, new.iterations);
-        for i in 0..100 {
-            assert_eq!(shim.x[i], new.x[i]);
-        }
-    }
 }

@@ -136,65 +136,6 @@ impl IterativeSolver for Sor {
     }
 }
 
-/// Gauss-Seidel / SOR report (pre-redesign shape).
-#[derive(Clone, Debug)]
-pub struct SorResult {
-    /// Solution estimate.
-    pub x: Vec<f64>,
-    /// Iterations performed.
-    pub iterations: usize,
-    /// Final residual norm.
-    pub residual_norm: f64,
-    /// Whether the tolerance was met.
-    pub converged: bool,
-}
-
-/// Solve `A·x = b` by SOR with relaxation `omega` (omega = 1.0 is plain
-/// Gauss-Seidel). Requires nonzero diagonal and 0 < ω < 2; violations
-/// (which used to panic) are reported as a non-converged [`SorResult`].
-#[deprecated(note = "use Sor::new(&a)?.omega(..).tol(..).solve(op, b)")]
-pub fn sor(a: &Csr, b: &[f64], omega: f64, tol: f64, max_iters: usize) -> SorResult {
-    // zero-copy residual operator: the shim must not duplicate the
-    // caller's matrix a second time on top of the solver's own copy
-    struct Borrowed<'a>(&'a Csr);
-    impl MatVecOp for Borrowed<'_> {
-        fn order(&self) -> usize {
-            self.0.n_rows
-        }
-        fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
-            anyhow::ensure!(x.len() == self.0.n_cols, "x length");
-            anyhow::ensure!(y.len() == self.0.n_rows, "y length");
-            self.0.matvec_into(x, y);
-            Ok(())
-        }
-    }
-    let n = a.n_rows;
-    let run = Sor::new(a)
-        .map(|s| s.omega(omega).tol(tol).max_iters(max_iters))
-        .and_then(|mut s| s.solve(&mut Borrowed(a), b));
-    match run {
-        Ok(r) => SorResult {
-            x: r.x,
-            iterations: r.iterations,
-            residual_norm: r.residual_norm,
-            converged: r.converged,
-        },
-        Err(_) => SorResult {
-            x: vec![0.0; n],
-            iterations: 0,
-            residual_norm: f64::INFINITY,
-            converged: false,
-        },
-    }
-}
-
-/// Plain Gauss-Seidel (ω = 1).
-#[deprecated(note = "use Sor::new(&a)?.tol(..).solve(op, b)")]
-#[allow(deprecated)]
-pub fn gauss_seidel(a: &Csr, b: &[f64], tol: f64, max_iters: usize) -> SorResult {
-    sor(a, b, 1.0, tol, max_iters)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -271,17 +212,4 @@ mod tests {
         assert!(matches!(err, SolverError::DimensionMismatch { expected: 10, got: 20, .. }));
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_report_instead_of_panicking() {
-        let a = gen::generate_spd(60, 2, 240, 4).to_csr();
-        let x_true: Vec<f64> = (0..60).map(|i| (i % 3) as f64).collect();
-        let b = a.matvec(&x_true);
-        let ok = gauss_seidel(&a, &b, 1e-9, 3000);
-        assert!(ok.converged);
-        // the old `assert!(omega in (0,2))` panic is now a clean report
-        let bad = sor(&a, &b, 2.5, 1e-6, 10);
-        assert!(!bad.converged);
-        assert_eq!(bad.iterations, 0);
-    }
 }

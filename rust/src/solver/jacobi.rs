@@ -122,59 +122,6 @@ impl IterativeSolver for Jacobi {
     }
 }
 
-/// Jacobi convergence report (pre-redesign shape).
-#[derive(Clone, Debug)]
-pub struct JacobiResult {
-    /// Solution estimate.
-    pub x: Vec<f64>,
-    /// Iterations performed.
-    pub iterations: usize,
-    /// Final residual norm.
-    pub residual_norm: f64,
-    /// Whether the tolerance was met.
-    pub converged: bool,
-}
-
-/// Extract the diagonal of a CSR matrix (zeros where absent).
-#[deprecated(note = "use Csr::diagonal")]
-pub fn diagonal(a: &Csr) -> Vec<f64> {
-    a.diagonal()
-}
-
-/// Solve `A·x = b` by Jacobi iteration; `diag` must be the diagonal of A
-/// (all entries nonzero).
-///
-/// Errors the old signature could not express (zero diagonal, length
-/// mismatch, backend failure) are reported as a non-converged
-/// [`JacobiResult`].
-#[deprecated(note = "use Jacobi::with_diagonal(..)?.tol(..).solve(op, b)")]
-pub fn jacobi(
-    a: &mut dyn MatVecOp,
-    diag: &[f64],
-    b: &[f64],
-    tol: f64,
-    max_iters: usize,
-) -> JacobiResult {
-    let n = a.order();
-    let run = Jacobi::with_diagonal(diag.to_vec())
-        .map(|s| s.tol(tol).max_iters(max_iters))
-        .and_then(|mut s| s.solve(a, b));
-    match run {
-        Ok(r) => JacobiResult {
-            x: r.x,
-            iterations: r.iterations,
-            residual_norm: r.residual_norm,
-            converged: r.converged,
-        },
-        Err(_) => JacobiResult {
-            x: vec![0.0; n],
-            iterations: 0,
-            residual_norm: f64::INFINITY,
-            converged: false,
-        },
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,21 +162,4 @@ mod tests {
         assert!(matches!(err, SolverError::DimensionMismatch { expected: 50, got: 10, .. }));
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shim_still_converges() {
-        let a = gen::generate_spd(150, 3, 800, 8).to_csr();
-        let d = a.diagonal();
-        let x_true: Vec<f64> = (0..150).map(|i| ((i % 6) as f64) - 2.0).collect();
-        let b = a.matvec(&x_true);
-        let mut op = a.clone();
-        let r = jacobi(&mut op, &d, &b, 1e-10, 5000);
-        assert!(r.converged, "residual {}", r.residual_norm);
-        for i in 0..150 {
-            assert!((r.x[i] - x_true[i]).abs() < 1e-6);
-        }
-        // the old panic on a zero diagonal is now a clean non-converged report
-        let bad = jacobi(&mut op, &[0.0; 150], &b, 1e-10, 10);
-        assert!(!bad.converged);
-    }
 }

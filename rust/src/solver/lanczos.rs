@@ -157,50 +157,6 @@ impl IterativeSolver for Lanczos {
     }
 }
 
-/// Lanczos result: the tridiagonal coefficients and the extreme
-/// eigenvalue estimates extracted from them (pre-redesign shape).
-#[derive(Clone, Debug)]
-pub struct LanczosResult {
-    /// Diagonal of T (α).
-    pub alpha: Vec<f64>,
-    /// Off-diagonal of T (β, length `alpha.len() - 1`).
-    pub beta: Vec<f64>,
-    /// Largest eigenvalue of T (Ritz estimate of λ_max(A)).
-    pub lambda_max: f64,
-    /// Smallest eigenvalue of T (Ritz estimate of λ_min(A)).
-    pub lambda_min: f64,
-    /// Steps actually performed (may stop early on invariant subspace).
-    pub steps: usize,
-}
-
-/// Run `m` Lanczos steps with full reorthogonalization.
-///
-/// Backend failures (which the old signature could not express) are
-/// reported as an empty zero-step [`LanczosResult`].
-#[deprecated(note = "use Lanczos::new().max_iters(m).seed(s).solve(op, &[])")]
-pub fn lanczos(a: &mut dyn MatVecOp, m: usize, seed: u64) -> LanczosResult {
-    let mut solver = Lanczos::new().max_iters(m).seed(seed).record_history(false);
-    match solver.solve(a, &[]) {
-        Ok(r) => {
-            let (alpha, beta) = solver.tridiagonal.take().unwrap_or_default();
-            LanczosResult {
-                alpha,
-                beta,
-                lambda_max: r.lambda.unwrap_or(0.0),
-                lambda_min: r.lambda_min.unwrap_or(0.0),
-                steps: r.iterations,
-            }
-        }
-        Err(_) => LanczosResult {
-            alpha: Vec::new(),
-            beta: Vec::new(),
-            lambda_max: 0.0,
-            lambda_min: 0.0,
-            steps: 0,
-        },
-    }
-}
-
 /// Extreme eigenvalue of the symmetric tridiagonal T(α, β) by bisection
 /// with the Sturm sequence sign count.
 fn tridiag_extreme_eig(alpha: &[f64], beta: &[f64], largest: bool) -> f64 {
@@ -328,16 +284,4 @@ mod tests {
         assert!((lo - 1.0).abs() < 1e-9);
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shim_matches_new_api() {
-        let a = gen::generate_spd(120, 3, 700, 11).to_csr();
-        let shim = lanczos(&mut a.clone(), 30, 4);
-        let mut solver = Lanczos::new().max_iters(30).seed(4);
-        let new = solver.solve(&mut a.clone(), &[]).unwrap();
-        assert_eq!(shim.steps, new.iterations);
-        assert_eq!(shim.lambda_max, new.lambda.unwrap());
-        assert_eq!(shim.lambda_min, new.lambda_min.unwrap());
-        assert_eq!(shim.alpha.len(), shim.steps);
-    }
 }

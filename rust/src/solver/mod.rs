@@ -8,11 +8,13 @@
 //! worker pool) per decomposition and every apply reuses it.
 //!
 //! The solver layer itself is unified behind [`IterativeSolver`] /
-//! [`SolveReport`] (see [`api`]): five unit-struct methods ([`Cg`],
-//! [`Jacobi`], [`Sor`], [`Power`], [`Lanczos`]) share one builder-style
-//! configuration and one result type, and every matrix-vector product
-//! flows through the fallible, allocation-free
-//! [`MatVecOp::apply_into`].
+//! [`SolveReport`] (see [`api`]): the registered methods ([`Cg`],
+//! [`Jacobi`], [`Sor`], [`Power`], [`Lanczos`], [`PipelinedCg`],
+//! [`SStepCg`]) share one builder-style configuration and one result
+//! type, and every matrix-vector product flows through the fallible,
+//! allocation-free [`MatVecOp::apply_into`] (or its fused sibling
+//! [`MatVecOp::apply_dots_into`], which lets the communication-avoiding
+//! methods hide their reductions behind the product).
 
 pub mod api;
 pub mod batched_jacobi;
@@ -21,11 +23,13 @@ pub mod cg;
 pub mod gauss_seidel;
 pub mod jacobi;
 pub mod lanczos;
+pub mod pipelined_cg;
 pub mod power;
+pub mod sstep_cg;
 
 pub use api::{
-    make_solver, ColumnReport, IterativeSolver, MultiSolveReport, MultiVecOp, Observer,
-    SolveOptions, SolveReport, SolverError, SolverKind, StoppingCriterion,
+    make_solver, make_solver_with, ColumnReport, IterativeSolver, MultiSolveReport, MultiVecOp,
+    Observer, SolveOptions, SolveReport, SolverError, SolverKind, StoppingCriterion,
 };
 pub use batched_jacobi::BatchedJacobi;
 pub use block_cg::BlockCg;
@@ -33,7 +37,9 @@ pub use cg::Cg;
 pub use gauss_seidel::Sor;
 pub use jacobi::Jacobi;
 pub use lanczos::Lanczos;
+pub use pipelined_cg::PipelinedCg;
 pub use power::Power;
+pub use sstep_cg::SStepCg;
 
 use crate::partition::combined::TwoLevelDecomposition;
 use crate::pmvc::{CommPlan, ExecBackend, OverlapMode, PhaseTimes, PmvcEngine};
@@ -54,6 +60,41 @@ pub trait MatVecOp {
     /// `y = A·x` into caller-owned scratch. `x.len()` and `y.len()`
     /// must equal [`MatVecOp::order`].
     fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<()>;
+
+    /// Fused iteration: `y = A·x` plus the scalar products
+    /// `dots[i] = pairs[i].0 · pairs[i].1` — the building block of the
+    /// pipelined solvers, whose reductions ride the matrix product's
+    /// communication instead of paying their own synchronization round.
+    /// The default computes the dots serially and then applies —
+    /// correct everywhere, overlapping nowhere; distributed operators
+    /// override it to hide the reduction behind the exchange. Every
+    /// operand must have length [`MatVecOp::order`] and `dots.len()`
+    /// must equal `pairs.len()`.
+    fn apply_dots_into(
+        &mut self,
+        x: &[f64],
+        y: &mut [f64],
+        pairs: &[(&[f64], &[f64])],
+        dots: &mut [f64],
+    ) -> crate::Result<()> {
+        anyhow::ensure!(
+            dots.len() == pairs.len(),
+            "dots length {} != pair count {}",
+            dots.len(),
+            pairs.len()
+        );
+        for (d, (u, v)) in dots.iter_mut().zip(pairs) {
+            anyhow::ensure!(
+                u.len() == self.order() && v.len() == self.order(),
+                "dot operand lengths {} / {} != order {}",
+                u.len(),
+                v.len(),
+                self.order()
+            );
+            *d = u.iter().zip(v.iter()).map(|(a, b)| a * b).sum();
+        }
+        self.apply_into(x, y)
+    }
 
     /// Accumulated phase breakdown, when the operator measures one
     /// (the distributed op does; serial CSR returns `None`).
@@ -199,13 +240,6 @@ impl DistributedOp {
         })
     }
 
-    /// Former eager-failure constructor; [`DistributedOp::new`] now
-    /// fails eagerly itself.
-    #[deprecated(note = "DistributedOp::new now fails eagerly; call it directly")]
-    pub fn try_new(decomposition: TwoLevelDecomposition) -> crate::Result<Self> {
-        Self::new(decomposition)
-    }
-
     /// Drive the solver over any [`ExecBackend`] (simulated cluster,
     /// MPI ranks, a pre-built engine).
     pub fn with_backend(backend: Box<dyn ExecBackend>) -> Self {
@@ -218,12 +252,6 @@ impl DistributedOp {
             plan_builds: 0,
             n,
         }
-    }
-
-    /// Allocating apply with error propagation.
-    #[deprecated(note = "use MatVecOp::apply_into (scratch reuse) or MatVecOp::apply")]
-    pub fn try_apply(&mut self, x: &[f64]) -> crate::Result<Vec<f64>> {
-        MatVecOp::apply(self, x)
     }
 
     /// Mean per-iteration total time (compute + gather + construct).
@@ -263,6 +291,20 @@ impl DistributedOp {
     pub fn set_overlap_mode(&mut self, mode: OverlapMode) -> crate::Result<()> {
         self.backend.set_overlap_mode(mode)
     }
+
+    /// Fold one backend round into the running phase totals.
+    fn accumulate(&mut self, times: PhaseTimes) {
+        self.accumulated.lb_nodes = times.lb_nodes;
+        self.accumulated.lb_cores = times.lb_cores;
+        self.accumulated.t_compute += times.t_compute;
+        self.accumulated.t_scatter += times.t_scatter;
+        self.accumulated.t_gather += times.t_gather;
+        self.accumulated.t_construct += times.t_construct;
+        self.accumulated.t_overlap_saved += times.t_overlap_saved;
+        self.accumulated.t_reduce += times.t_reduce;
+        self.accumulated.t_pipeline_saved += times.t_pipeline_saved;
+        self.applications += 1;
+    }
 }
 
 impl MatVecOp for DistributedOp {
@@ -272,14 +314,19 @@ impl MatVecOp for DistributedOp {
 
     fn apply_into(&mut self, x: &[f64], y: &mut [f64]) -> crate::Result<()> {
         let times = self.backend.apply_into(x, y)?;
-        self.accumulated.lb_nodes = times.lb_nodes;
-        self.accumulated.lb_cores = times.lb_cores;
-        self.accumulated.t_compute += times.t_compute;
-        self.accumulated.t_scatter += times.t_scatter;
-        self.accumulated.t_gather += times.t_gather;
-        self.accumulated.t_construct += times.t_construct;
-        self.accumulated.t_overlap_saved += times.t_overlap_saved;
-        self.applications += 1;
+        self.accumulate(times);
+        Ok(())
+    }
+
+    fn apply_dots_into(
+        &mut self,
+        x: &[f64],
+        y: &mut [f64],
+        pairs: &[(&[f64], &[f64])],
+        dots: &mut [f64],
+    ) -> crate::Result<()> {
+        let times = self.backend.apply_dots_into(x, y, pairs, dots)?;
+        self.accumulate(times);
         Ok(())
     }
 
@@ -295,14 +342,7 @@ impl MatVecOp for DistributedOp {
 impl MultiVecOp for DistributedOp {
     fn apply_multi_into(&mut self, x: &[f64], y: &mut [f64], k: usize) -> crate::Result<()> {
         let times = self.backend.apply_multi_into(x, y, k)?;
-        self.accumulated.lb_nodes = times.lb_nodes;
-        self.accumulated.lb_cores = times.lb_cores;
-        self.accumulated.t_compute += times.t_compute;
-        self.accumulated.t_scatter += times.t_scatter;
-        self.accumulated.t_gather += times.t_gather;
-        self.accumulated.t_construct += times.t_construct;
-        self.accumulated.t_overlap_saved += times.t_overlap_saved;
-        self.applications += 1;
+        self.accumulate(times);
         Ok(())
     }
 }

@@ -1,0 +1,290 @@
+//! Pipelined conjugate gradient (Ghysels–Vanroose): CG rearranged so
+//! its two reductions per iteration are *fused with the next SpMV*
+//! instead of standing between it and the vector updates.
+//!
+//! Plain CG serializes `dot → SpMV → dot → update`: on a cluster every
+//! dot is a global synchronization the matrix product must wait for.
+//! The pipelined recurrence computes `γ = (r, r)` and `δ = (w, r)` in
+//! the same round as `q = A·w` through
+//! [`MatVecOp::apply_dots_into`] — the distributed operator ships the
+//! dot operands with the X fan-out and folds the partials from the Y
+//! fan-in, so the reduction rides communication that was already
+//! happening (the task graph's `LocalDot → Reduce` nodes scheduled
+//! alongside `InteriorMv`/`BoundaryMv`).
+//!
+//! The trade: one extra apply when convergence is detected (the fused
+//! round that *observes* the converged residual has already paid its
+//! SpMV), and three extra recurrence vectors (w, z, s). The iterates
+//! follow the same Krylov trajectory as plain CG — histories agree to
+//! rounding, which the tests pin at 1e-9.
+
+use super::api::{
+    finish_report, impl_solver_builder, IterativeSolver, SolveOptions, SolveReport, SolverError,
+};
+use super::{norm2, MatVecOp};
+use std::time::Instant;
+
+/// Pipelined CG for SPD systems behind the unified
+/// [`IterativeSolver`] API:
+///
+/// `PipelinedCg::new().tol(1e-10).max_iters(500).solve(&mut op, &b)?`
+///
+/// Each iteration drives exactly one fused
+/// [`MatVecOp::apply_dots_into`] round (SpMV + both reductions); all
+/// recurrence vectors are allocated once before the loop. Supports the
+/// same checkpointed warm restart as [`super::Cg`] through `.x0(..)`.
+///
+/// ```
+/// use pmvc::solver::{IterativeSolver, PipelinedCg};
+/// use pmvc::sparse::Coo;
+///
+/// let a = Coo::from_triplets(2, 2, [(0, 0, 4.0), (1, 1, 2.0)]).unwrap().to_csr();
+/// let r = PipelinedCg::new().tol(1e-12).solve(&mut a.clone(), &[8.0, 6.0]).unwrap();
+/// assert!(r.converged);
+/// assert!((r.x[0] - 2.0).abs() < 1e-9 && (r.x[1] - 3.0).abs() < 1e-9);
+/// ```
+#[derive(Debug, Default)]
+pub struct PipelinedCg {
+    opts: SolveOptions,
+}
+
+impl PipelinedCg {
+    /// Pipelined CG with default [`SolveOptions`].
+    pub fn new() -> PipelinedCg {
+        PipelinedCg::default()
+    }
+}
+
+impl_solver_builder!(PipelinedCg);
+
+impl IterativeSolver for PipelinedCg {
+    fn name(&self) -> &'static str {
+        "pipelined-cg"
+    }
+
+    fn options(&self) -> &SolveOptions {
+        &self.opts
+    }
+
+    fn options_mut(&mut self) -> &mut SolveOptions {
+        &mut self.opts
+    }
+
+    fn solve(&mut self, a: &mut dyn MatVecOp, b: &[f64]) -> Result<SolveReport, SolverError> {
+        let n = a.order();
+        if b.len() != n {
+            return Err(SolverError::DimensionMismatch { what: "rhs b", expected: n, got: b.len() });
+        }
+        let t0 = Instant::now();
+        let phases0 = a.phase_times();
+        let threshold = self.opts.threshold(norm2(b));
+
+        let mut scratch = vec![0.0; n];
+        let mut applies = 0usize;
+        let warm_started = self.opts.x0.is_some();
+        let (mut x, mut r) = match self.opts.x0.take() {
+            Some(x0) => {
+                if x0.len() != n {
+                    return Err(SolverError::DimensionMismatch {
+                        what: "warm start x0",
+                        expected: n,
+                        got: x0.len(),
+                    });
+                }
+                // checkpointed restart: one extra apply for the true
+                // initial residual r = b − A·x0
+                a.apply_into(&x0, &mut scratch).map_err(|e| SolverError::Interrupted {
+                    at_iteration: 0,
+                    x: x0.clone(),
+                    source: e,
+                })?;
+                applies += 1;
+                let r: Vec<f64> = b.iter().zip(&scratch).map(|(&bi, &ai)| bi - ai).collect();
+                (x0, r)
+            }
+            None => (vec![0.0; n], b.to_vec()), // r = b - A·0
+        };
+        let mut history = Vec::new();
+        let mut residual = norm2(&r);
+        let mut converged = residual <= threshold; // zero / converged rhs / converged x0
+        let mut iterations = 0usize;
+
+        if !converged {
+            // w = A·r seeds the pipeline
+            let mut w = vec![0.0; n];
+            a.apply_into(&r, &mut w).map_err(|e| SolverError::Interrupted {
+                at_iteration: 0,
+                x: x.clone(),
+                source: e,
+            })?;
+            applies += 1;
+            let mut q = scratch; // q = A·w each round
+            let mut z = vec![0.0; n];
+            let mut s = vec![0.0; n];
+            let mut p = vec![0.0; n];
+            let mut dots = [0.0f64; 2];
+            let mut gamma_old = 0.0f64;
+            let mut alpha_old = 0.0f64;
+            for it in 0..=self.opts.max_iters {
+                // the fused round: γ = (r,r) and δ = (w,r) reduce WHILE
+                // q = A·w computes — one communication wave for all three
+                {
+                    let pairs: [(&[f64], &[f64]); 2] =
+                        [(r.as_slice(), r.as_slice()), (w.as_slice(), r.as_slice())];
+                    a.apply_dots_into(&w, &mut q, &pairs, &mut dots).map_err(|e| {
+                        SolverError::Interrupted { at_iteration: it, x: x.clone(), source: e }
+                    })?;
+                }
+                applies += 1;
+                let (gamma, delta) = (dots[0], dots[1]);
+                residual = gamma.max(0.0).sqrt();
+                if it > 0 {
+                    iterations = it;
+                    self.opts.note(&mut history, it, residual);
+                }
+                if residual <= threshold {
+                    converged = true;
+                    break;
+                }
+                if it == self.opts.max_iters {
+                    break;
+                }
+                let (alpha, beta) = if it == 0 {
+                    if delta <= 0.0 {
+                        break; // matrix not SPD along r — bail with what we have
+                    }
+                    (gamma / delta, 0.0)
+                } else {
+                    let beta = gamma / gamma_old;
+                    let denom = delta - beta * gamma / alpha_old;
+                    if denom <= 0.0 {
+                        break; // loss of positivity — bail with what we have
+                    }
+                    (gamma / denom, beta)
+                };
+                // the three-term recurrences replace CG's p-update
+                for i in 0..n {
+                    z[i] = q[i] + beta * z[i];
+                    s[i] = w[i] + beta * s[i];
+                    p[i] = r[i] + beta * p[i];
+                }
+                for i in 0..n {
+                    x[i] += alpha * p[i];
+                    r[i] -= alpha * s[i];
+                    w[i] -= alpha * z[i];
+                }
+                gamma_old = gamma;
+                alpha_old = alpha;
+            }
+        }
+        let mut report = finish_report(
+            "pipelined-cg",
+            x,
+            iterations,
+            residual,
+            converged,
+            history,
+            t0,
+            applies,
+            phases0,
+            &*a,
+            None,
+            None,
+        );
+        report.warm_started = warm_started;
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::combined::{decompose, Combination, DecomposeConfig};
+    use crate::solver::{Cg, DistributedOp};
+    use crate::sparse::gen;
+
+    #[test]
+    fn pipelined_cg_follows_plain_cg_trajectory_serial() {
+        let a = gen::generate_spd(300, 4, 1800, 7).to_csr();
+        let x_true: Vec<f64> = (0..300).map(|i| ((i * 5 % 11) as f64) - 5.0).collect();
+        let b = a.matvec(&x_true);
+        let plain = Cg::new().tol(1e-10).max_iters(800).solve(&mut a.clone(), &b).unwrap();
+        let piped =
+            PipelinedCg::new().tol(1e-10).max_iters(800).solve(&mut a.clone(), &b).unwrap();
+        assert!(plain.converged && piped.converged);
+        assert_eq!(piped.solver, "pipelined-cg");
+        // same Krylov trajectory: histories agree to rounding
+        let shared = plain.history.len().min(piped.history.len());
+        assert!(shared > 3, "non-trivial trajectory expected");
+        for i in 0..shared {
+            assert!(
+                (plain.history[i] - piped.history[i]).abs()
+                    < 1e-9 * (1.0 + plain.history[i].abs()),
+                "history[{i}]: cg {} vs pipelined {}",
+                plain.history[i],
+                piped.history[i]
+            );
+        }
+        for i in 0..300 {
+            assert!(
+                (plain.x[i] - piped.x[i]).abs() < 1e-9 * (1.0 + plain.x[i].abs()),
+                "x[{i}]"
+            );
+        }
+    }
+
+    #[test]
+    fn pipelined_cg_distributed_matches_serial_and_reports_reduce_time() {
+        let a = gen::generate_spd(250, 4, 1500, 9).to_csr();
+        let x_true: Vec<f64> = (0..250).map(|i| (i as f64 * 0.1).cos()).collect();
+        let b = a.matvec(&x_true);
+        let rs = PipelinedCg::new().tol(1e-10).max_iters(800).solve(&mut a.clone(), &b).unwrap();
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
+        let mut dist = DistributedOp::new(d).unwrap();
+        let rd = PipelinedCg::new().tol(1e-10).max_iters(800).solve(&mut dist, &b).unwrap();
+        assert!(rs.converged && rd.converged);
+        for i in 0..250 {
+            assert!((rs.x[i] - rd.x[i]).abs() < 1e-9 * (1.0 + rs.x[i].abs()), "x[{i}]");
+        }
+        let phases = rd.phases.expect("DistributedOp reports phases");
+        assert!(phases.t_reduce > 0.0, "fused rounds must account their reductions");
+    }
+
+    #[test]
+    fn pipelined_cg_zero_rhs_trivial() {
+        let a = gen::generate_spd(50, 3, 300, 1).to_csr();
+        let r = PipelinedCg::new().tol(1e-12).max_iters(10).solve(&mut a.clone(), &[0.0; 50]);
+        let r = r.unwrap();
+        assert!(r.converged);
+        assert_eq!(r.iterations, 0);
+        assert_eq!(r.applies, 0, "a converged start needs no pipeline seed");
+        assert!(r.x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pipelined_cg_warm_start_restarts_from_checkpoint() {
+        let a = gen::generate_spd(200, 4, 1200, 3).to_csr();
+        let x_true: Vec<f64> = (0..200).map(|i| ((i * 3 % 7) as f64) * 0.5 - 1.0).collect();
+        let b = a.matvec(&x_true);
+        let cold = PipelinedCg::new().tol(1e-10).max_iters(800).solve(&mut a.clone(), &b).unwrap();
+        assert!(cold.converged && !cold.warm_started);
+        let warm = PipelinedCg::new()
+            .tol(1e-10)
+            .max_iters(800)
+            .x0(cold.x.clone())
+            .solve(&mut a.clone(), &b)
+            .unwrap();
+        assert!(warm.converged && warm.warm_started);
+        assert!(warm.iterations <= 1, "restart took {} iterations", warm.iterations);
+        // mis-sized x0 is a typed error
+        let err = PipelinedCg::new().x0(vec![0.0; 3]).solve(&mut a.clone(), &b).unwrap_err();
+        assert!(matches!(err, SolverError::DimensionMismatch { expected: 200, got: 3, .. }));
+    }
+
+    #[test]
+    fn pipelined_cg_rejects_bad_rhs_length() {
+        let a = gen::generate_spd(40, 3, 200, 2).to_csr();
+        let err = PipelinedCg::new().solve(&mut a.clone(), &[1.0, 2.0]).unwrap_err();
+        assert!(matches!(err, SolverError::DimensionMismatch { expected: 40, got: 2, .. }));
+    }
+}

@@ -129,50 +129,6 @@ impl IterativeSolver for Power {
     }
 }
 
-/// Power iteration report (pre-redesign shape).
-#[derive(Clone, Debug)]
-pub struct PowerResult {
-    /// Dominant eigenvector (L1-normalized for stochastic matrices).
-    pub v: Vec<f64>,
-    /// Rayleigh estimate of the dominant eigenvalue.
-    pub lambda: f64,
-    /// Iterations performed.
-    pub iterations: usize,
-    /// Whether the update delta met the tolerance.
-    pub converged: bool,
-}
-
-/// Plain power iteration with L1 normalization (PageRank convention).
-/// `damping < 1.0` applies the Google teleportation:
-/// `v' = damping·A·v + (1-damping)/n`.
-///
-/// Backend failures (which the old signature could not express) are
-/// reported as a non-converged [`PowerResult`].
-#[deprecated(note = "use Power::new().damping(..).tol(..).solve(op, &[])")]
-pub fn power_iteration(
-    a: &mut dyn MatVecOp,
-    damping: f64,
-    tol: f64,
-    max_iters: usize,
-) -> PowerResult {
-    let n = a.order();
-    let mut solver = Power::new().damping(damping).tol(tol).max_iters(max_iters);
-    match solver.solve(a, &[]) {
-        Ok(r) => PowerResult {
-            v: r.x,
-            lambda: r.lambda.unwrap_or(0.0),
-            iterations: r.iterations,
-            converged: r.converged,
-        },
-        Err(_) => PowerResult {
-            v: vec![0.0; n],
-            lambda: 0.0,
-            iterations: 0,
-            converged: false,
-        },
-    }
-}
-
 /// Norm-2 residual ‖A·v − λ·v‖ (verification helper).
 pub fn eigen_residual(a: &mut dyn MatVecOp, v: &[f64], lambda: f64) -> crate::Result<f64> {
     let av = a.apply(v)?;
@@ -256,17 +212,4 @@ mod tests {
         assert!(res < 1e-9, "eigen residual {res}");
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shim_matches_new_api() {
-        let q = gen::generate_link_matrix(150, 5, 7).to_csr();
-        let shim = power_iteration(&mut q.clone(), 0.85, 1e-12, 500);
-        let mut solver = Power::new().damping(0.85).tol(1e-12).max_iters(500);
-        let new = solver.solve(&mut q.clone(), &[]).unwrap();
-        assert!(shim.converged && new.converged);
-        assert_eq!(shim.iterations, new.iterations);
-        for i in 0..150 {
-            assert_eq!(shim.v[i], new.x[i]);
-        }
-    }
 }

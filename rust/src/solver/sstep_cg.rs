@@ -1,0 +1,399 @@
+//! s-step (communication-avoiding) conjugate gradient: run `s` CG
+//! iterations per *block* on a monomial Krylov basis, with ONE fused
+//! reduction round per block instead of two synchronizations per
+//! iteration.
+//!
+//! Each block builds the basis
+//! `V = [p, Ap, …, Aˢp, r, Ar, …, Aˢ⁻¹r]` (2s−1 SpMVs), forms the Gram
+//! matrix `G = VᵀV` — all pairs not involving the final basis vector
+//! ride the final SpMV through [`MatVecOp::apply_dots_into`] — and then
+//! runs `s` CG steps entirely in the `(2s+1)`-dimensional coordinate
+//! space: multiplying by A becomes the shift matrix B (degree+1 along
+//! each chain), every inner product becomes `cᵀGc'`, and no
+//! communication happens at all until the next block's basis.
+//!
+//! The trade is numerical: the monomial basis loses orthogonality as
+//! `s` grows (s ≤ 4 tracks plain CG to rounding on well-conditioned
+//! systems — the 1e-9 agreement the tests pin; larger `s` is for the
+//! bench grid, not for tight tolerances).
+
+use super::api::{
+    finish_report, impl_solver_builder, IterativeSolver, SolveOptions, SolveReport, SolverError,
+};
+use super::{dot, norm2, MatVecOp};
+use std::time::Instant;
+
+/// s-step CG for SPD systems behind the unified [`IterativeSolver`]
+/// API:
+///
+/// `SStepCg::new().s(4).tol(1e-10).solve(&mut op, &b)?`
+///
+/// Iteration counts in the report are plain-CG-equivalent inner steps
+/// (`s` per block), so histories line up with [`super::Cg`] entry for
+/// entry. Supports the same checkpointed warm restart as plain CG
+/// through `.x0(..)`; an interruption checkpoint carries the last
+/// block-end iterate.
+///
+/// ```
+/// use pmvc::solver::{IterativeSolver, SStepCg};
+/// use pmvc::sparse::Coo;
+///
+/// let a = Coo::from_triplets(2, 2, [(0, 0, 4.0), (1, 1, 2.0)]).unwrap().to_csr();
+/// let r = SStepCg::new().s(2).tol(1e-12).solve(&mut a.clone(), &[8.0, 6.0]).unwrap();
+/// assert!(r.converged);
+/// assert!((r.x[0] - 2.0).abs() < 1e-9 && (r.x[1] - 3.0).abs() < 1e-9);
+/// ```
+#[derive(Debug)]
+pub struct SStepCg {
+    opts: SolveOptions,
+    s: usize,
+}
+
+impl Default for SStepCg {
+    fn default() -> Self {
+        SStepCg { opts: SolveOptions::default(), s: 4 }
+    }
+}
+
+impl SStepCg {
+    /// s-step CG with default [`SolveOptions`] and block size `s = 4`.
+    pub fn new() -> SStepCg {
+        SStepCg::default()
+    }
+
+    /// Block size: CG steps per basis build (clamped to ≥ 1). Small `s`
+    /// tracks plain CG tightly; large `s` amortizes more communication
+    /// per reduction but degrades the monomial basis.
+    pub fn s(mut self, s: usize) -> Self {
+        self.s = s.max(1);
+        self
+    }
+
+    /// The configured block size.
+    pub fn block_size(&self) -> usize {
+        self.s
+    }
+}
+
+impl_solver_builder!(SStepCg);
+
+impl IterativeSolver for SStepCg {
+    fn name(&self) -> &'static str {
+        "sstep-cg"
+    }
+
+    fn options(&self) -> &SolveOptions {
+        &self.opts
+    }
+
+    fn options_mut(&mut self) -> &mut SolveOptions {
+        &mut self.opts
+    }
+
+    fn solve(&mut self, a: &mut dyn MatVecOp, b: &[f64]) -> Result<SolveReport, SolverError> {
+        let n = a.order();
+        if b.len() != n {
+            return Err(SolverError::DimensionMismatch { what: "rhs b", expected: n, got: b.len() });
+        }
+        let s = self.s.max(1);
+        let m = 2 * s + 1; // basis width: p-chain (s+1) + r-chain (s)
+        let t0 = Instant::now();
+        let phases0 = a.phase_times();
+        let threshold = self.opts.threshold(norm2(b));
+
+        let mut applies = 0usize;
+        let warm_started = self.opts.x0.is_some();
+        let (mut x, mut r) = match self.opts.x0.take() {
+            Some(x0) => {
+                if x0.len() != n {
+                    return Err(SolverError::DimensionMismatch {
+                        what: "warm start x0",
+                        expected: n,
+                        got: x0.len(),
+                    });
+                }
+                let mut ax = vec![0.0; n];
+                a.apply_into(&x0, &mut ax).map_err(|e| SolverError::Interrupted {
+                    at_iteration: 0,
+                    x: x0.clone(),
+                    source: e,
+                })?;
+                applies += 1;
+                let r: Vec<f64> = b.iter().zip(&ax).map(|(&bi, &ai)| bi - ai).collect();
+                (x0, r)
+            }
+            None => (vec![0.0; n], b.to_vec()), // r = b - A·0
+        };
+        let mut p = r.clone();
+        let mut history = Vec::new();
+        let mut residual = norm2(&r);
+        let mut converged = residual <= threshold;
+        let mut iterations = 0usize;
+        let mut broke = false; // loss of positivity — stop expanding
+
+        // basis columns and the block-end reconstruction buffers,
+        // allocated once and reused across blocks
+        let mut vbasis: Vec<Vec<f64>> = vec![vec![0.0; n]; m];
+        let mut g = vec![0.0; m * m];
+        let mut r_next = vec![0.0; n];
+        let mut p_next = vec![0.0; n];
+        // the SpMV chain: (src, dst) column pairs, p-chain then r-chain
+        let chain: Vec<(usize, usize)> = (0..s)
+            .map(|i| (i, i + 1))
+            .chain((0..s - 1).map(|i| (s + 1 + i, s + 2 + i)))
+            .collect();
+
+        while !converged && !broke && iterations < self.opts.max_iters {
+            // ---- basis: V = [p, Ap, …, Aˢp, r, Ar, …, Aˢ⁻¹r] ----
+            vbasis[0].copy_from_slice(&p);
+            vbasis[s + 1].copy_from_slice(&r);
+            let last = chain.len() - 1; // 2s − 2
+            for (ai, &(src, dst)) in chain.iter().enumerate() {
+                // the dst column is detached so the rest of the basis
+                // can be borrowed as fused-dot operands
+                let mut out = std::mem::take(&mut vbasis[dst]);
+                if ai < last {
+                    a.apply_into(&vbasis[src], &mut out).map_err(|e| {
+                        SolverError::Interrupted {
+                            at_iteration: iterations,
+                            x: x.clone(),
+                            source: e,
+                        }
+                    })?;
+                } else {
+                    // final SpMV of the block carries the Gram pairs of
+                    // every completed column — the block's one fused
+                    // reduction round
+                    let mut pair_idx = Vec::with_capacity(m * (m - 1) / 2);
+                    let mut pairs: Vec<(&[f64], &[f64])> = Vec::with_capacity(m * (m - 1) / 2);
+                    for i in 0..m {
+                        if i == dst {
+                            continue;
+                        }
+                        for j in i..m {
+                            if j == dst {
+                                continue;
+                            }
+                            pair_idx.push((i, j));
+                            pairs.push((vbasis[i].as_slice(), vbasis[j].as_slice()));
+                        }
+                    }
+                    let mut dots = vec![0.0; pairs.len()];
+                    a.apply_dots_into(&vbasis[src], &mut out, &pairs, &mut dots).map_err(|e| {
+                        SolverError::Interrupted {
+                            at_iteration: iterations,
+                            x: x.clone(),
+                            source: e,
+                        }
+                    })?;
+                    for (&(i, j), &d) in pair_idx.iter().zip(&dots) {
+                        g[i * m + j] = d;
+                        g[j * m + i] = d;
+                    }
+                }
+                applies += 1;
+                vbasis[dst] = out;
+            }
+            // Gram row/column of the last-produced basis vector (the
+            // only entries that could not ride the fused round)
+            let last_dst = chain[last].1;
+            for i in 0..m {
+                let d = dot(&vbasis[i], &vbasis[last_dst]);
+                g[i * m + last_dst] = d;
+                g[last_dst * m + i] = d;
+            }
+
+            // ---- s CG steps in coordinate space ----
+            let mut c_p = vec![0.0; m];
+            c_p[0] = 1.0;
+            let mut c_r = vec![0.0; m];
+            c_r[s + 1] = 1.0;
+            let mut c_x = vec![0.0; m];
+            let gbilinear = |u: &[f64], w: &[f64]| -> f64 {
+                let mut acc = 0.0;
+                for (i, &ui) in u.iter().enumerate() {
+                    if ui != 0.0 {
+                        acc += ui * dot(&g[i * m..(i + 1) * m], w);
+                    }
+                }
+                acc
+            };
+            // B·c: multiply-by-A as a degree shift along each chain
+            let bshift = |c: &[f64]| -> Vec<f64> {
+                let mut o = vec![0.0; m];
+                for i in 0..s {
+                    o[i + 1] += c[i];
+                }
+                for i in 0..s - 1 {
+                    o[s + 2 + i] += c[s + 1 + i];
+                }
+                o
+            };
+            let mut gamma = gbilinear(&c_r, &c_r);
+            for _ in 0..s {
+                if iterations >= self.opts.max_iters {
+                    break;
+                }
+                let bcp = bshift(&c_p);
+                let pap = gbilinear(&c_p, &bcp);
+                if pap <= 0.0 || gamma <= 0.0 {
+                    broke = true; // not SPD in this basis — bail with what we have
+                    break;
+                }
+                let alpha = gamma / pap;
+                for i in 0..m {
+                    c_x[i] += alpha * c_p[i];
+                    c_r[i] -= alpha * bcp[i];
+                }
+                let gamma_new = gbilinear(&c_r, &c_r).max(0.0);
+                residual = gamma_new.sqrt();
+                iterations += 1;
+                self.opts.note(&mut history, iterations, residual);
+                let beta = gamma_new / gamma;
+                for i in 0..m {
+                    c_p[i] = c_r[i] + beta * c_p[i];
+                }
+                gamma = gamma_new;
+                if residual <= threshold {
+                    converged = true;
+                    break;
+                }
+            }
+
+            // ---- block end: map coordinates back to vectors ----
+            r_next.fill(0.0);
+            p_next.fill(0.0);
+            for k in 0..m {
+                let (cx, cr, cp) = (c_x[k], c_r[k], c_p[k]);
+                if cx == 0.0 && cr == 0.0 && cp == 0.0 {
+                    continue;
+                }
+                let col = &vbasis[k];
+                for i in 0..n {
+                    x[i] += cx * col[i];
+                    r_next[i] += cr * col[i];
+                    p_next[i] += cp * col[i];
+                }
+            }
+            std::mem::swap(&mut r, &mut r_next);
+            std::mem::swap(&mut p, &mut p_next);
+        }
+
+        let mut report = finish_report(
+            "sstep-cg",
+            x,
+            iterations,
+            residual,
+            converged,
+            history,
+            t0,
+            applies,
+            phases0,
+            &*a,
+            None,
+            None,
+        );
+        report.warm_started = warm_started;
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::combined::{decompose, Combination, DecomposeConfig};
+    use crate::solver::{Cg, DistributedOp};
+    use crate::sparse::gen;
+
+    #[test]
+    fn sstep_cg_follows_plain_cg_trajectory_serial() {
+        let a = gen::generate_spd(300, 4, 1800, 7).to_csr();
+        let x_true: Vec<f64> = (0..300).map(|i| ((i * 5 % 11) as f64) - 5.0).collect();
+        let b = a.matvec(&x_true);
+        let plain = Cg::new().tol(1e-10).max_iters(800).solve(&mut a.clone(), &b).unwrap();
+        for s in [1usize, 2, 4] {
+            let stepped =
+                SStepCg::new().s(s).tol(1e-10).max_iters(800).solve(&mut a.clone(), &b).unwrap();
+            assert!(stepped.converged, "s = {s}");
+            assert_eq!(stepped.solver, "sstep-cg");
+            let shared = plain.history.len().min(stepped.history.len());
+            assert!(shared > 3, "non-trivial trajectory expected");
+            for i in 0..shared {
+                assert!(
+                    (plain.history[i] - stepped.history[i]).abs()
+                        < 1e-9 * (1.0 + plain.history[i].abs()),
+                    "s = {s}, history[{i}]: cg {} vs sstep {}",
+                    plain.history[i],
+                    stepped.history[i]
+                );
+            }
+            for i in 0..300 {
+                assert!(
+                    (plain.x[i] - stepped.x[i]).abs() < 1e-9 * (1.0 + plain.x[i].abs()),
+                    "s = {s}, x[{i}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sstep_cg_distributed_matches_serial_and_reports_reduce_time() {
+        let a = gen::generate_spd(250, 4, 1500, 9).to_csr();
+        let x_true: Vec<f64> = (0..250).map(|i| (i as f64 * 0.1).cos()).collect();
+        let b = a.matvec(&x_true);
+        let rs = SStepCg::new().s(3).tol(1e-10).max_iters(800).solve(&mut a.clone(), &b).unwrap();
+        let d = decompose(&a, Combination::NlHl, 2, 2, &DecomposeConfig::default()).unwrap();
+        let mut dist = DistributedOp::new(d).unwrap();
+        let rd = SStepCg::new().s(3).tol(1e-10).max_iters(800).solve(&mut dist, &b).unwrap();
+        assert!(rs.converged && rd.converged);
+        for i in 0..250 {
+            assert!((rs.x[i] - rd.x[i]).abs() < 1e-9 * (1.0 + rs.x[i].abs()), "x[{i}]");
+        }
+        let phases = rd.phases.expect("DistributedOp reports phases");
+        assert!(phases.t_reduce > 0.0, "the Gram round must account its reduction");
+    }
+
+    #[test]
+    fn sstep_cg_applies_count_the_chain() {
+        // each block pays 2s−1 SpMVs regardless of backend
+        let a = gen::generate_spd(150, 3, 800, 5).to_csr();
+        let x_true: Vec<f64> = (0..150).map(|i| (i % 4) as f64).collect();
+        let b = a.matvec(&x_true);
+        let s = 3usize;
+        let r = SStepCg::new().s(s).tol(1e-10).max_iters(600).solve(&mut a.clone(), &b).unwrap();
+        assert!(r.converged);
+        let blocks = r.iterations.div_ceil(s);
+        assert_eq!(r.applies, blocks * (2 * s - 1));
+    }
+
+    #[test]
+    fn sstep_cg_zero_rhs_trivial_and_s_clamps() {
+        let a = gen::generate_spd(50, 3, 300, 1).to_csr();
+        let r = SStepCg::new().s(0).tol(1e-12).max_iters(10).solve(&mut a.clone(), &[0.0; 50]);
+        let r = r.unwrap();
+        assert!(r.converged);
+        assert_eq!(r.iterations, 0);
+        assert_eq!(r.applies, 0);
+        assert_eq!(SStepCg::new().s(0).block_size(), 1, "s clamps to ≥ 1");
+    }
+
+    #[test]
+    fn sstep_cg_warm_start_restarts_from_checkpoint() {
+        let a = gen::generate_spd(200, 4, 1200, 3).to_csr();
+        let x_true: Vec<f64> = (0..200).map(|i| ((i * 3 % 7) as f64) * 0.5 - 1.0).collect();
+        let b = a.matvec(&x_true);
+        let cold = SStepCg::new().s(4).tol(1e-10).max_iters(800).solve(&mut a.clone(), &b).unwrap();
+        assert!(cold.converged && !cold.warm_started);
+        let warm = SStepCg::new()
+            .s(4)
+            .tol(1e-10)
+            .max_iters(800)
+            .x0(cold.x.clone())
+            .solve(&mut a.clone(), &b)
+            .unwrap();
+        assert!(warm.converged && warm.warm_started);
+        assert!(warm.iterations <= 1, "restart took {} iterations", warm.iterations);
+        let err = SStepCg::new().x0(vec![0.0; 3]).solve(&mut a.clone(), &b).unwrap_err();
+        assert!(matches!(err, SolverError::DimensionMismatch { expected: 200, got: 3, .. }));
+    }
+}

@@ -32,6 +32,7 @@ fn spec<'a>(
         cfg: DecomposeConfig::default(),
         backend,
         solver,
+        s_step: 4,
         nrhs,
         f: 3,
         c: 2,

@@ -114,10 +114,9 @@ fn mpi_backend_agrees_with_threaded_backend() {
 }
 
 #[test]
-#[allow(deprecated)] // try_apply is the satellite's named entry point
-fn rank_killed_between_applies_errors_on_next_try_apply_without_wedging() {
+fn rank_killed_between_applies_errors_on_next_apply_without_wedging() {
     use pmvc::pmvc::{make_backend, BackendKind, FaultPlan, OverlapMode};
-    use pmvc::solver::DistributedOp;
+    use pmvc::solver::{DistributedOp, MatVecOp};
     let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 9).to_csr();
     let x = x_for(a.n_cols, 11);
     let y_ref = a.matvec(&x);
@@ -131,7 +130,7 @@ fn rank_killed_between_applies_errors_on_next_try_apply_without_wedging() {
         backend.set_fault_plan(FaultPlan::new().kill(1, 3)).unwrap();
         let mut op = DistributedOp::with_backend(backend);
         for apply in 0..2 {
-            let y = op.try_apply(&x).unwrap();
+            let y = op.apply(&x).unwrap();
             for i in 0..a.n_rows {
                 assert!(
                     (y[i] - y_ref[i]).abs() < 1e-9 * (1.0 + y_ref[i].abs()),
@@ -141,11 +140,11 @@ fn rank_killed_between_applies_errors_on_next_try_apply_without_wedging() {
         }
         // the kill fires before the 3rd fan-out: a typed error naming
         // the dead rank, delivered immediately instead of a wedge
-        let err = op.try_apply(&x).unwrap_err();
+        let err = op.apply(&x).unwrap_err();
         assert!(format!("{err:#}").contains("rank 1"), "{mode}: {err:#}");
         // ...and every later apply keeps reporting it deterministically
         for _ in 0..2 {
-            let err = op.try_apply(&x).unwrap_err();
+            let err = op.apply(&x).unwrap_err();
             assert!(format!("{err:#}").contains("rank 1"), "{mode}: {err:#}");
         }
         assert_eq!(op.applications, 2, "failed applies must not count as iterations");
