@@ -6,13 +6,16 @@
 //! (which also emits the machine-readable `BENCH_pr5.json` perf
 //! trajectory point), and the SpMM panel grid (format × k ∈ {1, 4, 16,
 //! 64}) that prices the batched `mv_multi` kernels and emits
-//! `BENCH_pr6.json` at the repo root. This is the §Perf instrument for
-//! L1/L3.
+//! `BENCH_pr6.json` at the repo root, and the raw-speed kernel-tier
+//! grid (scalar vs tuned, format × schedule × k through the engine)
+//! that gates the tuned tier against the scalar reference at 1e-12 and
+//! emits `BENCH_pr10.json`. This is the §Perf instrument for L1/L3.
 //!
 //! ```bash
 //! cargo bench --bench kernel_hotpath            # full measurement run;
-//!                                               # writes BENCH_pr5.json
-//!                                               # and BENCH_pr6.json at
+//!                                               # writes BENCH_pr5.json,
+//!                                               # BENCH_pr6.json and
+//!                                               # BENCH_pr10.json at
 //!                                               # the repo root
 //! cargo bench --bench kernel_hotpath -- --test  # CI smoke: tiny sizes,
 //!                                               # asserts the hot path
@@ -392,6 +395,114 @@ fn main() {
         let path = bench_artifact("BENCH_pr6.json");
         std::fs::write(&path, &json).expect("write BENCH_pr6.json");
         println!("wrote {} SpMM panel points to {}", json_rows.len(), path.display());
+    }
+
+    // Raw-speed kernel tier: scalar vs tuned over the distributed
+    // engine, format × schedule × k. Both tiers replay the identical
+    // plan, so the delta is purely the per-core loops (SIMD lanes,
+    // prefetch, L2 row tiles). The panels live in shared
+    // cache-line-aligned buffers (`AlignedBuf`) sliced per k, so no
+    // per-cell allocation skews the timings. Every tuned cell is gated
+    // against its scalar twin at 1e-12 — in --test mode this is the
+    // kernel-tier CI gate — and the grid lands as BENCH_pr10.json.
+    {
+        use pmvc::sparse::kernels::{AlignedBuf, KernelPolicy, DEFAULT_L2_BYTES};
+        let applies = if test_mode { 2usize } else { 30usize };
+        let mats: &[&str] = if test_mode { &["t2dal"] } else { &["t2dal", "zhao1"] };
+        let ks = [1usize, 4, 16];
+        let mut json_rows: Vec<String> = Vec::new();
+        println!("\nscalar vs tuned kernel tier (engine apply, µs/iter/vector = wall / k):");
+        println!(
+            "{:<10} {:>8} {:>12} {:>4} {:>10} {:>10} {:>8}",
+            "matrix", "format", "schedule", "k", "scalar", "tuned", "speedup"
+        );
+        for &mat in mats {
+            let a = generate(&MatrixSpec::paper(mat).unwrap(), 1).to_csr();
+            let kmax = *ks.last().unwrap();
+            let mut xp = AlignedBuf::zeroed(a.n_cols * kmax);
+            for (i, v) in xp.as_mut_slice().iter_mut().enumerate() {
+                *v = ((i % 23) as f64) * 0.17 - 1.5;
+            }
+            let mut ys_buf = AlignedBuf::zeroed(a.n_rows * kmax);
+            let mut yt_buf = AlignedBuf::zeroed(a.n_rows * kmax);
+            for kind in FormatKind::concrete() {
+                let scfg = DecomposeConfig::default().with_format(kind);
+                let tcfg = DecomposeConfig::default()
+                    .with_format(kind)
+                    .with_kernel(KernelPolicy::Tuned, DEFAULT_L2_BYTES);
+                let pair = (
+                    decompose(&a, Combination::NlHl, 2, 4, &scfg),
+                    decompose(&a, Combination::NlHl, 2, 4, &tcfg),
+                );
+                let (ds, dt) = match pair {
+                    (Ok(ds), Ok(dt)) => (ds, dt),
+                    (Err(e), _) | (_, Err(e)) => {
+                        println!("{:<10} {:>8} skipped: {e}", mat, kind.name());
+                        continue;
+                    }
+                };
+                let mut es = PmvcEngine::new(Arc::new(ds)).unwrap();
+                let mut et = PmvcEngine::new(Arc::new(dt)).unwrap();
+                for mode in [OverlapMode::Blocking, OverlapMode::Overlapped] {
+                    es.set_overlap_mode(mode);
+                    et.set_overlap_mode(mode);
+                    for &k in &ks {
+                        let x = &xp.as_slice()[..a.n_cols * k];
+                        let ys = &mut ys_buf.as_mut_slice()[..a.n_rows * k];
+                        let yt = &mut yt_buf.as_mut_slice()[..a.n_rows * k];
+                        es.apply_multi_into(x, ys, k).unwrap(); // warm
+                        let t0 = Instant::now();
+                        for _ in 0..applies {
+                            es.apply_multi_into(x, ys, k).unwrap();
+                            std::hint::black_box(&ys);
+                        }
+                        let per_s = t0.elapsed().as_secs_f64() / (applies * k) as f64;
+                        et.apply_multi_into(x, yt, k).unwrap(); // warm
+                        let t1 = Instant::now();
+                        for _ in 0..applies {
+                            et.apply_multi_into(x, yt, k).unwrap();
+                            std::hint::black_box(&yt);
+                        }
+                        let per_t = t1.elapsed().as_secs_f64() / (applies * k) as f64;
+                        // the tier gate: tuned reproduces scalar to 1e-12
+                        // (CSR/DIA/JAD/CSR-DU are bitwise; ELL/BSR
+                        // re-associate across SIMD lanes)
+                        let max_err = ys
+                            .iter()
+                            .zip(yt.iter())
+                            .map(|(u, v)| (u - v).abs() / (1.0 + v.abs()))
+                            .fold(0.0f64, f64::max);
+                        assert!(
+                            max_err < 1e-12,
+                            "{mat}/{}/{}/k={k}: tuned diverges from scalar by {max_err:.3e}",
+                            kind.name(),
+                            mode.name()
+                        );
+                        json_rows.push(format!(
+                            "  {{\"matrix\": \"{mat}\", \"format\": \"{}\", \"schedule\": \"{}\", \"k\": {k}, \"scalar_us_per_iter\": {:.3}, \"tuned_us_per_iter\": {:.3}}}",
+                            kind.name(),
+                            mode.name(),
+                            per_s * 1e6,
+                            per_t * 1e6
+                        ));
+                        println!(
+                            "{:<10} {:>8} {:>12} {:>4} {:>8.2}µs {:>8.2}µs {:>7.2}x",
+                            mat,
+                            kind.name(),
+                            mode.name(),
+                            k,
+                            per_s * 1e6,
+                            per_t * 1e6,
+                            per_s / per_t
+                        );
+                    }
+                }
+            }
+        }
+        let json = format!("[\n{}\n]\n", json_rows.join(",\n"));
+        let path = bench_artifact("BENCH_pr10.json");
+        std::fs::write(&path, &json).expect("write BENCH_pr10.json");
+        println!("wrote {} kernel-tier points to {}", json_rows.len(), path.display());
     }
 
     // XLA artifact path (if built)

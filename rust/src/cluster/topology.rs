@@ -33,6 +33,10 @@ pub struct ClusterTopology {
     pub core_flops: f64,
     /// NUMA factor between banks inside a node.
     pub numa_factor: f64,
+    /// Per-core L2 capacity (bytes) — what the tuned kernel tier sizes
+    /// its CSR row-block tiles from
+    /// ([`crate::sparse::kernels::tile_rows_for`]).
+    pub l2_bytes: usize,
 }
 
 impl ClusterTopology {
@@ -48,6 +52,7 @@ impl ClusterTopology {
             core_bw: 6.0e9,
             core_flops: 19.2e9,
             numa_factor: 1.4,
+            l2_bytes: crate::sparse::kernels::DEFAULT_L2_BYTES,
         }
     }
 
@@ -64,6 +69,18 @@ impl ClusterTopology {
     /// Which bank a core index (within a node) belongs to.
     pub fn bank_of_core(&self, core: usize) -> usize {
         core / self.cores_per_bank
+    }
+
+    /// Host CPU a modeled `(node, core)` worker should pin to, given the
+    /// machine actually has `host_cpus` CPUs. Workers lay out
+    /// bank-contiguously — node-major, then core order within the node,
+    /// so the cores of one modeled bank land on adjacent host CPUs (the
+    /// layout Linux enumerates NUMA banks in). Returns `None` when the
+    /// host has fewer CPUs than the flattened index (oversubscribed —
+    /// pinning would serialize workers, better to let the OS schedule).
+    pub fn host_cpu_for(&self, node: usize, core: usize, host_cpus: usize) -> Option<usize> {
+        let flat = node * self.cores_per_node() + core;
+        (flat < host_cpus).then_some(flat)
     }
 
     /// Estimated time for one core to stream an SpMV fragment:
@@ -110,6 +127,24 @@ mod tests {
         assert_eq!(t.total_cores(), 512);
         assert_eq!(t.bank_of_core(0), 0);
         assert_eq!(t.bank_of_core(5), 1);
+        assert!(t.l2_bytes >= 64 * 1024);
+    }
+
+    #[test]
+    fn host_cpu_mapping_is_bank_contiguous_and_bounded() {
+        let t = ClusterTopology::paravance(2);
+        // node-major, core order within node: (0,0)→0 … (0,7)→7, (1,0)→8
+        assert_eq!(t.host_cpu_for(0, 0, 16), Some(0));
+        assert_eq!(t.host_cpu_for(0, 7, 16), Some(7));
+        assert_eq!(t.host_cpu_for(1, 0, 16), Some(8));
+        assert_eq!(t.host_cpu_for(1, 7, 16), Some(15));
+        // one modeled bank (4 cores) occupies adjacent host CPUs
+        let bank: Vec<_> = (0..4).map(|c| t.host_cpu_for(0, c, 16).unwrap()).collect();
+        assert_eq!(bank, vec![0, 1, 2, 3]);
+        // oversubscribed host: no pin rather than a serializing pile-up
+        assert_eq!(t.host_cpu_for(1, 7, 8), None);
+        assert_eq!(t.host_cpu_for(0, 3, 4), Some(3));
+        assert_eq!(t.host_cpu_for(0, 4, 4), None);
     }
 
     #[test]

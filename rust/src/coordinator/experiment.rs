@@ -123,6 +123,10 @@ pub struct SweepRow {
     /// with (`csr` | `ell` | ... | `auto`; `auto` selects per
     /// fragment).
     pub format: &'static str,
+    /// Which kernel tier executed the cell's fragments (`scalar` |
+    /// `tuned`), resolved from the configured
+    /// [`crate::sparse::KernelPolicy`] at decomposition time.
+    pub kernel: &'static str,
     /// Resident bytes of the per-fragment kernel storage summed over
     /// the cell — the format study's memory axis.
     pub stored_bytes: usize,
@@ -165,8 +169,9 @@ pub fn load_matrix(name: &str, seed: u64) -> crate::Result<Csr> {
 }
 
 /// A sweep cell's decomposition identity: matrix name × combination ×
-/// (f, c) shape × partitioner pair × kernel format.
-pub type DecompKey = (String, Combination, usize, usize, String, FormatKind);
+/// (f, c) shape × partitioner pair × kernel format × kernel policy.
+pub type DecompKey =
+    (String, Combination, usize, usize, String, FormatKind, crate::sparse::KernelPolicy);
 
 /// Memoises [`decompose`] results across sweep cells sharing the same
 /// [`DecompKey`] — duplicated matrices or repeated node counts in a
@@ -206,6 +211,7 @@ impl DecompCache {
             c,
             format!("{}+{}", dcfg.inter.name(), dcfg.intra.name()),
             dcfg.format,
+            dcfg.kernel,
         );
         if let Some(d) = self.map.get(&key) {
             self.hits += 1;
@@ -285,6 +291,7 @@ pub fn run_sweep_cached(
                     dcache.get_or_build(name, &a, combo, f, cfg.cores_per_node, &cfg.decompose)?;
                 let quality = d.quality.clone();
                 let stored_bytes = d.stored_bytes();
+                let kernel = d.kernel_kind().name();
                 let mut backend = make_backend(cfg.backend, (*d).clone(), &topo, &net)?;
                 backend.set_overlap_mode(cfg.overlap)?;
                 let row = match cfg.solver {
@@ -323,6 +330,7 @@ pub fn run_sweep_cached(
                             cut: quality.cut,
                             comm_bytes: quality.comm_bytes,
                             format: cfg.decompose.format.name(),
+                            kernel,
                             stored_bytes,
                             nrhs: cfg.nrhs,
                             col_iterations: vec![1; cfg.nrhs],
@@ -364,6 +372,7 @@ pub fn run_sweep_cached(
                             cut: quality.cut,
                             comm_bytes: quality.comm_bytes,
                             format: cfg.decompose.format.name(),
+                            kernel,
                             stored_bytes,
                             nrhs: cfg.nrhs,
                             col_iterations: report.columns.iter().map(|c| c.iterations).collect(),
@@ -395,6 +404,7 @@ pub fn run_sweep_cached(
                             cut: quality.cut,
                             comm_bytes: quality.comm_bytes,
                             format: cfg.decompose.format.name(),
+                            kernel,
                             stored_bytes,
                             nrhs: 1,
                             col_iterations: vec![report.iterations],
@@ -491,6 +501,7 @@ mod tests {
             assert_eq!(r.partitioner, "nezgt+hypergraph");
             assert!(r.comm_bytes > 0, "{} {} f={}", r.matrix, r.combo, r.f);
             assert_eq!(r.format, "csr");
+            assert_eq!(r.kernel, "scalar");
             assert!(r.stored_bytes > 0, "{} {} f={}", r.matrix, r.combo, r.f);
         }
     }
@@ -522,6 +533,26 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn tuned_kernel_sweep_reports_the_resolved_tier() {
+        let cfg = ExperimentConfig {
+            matrices: vec!["t2dal".into()],
+            node_counts: vec![2],
+            combos: vec![Combination::NlHl],
+            cores_per_node: 2,
+            backend: BackendKind::Threads,
+            decompose: DecomposeConfig::default().with_kernel(
+                crate::sparse::KernelPolicy::Auto,
+                crate::sparse::kernels::DEFAULT_L2_BYTES,
+            ),
+            ..Default::default()
+        };
+        let rows = run_sweep(&cfg).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].kernel, "tuned");
+        assert!(rows[0].times.t_total() > 0.0);
     }
 
     #[test]
@@ -785,7 +816,12 @@ mod tests {
         cache.get_or_build("bcsstm09", &a, Combination::NlHl, 4, 2, &dcfg).unwrap();
         let ell = DecomposeConfig::default().with_format(crate::sparse::FormatKind::Ell);
         cache.get_or_build("bcsstm09", &a, Combination::NlHl, 2, 2, &ell).unwrap();
-        assert_eq!((cache.builds, cache.hits), (4, 1));
+        let tuned = DecomposeConfig::default().with_kernel(
+            crate::sparse::KernelPolicy::Tuned,
+            crate::sparse::kernels::DEFAULT_L2_BYTES,
+        );
+        cache.get_or_build("bcsstm09", &a, Combination::NlHl, 2, 2, &tuned).unwrap();
+        assert_eq!((cache.builds, cache.hits), (5, 1));
     }
 
     #[test]

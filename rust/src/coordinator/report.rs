@@ -70,9 +70,11 @@ pub fn recap_table(rows: &[SweepRow], combos: &[Combination]) -> String {
 /// computation (0 for blocking cells); `t_reduce` is the reduction work
 /// of fused solver iterations and `t_pipeline_saved` how much of it the
 /// pipelined schedule hid behind the SpMV (both 0 for probe cells and
-/// unfused solvers). The final pair records the
-/// format axis: `format` is the cell's kernel storage
-/// ([`crate::sparse::FormatKind`]; `auto` selects per fragment) and
+/// unfused solvers). The format triple records the
+/// kernel axis: `format` is the cell's kernel storage
+/// ([`crate::sparse::FormatKind`]; `auto` selects per fragment),
+/// `kernel` the tier that executed it (`scalar` | `tuned`, resolved
+/// from the configured [`crate::sparse::KernelPolicy`]), and
 /// `stored_bytes` the resident bytes of that storage summed over the
 /// cell's fragments. The batched tail records the panel axis: `nrhs`
 /// is the cell's right-hand-side count and `col_iterations` /
@@ -80,7 +82,7 @@ pub fn recap_table(rows: &[SweepRow], combos: &[Combination]) -> String {
 /// flags, `;`-joined (single-column cells read `1,<iters>,<conv>`).
 pub fn to_csv(rows: &[SweepRow]) -> String {
     let mut out = String::from(
-        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,t_reduce,t_pipeline_saved,format,stored_bytes,nrhs,col_iterations,col_converged\n",
+        "matrix,combo,nodes,lb_nodes,lb_cores,t_compute,t_scatter,t_gather,t_construct,t_gather_construct,t_total,backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,t_reduce,t_pipeline_saved,format,kernel,stored_bytes,nrhs,col_iterations,col_converged\n",
     );
     for r in rows {
         let t = &r.times;
@@ -90,7 +92,7 @@ pub fn to_csv(rows: &[SweepRow]) -> String {
             r.col_converged.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(";");
         let _ = writeln!(
             out,
-            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{},{},{},{},{},{},{},{},{:.9},{:.9},{:.9},{},{},{},{},{}",
+            "{},{},{},{:.6},{:.6},{:.9},{:.9},{:.9},{:.9},{:.9},{:.9},{},{},{},{},{},{},{},{},{:.9},{:.9},{:.9},{},{},{},{},{},{}",
             r.matrix,
             r.combo.name(),
             r.f,
@@ -114,6 +116,7 @@ pub fn to_csv(rows: &[SweepRow]) -> String {
             t.t_reduce,
             t.t_pipeline_saved,
             r.format,
+            r.kernel,
             r.stored_bytes,
             r.nrhs,
             col_iters,
@@ -249,14 +252,14 @@ mod tests {
         let csv = to_csv(&rows());
         assert!(csv.starts_with("matrix,combo"));
         assert!(csv.lines().next().unwrap().ends_with(
-            ",backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,t_reduce,t_pipeline_saved,format,stored_bytes,nrhs,col_iterations,col_converged"
+            ",backend,solver,iterations,converged,partitioner,cut,comm_bytes,overlap,t_overlap_saved,t_reduce,t_pipeline_saved,format,kernel,stored_bytes,nrhs,col_iterations,col_converged"
         ));
         assert_eq!(csv.lines().count(), 1 + 2 * 4 * 1);
         for line in csv.lines().skip(1) {
             assert!(line.contains(",sim,probe,1,true,nezgt+hypergraph,"), "probe row: {line}");
             assert!(
-                line.contains(",blocking,0.000000000,0.000000000,0.000000000,csr,"),
-                "schedule+pipeline+format: {line}"
+                line.contains(",blocking,0.000000000,0.000000000,0.000000000,csr,scalar,"),
+                "schedule+pipeline+format+kernel: {line}"
             );
             assert!(line.ends_with(",1,1,true"), "single-rhs panel tail: {line}");
         }
@@ -276,7 +279,7 @@ mod tests {
         let rows = run_sweep(&cfg).unwrap();
         let csv = to_csv(&rows);
         for line in csv.lines().skip(1) {
-            assert!(line.contains(",auto,"), "format column: {line}");
+            assert!(line.contains(",auto,scalar,"), "format+kernel columns: {line}");
             // stored_bytes sits 3 fields before the end of the batched
             // tail (nrhs,col_iterations,col_converged)
             let stored: usize = line.rsplit(',').nth(3).unwrap().parse().unwrap();

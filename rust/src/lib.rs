@@ -29,8 +29,10 @@
 //!   compression catalogue (DIA/JAD/BSR/CSR-DU) and the per-fragment
 //!   kernel-storage registry ([`sparse::FormatKind`] /
 //!   [`sparse::FragmentStorage`], `--format`, auto-selection via
-//!   [`sparse::stats`]); MatrixMarket I/O; generators for the paper's
-//!   8-matrix SuiteSparse test suite.
+//!   [`sparse::stats`]); the tuned raw-speed kernel tier
+//!   ([`sparse::kernels`], `--kernel`: SIMD lanes, prefetch, L2 row
+//!   tiles); MatrixMarket I/O; generators for the paper's 8-matrix
+//!   SuiteSparse test suite.
 //! * [`partition`] — every fragmentation strategy (NEZGT, multilevel
 //!   hypergraph, PETSc-style baselines, 2-D fine-grain/checkerboard)
 //!   behind the [`partition::Partitioner`] trait and
@@ -46,7 +48,9 @@
 //!   [`pmvc::backend`] unifies the threaded, simulated and MPI-style
 //!   runtimes behind one `ExecBackend` trait, each honoring the
 //!   [`pmvc::OverlapMode`] knob (hide the halo exchange behind
-//!   interior-row computation, or run the paper's blocking pipeline).
+//!   interior-row computation, or run the paper's blocking pipeline);
+//!   [`pmvc::affinity`] pins workers to host CPUs (`numa` feature) so
+//!   first-touch lands fragment storage on the owning bank.
 //! * [`runtime`] — PJRT client, artifact loading, executable cache.
 //! * [`solver`] — CG, Jacobi, Gauss-Seidel/SOR, Lanczos and power
 //!   iteration unified behind the [`solver::IterativeSolver`] /

@@ -78,12 +78,20 @@ fn config_from(args: &Args) -> pmvc::Result<ExperimentConfig> {
     if let Some(s) = args.opt("format") {
         cfg.decompose.format = parse_format(s)?;
     }
+    if let Some(s) = args.opt("kernel") {
+        cfg.decompose.kernel = parse_kernel(s)?;
+    }
     Ok(cfg)
 }
 
 fn parse_format(s: &str) -> pmvc::Result<FormatKind> {
     FormatKind::parse(s)
         .ok_or_else(|| anyhow::anyhow!("unknown format '{s}' (csr|ell|dia|jad|bsr|csrdu|auto)"))
+}
+
+fn parse_kernel(s: &str) -> pmvc::Result<pmvc::sparse::KernelPolicy> {
+    pmvc::sparse::KernelPolicy::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown kernel policy '{s}' (scalar|tuned|auto)"))
 }
 
 fn parse_partitioner(s: &str) -> pmvc::Result<PartitionerKind> {
@@ -128,7 +136,7 @@ COMMANDS:
   figures --series <lb|scatter|compute|construct|gather|total>
   sweep [--out FILE.csv]            full simulated sweep
   run --matrix NAME --combo NL-HL --nodes F --cores C [--nrhs K]
-      [--solver KIND [--s-step K]] [--xla]
+      [--solver KIND [--s-step K]] [--kernel TIER] [--pin] [--xla]
   serve [--trace FILE.jsonl]        solve-as-a-service: one persistent
                                     coordinator multiplexes a request
                                     stream over a bounded admission
@@ -174,6 +182,19 @@ COMMON OPTIONS:
                      -> ell, dense 4x4 blocks -> bsr, skewed rows ->
                      jad, compressible index stream -> csrdu). The CSV
                      records format and stored_bytes columns.
+  --kernel TIER      kernel tier executing the fragments: scalar|tuned|
+                     auto. 'tuned' runs the raw-speed loops — SIMD-lane
+                     ELL/DIA/BSR, software-prefetched 4-row CSR/JAD,
+                     L2-sized row tiles — and matches scalar to 1e-12
+                     (CSR/DIA/JAD/CSR-DU bitwise). 'auto' currently
+                     resolves to tuned. Default: scalar for sweep-style
+                     commands (reference numbers), auto for `run`. The
+                     CSV records the resolved tier in the kernel column.
+  --pin              (`run` only) pin engine workers to NUMA-local CPUs
+                     per the modeled topology and first-touch their
+                     fragment storage; needs `--features numa` on
+                     Linux, a silent no-op elsewhere. Never changes
+                     result bits.
   --solver KIND      cg|pipelined-cg|sstep-cg|jacobi|sor|power|lanczos:
                      drive a full iterative solve through every sweep
                      cell (CSV gains solver, iterations and convergence
@@ -233,7 +254,7 @@ SERVE OPTIONS (request fields fall back to the COMMON flags above;
                      engine death (chaos CI gate)
 
 RECOVER OPTIONS (plus --matrix/--combo/--partitioner/--intra/--format/
---solver/--s-step/--tol/--iters/--nrhs/--nodes/--cores/--seed as above;
+--kernel/--solver/--s-step/--tol/--iters/--nrhs/--nodes/--cores/--seed as above;
 defaults: spd, cg, threads, 3x2, tol 1e-10; the pipelined solvers
 checkpoint mid-pipeline state and warm-restart like cg):
   --kill-node N      node to kill (0-based; both flags together)
@@ -331,6 +352,8 @@ fn cmd_run(args: &Args) -> pmvc::Result<()> {
             ("--network", args.has("network")),
             ("--overlap", args.has("overlap")),
             ("--format", args.has("format")),
+            ("--kernel", args.has("kernel")),
+            ("--pin", args.has("pin")),
             ("--nrhs", args.has("nrhs")),
             ("--xla", args.has("xla")),
         ] {
@@ -352,11 +375,27 @@ fn cmd_run(args: &Args) -> pmvc::Result<()> {
     }
 
     let topo = topology_for(f, c);
+    // the CLI defaults to `auto` (= the tuned tier) — raw speed by
+    // default, `--kernel scalar` to reproduce the reference loops
+    dcfg.kernel = args
+        .opt("kernel")
+        .map(parse_kernel)
+        .transpose()?
+        .unwrap_or(pmvc::sparse::KernelPolicy::Auto);
+    dcfg.l2_bytes = topo.l2_bytes;
     let net = parse_network(args.opt_or("network", "10gbe"))?.model();
     let d = decompose(&a, combo, f, c, &dcfg)?;
     let mut backend = make_backend(kind, d.clone(), &topo, &net)?;
     if args.has("overlap") {
         backend.set_overlap_mode(parse_overlap(args.opt_or("overlap", ""))?)?;
+    }
+    if args.has("pin") {
+        let pinned = backend.pin_workers(&topo);
+        if pinned > 0 {
+            println!("pinned {pinned} workers to NUMA-local CPUs (first-touch storage)");
+        } else {
+            println!("pinning unavailable (build with --features numa on Linux); running unpinned");
+        }
     }
     let r = backend.apply(&x)?;
     let y_ref = a.matvec(&x);
@@ -387,7 +426,12 @@ fn cmd_run(args: &Args) -> pmvc::Result<()> {
         .map(|(kind, count)| format!("{kind}:{count}"))
         .collect::<Vec<_>>()
         .join(",");
-    println!("format={} stored_bytes={} fragments=[{census}]", dcfg.format, d.stored_bytes());
+    println!(
+        "format={} kernel={} stored_bytes={} fragments=[{census}]",
+        dcfg.format,
+        d.kernel_kind(),
+        d.stored_bytes()
+    );
     println!(
         "distribute(A)={:.6}s scatter={:.6}s compute={:.6}s construct={:.6}s gather={:.6}s total={:.6}s",
         backend.setup_time(),
@@ -695,6 +739,9 @@ fn cmd_recover(args: &Args) -> pmvc::Result<()> {
     }
     if let Some(s) = args.opt("format") {
         dcfg.format = parse_format(s)?;
+    }
+    if let Some(s) = args.opt("kernel") {
+        dcfg.kernel = parse_kernel(s)?;
     }
 
     let a = pmvc::coordinator::experiment::load_matrix(matrix, seed)?;

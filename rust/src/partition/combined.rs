@@ -19,6 +19,7 @@ use super::metrics::QualityReport;
 use super::multilevel::Multilevel;
 use super::nezgt::Nezgt;
 use super::{Axis, Partition};
+use crate::sparse::kernels::{KernelKind, KernelPolicy, KernelSpec};
 use crate::sparse::storage::{FormatKind, FragmentStorage};
 use crate::sparse::{Coo, Csr};
 
@@ -107,6 +108,16 @@ pub struct DecomposeConfig {
     /// storage, `FormatKind::Auto` scores each fragment via
     /// [`crate::sparse::auto_select`].
     pub format: FormatKind,
+    /// Kernel tier the fragments compute with (`--kernel` on the CLI).
+    /// The library default `KernelPolicy::Scalar` keeps the
+    /// closure-dispatch kernels — byte-for-byte the pre-tier product;
+    /// `Tuned`/`Auto` resolve to the raw-speed loops of
+    /// [`crate::sparse::kernels`].
+    pub kernel: KernelPolicy,
+    /// Per-core L2 capacity the tuned tier sizes its CSR row tiles from;
+    /// the CLI threads [`crate::cluster::ClusterTopology::l2_bytes`]
+    /// here.
+    pub l2_bytes: usize,
 }
 
 impl Default for DecomposeConfig {
@@ -115,6 +126,8 @@ impl Default for DecomposeConfig {
             inter: Box::new(Nezgt::default()),
             intra: Box::new(Multilevel::default()),
             format: FormatKind::Csr,
+            kernel: KernelPolicy::Scalar,
+            l2_bytes: crate::sparse::kernels::DEFAULT_L2_BYTES,
         }
     }
 }
@@ -129,7 +142,7 @@ impl DecomposeConfig {
         Ok(Self {
             inter: make_partitioner(inter)?,
             intra: make_partitioner(intra)?,
-            format: FormatKind::Csr,
+            ..Self::default()
         })
     }
 
@@ -138,13 +151,21 @@ impl DecomposeConfig {
         Self {
             inter: Box::new(Nezgt::default()),
             intra: Box::new(Nezgt::default()),
-            format: FormatKind::Csr,
+            ..Self::default()
         }
     }
 
     /// Select the per-fragment kernel storage format.
     pub fn with_format(mut self, format: FormatKind) -> Self {
         self.format = format;
+        self
+    }
+
+    /// Select the kernel tier (and the L2 budget its tiles are sized
+    /// from when `policy` resolves to the tuned tier).
+    pub fn with_kernel(mut self, policy: KernelPolicy, l2_bytes: usize) -> Self {
+        self.kernel = policy;
+        self.l2_bytes = l2_bytes;
         self
     }
 }
@@ -172,6 +193,11 @@ pub struct CoreFragment {
     /// once from `csr` per [`DecomposeConfig::format`]
     /// (`FragmentStorage::Csr` = run on `csr` in place, zero overhead).
     pub storage: FragmentStorage,
+    /// The resolved kernel recipe this fragment computes with, fixed at
+    /// decomposition time per [`DecomposeConfig::kernel`] (scalar =
+    /// closure dispatch, tuned = direct per-format loops with the L2
+    /// tile already sized for this fragment).
+    pub kernel: KernelSpec,
 }
 
 impl CoreFragment {
@@ -265,6 +291,14 @@ impl TwoLevelDecomposition {
             })
             .filter(|&(_, count)| count > 0)
             .collect()
+    }
+
+    /// The kernel tier this decomposition's fragments run on — every
+    /// fragment resolves from the same [`DecomposeConfig::kernel`], so
+    /// the first fragment speaks for all (scalar for an empty
+    /// decomposition).
+    pub fn kernel_kind(&self) -> KernelKind {
+        self.fragments.first().map_or(KernelKind::Scalar, |fr| fr.kernel.kind)
     }
 
     /// X footprint of a node: distinct global columns over its cores
@@ -401,7 +435,16 @@ pub fn decompose(
             let storage = FragmentStorage::build(&csr, cfg.format).map_err(|e| {
                 anyhow::anyhow!("fragment ({node},{core}): building {} storage: {e}", cfg.format)
             })?;
-            fragments.push(CoreFragment { node, core, csr, global_rows, global_cols, storage });
+            let kernel = KernelSpec::resolve(cfg.kernel, &csr, cfg.l2_bytes);
+            fragments.push(CoreFragment {
+                node,
+                core,
+                csr,
+                global_rows,
+                global_cols,
+                storage,
+                kernel,
+            });
         }
     }
 

@@ -1,0 +1,126 @@
+//! Thread-to-CPU pinning for the engine's worker pool (the `numa`
+//! cargo feature).
+//!
+//! The paper's testbed is explicitly NUMA — fig. 4.6's banks × cores
+//! with a remote/local factor of ~1.4 — and
+//! [`crate::cluster::ClusterTopology`] models exactly that, yet without
+//! pinning the OS is free to migrate a worker away from the bank whose
+//! memory holds its fragment, silently paying the remote factor the
+//! simulator prices. This module gives
+//! [`crate::pmvc::PmvcEngine::pin_workers`] the one primitive it needs:
+//! bind the calling thread to one CPU.
+//!
+//! The offline registry carries no `libc`, so the Linux implementation
+//! issues the raw `sched_setaffinity` syscall through inline assembly
+//! (x86_64 and aarch64). Everywhere else — other OSes, other
+//! architectures, or builds without the `numa` feature —
+//! [`pin_to_cpu`] is a no-op returning `false` and [`SUPPORTED`] is
+//! `false`, so callers can skip the whole pinning pass cheaply.
+
+/// Whether pinning can take effect in this build: the `numa` feature is
+/// on AND the target is Linux on x86_64/aarch64. When `false`,
+/// [`pin_to_cpu`] always returns `false` without attempting anything.
+pub const SUPPORTED: bool = cfg!(all(
+    feature = "numa",
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+));
+
+/// Largest CPU index the affinity mask can express (1024 CPUs).
+pub const MAX_CPUS: usize = 1024;
+
+/// Bind the calling thread to `cpu`. Returns `true` iff the kernel
+/// accepted the mask; `false` on unsupported builds, out-of-range CPUs,
+/// or a rejected syscall (e.g. the CPU is outside the process's cgroup
+/// cpuset) — callers treat `false` as "run unpinned", never an error.
+pub fn pin_to_cpu(cpu: usize) -> bool {
+    if cpu >= MAX_CPUS {
+        return false;
+    }
+    imp::pin_to_cpu(cpu)
+}
+
+#[cfg(all(
+    feature = "numa",
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+mod imp {
+    pub fn pin_to_cpu(cpu: usize) -> bool {
+        // sched_setaffinity(0 /* this thread */, sizeof mask, &mask)
+        let mut mask = [0u64; super::MAX_CPUS / 64];
+        mask[cpu / 64] = 1u64 << (cpu % 64);
+        let ret: isize;
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the syscall reads `masklen` bytes from a live stack
+        // buffer and touches nothing else; rcx/r11 are declared
+        // clobbered as the syscall ABI requires.
+        unsafe {
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") 203isize => ret, // __NR_sched_setaffinity
+                in("rdi") 0usize,
+                in("rsi") core::mem::size_of_val(&mask),
+                in("rdx") mask.as_ptr(),
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack),
+            );
+        }
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above; svc 0 with the syscall number in x8.
+        unsafe {
+            std::arch::asm!(
+                "svc 0",
+                in("x8") 122usize, // __NR_sched_setaffinity
+                inlateout("x0") 0isize => ret,
+                in("x1") core::mem::size_of_val(&mask),
+                in("x2") mask.as_ptr(),
+                options(nostack),
+            );
+        }
+        ret == 0
+    }
+}
+
+#[cfg(not(all(
+    feature = "numa",
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+)))]
+mod imp {
+    pub fn pin_to_cpu(_cpu: usize) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_of_range_cpu_is_refused_cheaply() {
+        assert!(!pin_to_cpu(MAX_CPUS));
+        assert!(!pin_to_cpu(usize::MAX));
+    }
+
+    #[test]
+    fn supported_matches_build_configuration() {
+        let expect = cfg!(feature = "numa")
+            && cfg!(target_os = "linux")
+            && (cfg!(target_arch = "x86_64") || cfg!(target_arch = "aarch64"));
+        assert_eq!(SUPPORTED, expect);
+        if !SUPPORTED {
+            assert!(!pin_to_cpu(0), "unsupported builds must be a no-op");
+        }
+    }
+
+    #[test]
+    fn pinning_the_current_thread_succeeds_where_supported() {
+        if SUPPORTED {
+            // CPU 0 is in virtually every cpuset; a `false` here would
+            // mean the raw syscall plumbing is broken
+            assert!(pin_to_cpu(0), "sched_setaffinity(0) refused");
+        }
+    }
+}

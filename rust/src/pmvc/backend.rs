@@ -231,6 +231,15 @@ pub trait ExecBackend {
         );
         Ok(())
     }
+
+    /// Pin this backend's workers to the machine per the modeled
+    /// topology (`--pin` on the CLI) and first-touch their fragments —
+    /// see [`PmvcEngine::pin_workers`]. Returns how many workers were
+    /// placed; the default is 0 (nothing to pin — the sim backend has no
+    /// threads, the MPI backend models ranks). Never changes results.
+    fn pin_workers(&mut self, _topo: &crate::cluster::ClusterTopology) -> usize {
+        0
+    }
 }
 
 impl ExecBackend for PmvcEngine {
@@ -280,6 +289,10 @@ impl ExecBackend for PmvcEngine {
 
     fn set_fault_plan(&mut self, plan: FaultPlan) -> crate::Result<()> {
         PmvcEngine::set_fault_plan(self, plan)
+    }
+
+    fn pin_workers(&mut self, topo: &crate::cluster::ClusterTopology) -> usize {
+        PmvcEngine::pin_workers(self, topo)
     }
 }
 

@@ -41,7 +41,8 @@ use super::fault::{FaultClock, FaultPlan};
 use super::plan::CommPlan;
 use super::spmv;
 use super::tasks::{self, TaskKind};
-use crate::partition::combined::TwoLevelDecomposition;
+use crate::cluster::ClusterTopology;
+use crate::partition::combined::{CoreFragment, TwoLevelDecomposition};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -64,6 +65,12 @@ enum ToWorker {
     ApplyInteriorMulti { seq: u64, k: usize, owned: Arc<Vec<f64>> },
     /// Overlapped panel phase 2: `k` slices of the halo.
     ApplyBoundaryMulti { seq: u64, k: usize, halo: Arc<Vec<f64>> },
+    /// NUMA placement (see [`PmvcEngine::pin_workers`]): bind the worker
+    /// thread to `cpu` (when `Some` and the build supports affinity) and
+    /// optionally first-touch-copy its fragment so the storage pages
+    /// live on the worker's own bank. Channel FIFO ordering guarantees
+    /// the pin lands before any later apply.
+    Pin { cpu: Option<usize>, first_touch: bool },
     Shutdown,
 }
 
@@ -304,6 +311,41 @@ impl PmvcEngine {
             anyhow::bail!("node rank {node} has not joined yet");
         }
         Ok(())
+    }
+
+    /// Pin the worker pool to the machine per the modeled topology:
+    /// worker (node, core) binds to the host CPU
+    /// [`ClusterTopology::host_cpu_for`] assigns (bank-contiguous, so a
+    /// modeled bank's cores share a physical bank), then first-touch
+    /// copies its fragment so the storage pages land on that bank —
+    /// making the machine match the model the simulator prices. `topo`
+    /// should describe the decomposition's own f × c shape (the CLI
+    /// builds it that way).
+    ///
+    /// Returns how many workers were sent a placement order. On builds
+    /// without affinity support ([`super::affinity::SUPPORTED`] =
+    /// `false` — no `numa` feature, or not Linux on x86_64/aarch64)
+    /// this is 0 and nothing changes: results are identical either way,
+    /// pinning only moves threads and pages.
+    pub fn pin_workers(&mut self, topo: &ClusterTopology) -> usize {
+        if !super::affinity::SUPPORTED {
+            return 0;
+        }
+        let host_cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut sent = 0;
+        for idx in 0..self.to_workers.len() {
+            let node = idx / self.d.c;
+            let core = idx % self.d.c;
+            if self.dead.contains(&node) || self.handles[idx].is_none() {
+                continue;
+            }
+            let cpu = topo.host_cpu_for(node, core, host_cpus);
+            let msg = ToWorker::Pin { cpu, first_touch: true };
+            if self.to_workers[idx].send(msg).is_ok() {
+                sent += 1;
+            }
+        }
+        sent
     }
 
     /// The active schedule ([`OverlapMode::Blocking`] by default).
@@ -830,7 +872,12 @@ fn lock_slot(slot: &Mutex<Vec<f64>>) -> std::sync::MutexGuard<'_, Vec<f64>> {
 /// silent death, so the leader errors out rather than blocking forever
 /// on a completion that will never arrive.
 fn worker_loop(ctx: WorkerCtx) {
-    let frag = &ctx.d.fragments[ctx.idx];
+    // first-touch copy of the fragment, made AFTER a Pin bound this
+    // thread to its CPU: cloning allocates and writes every storage
+    // page from the pinned thread, so Linux's first-touch policy places
+    // them on the worker's own NUMA bank. Until (or without) a pin, the
+    // shared decomposition fragment is used in place.
+    let mut owned_frag: Option<CoreFragment> = None;
     // blocking-path scratch: the fragment-local gathered X
     let mut x_local: Vec<f64> = Vec::new();
     // overlapped-path scratch: the node-footprint X, filled in two
@@ -840,7 +887,20 @@ fn worker_loop(ctx: WorkerCtx) {
     // in-flight apply
     let mut pending: Option<(u64, f64, f64)> = None;
     while let Ok(msg) = ctx.rx.recv() {
+        if let ToWorker::Pin { cpu, first_touch } = &msg {
+            if let Some(cpu) = cpu {
+                // a refused pin (cgroup cpuset, oversubscription) just
+                // leaves the worker where the OS put it
+                let _ = super::affinity::pin_to_cpu(*cpu);
+            }
+            if *first_touch && owned_frag.is_none() {
+                owned_frag = Some(ctx.d.fragments[ctx.idx].clone());
+            }
+            continue;
+        }
+        let frag = owned_frag.as_ref().unwrap_or(&ctx.d.fragments[ctx.idx]);
         match msg {
+            ToWorker::Pin { .. } => unreachable!("handled above"),
             ToWorker::Shutdown => return,
             ToWorker::Apply { seq, node_x } => {
                 let span = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -1086,6 +1146,30 @@ mod tests {
         assert_eq!(engine.applies(), 8);
         assert_eq!(engine.plan_builds(), 1);
         assert!(engine.setup_seconds() > 0.0);
+    }
+
+    #[test]
+    fn pinning_workers_changes_no_result_bits() {
+        // pinning moves threads and pages, never values: the product
+        // must be bitwise-identical before and after, on both schedules
+        let a = generate(&MatrixSpec::paper("t2dal").unwrap(), 13).to_csr();
+        let d = decompose(&a, Combination::NlHl, 2, 3, &DecomposeConfig::default()).unwrap();
+        let mut engine = PmvcEngine::new(Arc::new(d)).unwrap();
+        let mut rng = crate::rng::SplitMix64::new(31);
+        let x: Vec<f64> = (0..a.n_cols).map(|_| rng.next_f64_range(-2.0, 2.0)).collect();
+        let before = engine.apply(&x).unwrap().y;
+        let topo = crate::coordinator::experiment::topology_for(2, 3);
+        let sent = engine.pin_workers(&topo);
+        if crate::pmvc::affinity::SUPPORTED {
+            assert_eq!(sent, 6, "all live workers get a placement order");
+        } else {
+            assert_eq!(sent, 0, "unsupported builds skip the pinning pass");
+        }
+        let after = engine.apply(&x).unwrap().y;
+        assert_eq!(before, after);
+        engine.set_overlap_mode(OverlapMode::Overlapped);
+        let after_overlapped = engine.apply(&x).unwrap().y;
+        assert_eq!(before, after_overlapped);
     }
 
     #[test]

@@ -40,6 +40,7 @@
 //! protocols over it, and the simulator prices compute from each
 //! format's own bytes-touched model.
 
+pub mod affinity;
 pub mod backend;
 pub mod dynamic;
 pub mod engine;

@@ -120,6 +120,9 @@ pub struct CommPlan {
     pub lb_nodes: f64,
     /// Load balance over all cores, frozen at build time.
     pub lb_cores: f64,
+    /// Kernel tier the decomposition's fragments resolved to, frozen at
+    /// build time — what the CSV `kernel` column and the engine report.
+    pub kernel: crate::sparse::kernels::KernelKind,
 }
 
 impl CommPlan {
@@ -256,6 +259,7 @@ impl CommPlan {
             nodes,
             lb_nodes: d.lb_nodes(),
             lb_cores: d.lb_cores(),
+            kernel: d.kernel_kind(),
         })
     }
 

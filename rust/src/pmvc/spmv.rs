@@ -6,6 +6,7 @@
 //! compacted column space back to the global X.
 
 use crate::partition::combined::CoreFragment;
+use crate::sparse::kernels::{self, KernelKind};
 use crate::sparse::FragmentStorage;
 
 /// Gather the local X of a fragment from the global vector:
@@ -19,14 +20,20 @@ pub fn gather_x(frag: &CoreFragment, x: &[f64], x_local: &mut Vec<f64>) {
 /// Compute one core's PFVC: `y_local = A_local · x_local`.
 /// `y_local` is resized to the fragment's row count.
 ///
-/// Dispatches on the fragment's [`FragmentStorage`]: the CSR marker
-/// (the default) runs the unchecked [`csr_mv`] kernel on the
-/// construction CSR in place — byte-for-byte the pre-format-generic hot
-/// path — while every other format runs its own allocation-free
+/// Dispatches on the fragment's [`crate::sparse::KernelSpec`] first,
+/// then its [`FragmentStorage`]: the tuned tier runs the raw-speed
+/// per-format loops of [`crate::sparse::kernels`]; on the scalar tier
+/// the CSR marker (the default) runs the unchecked [`csr_mv`] kernel on
+/// the construction CSR in place — byte-for-byte the pre-format-generic
+/// hot path — while every other format runs its own allocation-free
 /// per-row kernel over the same local column space.
 #[inline]
 pub fn pfvc(frag: &CoreFragment, x_local: &[f64], y_local: &mut Vec<f64>) {
     y_local.resize(frag.csr.n_rows, 0.0);
+    if frag.kernel.kind == KernelKind::Tuned {
+        kernels::mv(&frag.storage, &frag.csr, &frag.kernel, x_local, y_local);
+        return;
+    }
     match &frag.storage {
         FragmentStorage::Csr => {
             csr_mv(&frag.csr.ptr, &frag.csr.col, &frag.csr.val, x_local, y_local)
@@ -85,6 +92,10 @@ pub fn pfvc_rows(
     x_node: &[f64],
     y_local: &mut [f64],
 ) {
+    if frag.kernel.kind == KernelKind::Tuned {
+        kernels::mv_rows(&frag.storage, &frag.csr, &frag.kernel, rows, x_map, x_node, y_local);
+        return;
+    }
     frag.storage.mv_rows(&frag.csr, rows, x_map, x_node, y_local);
 }
 
@@ -96,6 +107,10 @@ pub fn pfvc_rows(
 #[inline]
 pub fn pfvc_multi(frag: &CoreFragment, x_local: &[f64], y_local: &mut Vec<f64>, k: usize) {
     y_local.resize(frag.csr.n_rows * k, 0.0);
+    if frag.kernel.kind == KernelKind::Tuned {
+        kernels::mv_multi(&frag.storage, &frag.csr, &frag.kernel, x_local, y_local, k);
+        return;
+    }
     frag.storage.mv_multi(&frag.csr, x_local, y_local, k);
 }
 
@@ -113,6 +128,19 @@ pub fn pfvc_rows_multi(
     y_local: &mut [f64],
     k: usize,
 ) {
+    if frag.kernel.kind == KernelKind::Tuned {
+        kernels::mv_rows_multi(
+            &frag.storage,
+            &frag.csr,
+            &frag.kernel,
+            rows,
+            x_map,
+            x_node,
+            y_local,
+            k,
+        );
+        return;
+    }
     frag.storage.mv_rows_multi(&frag.csr, rows, x_map, x_node, y_local, k);
 }
 

@@ -60,9 +60,26 @@ pub struct Dia {
     /// `offsets.len() × n_rows`, row-major per diagonal; slot `d·n + i`
     /// holds A[i, i+offset_d] (0 when outside).
     pub data: Vec<f64>,
+    /// Per-diagonal valid row range `[lo, hi)`: the rows whose column
+    /// `i + offset_d` falls inside the matrix, precomputed once at
+    /// conversion so no kernel re-derives `j < 0 || j >= n_cols` per
+    /// (row, diagonal) pair.
+    pub ranges: Vec<(u32, u32)>,
 }
 
 impl Dia {
+    /// Valid row range `[lo, hi)` of one diagonal offset within an
+    /// `n_rows × n_cols` matrix — the single definition every kernel and
+    /// the conversion share.
+    #[inline]
+    pub fn row_range(n_rows: usize, n_cols: usize, off: i64) -> (u32, u32) {
+        // row i is valid iff 0 <= i + off < n_cols, i.e. -off <= i < n_cols - off;
+        // BOTH bounds bind for either sign of off (a tall matrix clips
+        // its sub-diagonals at n_cols too)
+        let lo = (-off).max(0).min(n_rows as i64);
+        let hi = (n_cols as i64 - off).min(n_rows as i64).max(lo);
+        (lo as u32, hi as u32)
+    }
     /// Discover the distinct diagonal offsets of `a` (ascending),
     /// giving up with the typed reason as soon as the count would
     /// exceed `max_diags` — shared by the conversion and the cheap
@@ -105,7 +122,9 @@ impl Dia {
                 data[d * a.n_rows + i] = v;
             }
         }
-        Ok(Dia { n_rows: a.n_rows, n_cols: a.n_cols, offsets: offs, data })
+        let ranges =
+            offs.iter().map(|&off| Self::row_range(a.n_rows, a.n_cols, off)).collect();
+        Ok(Dia { n_rows: a.n_rows, n_cols: a.n_cols, offsets: offs, data, ranges })
     }
 
     /// `y = A·x` into caller-owned scratch, one pass per stored
@@ -128,12 +147,8 @@ impl Dia {
         y.fill(0.0);
         for (d, &off) in self.offsets.iter().enumerate() {
             let base = d * self.n_rows;
-            let (i_lo, i_hi) = if off >= 0 {
-                (0usize, self.n_rows.min(self.n_cols.saturating_sub(off as usize)))
-            } else {
-                ((-off) as usize, self.n_rows)
-            };
-            for i in i_lo..i_hi {
+            let (i_lo, i_hi) = self.ranges[d];
+            for i in i_lo as usize..i_hi as usize {
                 let j = (i as i64 + off) as usize;
                 y[i] += self.data[base + i] * x[j];
             }
@@ -148,11 +163,9 @@ impl Dia {
         let mut coo = Coo::new(self.n_rows, self.n_cols);
         for (d, &off) in self.offsets.iter().enumerate() {
             let base = d * self.n_rows;
-            for i in 0..self.n_rows {
-                let j = i as i64 + off;
-                if j < 0 || j >= self.n_cols as i64 {
-                    continue;
-                }
+            let (i_lo, i_hi) = self.ranges[d];
+            for i in i_lo as usize..i_hi as usize {
+                let j = (i as i64 + off) as usize;
                 let v = self.data[base + i];
                 if v != 0.0 {
                     coo.push(i as u32, j as u32, v);
@@ -164,7 +177,7 @@ impl Dia {
 
     /// Stored bytes (including explicit zeros — DIA's trade-off).
     pub fn bytes(&self) -> usize {
-        self.data.len() * 8 + self.offsets.len() * 8
+        self.data.len() * 8 + self.offsets.len() * 8 + self.ranges.len() * 8
     }
 }
 
@@ -601,6 +614,64 @@ mod tests {
             for i in 0..a.n_rows {
                 assert!((y[i] - y_ref[i]).abs() < 1e-10, "{name} row {i}");
             }
+        }
+    }
+
+    #[test]
+    fn dia_ranges_reproduce_the_per_entry_bounds_check_bitwise() {
+        // regression for the precomputed valid-row ranges: on every
+        // suite matrix the range-driven product must be BITWISE equal
+        // to the old loop that re-checked `j < 0 || j >= n_cols` per
+        // (row, diagonal) pair, and the ranges must cover exactly the
+        // in-bounds rows of each diagonal.
+        for (name, a) in suite() {
+            let dia = Dia::from_csr(&a, 4096).unwrap();
+            assert_eq!(dia.ranges.len(), dia.offsets.len(), "{name}");
+            for (d, &off) in dia.offsets.iter().enumerate() {
+                let (lo, hi) = dia.ranges[d];
+                for i in 0..dia.n_rows {
+                    let j = i as i64 + off;
+                    let inside = j >= 0 && j < dia.n_cols as i64;
+                    let in_range = (lo as usize..hi as usize).contains(&i);
+                    assert_eq!(inside, in_range, "{name} diag {off} row {i}");
+                }
+            }
+            let x = x_for(a.n_cols);
+            let mut y_new = vec![0.0; a.n_rows];
+            dia.mv_into(&x, &mut y_new).unwrap();
+            // the old row_dot logic, verbatim: per-entry bounds check
+            let mut y_old = vec![0.0; a.n_rows];
+            for (d, &off) in dia.offsets.iter().enumerate() {
+                let base = d * dia.n_rows;
+                for i in 0..dia.n_rows {
+                    let j = i as i64 + off;
+                    if j < 0 || j >= dia.n_cols as i64 {
+                        continue;
+                    }
+                    y_old[i] += dia.data[base + i] * x[j as usize];
+                }
+            }
+            assert_eq!(y_new, y_old, "{name}: range-driven DIA must be bitwise the old loop");
+        }
+        // a tall matrix clips its sub-diagonals at n_cols too: off = -1
+        // with n_rows = 7, n_cols = 3 is valid only for rows 1..4 — the
+        // old per-diagonal range missed the upper clip and walked off x
+        let mut tall = Coo::new(7, 3);
+        tall.push(1, 0, 1.0);
+        tall.push(2, 1, 2.0);
+        tall.push(3, 2, 3.0);
+        let dia = Dia::from_csr(&tall.to_csr(), 8).unwrap();
+        assert_eq!(dia.offsets, vec![-1]);
+        assert_eq!(dia.ranges, vec![(1, 4)]);
+        let mut y = vec![0.0; 7];
+        dia.mv_into(&[1.0, 10.0, 100.0], &mut y).unwrap();
+        assert_eq!(y, vec![0.0, 1.0, 20.0, 300.0, 0.0, 0.0, 0.0]);
+        assert_eq!(dia.to_csr(), tall.to_csr());
+        // edge shapes: wide, tall and empty matrices keep ranges sane
+        for (r, c) in [(3usize, 7usize), (7, 3), (4, 4), (0, 0)] {
+            let empty = Coo::new(r, c).to_csr();
+            let dia = Dia::from_csr(&empty, 8).unwrap();
+            assert!(dia.ranges.is_empty());
         }
     }
 

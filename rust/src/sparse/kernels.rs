@@ -1,0 +1,1032 @@
+//! The tuned kernel tier — raw-speed per-format loops beneath the
+//! format-generic [`FragmentStorage`] contract.
+//!
+//! The scalar tier ([`FragmentStorage::mv`] and friends) dispatches a
+//! closure-based `row_dot` **per row**: correct, format-generic, and
+//! exactly what the bitwise-determinism contract is proven on — but the
+//! per-row enum match and the opaque read closure leave bandwidth on
+//! the table. SpMV is memory-bound ([KGK08]), so the remaining
+//! single-node wins are bandwidth tricks, and this module implements
+//! them as direct per-format loops:
+//!
+//! * **CSR / CSR-DU** — software prefetch of the value/index streams
+//!   plus 4-row unrolling (the §Perf log showed *within-row* accumulator
+//!   unrolling loses on this testbed; across-row unrolling keeps each
+//!   row's accumulation order untouched), with L2-sized row-block tiles
+//!   ([`KernelSpec::tile_rows`], sized from
+//!   [`crate::cluster::ClusterTopology::l2_bytes`]);
+//! * **ELL** — four virtual SIMD lanes over the slab width (entry `k`
+//!   feeds lane `k mod 4`) with the fixed horizontal reduction
+//!   `(l0+l1)+(l2+l3)`;
+//! * **DIA** — diagonal-major streaming over the precomputed valid-row
+//!   ranges ([`crate::sparse::formats_ext::Dia::ranges`]): long
+//!   unit-stride passes, no per-entry bounds check;
+//! * **BSR** — four lanes across each 4×4 block row, same fixed
+//!   reduction as ELL;
+//! * **JAD** — jag-major streaming with prefetch for the full product,
+//!   per-row jag walks for row subsets.
+//!
+//! **Determinism contract.** Every tuned kernel uses a *fixed* lane
+//! width and a *fixed* reduction order, so results are run-to-run
+//! deterministic, and the blocking and overlapped schedules stay
+//! bitwise-identical to each other *within* the tuned tier (full-matrix
+//! and row-subset kernels accumulate each row in the same order). The
+//! CSR, DIA, JAD and CSR-DU tuned kernels preserve the scalar tier's
+//! per-row accumulation order exactly (bitwise); ELL and BSR re-associate
+//! across their four lanes and agree with scalar at 1e-12 (gated by
+//! `kernel_hotpath --test` and the integration tests). All multi-vector
+//! (panel) kernels preserve the scalar accumulation order bitwise.
+//!
+//! With the `simd` cargo feature on x86_64, the ELL/DIA/BSR inner loops
+//! run AVX2 intrinsics (`vmulpd` + `vaddpd` separately — never FMA,
+//! which would change the rounding) and are **bitwise-identical** to
+//! the scalar-unrolled lane fallback that serves every other build.
+
+use super::formats_ext::decode_varint;
+use super::storage::{EllStore, FragmentStorage, PANEL_CHUNK};
+use super::Csr;
+
+// ------------------------------------------------------------ registry
+
+/// Kernel-tier selection — the fifth parallel registry row next to
+/// `PartitionerKind`, `BackendKind`, `SolverKind` and `FormatKind`
+/// (`--kernel` on the CLI).
+///
+/// ```
+/// use pmvc::sparse::kernels::KernelPolicy;
+///
+/// assert_eq!(KernelPolicy::parse("tuned"), Some(KernelPolicy::Tuned));
+/// assert_eq!(KernelPolicy::parse("AUTO"), Some(KernelPolicy::Auto));
+/// assert_eq!(KernelPolicy::Scalar.name(), "scalar");
+/// assert_eq!(KernelPolicy::parse("warp-drive"), None);
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelPolicy {
+    /// The format-generic closure-dispatch tier — the library default,
+    /// byte-for-byte the pre-tier product.
+    #[default]
+    Scalar,
+    /// The direct per-format loops of this module.
+    Tuned,
+    /// Pick per run — currently always resolves to `Tuned` (the hook
+    /// for future per-fragment heuristics); the CLI default.
+    Auto,
+}
+
+impl KernelPolicy {
+    /// All selectable policies, `scalar` first, `auto` last.
+    pub fn all() -> [KernelPolicy; 3] {
+        [KernelPolicy::Scalar, KernelPolicy::Tuned, KernelPolicy::Auto]
+    }
+
+    /// Stable identifier (`scalar` | `tuned` | `auto`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelPolicy::Scalar => "scalar",
+            KernelPolicy::Tuned => "tuned",
+            KernelPolicy::Auto => "auto",
+        }
+    }
+
+    /// Parse a policy name (case-insensitive).
+    pub fn parse(s: &str) -> Option<KernelPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelPolicy::Scalar),
+            "tuned" => Some(KernelPolicy::Tuned),
+            "auto" => Some(KernelPolicy::Auto),
+            _ => None,
+        }
+    }
+
+    /// The concrete tier this policy resolves to at decomposition time.
+    pub fn resolve(&self) -> KernelKind {
+        match self {
+            KernelPolicy::Scalar => KernelKind::Scalar,
+            KernelPolicy::Tuned | KernelPolicy::Auto => KernelKind::Tuned,
+        }
+    }
+}
+
+impl std::fmt::Display for KernelPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The resolved kernel tier a fragment actually computes with (what
+/// [`KernelPolicy`] collapses to once `auto` is decided).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Format-generic closure dispatch.
+    #[default]
+    Scalar,
+    /// Direct per-format loops.
+    Tuned,
+}
+
+impl KernelKind {
+    /// Stable identifier (`scalar` | `tuned`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Tuned => "tuned",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// L2 capacity assumed when no topology is threaded in — the paravance
+/// testbed's E5-2630v3 carries 256 KiB of L2 per core.
+pub const DEFAULT_L2_BYTES: usize = 256 * 1024;
+
+/// The fully-resolved kernel recipe one core fragment runs with,
+/// computed once at decomposition time and carried on
+/// [`crate::partition::combined::CoreFragment`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelSpec {
+    /// Which tier the fragment's kernels run on.
+    pub kind: KernelKind,
+    /// Row-block tile of the tuned CSR/CSR-DU loops, sized so one
+    /// tile's A-stream fits in half the per-core L2 (0 on the scalar
+    /// tier — no tiling).
+    pub tile_rows: usize,
+}
+
+impl KernelSpec {
+    /// Resolve a policy against one fragment's structure and the
+    /// machine's per-core L2 capacity.
+    pub fn resolve(policy: KernelPolicy, csr: &Csr, l2_bytes: usize) -> KernelSpec {
+        match policy.resolve() {
+            KernelKind::Scalar => KernelSpec::default(),
+            KernelKind::Tuned => {
+                KernelSpec { kind: KernelKind::Tuned, tile_rows: tile_rows_for(csr, l2_bytes) }
+            }
+        }
+    }
+}
+
+/// Row-block tile size for the tuned CSR-family loops: enough rows that
+/// one tile's value+index stream fills about half of `l2_bytes`
+/// (leaving the other half to X/Y traffic), clamped to `[64, 4096]` and
+/// rounded down to the 4-row unroll.
+pub fn tile_rows_for(csr: &Csr, l2_bytes: usize) -> usize {
+    let rows = csr.n_rows.max(1);
+    // 12 B/nonzero (8 val + 4 col) amortized per row, plus the ptr/y slots
+    let bytes_per_row = (csr.nnz() * 12 / rows + 16).max(1);
+    ((l2_bytes / 2) / bytes_per_row).clamp(64, 4096) & !3
+}
+
+// ---------------------------------------------------------- prefetch
+
+/// Hint the cache hierarchy to pull `p` — a no-op off x86_64. Safe for
+/// any address: prefetch never faults.
+#[inline(always)]
+fn prefetch<T>(p: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch hints are architecturally exempt from memory
+    // faults; any pointer value is acceptable.
+    unsafe {
+        core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(p as *const i8)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
+}
+
+/// How many rows ahead the CSR-family loops prefetch.
+const PREFETCH_ROWS: usize = 4;
+
+// ---------------------------------------------------- dispatch surface
+
+/// Tuned `y = A·x` over all rows — the raw-speed analogue of
+/// [`FragmentStorage::mv`]. `spec` carries the tile size; callers on
+/// the scalar tier should use `FragmentStorage::mv` directly.
+pub fn mv(storage: &FragmentStorage, csr: &Csr, spec: &KernelSpec, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(y.len(), csr.n_rows);
+    match storage {
+        FragmentStorage::Csr => csr_mv_tuned(csr, spec, x, y),
+        FragmentStorage::Ell(el) => {
+            for i in 0..csr.n_rows {
+                y[i] = ell_row_dot_x(el, i, csr.row_nnz(i), x);
+            }
+        }
+        FragmentStorage::Dia(d) => {
+            // diagonal-major: long unit-stride streams over the
+            // precomputed ranges; each y[i] still receives its adds in
+            // ascending-diagonal order — bitwise the per-row walk
+            y.fill(0.0);
+            for (di, &(lo, hi)) in d.ranges.iter().enumerate() {
+                let base = di * d.n_rows;
+                let off = d.offsets[di];
+                dia_diag_axpy(
+                    &d.data[base + lo as usize..base + hi as usize],
+                    &x[(lo as i64 + off) as usize..(hi as i64 + off).max(lo as i64 + off) as usize],
+                    &mut y[lo as usize..hi as usize],
+                );
+            }
+        }
+        FragmentStorage::Jad(j) => {
+            // jag-major: unit-stride through val/col, scattering through
+            // the permutation; row r's adds land in ascending jag order
+            // — the same order as the per-row walk
+            y.fill(0.0);
+            let max_len = j.jag_ptr.len() - 1;
+            for k in 0..max_len {
+                let (s, e) = (j.jag_ptr[k], j.jag_ptr[k + 1]);
+                for (r, idx) in (s..e).enumerate() {
+                    prefetch(j.val.as_ptr().wrapping_add(idx + PREFETCH_ROWS));
+                    prefetch(j.col.as_ptr().wrapping_add(idx + PREFETCH_ROWS));
+                    y[j.perm[r] as usize] += j.val[idx] * x[j.col[idx] as usize];
+                }
+            }
+        }
+        FragmentStorage::Bsr(bm) => {
+            for i in 0..csr.n_rows {
+                y[i] = bsr_row_dot_x(bm, i, x);
+            }
+        }
+        FragmentStorage::CsrDu(du) => {
+            for i in 0..csr.n_rows {
+                if i + 1 < csr.n_rows {
+                    prefetch(du.stream.as_ptr().wrapping_add(du.row_offsets[i + 1]));
+                }
+                y[i] = csrdu_row_dot(du, i, &|c| x[c]);
+            }
+        }
+    }
+}
+
+/// Tuned row-subset kernel — the raw-speed analogue of
+/// [`FragmentStorage::mv_rows`], reading X indirectly through the node
+/// footprint. Each listed row accumulates in the same order as
+/// [`mv`], so the overlapped two-pass product stays bitwise-identical
+/// to the blocking one-pass product within the tuned tier.
+pub fn mv_rows(
+    storage: &FragmentStorage,
+    csr: &Csr,
+    spec: &KernelSpec,
+    rows: &[u32],
+    x_map: &[u32],
+    x_node: &[f64],
+    y: &mut [f64],
+) {
+    let read = |c: usize| x_node[x_map[c] as usize];
+    match storage {
+        FragmentStorage::Csr => {
+            let _ = spec;
+            let mut g = 0;
+            while g < rows.len() {
+                if g + PREFETCH_ROWS < rows.len() {
+                    let r = rows[g + PREFETCH_ROWS] as usize;
+                    prefetch(csr.val.as_ptr().wrapping_add(csr.ptr[r]));
+                    prefetch(csr.col.as_ptr().wrapping_add(csr.ptr[r]));
+                }
+                let i = rows[g] as usize;
+                y[i] = csr_row_dot(csr, i, &read);
+                g += 1;
+            }
+        }
+        FragmentStorage::Ell(el) => {
+            for &r in rows {
+                let i = r as usize;
+                y[i] = ell_row_dot(el, i, csr.row_nnz(i), &read);
+            }
+        }
+        FragmentStorage::Dia(d) => {
+            // per-row walk over the in-range diagonals, ascending — the
+            // same per-row order as the diagonal-major full product
+            for &r in rows {
+                let i = r as usize;
+                let mut acc = 0.0;
+                for (di, &(lo, hi)) in d.ranges.iter().enumerate() {
+                    if (i as u32) < lo || (i as u32) >= hi {
+                        continue;
+                    }
+                    let j = (i as i64 + d.offsets[di]) as usize;
+                    acc += d.data[di * d.n_rows + i] * read(j);
+                }
+                y[i] = acc;
+            }
+        }
+        FragmentStorage::Jad(j) => {
+            for &r in rows {
+                let i = r as usize;
+                let pr = j.pos[i] as usize;
+                let mut acc = 0.0;
+                for k in 0..csr.row_nnz(i) {
+                    let idx = j.jag_ptr[k] + pr;
+                    if k + 1 < csr.row_nnz(i) {
+                        prefetch(j.val.as_ptr().wrapping_add(j.jag_ptr[k + 1] + pr));
+                    }
+                    acc += j.val[idx] * read(j.col[idx] as usize);
+                }
+                y[i] = acc;
+            }
+        }
+        FragmentStorage::Bsr(bm) => {
+            for &r in rows {
+                let i = r as usize;
+                y[i] = bsr_row_dot(bm, i, &read);
+            }
+        }
+        FragmentStorage::CsrDu(du) => {
+            for &r in rows {
+                y[r as usize] = csrdu_row_dot(du, r as usize, &read);
+            }
+        }
+    }
+}
+
+/// Tuned panel product — the raw-speed analogue of
+/// [`FragmentStorage::mv_multi`]. The CSR path runs an L2-tiled,
+/// prefetching loop whose per-(row, chunk) accumulation order is
+/// exactly the scalar tier's, so every column stays bitwise-identical
+/// to the scalar panel; the other formats delegate to the scalar panel
+/// kernel (their single-vector tuned wins do not carry over to the
+/// chunk-accumulated panel walk).
+pub fn mv_multi(
+    storage: &FragmentStorage,
+    csr: &Csr,
+    spec: &KernelSpec,
+    x: &[f64],
+    y: &mut [f64],
+    k: usize,
+) {
+    match storage {
+        FragmentStorage::Csr => {
+            csr_mv_multi_tuned(csr, spec, &|c| c, x, csr.n_cols, y, k);
+        }
+        other => other.mv_multi(csr, x, y, k),
+    }
+}
+
+/// Tuned row-subset panel kernel — the raw-speed analogue of
+/// [`FragmentStorage::mv_rows_multi`]; same bitwise contract as
+/// [`mv_multi`].
+#[allow(clippy::too_many_arguments)]
+pub fn mv_rows_multi(
+    storage: &FragmentStorage,
+    csr: &Csr,
+    spec: &KernelSpec,
+    rows: &[u32],
+    x_map: &[u32],
+    x_node: &[f64],
+    y: &mut [f64],
+    k: usize,
+) {
+    match storage {
+        FragmentStorage::Csr => {
+            let _ = spec;
+            debug_assert_eq!(x_node.len() % k, 0);
+            let x_stride = x_node.len() / k;
+            let pos = |c: usize| x_map[c] as usize;
+            for (g, &r) in rows.iter().enumerate() {
+                if g + PREFETCH_ROWS < rows.len() {
+                    let nr = rows[g + PREFETCH_ROWS] as usize;
+                    prefetch(csr.val.as_ptr().wrapping_add(csr.ptr[nr]));
+                    prefetch(csr.col.as_ptr().wrapping_add(csr.ptr[nr]));
+                }
+                csr_row_dot_multi(csr, r as usize, k, &pos, x_node, x_stride, y, csr.n_rows);
+            }
+        }
+        other => other.mv_rows_multi(csr, rows, x_map, x_node, y, k),
+    }
+}
+
+// ------------------------------------------------------- CSR (tuned)
+
+/// One CSR row's dot product through an arbitrary read — sequential
+/// single-accumulator, same order as the scalar tier (the §Perf log
+/// showed within-row unrolling loses here).
+#[inline(always)]
+fn csr_row_dot(csr: &Csr, i: usize, read: &impl Fn(usize) -> f64) -> f64 {
+    let (s, e) = (csr.ptr[i], csr.ptr[i + 1]);
+    let mut acc = 0.0;
+    for kk in s..e {
+        // SAFETY: CSR invariants (validated at construction) keep s..e
+        // within col/val.
+        unsafe {
+            acc += *csr.val.get_unchecked(kk) * read(*csr.col.get_unchecked(kk) as usize);
+        }
+    }
+    acc
+}
+
+/// Tuned full CSR product: L2 row tiles, 4-row groups with the next
+/// group's value/index streams prefetched. Per-row accumulation order
+/// is untouched — bitwise the scalar kernel.
+fn csr_mv_tuned(csr: &Csr, spec: &KernelSpec, x: &[f64], y: &mut [f64]) {
+    let n = csr.n_rows;
+    let tile = spec.tile_rows.max(4);
+    let read = |c: usize| unsafe { *x.get_unchecked(c) };
+    let mut t0 = 0;
+    while t0 < n {
+        let t1 = (t0 + tile).min(n);
+        let mut i = t0;
+        while i + 4 <= t1 {
+            if i + 4 < n {
+                prefetch(csr.val.as_ptr().wrapping_add(csr.ptr[i + 4]));
+                prefetch(csr.col.as_ptr().wrapping_add(csr.ptr[i + 4]));
+            }
+            y[i] = csr_row_dot(csr, i, &read);
+            y[i + 1] = csr_row_dot(csr, i + 1, &read);
+            y[i + 2] = csr_row_dot(csr, i + 2, &read);
+            y[i + 3] = csr_row_dot(csr, i + 3, &read);
+            i += 4;
+        }
+        while i < t1 {
+            y[i] = csr_row_dot(csr, i, &read);
+            i += 1;
+        }
+        t0 = t1;
+    }
+}
+
+/// One CSR row against every panel column, [`PANEL_CHUNK`]-chunked with
+/// the exact accumulation order of the scalar tier's `row_dot_multi`.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn csr_row_dot_multi(
+    csr: &Csr,
+    i: usize,
+    k: usize,
+    pos: &impl Fn(usize) -> usize,
+    x: &[f64],
+    x_stride: usize,
+    y: &mut [f64],
+    y_stride: usize,
+) {
+    let (s, e) = (csr.ptr[i], csr.ptr[i + 1]);
+    let mut j0 = 0;
+    while j0 < k {
+        let kc = (k - j0).min(PANEL_CHUNK);
+        let mut acc = [0.0f64; PANEL_CHUNK];
+        for kk in s..e {
+            let v = csr.val[kk];
+            let p = pos(csr.col[kk] as usize);
+            for (jj, a) in acc[..kc].iter_mut().enumerate() {
+                *a += v * x[(j0 + jj) * x_stride + p];
+            }
+        }
+        for (jj, &a) in acc[..kc].iter().enumerate() {
+            y[(j0 + jj) * y_stride + i] = a;
+        }
+        j0 += kc;
+    }
+}
+
+/// Tuned CSR panel product: row tiles sized to L2, panel chunks walked
+/// per tile so the active X columns stay resident across the tile's
+/// rows. Per (row, chunk) the work is identical to the scalar walk —
+/// bitwise the scalar panel.
+fn csr_mv_multi_tuned(
+    csr: &Csr,
+    spec: &KernelSpec,
+    pos: &impl Fn(usize) -> usize,
+    x: &[f64],
+    x_stride: usize,
+    y: &mut [f64],
+    k: usize,
+) {
+    let n = csr.n_rows;
+    let tile = spec.tile_rows.max(4);
+    let mut t0 = 0;
+    while t0 < n {
+        let t1 = (t0 + tile).min(n);
+        for i in t0..t1 {
+            if i + PREFETCH_ROWS < n {
+                prefetch(csr.val.as_ptr().wrapping_add(csr.ptr[i + PREFETCH_ROWS]));
+                prefetch(csr.col.as_ptr().wrapping_add(csr.ptr[i + PREFETCH_ROWS]));
+            }
+            csr_row_dot_multi(csr, i, k, pos, x, x_stride, y, n);
+        }
+        t0 = t1;
+    }
+}
+
+// ------------------------------------------------------- ELL (tuned)
+
+/// One ELL row over four virtual lanes: entry `k` of the row feeds lane
+/// `k mod 4`; lanes reduce as `(l0+l1)+(l2+l3)`. `len` is the row's
+/// true nonzero count (ELL padding is trailing). This is the lane
+/// semantic BOTH the scalar-unrolled fallback and the AVX2 path
+/// implement — they are bitwise-identical by construction.
+#[inline(always)]
+fn ell_row_dot(el: &EllStore, i: usize, len: usize, read: &impl Fn(usize) -> f64) -> f64 {
+    let base = i * el.width;
+    let mut lanes = [0.0f64; 4];
+    let mut k = 0;
+    while k + 4 <= len {
+        lanes[0] += el.data[base + k] * read(el.cols[base + k] as usize);
+        lanes[1] += el.data[base + k + 1] * read(el.cols[base + k + 1] as usize);
+        lanes[2] += el.data[base + k + 2] * read(el.cols[base + k + 2] as usize);
+        lanes[3] += el.data[base + k + 3] * read(el.cols[base + k + 3] as usize);
+        k += 4;
+    }
+    while k < len {
+        lanes[k % 4] += el.data[base + k] * read(el.cols[base + k] as usize);
+        k += 1;
+    }
+    (lanes[0] + lanes[1]) + (lanes[2] + lanes[3])
+}
+
+/// [`ell_row_dot`] against a directly-indexed X — the AVX2 entry point
+/// when the `simd` feature is on and the CPU supports it.
+#[inline(always)]
+fn ell_row_dot_x(el: &EllStore, i: usize, len: usize, x: &[f64]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::avx2_available() {
+        // SAFETY: AVX2 availability checked at runtime.
+        return unsafe { simd::ell_row_dot_avx2(el, i, len, x) };
+    }
+    ell_row_dot(el, i, len, &|c| x[c])
+}
+
+// ------------------------------------------------------- DIA (tuned)
+
+/// Elementwise `y[i] += d[i] * x[i]` over one diagonal's in-range span
+/// — pure per-element adds, so any vector width is bitwise-identical to
+/// the scalar loop.
+#[inline(always)]
+fn dia_diag_axpy(d: &[f64], x: &[f64], y: &mut [f64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if simd::avx2_available() {
+        // SAFETY: AVX2 availability checked at runtime.
+        unsafe { simd::dia_diag_axpy_avx2(d, x, y) };
+        return;
+    }
+    // 4-wide unrolled scalar fallback (elementwise — order-free)
+    let n = y.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        y[i] += d[i] * x[i];
+        y[i + 1] += d[i + 1] * x[i + 1];
+        y[i + 2] += d[i + 2] * x[i + 2];
+        y[i + 3] += d[i + 3] * x[i + 3];
+        i += 4;
+    }
+    while i < n {
+        y[i] += d[i] * x[i];
+        i += 1;
+    }
+}
+
+// ------------------------------------------------------- BSR (tuned)
+
+/// One BSR row over four lanes across each block row (lane `lj` takes
+/// block column `lj`), reduced `(l0+l1)+(l2+l3)` per block; block
+/// results accumulate in block order. Blocks with `b != 4` (never
+/// produced by [`FragmentStorage::build`]) fall back to the sequential
+/// walk.
+#[inline(always)]
+fn bsr_row_dot(bm: &super::formats_ext::Bsr, i: usize, read: &impl Fn(usize) -> f64) -> f64 {
+    let b = bm.b;
+    let br = i / b;
+    let li = i - br * b;
+    let mut acc = 0.0;
+    for s in bm.ptr[br]..bm.ptr[br + 1] {
+        let col_lo = bm.bcol[s] as usize * b;
+        let base = s * b * b + li * b;
+        if b == 4 && col_lo + 4 <= bm.n_cols {
+            let l0 = bm.blocks[base] * read(col_lo);
+            let l1 = bm.blocks[base + 1] * read(col_lo + 1);
+            let l2 = bm.blocks[base + 2] * read(col_lo + 2);
+            let l3 = bm.blocks[base + 3] * read(col_lo + 3);
+            acc += (l0 + l1) + (l2 + l3);
+        } else {
+            // edge block (or non-standard b): same 4-lane reduction
+            // shape with missing lanes at 0.0
+            let mut lanes = [0.0f64; 4];
+            for lj in 0..b.min(bm.n_cols.saturating_sub(col_lo)) {
+                lanes[lj % 4] += bm.blocks[base + lj] * read(col_lo + lj);
+            }
+            acc += (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        }
+    }
+    acc
+}
+
+/// [`bsr_row_dot`] against a directly-indexed X — AVX2 when available.
+#[inline(always)]
+fn bsr_row_dot_x(bm: &super::formats_ext::Bsr, i: usize, x: &[f64]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if bm.b == 4 && simd::avx2_available() {
+        // SAFETY: AVX2 availability checked at runtime, b == 4 checked.
+        return unsafe { simd::bsr_row_dot_avx2(bm, i, x) };
+    }
+    bsr_row_dot(bm, i, &|c| x[c])
+}
+
+// ---------------------------------------------------- CSR-DU (tuned)
+
+/// One delta-encoded row's dot product — sequential decode, same order
+/// as the scalar tier.
+#[inline(always)]
+fn csrdu_row_dot(
+    du: &super::formats_ext::CsrDu,
+    i: usize,
+    read: &impl Fn(usize) -> f64,
+) -> f64 {
+    let mut pos = du.row_offsets[i];
+    let end = du.row_offsets[i + 1];
+    let mut c: i64 = -1;
+    let mut k = du.ptr[i];
+    let mut acc = 0.0;
+    while pos < end {
+        let (delta, next) = decode_varint(&du.stream, pos);
+        pos = next;
+        c += delta as i64;
+        acc += du.val[k] * read(c as usize);
+        k += 1;
+    }
+    acc
+}
+
+// ----------------------------------------------------- AVX2 intrinsics
+
+/// AVX2 realizations of the lane kernels — compiled only under the
+/// `simd` feature on x86_64, selected at runtime, and bitwise-identical
+/// to the scalar-unrolled fallbacks (separate multiply and add; FMA
+/// would contract the rounding and break the equivalence).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd {
+    use super::super::formats_ext::Bsr;
+    use super::super::storage::EllStore;
+    use core::arch::x86_64::*;
+    use std::sync::OnceLock;
+
+    /// Runtime AVX2 check, cached after the first probe.
+    pub fn avx2_available() -> bool {
+        static AVX2: OnceLock<bool> = OnceLock::new();
+        *AVX2.get_or_init(|| std::is_x86_feature_detected!("avx2"))
+    }
+
+    /// Four-lane ELL row dot: vector lane `l` accumulates entries
+    /// `k ≡ l (mod 4)` — the same assignment as the fallback — and the
+    /// horizontal reduction extracts the lanes and sums
+    /// `(l0+l1)+(l2+l3)` in scalar f64, matching the fallback exactly.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ell_row_dot_avx2(el: &EllStore, i: usize, len: usize, x: &[f64]) -> f64 {
+        let base = i * el.width;
+        let mut acc = _mm256_setzero_pd();
+        let mut k = 0;
+        while k + 4 <= len {
+            let vals = _mm256_loadu_pd(el.data.as_ptr().add(base + k));
+            let idx = _mm_loadu_si128(el.cols.as_ptr().add(base + k) as *const __m128i);
+            let xs = _mm256_i32gather_pd::<8>(x.as_ptr(), idx);
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(vals, xs));
+            k += 4;
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        while k < len {
+            lanes[k % 4] += el.data[base + k] * x[el.cols[base + k] as usize];
+            k += 1;
+        }
+        (lanes[0] + lanes[1]) + (lanes[2] + lanes[3])
+    }
+
+    /// Elementwise diagonal AXPY — order-free, bitwise-identical to any
+    /// scalar walk.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dia_diag_axpy_avx2(d: &[f64], x: &[f64], y: &mut [f64]) {
+        let n = y.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let yy = _mm256_loadu_pd(y.as_ptr().add(i));
+            let dd = _mm256_loadu_pd(d.as_ptr().add(i));
+            let xx = _mm256_loadu_pd(x.as_ptr().add(i));
+            _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_add_pd(yy, _mm256_mul_pd(dd, xx)));
+            i += 4;
+        }
+        while i < n {
+            y[i] += d[i] * x[i];
+            i += 1;
+        }
+    }
+
+    /// Four-lane 4×4 BSR row dot: one vector multiply per block row,
+    /// lanes reduced `(l0+l1)+(l2+l3)` in scalar f64 — identical to the
+    /// fallback. Edge blocks run the fallback's scalar lane loop.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available and `bm.b == 4`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bsr_row_dot_avx2(bm: &Bsr, i: usize, x: &[f64]) -> f64 {
+        let b = 4usize;
+        let br = i / b;
+        let li = i - br * b;
+        let mut acc = 0.0;
+        for s in bm.ptr[br]..bm.ptr[br + 1] {
+            let col_lo = bm.bcol[s] as usize * b;
+            let base = s * b * b + li * b;
+            if col_lo + 4 <= bm.n_cols {
+                let blk = _mm256_loadu_pd(bm.blocks.as_ptr().add(base));
+                let xs = _mm256_loadu_pd(x.as_ptr().add(col_lo));
+                let mut lanes = [0.0f64; 4];
+                _mm256_storeu_pd(lanes.as_mut_ptr(), _mm256_mul_pd(blk, xs));
+                acc += (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+            } else {
+                let mut lanes = [0.0f64; 4];
+                for lj in 0..b.min(bm.n_cols.saturating_sub(col_lo)) {
+                    lanes[lj % 4] += bm.blocks[base + lj] * x[col_lo + lj];
+                }
+                acc += (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+            }
+        }
+        acc
+    }
+}
+
+// ------------------------------------------------------ aligned buffer
+
+/// A cache-line-aligned f64 buffer — the shared bench scratch, so
+/// scalar-vs-tuned deltas measure the kernels rather than whatever
+/// alignment the allocator happened to hand each grid cell.
+pub struct AlignedBuf {
+    ptr: std::ptr::NonNull<f64>,
+    len: usize,
+}
+
+/// 64-byte cache-line alignment of [`AlignedBuf`].
+pub const CACHE_LINE: usize = 64;
+
+impl AlignedBuf {
+    /// Allocate `len` zeroed f64 slots on a 64-byte boundary.
+    pub fn zeroed(len: usize) -> AlignedBuf {
+        if len == 0 {
+            return AlignedBuf { ptr: std::ptr::NonNull::dangling(), len: 0 };
+        }
+        let layout = std::alloc::Layout::from_size_align(len * 8, CACHE_LINE)
+            .expect("aligned buffer layout");
+        // SAFETY: layout has non-zero size (len > 0).
+        let raw = unsafe { std::alloc::alloc_zeroed(layout) } as *mut f64;
+        let ptr = std::ptr::NonNull::new(raw)
+            .unwrap_or_else(|| std::alloc::handle_alloc_error(layout));
+        AlignedBuf { ptr, len }
+    }
+
+    /// The buffer as a slice.
+    pub fn as_slice(&self) -> &[f64] {
+        // SAFETY: ptr/len describe our own live allocation (empty
+        // buffers use a dangling-but-aligned pointer with len 0).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+
+    /// The buffer as a mutable slice.
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        // SAFETY: as `as_slice`, plus &mut self guarantees uniqueness.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+
+    /// Slot count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the buffer holds no slots.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            let layout = std::alloc::Layout::from_size_align(self.len * 8, CACHE_LINE)
+                .expect("aligned buffer layout");
+            // SAFETY: allocated with the identical layout in `zeroed`.
+            unsafe { std::alloc::dealloc(self.ptr.as_ptr() as *mut u8, layout) };
+        }
+    }
+}
+
+// SAFETY: AlignedBuf owns its allocation exclusively, exactly like Vec.
+unsafe impl Send for AlignedBuf {}
+// SAFETY: shared access only exposes &[f64].
+unsafe impl Sync for AlignedBuf {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::sparse::gen::{generate, MatrixSpec};
+    use crate::sparse::{Coo, FormatKind};
+
+    fn mat(name: &str) -> Csr {
+        generate(&MatrixSpec::paper(name).unwrap(), 1).to_csr()
+    }
+
+    fn x_for(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n).map(|_| rng.next_f64_range(-1.0, 1.0)).collect()
+    }
+
+    fn spec_for(csr: &Csr) -> KernelSpec {
+        KernelSpec::resolve(KernelPolicy::Tuned, csr, DEFAULT_L2_BYTES)
+    }
+
+    #[test]
+    fn policy_roundtrips_through_parse() {
+        for p in KernelPolicy::all() {
+            assert_eq!(KernelPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(KernelPolicy::default(), KernelPolicy::Scalar);
+        assert_eq!(KernelPolicy::parse("nope"), None);
+        assert_eq!(KernelPolicy::Scalar.resolve(), KernelKind::Scalar);
+        assert_eq!(KernelPolicy::Tuned.resolve(), KernelKind::Tuned);
+        assert_eq!(KernelPolicy::Auto.resolve(), KernelKind::Tuned);
+        assert_eq!(KernelKind::Tuned.name(), "tuned");
+    }
+
+    #[test]
+    fn tile_rows_is_bounded_and_unroll_aligned() {
+        for name in ["bcsstm09", "t2dal", "zhao1"] {
+            let a = mat(name);
+            for l2 in [64 * 1024, 256 * 1024, 1024 * 1024] {
+                let t = tile_rows_for(&a, l2);
+                assert!((64..=4096).contains(&t), "{name}: {t}");
+                assert_eq!(t % 4, 0, "{name}: {t}");
+            }
+        }
+        // degenerate empty matrix still yields a sane tile
+        let empty = Coo::new(0, 0).to_csr();
+        assert!(tile_rows_for(&empty, DEFAULT_L2_BYTES) >= 64);
+        // scalar resolution carries no tile
+        assert_eq!(KernelSpec::resolve(KernelPolicy::Scalar, &empty, 0), KernelSpec::default());
+    }
+
+    #[test]
+    fn tuned_mv_agrees_with_scalar_on_every_format() {
+        for name in ["bcsstm09", "t2dal", "spmsrtls", "zhao1"] {
+            let a = mat(name);
+            let x = x_for(a.n_cols, 7);
+            let spec = spec_for(&a);
+            for kind in FormatKind::concrete() {
+                let Ok(s) = FragmentStorage::build(&a, kind) else {
+                    continue; // e.g. DIA on zhao1
+                };
+                let mut y_scalar = vec![0.0; a.n_rows];
+                s.mv(&a, &x, &mut y_scalar);
+                let mut y_tuned = vec![f64::NAN; a.n_rows];
+                mv(&s, &a, &spec, &x, &mut y_tuned);
+                for i in 0..a.n_rows {
+                    assert!(
+                        (y_tuned[i] - y_scalar[i]).abs() < 1e-12 * (1.0 + y_scalar[i].abs()),
+                        "{name}/{kind} row {i}: {} vs {}",
+                        y_tuned[i],
+                        y_scalar[i]
+                    );
+                }
+                // CSR/DIA/JAD/CSR-DU preserve the accumulation order —
+                // bitwise; ELL/BSR re-associate across lanes
+                if matches!(
+                    kind,
+                    FormatKind::Csr | FormatKind::Dia | FormatKind::Jad | FormatKind::CsrDu
+                ) {
+                    assert_eq!(y_tuned, y_scalar, "{name}/{kind}: must be bitwise scalar");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_mv_is_run_to_run_deterministic() {
+        let a = mat("t2dal");
+        let x = x_for(a.n_cols, 11);
+        let spec = spec_for(&a);
+        for kind in FormatKind::concrete() {
+            let s = FragmentStorage::build(&a, kind).unwrap();
+            let mut y1 = vec![0.0; a.n_rows];
+            let mut y2 = vec![0.0; a.n_rows];
+            mv(&s, &a, &spec, &x, &mut y1);
+            mv(&s, &a, &spec, &x, &mut y2);
+            assert_eq!(y1, y2, "{kind}: tuned kernel must be deterministic");
+        }
+    }
+
+    #[test]
+    fn tuned_two_pass_rows_equal_tuned_one_pass_bitwise() {
+        // the schedule-bitwise contract WITHIN the tuned tier: interior
+        // + boundary row subsets reproduce the full product exactly
+        let a = mat("t2dal");
+        let x = x_for(a.n_cols, 13);
+        let spec = spec_for(&a);
+        let x_map: Vec<u32> = (0..a.n_cols as u32).collect();
+        let evens: Vec<u32> = (0..a.n_rows as u32).step_by(2).collect();
+        let odds: Vec<u32> = (1..a.n_rows as u32).step_by(2).collect();
+        for kind in FormatKind::concrete() {
+            let s = FragmentStorage::build(&a, kind).unwrap();
+            let mut y_one = vec![0.0; a.n_rows];
+            mv(&s, &a, &spec, &x, &mut y_one);
+            let mut y_two = vec![0.0; a.n_rows];
+            mv_rows(&s, &a, &spec, &evens, &x_map, &x, &mut y_two);
+            mv_rows(&s, &a, &spec, &odds, &x_map, &x, &mut y_two);
+            assert_eq!(y_one, y_two, "{kind}: tuned schedules must agree bitwise");
+        }
+    }
+
+    #[test]
+    fn tuned_panel_is_bitwise_scalar_panel() {
+        let a = mat("t2dal");
+        let spec = spec_for(&a);
+        for k in [1usize, 4, 16] {
+            let x = x_for(a.n_cols * k, 17);
+            for kind in FormatKind::concrete() {
+                let s = FragmentStorage::build(&a, kind).unwrap();
+                let mut y_scalar = vec![0.0; a.n_rows * k];
+                s.mv_multi(&a, &x, &mut y_scalar, k);
+                let mut y_tuned = vec![f64::NAN; a.n_rows * k];
+                mv_multi(&s, &a, &spec, &x, &mut y_tuned, k);
+                assert_eq!(y_tuned, y_scalar, "{kind} k={k}: tuned panel must be bitwise");
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_handles_empty_rows_and_empty_fragments() {
+        // empty rows inside a matrix
+        let mut coo = Coo::new(6, 6);
+        coo.push(1, 0, 2.0);
+        coo.push(1, 2, 3.0);
+        coo.push(4, 4, 5.0);
+        let a = coo.to_csr();
+        let spec = spec_for(&a);
+        let x = vec![1.0, 10.0, 100.0, 0.0, 7.0, 0.0];
+        for kind in FormatKind::concrete() {
+            let s = FragmentStorage::build(&a, kind).unwrap();
+            let mut y = vec![f64::NAN; 6];
+            mv(&s, &a, &spec, &x, &mut y);
+            assert_eq!(y[1], 302.0, "{kind}");
+            assert_eq!(y[4], 35.0, "{kind}");
+            for i in [0usize, 2, 3, 5] {
+                assert_eq!(y[i], 0.0, "{kind}: empty row {i}");
+            }
+        }
+        // zero-row / zero-col fragments
+        for (r, c) in [(0usize, 5usize), (5, 0), (0, 0)] {
+            let e = Coo::new(r, c).to_csr();
+            let spec = spec_for(&e);
+            for kind in FormatKind::concrete() {
+                let s = FragmentStorage::build(&e, kind).unwrap();
+                let mut y = vec![f64::NAN; r];
+                mv(&s, &e, &spec, &vec![0.0; c], &mut y);
+                assert!(y.iter().all(|&v| v == 0.0), "{kind} {r}x{c}");
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_handles_remainder_lanes() {
+        // rows whose nnz is NOT a multiple of the 4-lane width: 1..=9
+        // nonzeros per row exercise every remainder
+        let n = 40;
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            let len = i % 9 + 1;
+            for k in 0..len {
+                coo.push(i as u32, ((i + k * 3) % n) as u32, (i + k) as f64 * 0.25 + 1.0);
+            }
+        }
+        let a = coo.to_csr();
+        let spec = spec_for(&a);
+        let x = x_for(n, 23);
+        for kind in [FormatKind::Ell, FormatKind::Bsr, FormatKind::Jad, FormatKind::CsrDu] {
+            let Ok(s) = FragmentStorage::build(&a, kind) else { continue };
+            let mut y_scalar = vec![0.0; n];
+            s.mv(&a, &x, &mut y_scalar);
+            let mut y_tuned = vec![0.0; n];
+            mv(&s, &a, &spec, &x, &mut y_tuned);
+            for i in 0..n {
+                assert!(
+                    (y_tuned[i] - y_scalar[i]).abs() < 1e-12 * (1.0 + y_scalar[i].abs()),
+                    "{kind} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_buf_is_cache_line_aligned_and_reusable() {
+        let mut buf = AlignedBuf::zeroed(1000);
+        assert_eq!(buf.len(), 1000);
+        assert!(!buf.is_empty());
+        assert_eq!(buf.as_slice().as_ptr() as usize % CACHE_LINE, 0);
+        assert!(buf.as_slice().iter().all(|&v| v == 0.0));
+        buf.as_mut_slice()[999] = 4.5;
+        assert_eq!(buf.as_slice()[999], 4.5);
+        let empty = AlignedBuf::zeroed(0);
+        assert!(empty.is_empty());
+        assert_eq!(empty.as_slice().len(), 0);
+    }
+}

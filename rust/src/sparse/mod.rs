@@ -18,6 +18,7 @@ pub mod ell;
 pub mod fingerprint;
 pub mod formats_ext;
 pub mod gen;
+pub mod kernels;
 pub mod mm;
 pub mod stats;
 pub mod storage;
@@ -27,6 +28,7 @@ pub use csc::Csc;
 pub use csr::Csr;
 pub use ell::Ell;
 pub use fingerprint::{fingerprint_coo, fingerprint_csr, MatrixFingerprint};
+pub use kernels::{AlignedBuf, KernelKind, KernelPolicy, KernelSpec};
 pub use storage::{auto_select, EllStore, FormatKind, FragmentStorage};
 
 /// A dense vector of f64 — X and Y in the PMVC `y = A·x`.

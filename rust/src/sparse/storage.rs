@@ -41,7 +41,7 @@ pub const BSR_BLOCK: usize = 4;
 /// columns are processed [`PANEL_CHUNK`] at a time so the per-row
 /// accumulators stay register-resident while each matrix entry is
 /// loaded once and reused across the block.
-const PANEL_CHUNK: usize = 8;
+pub(crate) const PANEL_CHUNK: usize = 8;
 
 /// Registry of per-fragment kernel formats — the fourth parallel
 /// registry row next to `PartitionerKind`, `BackendKind` and
@@ -338,13 +338,17 @@ impl FragmentStorage {
                 acc
             }
             FragmentStorage::Dia(d) => {
+                // in-range test via the precomputed per-diagonal row
+                // ranges — same diagonals in the same ascending order as
+                // the old per-entry `j < 0 || j >= n_cols` check, so the
+                // accumulation is bitwise-identical
                 let mut acc = 0.0;
-                for (di, &off) in d.offsets.iter().enumerate() {
-                    let j = i as i64 + off;
-                    if j < 0 || j >= d.n_cols as i64 {
+                for (di, &(lo, hi)) in d.ranges.iter().enumerate() {
+                    if (i as u32) < lo || (i as u32) >= hi {
                         continue;
                     }
-                    acc += d.data[di * d.n_rows + i] * read(j as usize);
+                    let j = (i as i64 + d.offsets[di]) as usize;
+                    acc += d.data[di * d.n_rows + i] * read(j);
                 }
                 acc
             }
@@ -444,12 +448,12 @@ impl FragmentStorage {
                 }
             }
             FragmentStorage::Dia(d) => {
-                for (di, &off) in d.offsets.iter().enumerate() {
-                    let j = i as i64 + off;
-                    if j < 0 || j >= d.n_cols as i64 {
+                for (di, &(lo, hi)) in d.ranges.iter().enumerate() {
+                    if (i as u32) < lo || (i as u32) >= hi {
                         continue;
                     }
-                    visit(j as usize, d.data[di * d.n_rows + i]);
+                    let j = (i as i64 + d.offsets[di]) as usize;
+                    visit(j, d.data[di * d.n_rows + i]);
                 }
             }
             FragmentStorage::Jad(j) => {
